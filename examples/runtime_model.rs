@@ -1,0 +1,82 @@
+//! E8 — the §VI runtime model as a planning tool.
+//!
+//! Prints the optimal (d, s, m) for a delay regime, the closed-form
+//! extremes (Propositions 1 and 2), and a Monte-Carlo validation of the
+//! quadrature expectation.
+//!
+//!     cargo run --release --example runtime_model -- --n 10 --lambda1 0.6 --t1 1.5 --lambda2 0.1 --t2 6
+
+use gradcode::cli::Command;
+use gradcode::simulator::optimize::{naive_choice, optimal_triple_m1};
+use gradcode::simulator::order_stats::expected_total_runtime;
+use gradcode::simulator::{
+    optimal_alpha, optimal_triple, prop1_optimal_d, DelayParams, VirtualCluster,
+};
+
+fn main() {
+    let a = Command::new("runtime_model", "§VI planning tool")
+        .flag("n", "10", "workers")
+        .flag("lambda1", "0.6", "computation straggling rate")
+        .flag("t1", "1.5", "min per-subset computation time")
+        .flag("lambda2", "0.1", "communication straggling rate")
+        .flag("t2", "6", "min full-vector communication time")
+        .parse_env();
+    let n = a.get_usize("n");
+    let p = DelayParams {
+        lambda1: a.get_f64("lambda1"),
+        t1: a.get_f64("t1"),
+        lambda2: a.get_f64("lambda2"),
+        t2: a.get_f64("t2"),
+    };
+    println!("delay model: {p:?}, n = {n}\n");
+
+    let best = optimal_triple(&p, n);
+    let m1 = optimal_triple_m1(&p, n);
+    let naive = naive_choice(&p, n);
+    println!("optimal design      (d={}, s={}, m={})  E[T_tot] = {:.4}", best.d, best.s, best.m, best.expected_runtime);
+    println!("best m=1 [11]-[13]  (d={}, s={}, m=1)  E[T_tot] = {:.4}", m1.d, m1.s, m1.expected_runtime);
+    println!("naive uncoded       (d=1, s=0, m=1)  E[T_tot] = {:.4}", naive.expected_runtime);
+    println!(
+        "improvement: {:.0}% vs m=1, {:.0}% vs naive\n",
+        100.0 * (1.0 - best.expected_runtime / m1.expected_runtime),
+        100.0 * (1.0 - best.expected_runtime / naive.expected_runtime)
+    );
+
+    // Monte-Carlo validation of the quadrature.
+    let mut vc = VirtualCluster::new(&p, n, best.d, best.s, best.m, 42);
+    let mc = vc.mean_iteration_time(50_000);
+    println!(
+        "Monte-Carlo check at the optimum: simulated {:.4} vs quadrature {:.4} ({:+.2}%)\n",
+        mc,
+        best.expected_runtime,
+        100.0 * (mc / best.expected_runtime - 1.0)
+    );
+
+    // Proposition 1 (computation-dominant extreme).
+    println!(
+        "Prop 1 (ignore communication): optimal d = {} (threshold λ₁t₁ = {:.3})",
+        prop1_optimal_d(&p, n),
+        p.lambda1 * p.t1
+    );
+    // Proposition 2 (communication-dominant extreme).
+    let alpha = optimal_alpha(p.lambda2, p.t2);
+    println!(
+        "Prop 2 (ignore computation, large n): optimal m/n = {alpha:.3} → m ≈ {:.1} at n = {n}",
+        alpha * n as f64
+    );
+
+    // Sensitivity: one row per d showing the best m for that load.
+    println!("\nE[T_tot] by (d, best m):");
+    for d in 1..=n {
+        let (mut bm, mut bv) = (1, f64::INFINITY);
+        for m in 1..=d {
+            let v = expected_total_runtime(&p, n, d, d - m, m);
+            if v < bv {
+                bv = v;
+                bm = m;
+            }
+        }
+        let marker = if d == best.d { "  <-- optimal" } else { "" };
+        println!("  d={d:>2}: best m={bm}  E[T]={bv:.4}{marker}");
+    }
+}

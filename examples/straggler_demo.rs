@@ -1,0 +1,67 @@
+//! Straggler-injection demo on the *real-time* execution path: workers
+//! actually sleep their sampled delays (scaled down), the master races
+//! the first n-s arrivals off the wire, and late results are discarded.
+//!
+//! Shows (a) that training proceeds identically despite rotating
+//! stragglers and (b) the wall-clock advantage of not waiting for the
+//! slowest worker.
+//!
+//!     cargo run --release --example straggler_demo
+
+use std::time::Instant;
+
+use gradcode::coordinator::{
+    train, ExecutionMode, OptChoice, SchemeSpec, TrainConfig,
+};
+use gradcode::data::{train_test_split, CategoricalConfig, SyntheticCategorical};
+use gradcode::simulator::DelayParams;
+
+fn main() -> anyhow::Result<()> {
+    let gen = SyntheticCategorical::new(
+        CategoricalConfig { columns: 8, ..Default::default() },
+        99,
+    );
+    let raw = gen.generate(1000, 100);
+    let (train_ds, test_ds) = train_test_split(&raw, 0.2, 101);
+    let lr = 6.0 / train_ds.rows as f32;
+    // 1 unit of virtual delay = 2 ms of real sleep: a full run stays
+    // under a minute while the straggler race is physically real.
+    let scale = 2e-3;
+    let iters = 40;
+
+    let mut rows = Vec::new();
+    for (label, scheme, mode) in [
+        ("naive (waits for all)", SchemeSpec::Uncoded, ExecutionMode::RealTime { scale }),
+        ("coded s=2,m=1", SchemeSpec::Poly { s: 2, m: 1 }, ExecutionMode::RealTime { scale }),
+        ("coded s=1,m=2", SchemeSpec::Poly { s: 1, m: 2 }, ExecutionMode::RealTime { scale }),
+    ] {
+        let cfg = TrainConfig {
+            n: 8,
+            scheme,
+            iters,
+            opt: OptChoice::Nag { lr, momentum: 0.9 },
+            eval_every: iters,
+            delays: Some(DelayParams::ec2_fit()),
+            mode,
+            seed: 5,
+            minibatch: None,
+        };
+        let t0 = Instant::now();
+        let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;
+        let wall = t0.elapsed().as_secs_f64();
+        // how many distinct straggler patterns were seen?
+        let distinct: std::collections::HashSet<_> =
+            log.records.iter().map(|r| r.responders.clone()).collect();
+        println!(
+            "{label:<22} wall {wall:>6.2}s  AUC {:.4}  responder sets seen: {}",
+            log.final_auc().unwrap_or(f64::NAN),
+            distinct.len()
+        );
+        rows.push((label, wall));
+    }
+    let naive = rows[0].1;
+    for (label, wall) in &rows[1..] {
+        println!("{label}: {:.0}% faster than naive (real wall-clock)", 100.0 * (1.0 - wall / naive));
+    }
+    Ok(())
+}

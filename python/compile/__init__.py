@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 kernels + L2 model + AOT lowering).
+
+Never imported at runtime: ``make artifacts`` runs ``compile.aot`` once,
+and the rust binary executes the emitted HLO through PJRT from then on.
+"""

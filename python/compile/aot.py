@@ -1,0 +1,122 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts (shapes are baked at lowering time):
+
+- ``worker_n{n}_d{d}_m{m}_r{rows}_l{dim}.hlo.txt``
+    worker_step: (xs f32[d,rows,dim], ys f32[d,rows], beta f32[dim],
+                  coeffs f32[d,m]) -> (f f32[dim/m],)
+- ``predict_r{rows}_l{dim}.hlo.txt``
+    predict: (x f32[rows,dim], beta f32[dim]) -> (probs f32[rows],)
+
+plus ``manifest.txt`` with one line per artifact:
+``name kind n d m rows dim``.
+
+Usage (from python/):
+  python -m compile.aot --out-dir ../artifacts --n 10 --s 1 --m 2 \
+      --rows 64 --dim 512 --eval-rows 256
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_worker(n: int, d: int, m: int, rows: int, dim: int) -> str:
+    assert dim % m == 0, f"m={m} must divide dim={dim}"
+    xs = jax.ShapeDtypeStruct((d, rows, dim), jnp.float32)
+    ys = jax.ShapeDtypeStruct((d, rows), jnp.float32)
+    beta = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    coeffs = jax.ShapeDtypeStruct((d, m), jnp.float32)
+
+    def fn(xs, ys, beta, coeffs):
+        return (model.worker_step(xs, ys, beta, coeffs),)
+
+    return to_hlo_text(jax.jit(fn).lower(xs, ys, beta, coeffs))
+
+
+def lower_predict(rows: int, dim: int) -> str:
+    x = jax.ShapeDtypeStruct((rows, dim), jnp.float32)
+    beta = jax.ShapeDtypeStruct((dim,), jnp.float32)
+
+    def fn(x, beta):
+        return (model.predict(x, beta),)
+
+    return to_hlo_text(jax.jit(fn).lower(x, beta))
+
+
+def worker_artifact_name(n: int, d: int, m: int, rows: int, dim: int) -> str:
+    return f"worker_n{n}_d{d}_m{m}_r{rows}_l{dim}.hlo.txt"
+
+
+def predict_artifact_name(rows: int, dim: int) -> str:
+    return f"predict_r{rows}_l{dim}.hlo.txt"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=10, help="workers (= subsets)")
+    ap.add_argument("--s", type=int, default=1, help="straggler tolerance")
+    ap.add_argument("--m", type=int, default=2, help="communication reduction")
+    ap.add_argument("--d", type=int, default=0, help="load (default s+m)")
+    ap.add_argument("--rows", type=int, default=64, help="rows per subset")
+    ap.add_argument("--dim", type=int, default=512, help="gradient dim l")
+    ap.add_argument("--eval-rows", type=int, default=256)
+    ap.add_argument("--skip-predict", action="store_true")
+    args = ap.parse_args()
+
+    d = args.d or (args.s + args.m)
+    assert d >= args.s + args.m, "Theorem 1: need d >= s + m"
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.txt")
+    entries = []
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as fh:
+            entries = [ln.strip() for ln in fh if ln.strip()]
+
+    def record(line: str) -> None:
+        if line not in entries:
+            entries.append(line)
+
+    name = worker_artifact_name(args.n, d, args.m, args.rows, args.dim)
+    text = lower_worker(args.n, d, args.m, args.rows, args.dim)
+    with open(os.path.join(args.out_dir, name), "w") as fh:
+        fh.write(text)
+    record(f"{name} worker {args.n} {d} {args.m} {args.rows} {args.dim}")
+    print(f"wrote {name} ({len(text)} chars)")
+
+    if not args.skip_predict:
+        pname = predict_artifact_name(args.eval_rows, args.dim)
+        ptext = lower_predict(args.eval_rows, args.dim)
+        with open(os.path.join(args.out_dir, pname), "w") as fh:
+            fh.write(ptext)
+        record(f"{pname} predict 0 0 0 {args.eval_rows} {args.dim}")
+        print(f"wrote {pname} ({len(ptext)} chars)")
+
+    with open(manifest_path, "w") as fh:
+        fh.write("\n".join(entries) + "\n")
+    print(f"manifest: {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from .encode import encode
+from .logistic_grad import logistic_grad
+from .logistic_grad_tiled import logistic_grad_tiled
+
+__all__ = ["encode", "logistic_grad", "logistic_grad_tiled"]

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: the coded combine (Eq. 18/25).
+
+Given the worker's stacked partial gradients ``G (d, L)`` — viewed as
+``(d, L/m, m)`` — and its coefficient block ``C (d, m)``, produce the
+transmitted vector ``f[v] = sum_{j,u} C[j,u] * G[j, v, u]``.
+
+TPU mapping: the grid tiles the output index ``v``; each step streams a
+``(d, BV, m)`` gradient block through VMEM and contracts the tiny
+``(d, m)`` coefficient block (which BlockSpec keeps resident across all
+steps). ``d*m`` is at most a few hundred, so the contraction is
+VPU-bound — the point of the kernel is the single streaming pass over
+the gradient (the dominant HBM traffic), not FLOPs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(g_ref, c_ref, o_ref):
+    # g: (d, BV, m), c: (d, m) -> o: (BV,)
+    o_ref[...] = jnp.einsum(
+        "jvu,ju->v", g_ref[...], c_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def pick_block_v(lv: int, target: int = 512) -> int:
+    """Largest divisor of ``lv`` that is <= target."""
+    bv = min(lv, target)
+    while lv % bv != 0:
+        bv -= 1
+    return bv
+
+
+@functools.partial(jax.jit, static_argnames=("block_v",))
+def encode(g, c, *, block_v=None):
+    """Pallas-backed coded combine. g f32[d, L], c f32[d, m] -> f32[L/m]."""
+    d, l = g.shape
+    m = c.shape[1]
+    assert l % m == 0, f"m={m} must divide L={l}"
+    lv = l // m
+    bv = block_v or pick_block_v(lv)
+    gr = g.reshape(d, lv, m)
+    return pl.pallas_call(
+        _kernel,
+        grid=(lv // bv,),
+        in_specs=[
+            pl.BlockSpec((d, bv, m), lambda i: (0, i, 0)),
+            pl.BlockSpec((d, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bv,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((lv,), jnp.float32),
+        interpret=True,
+    )(gr, c)

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: fused logistic partial gradient.
+
+Computes ``g = X^T (sigmoid(X @ beta) - y)`` for one data subset in a
+single pass over ``X``: the residual never round-trips to HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles rows of
+``X``; each step loads an ``(BR, L)`` block into VMEM, runs two MXU
+matmuls (``X_blk @ beta`` forward, ``r @ X_blk`` transpose-accumulate)
+and accumulates into the output block, which BlockSpec pins to the same
+VMEM tile across all grid steps (classic revisiting-output reduction).
+The paper targets CPU clusters so there is no CUDA idiom to port; the
+insight carried over is fusing the elementwise sigmoid between the two
+matmuls so arithmetic intensity stays MXU-bound.
+
+Lowered with ``interpret=True`` everywhere in this repo: the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, b_ref, o_ref):
+    """One row-block step: o += X_blk^T (sigmoid(X_blk @ beta) - y_blk)."""
+    x = x_ref[...]  # (BR, L)
+    z = jnp.dot(x, b_ref[...], preferred_element_type=jnp.float32)  # (BR,)
+    r = jax.nn.sigmoid(z) - y_ref[...]
+    contrib = jnp.dot(r, x, preferred_element_type=jnp.float32)  # (L,)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(pl.program_id(0) > 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+def pick_block_rows(rows: int, target: int = 128) -> int:
+    """Largest divisor of ``rows`` that is <= target (VMEM-friendly)."""
+    br = min(rows, target)
+    while rows % br != 0:
+        br -= 1
+    return br
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def logistic_grad(x, y, beta, *, block_rows=None):
+    """Pallas-backed partial gradient. Shapes: x f32[R,L], y f32[R],
+    beta f32[L] -> f32[L]."""
+    rows, dim = x.shape
+    br = block_rows or pick_block_rows(rows)
+    grid = (rows // br,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, dim), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((dim,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((dim,), jnp.float32),
+        interpret=True,
+    )(x, y, beta)

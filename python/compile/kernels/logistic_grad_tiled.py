@@ -1,0 +1,101 @@
+"""L1 Pallas kernel, paper-scale variant: 2-D-tiled logistic gradient.
+
+The fused single-kernel ``logistic_grad`` streams full-width ``(BR, L)``
+blocks; at the paper's l = 343,474 a 64-row block is ~88 MB — far over a
+TPU core's ~16 MB VMEM. This variant tiles BOTH dimensions with a
+two-phase schedule, keeping every block at ``(BR, BC)``:
+
+  phase 1 (``_forward_kernel``): grid (row_blocks, col_blocks) —
+      accumulate ``z[rb] += X[rb, cb] @ beta[cb]`` over column blocks
+      (output revisits the same ``(BR,)`` VMEM tile across the cb axis);
+      then the tiny elementwise ``r = sigmoid(z) - y`` in plain jnp.
+  phase 2 (``_backward_kernel``): grid (col_blocks, row_blocks) —
+      accumulate ``g[cb] += r[rb] @ X[rb, cb]`` over row blocks.
+
+X is streamed from HBM exactly twice (the minimum for this dataflow
+without keeping all residuals' inputs resident), each matmul feeds the
+MXU with a ``(BR, BC)`` tile, and VMEM usage is
+``BR·BC·4 + O(BR + BC)`` bytes, independent of l.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .logistic_grad import pick_block_rows
+
+
+def _forward_kernel(x_ref, b_ref, z_ref):
+    # z[rb] += X[rb, cb] @ beta[cb]; cb is the minor grid axis.
+    partial = jnp.dot(x_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        z_ref[...] = partial
+
+    @pl.when(pl.program_id(1) > 0)
+    def _acc():
+        z_ref[...] += partial
+
+
+def _backward_kernel(x_ref, r_ref, g_ref):
+    # g[cb] += r[rb] @ X[rb, cb]; rb is the minor grid axis.
+    partial = jnp.dot(r_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        g_ref[...] = partial
+
+    @pl.when(pl.program_id(1) > 0)
+    def _acc():
+        g_ref[...] += partial
+
+
+def pick_block_cols(dim: int, target: int = 256) -> int:
+    """Largest divisor of ``dim`` that is <= target."""
+    bc = min(dim, target)
+    while dim % bc != 0:
+        bc -= 1
+    return bc
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def logistic_grad_tiled(x, y, beta, *, block_rows=None, block_cols=None):
+    """Column-tiled logistic partial gradient.
+
+    Same contract as ``logistic_grad`` (x f32[R,L], y f32[R], beta
+    f32[L] -> f32[L]) but with bounded VMEM at any L.
+    """
+    rows, dim = x.shape
+    br = block_rows or pick_block_rows(rows)
+    bc = block_cols or pick_block_cols(dim)
+    rb, cb = rows // br, dim // bc
+
+    # Phase 1: forward logits, accumulated over column blocks.
+    z = pl.pallas_call(
+        _forward_kernel,
+        grid=(rb, cb),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bc,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(x, beta)
+    r = jax.nn.sigmoid(z) - y
+
+    # Phase 2: transpose-accumulate, column blocks as the major axis.
+    return pl.pallas_call(
+        _backward_kernel,
+        grid=(cb, rb),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda j, i: (i, j)),
+            pl.BlockSpec((br,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bc,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((dim,), jnp.float32),
+        interpret=True,
+    )(x, r)

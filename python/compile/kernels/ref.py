@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis in ``python/tests``), and double as readable specifications:
+
+- ``logistic_grad_ref``: the paper's workload hot spot, the partial
+  gradient of the logistic loss over one data subset,
+  ``g = X^T (sigmoid(X @ beta) - y)``.
+- ``encode_ref``: the coded combine of Eq. 18/25 — given the worker's
+  ``d`` partial gradients (rows of ``G``) and its dense coefficient block
+  ``C[j, u] = c_{j*m+u}``, produce the transmitted vector
+  ``f[v] = sum_{j,u} C[j, u] * G[j, v*m + u]``.
+- ``worker_step_ref``: both stages fused — what one worker transmits.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def logistic_grad_ref(x, y, beta):
+    """Partial gradient of one subset: X^T (sigmoid(X beta) - y).
+
+    Args:
+      x: f32[R, L] design block.
+      y: f32[R] labels in {0, 1}.
+      beta: f32[L] parameters.
+
+    Returns:
+      f32[L] sum gradient over the block.
+    """
+    r = jax.nn.sigmoid(x @ beta) - y
+    return r @ x
+
+
+def logistic_loss_ref(x, y, beta):
+    """Mean negative log-likelihood (the loss whose gradient we compute).
+
+    ``jax.grad`` of this (times R) must equal ``logistic_grad_ref`` — that
+    identity is one of the kernel tests.
+    """
+    logits = x @ beta
+    # log(1 + e^z) - y z, numerically stabilized
+    return jnp.mean(jnp.logaddexp(0.0, logits) - y * logits)
+
+
+def encode_ref(g, c):
+    """Coded combine: f[v] = sum_{j,u} c[j,u] g[j, v*m+u].
+
+    Args:
+      g: f32[d, L] stacked partial gradients (m | L).
+      c: f32[d, m] per-(subset, component-shift) coefficients.
+
+    Returns:
+      f32[L/m] transmitted vector.
+    """
+    d, l = g.shape
+    m = c.shape[1]
+    gr = g.reshape(d, l // m, m)
+    return jnp.einsum("jvu,ju->v", gr, c)
+
+
+def worker_step_ref(xs, ys, beta, c):
+    """One worker's full step: d partial gradients + coded combine.
+
+    Args:
+      xs: f32[d, R, L] the worker's d assigned data subsets.
+      ys: f32[d, R] labels.
+      beta: f32[L].
+      c: f32[d, m] encode coefficients.
+
+    Returns:
+      f32[L/m] the transmitted vector f_w.
+    """
+    grads = jax.vmap(logistic_grad_ref, in_axes=(0, 0, None))(xs, ys, beta)
+    return encode_ref(grads, c)
+
+
+def predict_ref(x, beta):
+    """sigmoid(X beta) — master-side evaluation probabilities."""
+    return jax.nn.sigmoid(x @ beta)

@@ -1,0 +1,52 @@
+"""L2 JAX model: the per-worker computation graph of the coded scheme.
+
+``worker_step`` is what every worker executes each iteration — ``d``
+Pallas partial-gradient kernels followed by the Pallas coded-combine
+kernel — fused into one jitted function so the whole thing lowers into a
+single HLO module for the rust runtime (see ``aot.py``).
+
+The loop over the ``d`` subsets is unrolled statically: ``d <= n <= 30``
+in every paper configuration, and unrolling keeps each pallas_call's
+shapes static, which both the interpret-mode executor and the AOT
+lowering require.
+
+``predict`` (master-side evaluation) is plain jnp — it is not a hot spot.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import encode, logistic_grad
+from .kernels.ref import logistic_loss_ref
+
+
+def worker_step(xs, ys, beta, coeffs):
+    """One worker's transmitted vector.
+
+    Args:
+      xs: f32[d, R, L] the worker's assigned subsets.
+      ys: f32[d, R] labels.
+      beta: f32[L] current parameters (broadcast from the master).
+      coeffs: f32[d, m] encode coefficients (B·V_w restricted, see
+        ``coding::GradientCode::encode_coeffs`` on the rust side).
+
+    Returns:
+      f32[L/m] coded vector f_w.
+    """
+    d = xs.shape[0]
+    grads = jnp.stack(
+        [logistic_grad(xs[j], ys[j], beta) for j in range(d)], axis=0
+    )
+    return encode(grads, coeffs)
+
+
+def predict(x, beta):
+    """sigmoid(X beta) over an evaluation block."""
+    return jax.nn.sigmoid(
+        jnp.dot(x, beta, preferred_element_type=jnp.float32)
+    )
+
+
+def loss(x, y, beta):
+    """Mean NLL (diagnostics; gradient checks use jax.grad of this)."""
+    return logistic_loss_ref(x, y, beta)

@@ -1,0 +1,141 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes; every case asserts allclose against ref.py.
+This is the core correctness signal for the compute layer — the same
+kernels are what the AOT artifacts execute on the rust request path.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import encode, logistic_grad
+from compile.kernels.encode import pick_block_v
+from compile.kernels.logistic_grad import pick_block_rows
+from compile.kernels.ref import (
+    encode_ref,
+    logistic_grad_ref,
+    logistic_loss_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+class TestLogisticGrad:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(min_value=1, max_value=96),
+        dim=st.integers(min_value=1, max_value=160),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, rows, dim, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = rand(k1, rows, dim)
+        y = (jax.random.uniform(k2, (rows,)) < 0.5).astype(jnp.float32)
+        beta = rand(k3, dim) * 0.1
+        got = logistic_grad(x, y, beta)
+        want = logistic_grad_ref(x, y, beta)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        block=st.integers(min_value=1, max_value=64),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_block_size_invariance(self, block, seed):
+        rows, dim = 64, 48
+        if rows % block != 0:
+            block = pick_block_rows(rows, block)
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = rand(k1, rows, dim)
+        y = (jax.random.uniform(k2, (rows,)) < 0.5).astype(jnp.float32)
+        beta = rand(k3, dim) * 0.1
+        got = logistic_grad(x, y, beta, block_rows=block)
+        want = logistic_grad_ref(x, y, beta)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_matches_jax_grad_of_loss(self):
+        # kernel == R * grad(mean NLL): the strongest oracle available.
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        rows, dim = 32, 20
+        x = rand(k1, rows, dim)
+        y = (jax.random.uniform(k2, (rows,)) < 0.5).astype(jnp.float32)
+        beta = rand(k3, dim) * 0.2
+        got = logistic_grad(x, y, beta)
+        want = rows * jax.grad(lambda b: logistic_loss_ref(x, y, b))(beta)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_beta_gives_half_residuals(self):
+        x = jnp.eye(4, dtype=jnp.float32)
+        y = jnp.array([1.0, 0.0, 1.0, 0.0], dtype=jnp.float32)
+        got = logistic_grad(x, y, jnp.zeros(4, dtype=jnp.float32))
+        np.testing.assert_allclose(got, [-0.5, 0.5, -0.5, 0.5], atol=1e-6)
+
+    def test_dtype_is_f32(self):
+        x = jnp.ones((8, 4), dtype=jnp.float32)
+        y = jnp.zeros(8, dtype=jnp.float32)
+        out = logistic_grad(x, y, jnp.zeros(4, dtype=jnp.float32))
+        assert out.dtype == jnp.float32
+        assert out.shape == (4,)
+
+
+class TestEncode:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        d=st.integers(min_value=1, max_value=8),
+        m=st.integers(min_value=1, max_value=6),
+        lv=st.integers(min_value=1, max_value=64),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, d, m, lv, seed):
+        l = lv * m
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        g = rand(k1, d, l)
+        c = rand(k2, d, m)
+        got = encode(g, c)
+        want = encode_ref(g, c)
+        assert got.shape == (lv,)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        block=st.integers(min_value=1, max_value=128),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_block_size_invariance(self, block, seed):
+        d, m, lv = 3, 2, 48
+        block = pick_block_v(lv, block)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        g = rand(k1, d, lv * m)
+        c = rand(k2, d, m)
+        got = encode(g, c, block_v=block)
+        np.testing.assert_allclose(got, encode_ref(g, c), rtol=2e-5, atol=2e-5)
+
+    def test_m1_is_weighted_sum(self):
+        # m=1 degenerates to a plain weighted sum of gradients.
+        g = jnp.array([[1.0, 2.0, 3.0], [10.0, 20.0, 30.0]], dtype=jnp.float32)
+        c = jnp.array([[2.0], [0.5]], dtype=jnp.float32)
+        got = encode(g, c)
+        np.testing.assert_allclose(got, [7.0, 14.0, 21.0], atol=1e-6)
+
+    def test_identity_coeff_extracts_strided_components(self):
+        # d=1, c = e_u picks every m-th coordinate starting at u.
+        l, m = 12, 3
+        g = jnp.arange(l, dtype=jnp.float32)[None, :]
+        for u in range(m):
+            c = jnp.zeros((1, m), dtype=jnp.float32).at[0, u].set(1.0)
+            got = encode(g, c)
+            np.testing.assert_allclose(got, np.arange(l)[u::m], atol=1e-6)
+
+    def test_rejects_indivisible_dim(self):
+        g = jnp.ones((2, 7), dtype=jnp.float32)
+        c = jnp.ones((2, 2), dtype=jnp.float32)
+        with pytest.raises(AssertionError):
+            encode(g, c)

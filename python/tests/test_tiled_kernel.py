@@ -1,0 +1,73 @@
+"""Paper-scale tiled logistic-gradient kernel vs the oracle and vs the
+single-pass kernel — including shapes where the full-width kernel's
+block would not fit VMEM on real hardware."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.logistic_grad import logistic_grad
+from compile.kernels.logistic_grad_tiled import (
+    logistic_grad_tiled,
+    pick_block_cols,
+)
+from compile.kernels.ref import logistic_grad_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _data(seed, rows, dim):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (rows, dim), dtype=jnp.float32)
+    y = (jax.random.uniform(k2, (rows,)) < 0.5).astype(jnp.float32)
+    beta = jax.random.normal(k3, (dim,), dtype=jnp.float32) * 0.1
+    return x, y, beta
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=64),
+    dim=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_tiled_matches_ref(rows, dim, seed):
+    x, y, beta = _data(seed, rows, dim)
+    got = logistic_grad_tiled(x, y, beta)
+    want = logistic_grad_ref(x, y, beta)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bc=st.integers(min_value=1, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_tiled_block_cols_invariance(bc, seed):
+    rows, dim = 32, 96
+    bc = pick_block_cols(dim, bc)
+    x, y, beta = _data(seed, rows, dim)
+    got = logistic_grad_tiled(x, y, beta, block_cols=bc)
+    want = logistic_grad_ref(x, y, beta)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_tiled_matches_fullwidth_kernel():
+    x, y, beta = _data(3, 48, 120)
+    a = logistic_grad_tiled(x, y, beta, block_rows=16, block_cols=40)
+    b = logistic_grad(x, y, beta, block_rows=16)
+    np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+
+def test_paper_scale_column_count():
+    """A wide (VMEM-hostile for the full-width kernel) shape: l = 21467
+    (odd, prime-ish) with small blocks — exercises non-power-of-2 tiling.
+    """
+    rows, dim = 8, 21467  # prime dim -> block_cols falls back to 1? no:
+    # pick_block_cols finds the largest divisor <= 256; for a prime this
+    # is 1, which still works (just slow) — use a composite close to it.
+    dim = 21450  # 2·3·5²·11·13
+    x, y, beta = _data(5, rows, dim)
+    got = logistic_grad_tiled(x, y, beta, block_rows=8, block_cols=195)
+    want = logistic_grad_ref(x, y, beta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

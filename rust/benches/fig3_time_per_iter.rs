@@ -1,0 +1,125 @@
+//! E2 — regenerates Fig. 3: average time per iteration for
+//! n ∈ {10, 15, 20}, comparing the naive scheme, the best m = 1 scheme
+//! ([11]–[13]) and the two best (m, s) choices of this paper.
+//!
+//! The cluster clock is the §VI delay model fitted to the paper's EC2
+//! regime (`DelayParams::ec2_fit`); the coding path (gradient compute,
+//! encode, straggler cutoff, decode) runs for real through the trainer.
+//! For each scheme we report both the model-predicted E[T_tot] and the
+//! measured mean over simulated training iterations.
+//!
+//!     cargo bench --bench fig3_time_per_iter [-- --iters 150]
+
+use gradcode::bench::Table;
+use gradcode::cli::Command;
+use gradcode::coordinator::{
+    train, ExecutionMode, OptChoice, SchemeSpec, TrainConfig,
+};
+use gradcode::data::{CategoricalConfig, SyntheticCategorical};
+use gradcode::simulator::optimize::{naive_choice, optimal_triple_m1, TripleChoice};
+use gradcode::simulator::order_stats::expected_total_runtime;
+use gradcode::simulator::DelayParams;
+
+/// Two best (m, s) pairs with m > 1 under the model (the paper plots two
+/// "ours" bars per n).
+fn best_two_ours(p: &DelayParams, n: usize) -> Vec<TripleChoice> {
+    let mut all = Vec::new();
+    for d in 1..=n {
+        for m in 2..=d {
+            let s = d - m;
+            all.push(TripleChoice {
+                d,
+                s,
+                m,
+                expected_runtime: expected_total_runtime(p, n, d, s, m),
+            });
+        }
+    }
+    all.sort_by(|a, b| a.expected_runtime.partial_cmp(&b.expected_runtime).unwrap());
+    all.truncate(2);
+    all
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Command::new("fig3", "avg time per iteration (paper Fig. 3)")
+        .flag("iters", "150", "simulated iterations per scheme")
+        .flag("workers", "10,15,20", "worker counts")
+        .flag("seed", "3", "seed")
+        .parse_env();
+    let iters = args.get_usize("iters");
+    let p = DelayParams::ec2_fit();
+    println!("delay regime (fit to the paper's EC2 numbers): {p:?}\n");
+
+    for n in args.get_usize_list("workers") {
+        let naive = naive_choice(&p, n);
+        let m1 = optimal_triple_m1(&p, n);
+        let ours = best_two_ours(&p, n);
+        let mut schemes: Vec<(String, SchemeSpec, TripleChoice)> = vec![
+            ("naive".into(), SchemeSpec::Uncoded, naive),
+            (
+                format!("m=1, s*={} [11]-[13]", m1.s),
+                SchemeSpec::Poly { s: m1.s, m: 1 },
+                m1,
+            ),
+        ];
+        for t in &ours {
+            schemes.push((
+                format!("ours m={}, s*={}", t.m, t.s),
+                SchemeSpec::Poly { s: t.s, m: t.m },
+                *t,
+            ));
+        }
+
+        // Dataset sized to n subsets of 24 rows (compute is real but the
+        // figure's clock is the delay model, as in the paper's §VI fit).
+        let gen = SyntheticCategorical::new(
+            CategoricalConfig { columns: 8, ..Default::default() },
+            77,
+        );
+        let ds = gen.generate(n * 24, 78);
+        let lr = 4.0 / ds.rows as f32;
+
+        let mut table = Table::new(
+            &format!("Fig. 3 — avg time per iteration, n = {n}"),
+            &["scheme", "(d,s,m)", "model E[T] (s)", "measured mean (s)", "vs naive"],
+        );
+        let mut measured = Vec::new();
+        for (label, spec, choice) in &schemes {
+            let cfg = TrainConfig {
+                n,
+                scheme: *spec,
+                iters,
+                opt: OptChoice::Nag { lr, momentum: 0.9 },
+                eval_every: iters, // metrics off the hot path
+                delays: Some(p),
+                mode: ExecutionMode::Virtual,
+                seed: args.get_u64("seed"),
+                minibatch: None,
+            };
+            let (log, _) = train(cfg, &ds, None)?;
+            measured.push((label.clone(), choice, log.mean_iteration_sim_time()));
+        }
+        let naive_mean = measured[0].2;
+        for (label, choice, mean) in &measured {
+            table.row(&[
+                label.clone(),
+                format!("({},{},{})", choice.d, choice.s, choice.m),
+                format!("{:.4}", choice.expected_runtime),
+                format!("{:.4}", mean),
+                format!("-{:.0}%", 100.0 * (1.0 - mean / naive_mean)),
+            ]);
+        }
+        table.print();
+        let best_ours = measured[2..]
+            .iter()
+            .map(|(_, _, m)| *m)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "  headline: ours vs naive -{:.0}%, ours vs best m=1 -{:.0}%  \
+             (paper: ≥32% and ≥23%)\n",
+            100.0 * (1.0 - best_ours / naive_mean),
+            100.0 * (1.0 - best_ours / measured[1].2),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! E3 — regenerates Fig. 4: generalization AUC vs wall-clock time for
+//! n ∈ {10, 15, 20}, same schemes as Fig. 3.
+//!
+//! The paper's claim: the m > 1 curves sit strictly to the LEFT of the
+//! m = 1 and naive curves — the same AUC is reached earlier. Training is
+//! real (coded gradients, NAG); the clock is the fitted §VI delay model.
+//!
+//!     cargo bench --bench fig4_auc_vs_time [-- --iters 250]
+
+use gradcode::bench::Table;
+use gradcode::cli::Command;
+use gradcode::coordinator::{
+    train, ExecutionMode, OptChoice, SchemeSpec, TrainConfig,
+};
+use gradcode::data::{train_test_split, CategoricalConfig, SyntheticCategorical};
+use gradcode::metrics::RunLog;
+use gradcode::simulator::optimize::{optimal_triple, optimal_triple_m1};
+use gradcode::simulator::DelayParams;
+
+/// First simulated time at which the run's AUC reaches `target`.
+fn time_to_auc(log: &RunLog, target: f64) -> Option<f64> {
+    log.auc_curve().iter().find(|(_, a)| *a >= target).map(|(t, _)| *t)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Command::new("fig4", "AUC vs time (paper Fig. 4)")
+        .flag("iters", "250", "iterations per scheme")
+        .flag("workers", "10,15,20", "worker counts")
+        .flag("seed", "4", "seed")
+        .parse_env();
+    let iters = args.get_usize("iters");
+    let p = DelayParams::ec2_fit();
+
+    for n in args.get_usize_list("workers") {
+        let m1 = optimal_triple_m1(&p, n);
+        let best = optimal_triple(&p, n);
+        let schemes = [
+            ("naive".to_string(), SchemeSpec::Uncoded),
+            (format!("m=1, s={}", m1.s), SchemeSpec::Poly { s: m1.s, m: 1 }),
+            (
+                format!("ours m={}, s={}", best.m, best.s),
+                SchemeSpec::Poly { s: best.s, m: best.m },
+            ),
+        ];
+
+        let gen = SyntheticCategorical::new(
+            CategoricalConfig {
+                columns: 9,
+                cardinality: (8, 40),
+                label_noise: 0.1,
+                ..Default::default()
+            },
+            55,
+        );
+        let raw = gen.generate(4000, 56);
+        let (train_ds, test_ds) = train_test_split(&raw, 0.25, 57);
+        let lr = 1.2 / train_ds.rows as f32;
+
+        let mut logs = Vec::new();
+        for (label, spec) in &schemes {
+            let cfg = TrainConfig {
+                n,
+                scheme: *spec,
+                iters,
+                opt: OptChoice::Nag { lr, momentum: 0.9 },
+                eval_every: (iters / 60).max(1),
+                delays: Some(p),
+                mode: ExecutionMode::Virtual,
+                seed: args.get_u64("seed"),
+                minibatch: None,
+            };
+            let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;
+            logs.push((label.clone(), log));
+        }
+
+        // The paper plots curves; we print the curves plus the summary
+        // statistic that captures "curve is to the left": time to reach
+        // fractions of the best achievable AUC.
+        let peak_aucs: Vec<f64> = logs
+            .iter()
+            .map(|(_, l)| {
+                l.auc_curve().iter().map(|(_, a)| *a).fold(0.5, f64::max)
+            })
+            .collect();
+        let target_full = peak_aucs.iter().fold(1.0f64, |a, &b| a.min(b));
+        let mut table = Table::new(
+            &format!("Fig. 4 — time (s) to reach target AUC, n = {n}"),
+            &["scheme", "time to 90% of target AUC", "time to 97%", "final AUC"],
+        );
+        for (label, log) in &logs {
+            let t95 = time_to_auc(log, 0.5 + (target_full - 0.5) * 0.90);
+            let t99 = time_to_auc(log, 0.5 + (target_full - 0.5) * 0.97);
+            table.row(&[
+                label.clone(),
+                t95.map_or("—".into(), |t| format!("{t:.0}")),
+                t99.map_or("—".into(), |t| format!("{t:.0}")),
+                format!("{:.4}", log.final_auc().unwrap_or(f64::NAN)),
+            ]);
+        }
+        table.print();
+        for (label, log) in &logs {
+            let pts: Vec<String> = log
+                .auc_curve()
+                .iter()
+                .step_by(2)
+                .map(|(t, a)| format!("({t:.0},{a:.3})"))
+                .collect();
+            println!("  curve {label:<16} {}", pts.join(" "));
+        }
+        println!();
+    }
+    println!("expected shape: the ours-curve reaches every AUC level first (left-most), naive last.");
+    Ok(())
+}

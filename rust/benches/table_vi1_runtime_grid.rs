@@ -1,0 +1,80 @@
+//! E4 — regenerates the §VI-A expected-runtime grid:
+//! n = k = 8, λ₁ = 0.8, λ₂ = 0.1, t₁ = 1.6, t₂ = 6, s = d - m;
+//! E[T_tot] for every (d, m), d = column, m = row — the exact numbers the
+//! paper prints (36.1138 uncoded, 21.3697 optimum at d=4, m=3, ...).
+//!
+//! Also cross-checks each cell against Monte-Carlo simulation.
+//!
+//!     cargo bench --bench table_vi1_runtime_grid
+
+use gradcode::bench::Table;
+use gradcode::cli::Command;
+use gradcode::simulator::order_stats::expected_total_runtime;
+use gradcode::simulator::{DelayParams, VirtualCluster};
+
+fn main() {
+    let args = Command::new("table_vi1", "§VI-A E[T_tot] grid (n=8)")
+        .flag("n", "8", "workers")
+        .flag("mc-iters", "20000", "Monte-Carlo iterations for the check")
+        .parse_env();
+    let n = args.get_usize("n");
+    let p = DelayParams::table_vi1();
+    println!("params: {p:?}, s = d - m\n");
+
+    let header: Vec<String> = std::iter::once("m \\ d".to_string())
+        .chain((1..=n).map(|d| d.to_string()))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("§VI-A table 1 — E[T_tot] for all (d, m)", &header_refs);
+    let mut best = (f64::INFINITY, 0usize, 0usize);
+    for m in 1..=n {
+        let mut row = vec![m.to_string()];
+        for d in 1..=n {
+            if m > d {
+                row.push(String::new());
+                continue;
+            }
+            let v = expected_total_runtime(&p, n, d, d - m, m);
+            if v < best.0 {
+                best = (v, d, m);
+            }
+            row.push(format!("{v:.4}"));
+        }
+        table.row(&row);
+    }
+    table.print();
+    println!(
+        "optimum: d={}, m={} -> {:.4}  (paper: d=4, m=3 -> 21.3697)",
+        best.1, best.2, best.0
+    );
+    let uncoded = expected_total_runtime(&p, n, 1, 0, 1);
+    let m1_best = (1..=n)
+        .map(|d| expected_total_runtime(&p, n, d, d - 1, 1))
+        .fold(f64::INFINITY, f64::min);
+    println!("uncoded (1,0,1): {uncoded:.4}  (paper: 36.1138)");
+    println!("best m=1:        {m1_best:.4}  (paper: 24.1063, at d=8)");
+    println!(
+        "improvements: {:.0}% vs uncoded (paper 41%), {:.0}% vs m=1 (paper 11%)\n",
+        100.0 * (1.0 - best.0 / uncoded),
+        100.0 * (1.0 - best.0 / m1_best)
+    );
+
+    // Monte-Carlo cross-check on the three headline cells.
+    let iters = args.get_usize("mc-iters");
+    let mut check = Table::new(
+        "Monte-Carlo cross-check",
+        &["(d,s,m)", "quadrature", "simulated", "rel diff"],
+    );
+    for (d, s, m) in [(1, 0, 1), (best.1, best.1 - best.2, best.2), (8, 7, 1)] {
+        let exact = expected_total_runtime(&p, n, d, s, m);
+        let mut vc = VirtualCluster::new(&p, n, d, s, m, 99);
+        let mc = vc.mean_iteration_time(iters);
+        check.row(&[
+            format!("({d},{s},{m})"),
+            format!("{exact:.4}"),
+            format!("{mc:.4}"),
+            format!("{:+.2}%", 100.0 * (mc / exact - 1.0)),
+        ]);
+    }
+    check.print();
+}

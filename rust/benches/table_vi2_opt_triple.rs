@@ -1,0 +1,64 @@
+//! E5/E6 — regenerates the two §VI-A optimal-triple grids:
+//!
+//! table 2: n = 10, λ₁ = 0.6, t₁ = 1.5; argmin (d,s,m) as a function of
+//!          λ₂ ∈ {0.05..0.3} × t₂ ∈ {1.5..96};
+//! table 3: n = 10, λ₂ = 0.1, t₂ = 6; argmin as a function of
+//!          λ₁ ∈ {0.5..1.0} × t₁ ∈ {1..2.8}.
+//!
+//!     cargo bench --bench table_vi2_opt_triple
+
+use gradcode::bench::Table;
+use gradcode::simulator::{optimal_triple, DelayParams};
+
+fn fmt_triple(p: &DelayParams, n: usize) -> String {
+    let t = optimal_triple(p, n);
+    format!("({},{},{})", t.d, t.s, t.m)
+}
+
+fn main() {
+    let n = 10;
+
+    // table 2 (vary λ₂, t₂)
+    let t2s = [1.5, 3.0, 6.0, 12.0, 24.0, 48.0, 96.0];
+    let l2s = [0.05, 0.1, 0.15, 0.2, 0.25, 0.3];
+    let header: Vec<String> = std::iter::once("λ₂ \\ t₂".to_string())
+        .chain(t2s.iter().map(|t| t.to_string()))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table2 = Table::new(
+        "§VI-A table 2 — optimal (d,s,m); n=10, λ₁=0.6, t₁=1.5",
+        &header_refs,
+    );
+    for &l2 in &l2s {
+        let mut row = vec![l2.to_string()];
+        for &t2 in &t2s {
+            row.push(fmt_triple(&DelayParams::table_vi2_base(l2, t2), n));
+        }
+        table2.row(&row);
+    }
+    table2.print();
+    println!("paper row λ₂=0.05: (10,9,1) (10,8,2) (10,8,2) (10,7,3) (10,6,4) (10,5,5) (10,4,6)");
+    println!("paper trend: m increases with t₂; d decreases with λ₂\n");
+
+    // table 3 (vary λ₁, t₁)
+    let t1s = [1.0, 1.3, 1.6, 1.9, 2.2, 2.5, 2.8];
+    let l1s = [0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+    let header3: Vec<String> = std::iter::once("λ₁ \\ t₁".to_string())
+        .chain(t1s.iter().map(|t| t.to_string()))
+        .collect();
+    let header3_refs: Vec<&str> = header3.iter().map(|s| s.as_str()).collect();
+    let mut table3 = Table::new(
+        "§VI-A table 3 — optimal (d,s,m); n=10, λ₂=0.1, t₂=6",
+        &header3_refs,
+    );
+    for &l1 in &l1s {
+        let mut row = vec![l1.to_string()];
+        for &t1 in &t1s {
+            row.push(fmt_triple(&DelayParams::table_vi3_base(l1, t1), n));
+        }
+        table3.row(&row);
+    }
+    table3.print();
+    println!("paper row λ₁=0.5: (10,8,2) (10,8,2) (3,1,2) (3,1,2) (3,1,2) (2,0,2) (2,0,2)");
+    println!("paper trend: for fixed λ₁, s decreases with t₁");
+}

@@ -1,0 +1,239 @@
+//! Benchmark harness substrate (no `criterion` offline).
+//!
+//! Two pieces:
+//! - [`Bencher`]: warmup + timed iterations with mean / stddev / p50 / p99
+//!   and ns-per-op reporting, for the hot-path microbenches.
+//! - [`Table`]: aligned ASCII table printer so each `rust/benches/*` bin
+//!   emits rows directly comparable to the paper's tables and figures.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of a timed run.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Human-readable time string.
+    pub fn human(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {} ± {} (p50 {}, p99 {}, n={})",
+            Stats::human(self.mean_ns),
+            Stats::human(self.std_ns),
+            Stats::human(self.p50_ns),
+            Stats::human(self.p99_ns),
+            self.iters
+        )
+    }
+}
+
+/// Timing driver: runs `f` for `warmup` untimed and `iters` timed passes.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, iters: 30 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters }
+    }
+
+    /// Time a closure; the closure's return value is black-boxed so the
+    /// optimizer cannot elide the work.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        stats_from(&mut samples)
+    }
+
+    /// Time a closure under a wall-clock budget: stops after `iters` or
+    /// `budget`, whichever first (for expensive end-to-end passes).
+    pub fn run_budget<T>(&self, budget: Duration, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup.min(1) {
+            black_box(f());
+        }
+        let start = Instant::now();
+        let mut samples = Vec::new();
+        while samples.len() < self.iters && (samples.is_empty() || start.elapsed() < budget) {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        stats_from(&mut samples)
+    }
+}
+
+fn stats_from(samples: &mut [f64]) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    let pct = |q: f64| samples[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+    Stats {
+        iters: n,
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        p50_ns: pct(0.5),
+        p99_ns: pct(0.99),
+        min_ns: samples[0],
+        max_ns: samples[n - 1],
+    }
+}
+
+/// Optimizer barrier (stable-rust version of `std::hint::black_box`
+/// semantics; std's is available and used directly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Aligned ASCII table printer for paper-style output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:>w$} | ", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_times_something() {
+        let b = Bencher::new(1, 10);
+        let s = b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn stats_ordering_invariants() {
+        let mut samples = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let s = stats_from(&mut samples);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 5.0);
+        assert_eq!(s.p50_ns, 3.0);
+        assert!((s.mean_ns - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["scheme", "time"]);
+        t.row(&["naive".into(), "36.11".into()]);
+        t.row(&["ours (d=4,m=3)".into(), "21.37".into()]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.contains("naive"));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(Stats::human(500.0).ends_with("ns"));
+        assert!(Stats::human(5_000.0).ends_with("µs"));
+        assert!(Stats::human(5_000_000.0).ends_with("ms"));
+        assert!(Stats::human(5e9).ends_with('s'));
+    }
+}

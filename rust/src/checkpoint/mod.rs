@@ -1,0 +1,126 @@
+//! Checkpointing: save/restore parameter vectors and run logs.
+//!
+//! Binary format (no serde offline): `magic u32 | version u32 | dim u64 |
+//! iter u64 | f32[dim]`, little-endian. Used by the trainer CLI so long
+//! coded-training runs survive restarts, and by the examples to hand a
+//! trained model to the predict artifact.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: u32 = 0x6743_ca1e;
+const VERSION: u32 = 1;
+
+/// A saved model state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Completed iterations.
+    pub iter: u64,
+    /// Parameter vector.
+    pub beta: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn new(iter: u64, beta: Vec<f32>) -> Self {
+        Checkpoint { iter, beta }
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.beta.len() as u64).to_le_bytes())?;
+        w.write_all(&self.iter.to_le_bytes())?;
+        for x in &self.beta {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let mut head = [0u8; 24];
+        r.read_exact(&mut head).context("checkpoint header")?;
+        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            bail!("not a gradcode checkpoint (magic {magic:#x})");
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let dim = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        let iter = u64::from_le_bytes(head[16..24].try_into().unwrap());
+        if dim > (1 << 31) {
+            bail!("implausible checkpoint dim {dim}");
+        }
+        let mut raw = vec![0u8; dim * 4];
+        r.read_exact(&mut raw).context("checkpoint payload")?;
+        let beta = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Checkpoint { iter, beta })
+    }
+
+    /// Save atomically (write + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        self.write_to(&mut f)?;
+        f.sync_all().ok();
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::read_from(&mut f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let ck = Checkpoint::new(42, (0..100).map(|i| i as f32 * 0.5).collect());
+        let mut buf = Vec::new();
+        ck.write_to(&mut buf).unwrap();
+        let back = Checkpoint::read_from(&mut std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("gradcode-ck-{}.bin", std::process::id()));
+        let ck = Checkpoint::new(7, vec![1.5, -2.0, 0.25]);
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let mut buf = Vec::new();
+        Checkpoint::new(1, vec![0.0]).write_to(&mut buf).unwrap();
+        buf[0] ^= 0xff;
+        assert!(Checkpoint::read_from(&mut std::io::Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let mut buf = Vec::new();
+        Checkpoint::new(1, vec![0.0; 10]).write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 8);
+        assert!(Checkpoint::read_from(&mut std::io::Cursor::new(buf)).is_err());
+    }
+}

@@ -1,0 +1,348 @@
+//! Declarative command-line parser substrate (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean switches, defaults,
+//! typed accessors, subcommands, and auto-generated `--help` text. Used by
+//! the `gradcode` binary, the examples, and every bench harness so each
+//! table/figure regenerator exposes its sweep parameters.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Error raised while parsing arguments.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag `{0}` (try --help)")]
+    UnknownFlag(String),
+    #[error("flag `--{0}` expects a value")]
+    MissingValue(String),
+    #[error("invalid value `{value}` for `--{flag}`: {reason}")]
+    InvalidValue { flag: String, value: String, reason: String },
+    #[error("unknown subcommand `{0}` (try --help)")]
+    UnknownSubcommand(String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_switch: bool,
+}
+
+/// Declarative flag set for one command.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    name: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command { name: name.into(), about: about.into(), flags: Vec::new() }
+    }
+
+    /// Flag taking a value, with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Flag taking a value, required (no default).
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Boolean switch (present = true).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some("false".into()),
+            is_switch: true,
+        });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nflags:");
+        for f in &self.flags {
+            let d = match (&f.default, f.is_switch) {
+                (_, true) => " [switch]".to_string(),
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, _) => " [required]".to_string(),
+            };
+            let _ = writeln!(s, "  --{:<18} {}{}", f.name, f.help, d);
+        }
+        s
+    }
+
+    /// Parse an argument list (without argv\[0\]).
+    pub fn parse(&self, args: &[String]) -> Result<Args, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        let mut positional = Vec::new();
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                // `cargo bench` appends `--bench` to every bench binary's
+                // argv; tolerate it (criterion-compatible behavior).
+                if name == "bench" && !self.flags.iter().any(|f| f.name == "bench") {
+                    i += 1;
+                    continue;
+                }
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(a.clone()))?;
+                let value = if spec.is_switch {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                };
+                values.insert(name, value);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if !values.contains_key(&f.name) {
+                return Err(CliError::MissingValue(f.name.clone()));
+            }
+        }
+        Ok(Args { values, positional })
+    }
+
+    /// Parse `std::env::args()`, printing help and exiting on `--help` or
+    /// error.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(CliError::HelpRequested) => {
+                println!("{}", self.help());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.help());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Parsed argument values with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get_str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get_str(name);
+        raw.parse::<T>().map_err(|e| CliError::InvalidValue {
+            flag: name.into(),
+            value: raw.into(),
+            reason: e.to_string(),
+        })
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get_str(name) == "true"
+    }
+
+    /// Comma-separated usize list, e.g. `--workers 10,15,20`.
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get_str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{name}: {e}")))
+            .collect()
+    }
+
+    /// Comma-separated f64 list.
+    pub fn get_f64_list(&self, name: &str) -> Vec<f64> {
+        self.get_str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{name}: {e}")))
+            .collect()
+    }
+}
+
+/// Subcommand dispatcher for the main binary.
+pub struct App {
+    pub name: String,
+    pub about: String,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &str, about: &str) -> Self {
+        App { name: name.into(), about: about.into(), commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n\nsubcommands:", self.name, self.about);
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<14} {}", c.name, c.about);
+        }
+        let _ = writeln!(s, "\nrun `{} <subcommand> --help` for flags", self.name);
+        s
+    }
+
+    /// Split argv into (subcommand, parsed args).
+    pub fn dispatch(&self, argv: &[String]) -> Result<(String, Args), CliError> {
+        let first = argv.first().ok_or(CliError::HelpRequested)?;
+        if first == "--help" || first == "-h" {
+            return Err(CliError::HelpRequested);
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| &c.name == first)
+            .ok_or_else(|| CliError::UnknownSubcommand(first.clone()))?;
+        let parsed = cmd.parse(&argv[1..])?;
+        Ok((cmd.name.clone(), parsed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .flag("n", "10", "workers")
+            .flag("rate", "0.5", "rate")
+            .switch("verbose", "talk more")
+            .required("out", "output path")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&args(&["--out", "x.txt", "--n", "20"])).unwrap();
+        assert_eq!(a.get_usize("n"), 20);
+        assert_eq!(a.get_f64("rate"), 0.5);
+        assert!(!a.get_bool("verbose"));
+        assert_eq!(a.get_str("out"), "x.txt");
+    }
+
+    #[test]
+    fn equals_syntax_and_switch() {
+        let a = cmd().parse(&args(&["--out=y", "--rate=1.25", "--verbose"])).unwrap();
+        assert_eq!(a.get_f64("rate"), 1.25);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(matches!(cmd().parse(&args(&["--n", "5"])), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(matches!(
+            cmd().parse(&args(&["--out", "x", "--bogus", "1"])),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Command::new("t", "t").flag("ws", "10,15,20", "worker counts");
+        let a = c.parse(&[]).unwrap();
+        assert_eq!(a.get_usize_list("ws"), vec![10, 15, 20]);
+    }
+
+    #[test]
+    fn help_contains_flags() {
+        let h = cmd().help();
+        assert!(h.contains("--n"));
+        assert!(h.contains("[default: 10]"));
+        assert!(h.contains("[required]"));
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App::new("g", "x").command(cmd());
+        let (name, a) = app.dispatch(&args(&["t", "--out", "z"])).unwrap();
+        assert_eq!(name, "t");
+        assert_eq!(a.get_str("out"), "z");
+        assert!(matches!(
+            app.dispatch(&args(&["nope"])),
+            Err(CliError::UnknownSubcommand(_))
+        ));
+    }
+}

@@ -1,0 +1,86 @@
+//! Theorem 1's converse side: feasibility checks.
+//!
+//! `is_achievable` is the tradeoff inequality (Eq. 4) in exact integer
+//! arithmetic; `verify_placement_bound` checks Claim 1 (every data subset
+//! must be held by at least `s + m` workers) against a concrete placement
+//! — the structural fact the converse proof rests on.
+
+use super::Placement;
+
+/// Theorem 1: `(d, s, m)` is achievable for `(n, k)` iff
+/// `d/k >= (s+m)/n`, evaluated as `d·n >= k·(s+m)` in integers.
+pub fn is_achievable(n: usize, k: usize, d: usize, s: usize, m: usize) -> bool {
+    if n == 0 || k == 0 || d == 0 || m == 0 || d > k || s >= n {
+        return false;
+    }
+    d * n >= k * (s + m)
+}
+
+/// Claim 1 check: with straggler tolerance `s` and reduction factor `m`,
+/// every subset must appear on at least `s + m` workers.
+pub fn verify_placement_bound(p: &Placement, s: usize, m: usize) -> bool {
+    (0..p.n()).all(|t| p.holders(t).len() >= s + m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{self, gen, Config};
+
+    #[test]
+    fn tight_triples_achievable() {
+        assert!(is_achievable(5, 5, 3, 2, 1));
+        assert!(is_achievable(5, 5, 3, 1, 2));
+        assert!(!is_achievable(5, 5, 3, 2, 2));
+        // k != n: d/k >= (s+m)/n
+        assert!(is_achievable(4, 8, 6, 2, 1)); // 6/8 >= 3/4
+        assert!(!is_achievable(4, 8, 5, 2, 1)); // 5/8 < 3/4
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(!is_achievable(0, 5, 1, 0, 1));
+        assert!(!is_achievable(5, 5, 0, 0, 1));
+        assert!(!is_achievable(5, 5, 6, 0, 1));
+        assert!(!is_achievable(5, 5, 3, 5, 1));
+        assert!(!is_achievable(5, 5, 3, 1, 0));
+    }
+
+    #[test]
+    fn cyclic_placement_meets_claim1_exactly_at_tight_point() {
+        // d = s + m: cyclic placement puts each subset on exactly d workers.
+        let p = Placement::cyclic(7, 4);
+        assert!(verify_placement_bound(&p, 2, 2)); // s+m = 4 = d
+        assert!(!verify_placement_bound(&p, 3, 2)); // s+m = 5 > d
+    }
+
+    #[test]
+    fn property_tight_random_triples_are_achievable_and_placed() {
+        testkit::check_bool(
+            Config { cases: 128, seed: 0xb0 },
+            "tight-triples-achievable",
+            |rng| gen::scheme_triple(rng, 2, 24),
+            |&(n, d, s, m)| {
+                is_achievable(n, n, d, s, m)
+                    && verify_placement_bound(&Placement::cyclic(n, d), s, m)
+                    && verify_placement_bound(&Placement::cyclic_shifted(n, d), s, m)
+            },
+        );
+    }
+
+    #[test]
+    fn property_violations_never_pass() {
+        // d = s + m - 1 must always be rejected (when still >= 1).
+        testkit::check_bool(
+            Config { cases: 128, seed: 0xb1 },
+            "sub-threshold-rejected",
+            |rng| gen::scheme_triple(rng, 3, 24),
+            |&(n, d, s, m)| {
+                if d == 1 {
+                    return true; // can't go below
+                }
+                !is_achievable(n, n, d - 1, s, m)
+            },
+        );
+    }
+}

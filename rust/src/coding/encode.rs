@@ -1,0 +1,191 @@
+//! Worker-side encoding (Eq. 18/25): the f32 hot path.
+//!
+//! Worker `w` holds `d` partial gradients `g_{t_0}, …, g_{t_{d-1}}` (each
+//! length `l`) and transmits `f_w ∈ R^{l/m}` with
+//! `f_w[v] = Σ_{j<d} Σ_{u<m} c[j·m+u] · g_{t_j}[v·m+u]`,
+//! where `c` comes from [`GradientCode::encode_coeffs`]. Each inner term
+//! is a dot product of `c`'s `m`-chunk with a contiguous `m`-chunk of the
+//! gradient, so the pass streams each gradient exactly once.
+
+use super::{CodingError, GradientCode};
+
+/// Precomputed per-worker encoder.
+pub struct Encoder {
+    /// `d·m` coefficients in f32 (payload precision).
+    coeffs: Vec<f32>,
+    d: usize,
+    m: usize,
+}
+
+impl Encoder {
+    /// Build for `worker` under `code`.
+    pub fn new(code: &dyn GradientCode, worker: usize) -> Result<Self, CodingError> {
+        let c64 = code.encode_coeffs(worker)?;
+        Ok(Encoder {
+            coeffs: c64.iter().map(|&x| x as f32).collect(),
+            d: code.config().d,
+            m: code.config().m,
+        })
+    }
+
+    /// Build directly from f64 coefficients (testing / custom schemes).
+    pub fn from_coeffs(coeffs: &[f64], d: usize, m: usize) -> Self {
+        assert_eq!(coeffs.len(), d * m);
+        Encoder { coeffs: coeffs.iter().map(|&x| x as f32).collect(), d, m }
+    }
+
+    pub fn coeffs(&self) -> &[f32] {
+        &self.coeffs
+    }
+
+    /// Encode `d` partial gradients (each of length `l`, `m | l`) into the
+    /// transmitted vector of length `l/m`.
+    pub fn encode(&self, gradients: &[&[f32]]) -> Result<Vec<f32>, CodingError> {
+        let mut out = Vec::new();
+        self.encode_into(gradients, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocation-free variant for the request path: `out` is resized to
+    /// `l/m` and overwritten.
+    ///
+    /// Fused across the `d` gradients: one pass over the output with all
+    /// `d` input streams read concurrently (§Perf: the per-gradient
+    /// formulation re-traversed `out` d times and measured ~963 µs at
+    /// d=3, l=262144; the fused loops are a single write pass).
+    pub fn encode_into(
+        &self,
+        gradients: &[&[f32]],
+        out: &mut Vec<f32>,
+    ) -> Result<(), CodingError> {
+        assert_eq!(gradients.len(), self.d, "expected {} gradients", self.d);
+        let l = gradients[0].len();
+        if l % self.m != 0 {
+            return Err(CodingError::DimensionNotDivisible { l, m: self.m });
+        }
+        for (j, g) in gradients.iter().enumerate() {
+            assert_eq!(g.len(), l, "gradient {j} length mismatch");
+        }
+        let lv = l / self.m;
+        out.clear();
+        out.resize(lv, 0.0);
+        let m = self.m;
+        let c = &self.coeffs;
+        match m {
+            1 => {
+                // f[v] = Σ_j c_j g_j[v] — the 4-stream fused weighted sum.
+                crate::linalg::weighted_sum_f32(c, gradients, out);
+            }
+            2 => {
+                for (v, o) in out.iter_mut().enumerate() {
+                    let base = 2 * v;
+                    let mut acc = 0.0f32;
+                    for (j, g) in gradients.iter().enumerate() {
+                        acc += c[2 * j] * g[base] + c[2 * j + 1] * g[base + 1];
+                    }
+                    *o = acc;
+                }
+            }
+            4 => {
+                for (v, o) in out.iter_mut().enumerate() {
+                    let base = 4 * v;
+                    let mut acc = 0.0f32;
+                    for (j, g) in gradients.iter().enumerate() {
+                        let cj = &c[4 * j..4 * j + 4];
+                        acc += cj[0] * g[base]
+                            + cj[1] * g[base + 1]
+                            + cj[2] * g[base + 2]
+                            + cj[3] * g[base + 3];
+                    }
+                    *o = acc;
+                }
+            }
+            _ => {
+                for (v, o) in out.iter_mut().enumerate() {
+                    let base = v * m;
+                    let mut acc = 0.0f32;
+                    for (j, g) in gradients.iter().enumerate() {
+                        let cj = &c[j * m..(j + 1) * m];
+                        let chunk = &g[base..base + m];
+                        for (cv, gv) in cj.iter().zip(chunk) {
+                            acc += cv * gv;
+                        }
+                    }
+                    *o = acc;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{PolynomialCode, SchemeConfig};
+
+    fn naive_encode(coeffs: &[f64], gradients: &[&[f32]], m: usize) -> Vec<f32> {
+        let l = gradients[0].len();
+        let lv = l / m;
+        let mut out = vec![0.0f32; lv];
+        for v in 0..lv {
+            let mut acc = 0.0f64;
+            for (j, g) in gradients.iter().enumerate() {
+                for u in 0..m {
+                    acc += coeffs[j * m + u] * g[v * m + u] as f64;
+                }
+            }
+            out[v] = acc as f32;
+        }
+        out
+    }
+
+    #[test]
+    fn encode_matches_naive_all_m() {
+        for (d, m, l) in [(3, 1, 24), (3, 2, 24), (4, 4, 32), (5, 3, 30)] {
+            let coeffs: Vec<f64> = (0..d * m).map(|i| (i as f64 * 0.37).sin()).collect();
+            let grads_store: Vec<Vec<f32>> = (0..d)
+                .map(|j| (0..l).map(|k| ((j * l + k) as f32 * 0.11).cos()).collect())
+                .collect();
+            let grads: Vec<&[f32]> = grads_store.iter().map(|v| v.as_slice()).collect();
+            let enc = Encoder::from_coeffs(&coeffs, d, m);
+            let got = enc.encode(&grads).unwrap();
+            let want = naive_encode(&coeffs, &grads, m);
+            assert_eq!(got.len(), l / m);
+            for v in 0..got.len() {
+                assert!((got[v] - want[v]).abs() < 1e-4, "d={d} m={m} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_rejects_bad_dimension() {
+        let enc = Encoder::from_coeffs(&[1.0, 2.0], 1, 2);
+        let g = vec![1.0f32; 7];
+        assert!(enc.encode(&[&g]).is_err());
+    }
+
+    #[test]
+    fn encoder_from_scheme_has_dm_coeffs() {
+        let code = PolynomialCode::new(SchemeConfig::tight(5, 1, 2).unwrap()).unwrap();
+        let enc = Encoder::new(&code, 2).unwrap();
+        assert_eq!(enc.coeffs().len(), 3 * 2);
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let enc = Encoder::from_coeffs(&[0.5, -1.0], 1, 2);
+        let g = vec![2.0f32; 8];
+        let mut buf = Vec::new();
+        enc.encode_into(&[&g], &mut buf).unwrap();
+        assert_eq!(buf.len(), 4);
+        for &x in &buf {
+            assert!((x - (0.5 * 2.0 - 1.0 * 2.0)).abs() < 1e-6);
+        }
+        // second call must overwrite, not accumulate
+        enc.encode_into(&[&g], &mut buf).unwrap();
+        for &x in &buf {
+            assert!((x + 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Gradient-coding core — the paper's primary contribution.
+//!
+//! Implements both constructions achieving the three-way tradeoff
+//! `d >= s + m` (Theorem 1, with `k = n`):
+//!
+//! - [`PolynomialCode`] — §III recursive-polynomial scheme over a
+//!   Vandermonde evaluation matrix (Eq. 8–23, Algorithm 1);
+//! - [`RandomCode`] — §IV Gaussian-matrix scheme with
+//!   `B_i = -R_i S_i^{-1}` and pseudo-inverse decoding, trading exact
+//!   Vandermonde structure for numerical stability (Theorem 2).
+//!
+//! Both expose the same [`GradientCode`] interface: a *placement* (which
+//! data subsets each worker computes), per-worker *encode coefficients*
+//! (the dense vector `c_i = B·V_i` restricted to assigned subsets), and
+//! *decode weights* turning any admissible set of returned vectors back
+//! into the sum gradient.
+//!
+//! Conventions: all indices are 0-based in code (the paper is 1-based);
+//! worker `w`'s transmitted vector has dimension `l/m`; gradients are
+//! `f32` payloads while coefficients stay `f64` until the final cast.
+
+mod bounds;
+mod decode;
+mod encode;
+mod placement;
+mod poly;
+mod random_scheme;
+mod stability;
+mod uncoded;
+mod vandermonde;
+
+pub use bounds::{is_achievable, verify_placement_bound};
+pub use decode::{sum_gradients, Decoder};
+pub use encode::Encoder;
+pub use placement::Placement;
+pub use poly::PolynomialCode;
+pub use random_scheme::RandomCode;
+pub use stability::{
+    decode_condition, gamma_gaussian, max_condition_number, reconstruction_error,
+    reconstruction_error_f64, StabilityReport,
+};
+pub use uncoded::UncodedScheme;
+pub use vandermonde::{integer_thetas, paper_thetas, vandermonde};
+
+use crate::linalg::Matrix;
+
+/// Scheme parameters. `k = n` throughout (Remark 1: only the ratio `d/k`
+/// matters; the library fixes `k = n` like the paper's §III–§VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchemeConfig {
+    /// Number of workers (= number of data subsets).
+    pub n: usize,
+    /// Data subsets per worker (computation load).
+    pub d: usize,
+    /// Stragglers tolerated (decode needs any `n - s` workers).
+    pub s: usize,
+    /// Communication reduction factor (transmit `l/m` instead of `l`).
+    pub m: usize,
+}
+
+impl SchemeConfig {
+    /// Validate against Theorem 1 (`d >= s + m`, with `k = n`) and basic
+    /// range constraints.
+    pub fn new(n: usize, d: usize, s: usize, m: usize) -> Result<Self, CodingError> {
+        if n == 0 || d == 0 || m == 0 {
+            return Err(CodingError::InvalidConfig(format!(
+                "n, d, m must be positive (n={n}, d={d}, m={m})"
+            )));
+        }
+        if d > n {
+            return Err(CodingError::InvalidConfig(format!("d={d} exceeds n={n}")));
+        }
+        if s >= n {
+            return Err(CodingError::InvalidConfig(format!("s={s} must be < n={n}")));
+        }
+        if d < s + m {
+            return Err(CodingError::NotAchievable { n, d, s, m });
+        }
+        Ok(SchemeConfig { n, d, s, m })
+    }
+
+    /// The tight configuration `d = s + m` used everywhere in the paper.
+    pub fn tight(n: usize, s: usize, m: usize) -> Result<Self, CodingError> {
+        Self::new(n, s + m, s, m)
+    }
+
+    /// Number of worker results the master must wait for.
+    pub fn wait_for(&self) -> usize {
+        self.n - self.s
+    }
+
+    /// Check a gradient dimension is compatible (`m | l`).
+    pub fn check_dim(&self, l: usize) -> Result<(), CodingError> {
+        if l % self.m != 0 {
+            return Err(CodingError::DimensionNotDivisible { l, m: self.m });
+        }
+        Ok(())
+    }
+}
+
+/// Errors from scheme construction, encoding, or decoding.
+#[derive(Debug, thiserror::Error)]
+pub enum CodingError {
+    #[error("invalid configuration: {0}")]
+    InvalidConfig(String),
+    #[error("(d={d}, s={s}, m={m}) violates Theorem 1 for n={n}: need d >= s+m")]
+    NotAchievable { n: usize, d: usize, s: usize, m: usize },
+    #[error("gradient dimension l={l} is not divisible by m={m} (pad with zeros)")]
+    DimensionNotDivisible { l: usize, m: usize },
+    #[error("need at least {need} worker results, got {got}")]
+    NotEnoughWorkers { need: usize, got: usize },
+    #[error("worker index {0} out of range")]
+    WorkerOutOfRange(usize),
+    #[error("decode matrix is singular for worker set {available:?}: {source}")]
+    SingularDecode {
+        available: Vec<usize>,
+        #[source]
+        source: crate::linalg::LinalgError,
+    },
+}
+
+/// Common interface over the §III and §IV constructions.
+pub trait GradientCode: Send + Sync {
+    fn config(&self) -> &SchemeConfig;
+
+    /// Data-subset placement.
+    fn placement(&self) -> &Placement;
+
+    /// Dense coefficient vector for worker `w`, length `d·m`, ordered
+    /// `[local subset 0..d][component shift u in 0..m]`; local subset `j`
+    /// refers to `placement().assigned(w)[j]`. The worker's transmitted
+    /// vector is `f_w[v] = Σ_{j,u} c[j·m+u] · g_{assigned[j]}(v·m+u)`.
+    fn encode_coeffs(&self, worker: usize) -> Result<Vec<f64>, CodingError>;
+
+    /// Decode weights for a set of responding workers (must contain at
+    /// least `n - s` entries; implementations may use more for stability).
+    /// Returns a row-major `(used_workers.len() × m)` weight matrix `W`
+    /// and the subset of `available` actually used, such that
+    /// `g_sum(v·m+u) = Σ_i W[i·m+u] · f_{used[i]}[v]`.
+    fn decode_weights(&self, available: &[usize]) -> Result<DecodeWeights, CodingError>;
+
+    /// Full `(m·n) × (n-s)` encoding matrix `B` (diagnostics/tests).
+    fn matrix_b(&self) -> Matrix;
+
+    /// Evaluation matrix `V` (`(n-s) × n`; Vandermonde or Gaussian).
+    fn matrix_v(&self) -> Matrix;
+}
+
+/// Result of [`GradientCode::decode_weights`].
+#[derive(Debug, Clone)]
+pub struct DecodeWeights {
+    /// Workers whose results the weights refer to (subset of `available`).
+    pub used: Vec<usize>,
+    /// Row-major `used.len() × m`.
+    pub weights: Vec<f64>,
+    /// m (columns of `weights`).
+    pub m: usize,
+}
+
+impl DecodeWeights {
+    pub fn weight(&self, i: usize, u: usize) -> f64 {
+        self.weights[i * self.m + u]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_accepts_tight_triples() {
+        let c = SchemeConfig::tight(5, 1, 2).unwrap();
+        assert_eq!(c.d, 3);
+        assert_eq!(c.wait_for(), 4);
+    }
+
+    #[test]
+    fn config_rejects_theorem1_violations() {
+        assert!(matches!(
+            SchemeConfig::new(5, 2, 2, 1),
+            Err(CodingError::NotAchievable { .. })
+        ));
+        assert!(SchemeConfig::new(5, 3, 2, 1).is_ok());
+    }
+
+    #[test]
+    fn config_rejects_degenerate() {
+        assert!(SchemeConfig::new(0, 1, 0, 1).is_err());
+        assert!(SchemeConfig::new(5, 6, 0, 1).is_err());
+        assert!(SchemeConfig::new(5, 5, 5, 1).is_err());
+        assert!(SchemeConfig::new(5, 3, 0, 0).is_err());
+    }
+
+    #[test]
+    fn check_dim_divisibility() {
+        let c = SchemeConfig::tight(5, 1, 2).unwrap();
+        assert!(c.check_dim(10).is_ok());
+        assert!(c.check_dim(11).is_err());
+    }
+}

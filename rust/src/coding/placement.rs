@@ -1,0 +1,109 @@
+//! Cyclic data placement.
+//!
+//! §III assigns worker `W_i` the subsets `D_i, D_{i⊕1}, …, D_{i⊕(d-1)}`;
+//! §IV's orthogonality pattern corresponds to the rotation
+//! `D_{i⊕1}, …, D_{i⊕d}`. Both are cyclic windows; [`Placement`] captures
+//! a window of width `d` starting at `w + offset (mod n)`.
+
+/// Cyclic placement of `n` data subsets onto `n` workers, `d` per worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    n: usize,
+    d: usize,
+    offset: usize,
+}
+
+impl Placement {
+    /// §III placement: worker `w` gets subsets `w, w+1, …, w+d-1 (mod n)`.
+    pub fn cyclic(n: usize, d: usize) -> Self {
+        Placement { n, d, offset: 0 }
+    }
+
+    /// §IV placement: worker `w` gets subsets `w+1, …, w+d (mod n)`.
+    pub fn cyclic_shifted(n: usize, d: usize) -> Self {
+        Placement { n, d, offset: 1 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Subsets assigned to worker `w`, in local order `0..d`.
+    pub fn assigned(&self, w: usize) -> Vec<usize> {
+        assert!(w < self.n, "worker {w} out of range (n={})", self.n);
+        (0..self.d).map(|j| (w + self.offset + j) % self.n).collect()
+    }
+
+    /// Whether subset `t` is assigned to worker `w`.
+    pub fn is_assigned(&self, w: usize, t: usize) -> bool {
+        // t ∈ {w+offset, …, w+offset+d-1} (mod n)
+        let rel = (t + self.n - (w + self.offset) % self.n) % self.n;
+        rel < self.d
+    }
+
+    /// Workers holding subset `t` (inverse map), ascending.
+    pub fn holders(&self, t: usize) -> Vec<usize> {
+        (0..self.n).filter(|&w| self.is_assigned(w, t)).collect()
+    }
+
+    /// Local index of subset `t` within worker `w`'s assignment, if any.
+    pub fn local_index(&self, w: usize, t: usize) -> Option<usize> {
+        let rel = (t + self.n - (w + self.offset) % self.n) % self.n;
+        (rel < self.d).then_some(rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclic_matches_paper_example() {
+        // n=5, d=3 (Fig. 2): W_1 (0-based 0) holds D_1,D_2,D_3 → {0,1,2}.
+        let p = Placement::cyclic(5, 3);
+        assert_eq!(p.assigned(0), vec![0, 1, 2]);
+        assert_eq!(p.assigned(3), vec![3, 4, 0]);
+        assert_eq!(p.assigned(4), vec![4, 0, 1]);
+    }
+
+    #[test]
+    fn shifted_rotates_by_one() {
+        let p = Placement::cyclic_shifted(5, 3);
+        assert_eq!(p.assigned(0), vec![1, 2, 3]);
+        assert_eq!(p.assigned(4), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn every_subset_held_by_exactly_d_workers() {
+        for n in [3usize, 5, 8, 13] {
+            for d in 1..=n {
+                let p = Placement::cyclic(n, d);
+                for t in 0..n {
+                    assert_eq!(p.holders(t).len(), d, "n={n} d={d} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_index_consistent_with_assigned() {
+        let p = Placement::cyclic(7, 4);
+        for w in 0..7 {
+            let a = p.assigned(w);
+            for (j, &t) in a.iter().enumerate() {
+                assert_eq!(p.local_index(w, t), Some(j));
+                assert!(p.is_assigned(w, t));
+            }
+            for t in 0..7 {
+                if !a.contains(&t) {
+                    assert_eq!(p.local_index(w, t), None);
+                    assert!(!p.is_assigned(w, t));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! §III recursive-polynomial construction (the paper's main technical
+//! novelty).
+//!
+//! For each data subset `t` define (Eq. 8, 0-based)
+//! `p_t(x) = Π_{j=1..n-d} (x - θ_{(t+j) mod n})`,
+//! so `p_t(θ_w) = 0` exactly for the `n-d` workers *not* holding `D_t`.
+//! The recursion (Eq. 9)
+//! `p_t^{(1)} = p_t`,
+//! `p_t^{(u)}(x) = x·p_t^{(u-1)}(x) - p^{(u-1)}_{t,n-d-1}·p_t^{(1)}(x)`
+//! produces `m` polynomials per subset whose coefficient rows stack into
+//! the `(m·n) × (n-s)` matrix `B` (Eq. 13 / Algorithm 1), with the key
+//! properties:
+//! - columns `n-d .. n-d+m-1` of `B` form stacked `I_m` blocks (Eq. 15),
+//!   which is what lets the master read off the *sum* gradient, and
+//! - row `(t,u)` of `B·V` vanishes at every worker not holding `D_t`
+//!   (Eq. 11), which is what bounds the computation load by `d`.
+
+use super::{
+    CodingError, DecodeWeights, GradientCode, Placement, SchemeConfig,
+};
+use crate::coding::vandermonde::{paper_thetas, vandermonde};
+use crate::linalg::{Lu, Matrix};
+
+/// Dense polynomial, coefficients ascending (`c[j]` is the `x^j` term).
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct Poly(pub Vec<f64>);
+
+impl Poly {
+    /// Monic polynomial with the given roots: `Π (x - r)`.
+    pub fn from_roots(roots: &[f64]) -> Poly {
+        let mut c = vec![1.0];
+        for &r in roots {
+            // multiply by (x - r)
+            let mut next = vec![0.0; c.len() + 1];
+            for (j, &cj) in c.iter().enumerate() {
+                next[j + 1] += cj;
+                next[j] -= r * cj;
+            }
+            c = next;
+        }
+        Poly(c)
+    }
+
+    /// Coefficient of `x^j` (0 beyond degree).
+    pub fn coeff(&self, j: usize) -> f64 {
+        self.0.get(j).copied().unwrap_or(0.0)
+    }
+
+    /// Horner evaluation.
+    #[cfg(test)]
+    pub fn eval(&self, x: f64) -> f64 {
+        self.0.iter().rev().fold(0.0, |acc, &c| acc * x + c)
+    }
+
+    /// `x·self - lambda·other`, truncated to nothing (exact).
+    pub fn shift_sub(&self, lambda: f64, other: &Poly) -> Poly {
+        let deg = (self.0.len() + 1).max(other.0.len());
+        let mut c = vec![0.0; deg];
+        for (j, &cj) in self.0.iter().enumerate() {
+            c[j + 1] += cj;
+        }
+        for (j, &oj) in other.0.iter().enumerate() {
+            c[j] -= lambda * oj;
+        }
+        // trim trailing zeros (keep at least the constant term)
+        while c.len() > 1 && c.last() == Some(&0.0) {
+            c.pop();
+        }
+        Poly(c)
+    }
+}
+
+/// The §III scheme for a tight or slack triple (`d >= s + m`).
+pub struct PolynomialCode {
+    cfg: SchemeConfig,
+    placement: Placement,
+    thetas: Vec<f64>,
+    /// `(m·n) × (n-s)`; row `t·m + u` holds the coefficients of
+    /// `p_t^{(u+1)}` padded to degree `n-s-1`.
+    b: Matrix,
+    /// `(n-s) × n` Vandermonde `V[r][w] = θ_w^r`.
+    v: Matrix,
+}
+
+impl PolynomialCode {
+    /// Build with the paper's θ grid (Eq. 23).
+    pub fn new(cfg: SchemeConfig) -> Result<Self, CodingError> {
+        Self::with_thetas(cfg, &paper_thetas(cfg.n))
+    }
+
+    /// Build with custom evaluation points (must be distinct).
+    pub fn with_thetas(cfg: SchemeConfig, thetas: &[f64]) -> Result<Self, CodingError> {
+        if thetas.len() != cfg.n {
+            return Err(CodingError::InvalidConfig(format!(
+                "need {} thetas, got {}",
+                cfg.n,
+                thetas.len()
+            )));
+        }
+        for i in 0..thetas.len() {
+            for j in i + 1..thetas.len() {
+                if thetas[i] == thetas[j] {
+                    return Err(CodingError::InvalidConfig(format!(
+                        "evaluation points must be distinct (θ[{i}] == θ[{j}] == {})",
+                        thetas[i]
+                    )));
+                }
+            }
+        }
+        let (n, d, s, m) = (cfg.n, cfg.d, cfg.s, cfg.m);
+        let cols = n - s;
+
+        // Algorithm 1, expressed through the Poly recursion.
+        let mut b = Matrix::zeros(m * n, cols);
+        for t in 0..n {
+            // roots θ_{(t+j) mod n}, j = 1..n-d  (Eq. 8)
+            let roots: Vec<f64> = (1..=n - d).map(|j| thetas[(t + j) % n]).collect();
+            let p1 = Poly::from_roots(&roots);
+            debug_assert_eq!(p1.0.len(), n - d + 1);
+            debug_assert!((p1.coeff(n - d) - 1.0).abs() < 1e-12, "p_t must be monic");
+            let mut pu = p1.clone();
+            for u in 0..m {
+                if u > 0 {
+                    // Eq. 9: multiplier is the x^{n-d-1} coefficient of the
+                    // previous polynomial. When d = n, p_t ≡ 1 and that
+                    // coefficient (of x^{-1}) is zero, so the recursion
+                    // degenerates to p^{(u)} = x^{u-1} as required.
+                    let lambda = if n > d { pu.coeff(n - d - 1) } else { 0.0 };
+                    pu = pu.shift_sub(lambda, &p1);
+                }
+                for j in 0..cols {
+                    b[(t * m + u, j)] = pu.coeff(j);
+                }
+            }
+        }
+
+        let v = vandermonde(cols, thetas);
+        Ok(PolynomialCode {
+            cfg,
+            placement: Placement::cyclic(n, d),
+            thetas: thetas.to_vec(),
+            b,
+            v,
+        })
+    }
+
+    pub fn thetas(&self) -> &[f64] {
+        &self.thetas
+    }
+}
+
+impl GradientCode for PolynomialCode {
+    fn config(&self) -> &SchemeConfig {
+        &self.cfg
+    }
+
+    fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    fn encode_coeffs(&self, worker: usize) -> Result<Vec<f64>, CodingError> {
+        let n = self.cfg.n;
+        if worker >= n {
+            return Err(CodingError::WorkerOutOfRange(worker));
+        }
+        let m = self.cfg.m;
+        let cols = n - self.cfg.s;
+        // V column for this worker: powers of θ_worker.
+        let theta = self.thetas[worker];
+        let mut pw = Vec::with_capacity(cols);
+        let mut acc = 1.0;
+        for _ in 0..cols {
+            pw.push(acc);
+            acc *= theta;
+        }
+        let assigned = self.placement.assigned(worker);
+        let mut coeffs = Vec::with_capacity(assigned.len() * m);
+        for &t in &assigned {
+            for u in 0..m {
+                coeffs.push(crate::linalg::dot_f64(self.b.row(t * m + u), &pw));
+            }
+        }
+        Ok(coeffs)
+    }
+
+    fn decode_weights(&self, available: &[usize]) -> Result<DecodeWeights, CodingError> {
+        let (n, d, s, m) = (self.cfg.n, self.cfg.d, self.cfg.s, self.cfg.m);
+        let need = n - s;
+        if available.len() < need {
+            return Err(CodingError::NotEnoughWorkers { need, got: available.len() });
+        }
+        for &w in available {
+            if w >= n {
+                return Err(CodingError::WorkerOutOfRange(w));
+            }
+        }
+        // Use exactly the first n-s responders: A = V restricted to those
+        // columns (Eq. 20), W = columns n-d .. n-d+m-1 of A^{-1}.
+        let used: Vec<usize> = available[..need].to_vec();
+        let a = self.v.select_cols(&used);
+        let lu = Lu::factor(&a).map_err(|e| CodingError::SingularDecode {
+            available: used.clone(),
+            source: e,
+        })?;
+        let inv = lu.inverse().map_err(|e| CodingError::SingularDecode {
+            available: used.clone(),
+            source: e,
+        })?;
+        let mut weights = vec![0.0; need * m];
+        for i in 0..need {
+            for u in 0..m {
+                weights[i * m + u] = inv[(i, n - d + u)];
+            }
+        }
+        Ok(DecodeWeights { used, weights, m })
+    }
+
+    fn matrix_b(&self) -> Matrix {
+        self.b.clone()
+    }
+
+    fn matrix_v(&self) -> Matrix {
+        self.v.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::vandermonde::integer_thetas;
+
+    fn scheme(n: usize, s: usize, m: usize) -> PolynomialCode {
+        PolynomialCode::new(SchemeConfig::tight(n, s, m).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn poly_from_roots_expands() {
+        // (x-1)(x+2) = x^2 + x - 2
+        let p = Poly::from_roots(&[1.0, -2.0]);
+        assert_eq!(p.0, vec![-2.0, 1.0, 1.0]);
+        assert_eq!(p.eval(1.0), 0.0);
+        assert_eq!(p.eval(-2.0), 0.0);
+        assert_eq!(p.eval(0.0), -2.0);
+    }
+
+    #[test]
+    fn b_has_identity_block_columns() {
+        // Eq. 15: columns n-d..n-d+m-1 of B are stacked I_m blocks.
+        for (n, s, m) in [(5, 1, 2), (5, 2, 1), (8, 2, 3), (10, 0, 4), (7, 3, 2)] {
+            let c = scheme(n, s, m);
+            let b = c.matrix_b();
+            let (n, d, m) = (c.cfg.n, c.cfg.d, c.cfg.m);
+            for t in 0..n {
+                for u in 0..m {
+                    for uu in 0..m {
+                        let want = if u == uu { 1.0 } else { 0.0 };
+                        let got = b[(t * m + u, n - d + uu)];
+                        assert!(
+                            (got - want).abs() < 1e-9,
+                            "B[{t},{u}] col {uu}: got {got}, want {want} (n={n},d={d},m={m})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_vanish_at_non_holders() {
+        // Eq. 11: p_t^{(u)}(θ_w) = 0 whenever worker w does not hold D_t.
+        for (n, s, m) in [(5, 1, 2), (6, 2, 2), (9, 3, 3)] {
+            let c = scheme(n, s, m);
+            let bv = c.matrix_b().matmul(&c.matrix_v());
+            for t in 0..n {
+                for u in 0..c.cfg.m {
+                    for w in 0..n {
+                        let val = bv[(t * c.cfg.m + u, w)];
+                        if !c.placement.is_assigned(w, t) {
+                            assert!(
+                                val.abs() < 1e-7,
+                                "BV[({t},{u}),{w}] = {val} should vanish (n={n},s={s},m={m})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_coeffs_match_bv_product() {
+        let c = scheme(7, 2, 2);
+        let bv = c.matrix_b().matmul(&c.matrix_v());
+        for w in 0..7 {
+            let coeffs = c.encode_coeffs(w).unwrap();
+            let assigned = c.placement.assigned(w);
+            for (j, &t) in assigned.iter().enumerate() {
+                for u in 0..c.cfg.m {
+                    let want = bv[(t * c.cfg.m + u, w)];
+                    let got = coeffs[j * c.cfg.m + u];
+                    assert!((got - want).abs() < 1e-8, "w={w} t={t} u={u}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_short_worker_sets() {
+        let c = scheme(5, 2, 1);
+        assert!(matches!(
+            c.decode_weights(&[0, 1]),
+            Err(CodingError::NotEnoughWorkers { need: 3, got: 2 })
+        ));
+    }
+
+    #[test]
+    fn fig2b_table2_semantics_reproduced() {
+        // Fig. 2b / Table II: n=5, d=3, s=1, m=2, θ = (-2,-1,0,1,2), l=2.
+        // Each worker transmits ONE scalar and the master reconstructs
+        // both coordinates of the sum gradient from any 4 workers.
+        //
+        // Note: the paper's printed Table II coefficients correspond to an
+        // unstated normalization of the figure's B; decode weights under
+        // Definition 1 are *unique* given V (B has full column rank), so
+        // we verify the table's semantics — exact reconstruction for every
+        // straggler pattern — plus the defining identity A·w = e_{n-d+u}.
+        let cfg = SchemeConfig::tight(5, 1, 2).unwrap();
+        let c = PolynomialCode::with_thetas(cfg, &integer_thetas(5)).unwrap();
+        let thetas = integer_thetas(5);
+        for straggler in 0..5 {
+            let avail: Vec<usize> = (0..5).filter(|&w| w != straggler).collect();
+            let dw = c.decode_weights(&avail).unwrap();
+            // Defining identity: Σ_i w_u[i] θ_i^r = [r == n-d+u].
+            for u in 0..2 {
+                for r in 0..4 {
+                    let got: f64 = (0..4)
+                        .map(|i| dw.weight(i, u) * thetas[avail[i]].powi(r as i32))
+                        .sum();
+                    let want = if r == 2 + u { 1.0 } else { 0.0 };
+                    assert!(
+                        (got - want).abs() < 1e-9,
+                        "straggler {straggler} u={u} r={r}: {got} vs {want}"
+                    );
+                }
+            }
+            // Semantic check at l = 2: reconstruct both coordinates of the
+            // sum from the four scalars f_i (each of dimension l/m = 1).
+            let grads: Vec<Vec<f32>> = (0..5)
+                .map(|t| vec![(t as f32 + 1.0) * 0.5, (t as f32) - 2.0])
+                .collect();
+            let mut transmitted = Vec::new();
+            for w in 0..5 {
+                let enc = crate::coding::Encoder::new(&c, w).unwrap();
+                let views: Vec<&[f32]> = c
+                    .placement()
+                    .assigned(w)
+                    .iter()
+                    .map(|&t| grads[t].as_slice())
+                    .collect();
+                let f = enc.encode(&views).unwrap();
+                assert_eq!(f.len(), 1, "each worker transmits one scalar");
+                transmitted.push(f);
+            }
+            let dec = crate::coding::Decoder::new(&c, &avail).unwrap();
+            let fs: Vec<&[f32]> = dec
+                .used_workers()
+                .iter()
+                .map(|&w| transmitted[w].as_slice())
+                .collect();
+            let got = dec.decode(&fs).unwrap();
+            let want0: f32 = grads.iter().map(|g| g[0]).sum();
+            let want1: f32 = grads.iter().map(|g| g[1]).sum();
+            assert!((got[0] - want0).abs() < 1e-4, "straggler {straggler}: coord 0");
+            assert!((got[1] - want1).abs() < 1e-4, "straggler {straggler}: coord 1");
+        }
+    }
+
+    #[test]
+    fn slack_config_d_greater_than_s_plus_m_still_decodes() {
+        // d > s+m is admissible (slack in Theorem 1's inequality).
+        let cfg = SchemeConfig::new(6, 5, 2, 2).unwrap();
+        let c = PolynomialCode::new(cfg).unwrap();
+        assert!(c.decode_weights(&[0, 2, 3, 5]).is_ok());
+    }
+}

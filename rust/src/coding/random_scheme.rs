@@ -1,0 +1,260 @@
+//! §IV random-matrix construction (Theorem 2).
+//!
+//! `V` is a Gaussian `(n-s) × n` matrix; for each data subset `t` the
+//! coefficient block is `B_t = -R_t S_t^{-1}` where `S_t` (`(n-d)×(n-d)`)
+//! and `R_t` (`m×(n-d)`) are the top/bottom row bands of `V` restricted
+//! to the circulant-consecutive column window starting at `t`. Stacking
+//! `[B_t  I_m]` rows gives a `B` with the same two key properties as the
+//! §III construction — identity block columns (Eq. 15) and orthogonality
+//! of row-block `t` to the V-columns of workers not holding `D_t` — but
+//! with much better conditioning for `n > 20`.
+//!
+//! Decoding multiplies by `V_F^T (V_F V_F^T)^{-1}`, which is exact for
+//! *any* responder set `F` with `|F| >= n-s` (more responders only
+//! improve conditioning), unlike the square Vandermonde inverse of §III.
+
+use super::{
+    CodingError, DecodeWeights, GradientCode, Placement, SchemeConfig,
+};
+use crate::linalg::{dot_f64, Lu, Matrix};
+use crate::rngs::{Normal, Pcg64};
+
+/// The §IV scheme.
+pub struct RandomCode {
+    cfg: SchemeConfig,
+    placement: Placement,
+    /// `(n-s) × n` Gaussian evaluation matrix.
+    v: Matrix,
+    /// `(m·n) × (n-s)` coefficient matrix.
+    b: Matrix,
+}
+
+impl RandomCode {
+    /// Build with a seeded Gaussian `V`. The one-time `S_t^{-1}` solves are
+    /// done in f64 (the paper's remark: construction is offline, so high
+    /// precision there is acceptable even if `S_t` is ill-conditioned).
+    pub fn new(cfg: SchemeConfig, seed: u64) -> Result<Self, CodingError> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut normal = Normal::new();
+        let rows = cfg.n - cfg.s;
+        let v = Matrix::from_fn(rows, cfg.n, |_, _| normal.sample(&mut rng));
+        Self::with_v(cfg, v)
+    }
+
+    /// Build from an explicit `V` (tests; also how a Vandermonde `V` can be
+    /// pushed through the §IV machinery for comparison).
+    pub fn with_v(cfg: SchemeConfig, v: Matrix) -> Result<Self, CodingError> {
+        let (n, d, s, m) = (cfg.n, cfg.d, cfg.s, cfg.m);
+        if v.rows() != n - s || v.cols() != n {
+            return Err(CodingError::InvalidConfig(format!(
+                "V must be {}x{}, got {}x{}",
+                n - s,
+                n,
+                v.rows(),
+                v.cols()
+            )));
+        }
+        let nd = n - d;
+        let mut b = Matrix::zeros(m * n, n - s);
+        for t in 0..n {
+            // circulant-consecutive column window starting at t, width n-d
+            let cols: Vec<usize> = (0..nd).map(|j| (t + j) % n).collect();
+            let top_rows: Vec<usize> = (0..nd).collect();
+            let bot_rows: Vec<usize> = (nd..n - s).collect();
+            let s_t = v.submatrix(&top_rows, &cols);
+            let r_t = v.submatrix(&bot_rows, &cols);
+            // B_t = -R_t S_t^{-1}  ⇔  solve S_t^T X^T = -R_t^T column-wise.
+            let s_inv = Lu::factor(&s_t)
+                .and_then(|lu| lu.inverse())
+                .map_err(|e| CodingError::SingularDecode {
+                    available: cols.clone(),
+                    source: e,
+                })?;
+            let b_t = r_t.matmul(&s_inv).scale(-1.0);
+            for u in 0..m {
+                for j in 0..nd {
+                    b[(t * m + u, j)] = b_t[(u, j)];
+                }
+                // identity block columns (Eq. 15)
+                b[(t * m + u, nd + u)] = 1.0;
+            }
+        }
+        Ok(RandomCode { cfg, placement: Placement::cyclic_shifted(n, d), v, b })
+    }
+}
+
+impl GradientCode for RandomCode {
+    fn config(&self) -> &SchemeConfig {
+        &self.cfg
+    }
+
+    fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    fn encode_coeffs(&self, worker: usize) -> Result<Vec<f64>, CodingError> {
+        let (n, m) = (self.cfg.n, self.cfg.m);
+        if worker >= n {
+            return Err(CodingError::WorkerOutOfRange(worker));
+        }
+        let vcol = self.v.col(worker);
+        let assigned = self.placement.assigned(worker);
+        let mut coeffs = Vec::with_capacity(assigned.len() * m);
+        for &t in &assigned {
+            for u in 0..m {
+                coeffs.push(dot_f64(self.b.row(t * m + u), &vcol));
+            }
+        }
+        Ok(coeffs)
+    }
+
+    fn decode_weights(&self, available: &[usize]) -> Result<DecodeWeights, CodingError> {
+        let (n, d, s, m) = (self.cfg.n, self.cfg.d, self.cfg.s, self.cfg.m);
+        let need = n - s;
+        if available.len() < need {
+            return Err(CodingError::NotEnoughWorkers { need, got: available.len() });
+        }
+        for &w in available {
+            if w >= n {
+                return Err(CodingError::WorkerOutOfRange(w));
+            }
+        }
+        // Use ALL available responders: W = G^T (G G^T)^{-1} [cols n-d..].
+        let used: Vec<usize> = available.to_vec();
+        let g = self.v.select_cols(&used);
+        let gram = g.matmul(&g.transpose());
+        let lu = Lu::factor(&gram).map_err(|e| CodingError::SingularDecode {
+            available: used.clone(),
+            source: e,
+        })?;
+        let mut weights = vec![0.0; used.len() * m];
+        let mut e = vec![0.0; need];
+        for u in 0..m {
+            e[n - d + u] = 1.0;
+            let x = lu.solve(&e).map_err(|er| CodingError::SingularDecode {
+                available: used.clone(),
+                source: er,
+            })?;
+            e[n - d + u] = 0.0;
+            // w_u = G^T x
+            for (i, _) in used.iter().enumerate() {
+                let mut acc = 0.0;
+                for r in 0..need {
+                    acc += g[(r, i)] * x[r];
+                }
+                weights[i * m + u] = acc;
+            }
+        }
+        Ok(DecodeWeights { used, weights, m })
+    }
+
+    fn matrix_b(&self) -> Matrix {
+        self.b.clone()
+    }
+
+    fn matrix_v(&self) -> Matrix {
+        self.v.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::decode::sum_gradients;
+    use crate::coding::{Decoder, Encoder};
+    use crate::rngs::Rng;
+
+    fn scheme(n: usize, s: usize, m: usize, seed: u64) -> RandomCode {
+        RandomCode::new(SchemeConfig::tight(n, s, m).unwrap(), seed).unwrap()
+    }
+
+    #[test]
+    fn b_has_identity_block_columns() {
+        let c = scheme(8, 2, 3, 7);
+        let b = c.matrix_b();
+        let (n, d, m) = (8, 5, 3);
+        for t in 0..n {
+            for u in 0..m {
+                for uu in 0..m {
+                    let want = if u == uu { 1.0 } else { 0.0 };
+                    assert!((b[(t * m + u, n - d + uu)] - want).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_orthogonal_to_non_holder_columns() {
+        let c = scheme(7, 2, 2, 9);
+        let bv = c.matrix_b().matmul(&c.matrix_v());
+        let m = 2;
+        for t in 0..7 {
+            for u in 0..m {
+                for w in 0..7 {
+                    let val = bv[(t * m + u, w)];
+                    if !c.placement().is_assigned(w, t) {
+                        assert!(val.abs() < 1e-8, "BV[({t},{u}),{w}] = {val}");
+                    }
+                }
+            }
+        }
+    }
+
+    fn roundtrip_err(code: &RandomCode, l: usize, stragglers: &[usize], seed: u64) -> f64 {
+        let cfg = *code.config();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let grads: Vec<Vec<f32>> = (0..cfg.n)
+            .map(|_| (0..l).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect())
+            .collect();
+        let mut transmitted = Vec::new();
+        for w in 0..cfg.n {
+            let enc = Encoder::new(code, w).unwrap();
+            let views: Vec<&[f32]> = code
+                .placement()
+                .assigned(w)
+                .iter()
+                .map(|&t| grads[t].as_slice())
+                .collect();
+            transmitted.push(enc.encode(&views).unwrap());
+        }
+        let available: Vec<usize> = (0..cfg.n).filter(|w| !stragglers.contains(w)).collect();
+        let dec = Decoder::new(code, &available).unwrap();
+        let fs: Vec<&[f32]> =
+            dec.used_workers().iter().map(|&w| transmitted[w].as_slice()).collect();
+        let got = dec.decode(&fs).unwrap();
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let want = sum_gradients(&views);
+        let scale = want.iter().fold(0.0f64, |a, &x| a.max(x.abs() as f64)).max(1e-30);
+        got.iter()
+            .zip(&want)
+            .fold(0.0f64, |a, (&x, &y)| a.max((x as f64 - y as f64).abs()))
+            / scale
+    }
+
+    #[test]
+    fn roundtrip_all_single_straggler_patterns() {
+        let code = scheme(6, 1, 2, 21);
+        for st in 0..6 {
+            let err = roundtrip_err(&code, 24, &[st], 5);
+            assert!(err < 1e-3, "straggler {st}: {err}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_extra_responders_uses_all() {
+        // s=2 but only one worker actually straggles: decode should accept
+        // the larger set (n-1 > n-s responders).
+        let code = scheme(6, 2, 2, 22);
+        let err = roundtrip_err(&code, 24, &[3], 6);
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn stable_at_n30_where_vandermonde_fails() {
+        // §IV headline: Gaussian V keeps the scheme numerically stable up
+        // to n = 30 for all (d, s, m).
+        let code = scheme(30, 3, 3, 23);
+        let err = roundtrip_err(&code, 60, &[4, 11, 27], 7);
+        assert!(err < 5e-2, "n=30 reconstruction rel err {err}");
+    }
+}

@@ -1,0 +1,393 @@
+//! Numerical-stability certification (§III-C, §IV, Theorem 2).
+//!
+//! Three tools:
+//! - [`max_condition_number`]: worst condition number of the decode
+//!   operator over straggler patterns (exhaustive when the pattern count
+//!   is small, seeded-sampled otherwise) — the quantity Theorem 2 bounds
+//!   by `κ`.
+//! - [`reconstruction_error`]: measured end-to-end ℓ∞ relative error of
+//!   encode→straggle→decode round trips — reproduces the §III-C numbers
+//!   (≲0.2% for n ≤ 20 Vandermonde, ~80% at n = 23, blow-up at n = 26,
+//!   stable ≤ 30 for Gaussian).
+//! - [`gamma_gaussian`]: Monte-Carlo estimate of the function
+//!   `γ(n, n₁, n₂, κ)` from Theorem 2 for Gaussian `V` (smallest
+//!   responder count whose worst-case Gram condition number stays ≤ κ).
+
+use super::{Decoder, Encoder, GradientCode};
+use crate::linalg::{condition_number, Matrix};
+use crate::rngs::{Pcg64, Rng};
+
+/// Result of a condition-number sweep.
+#[derive(Debug, Clone)]
+pub struct StabilityReport {
+    /// Worst condition number seen.
+    pub worst_cond: f64,
+    /// Straggler pattern (worker ids that were dropped) achieving it.
+    pub worst_stragglers: Vec<usize>,
+    /// Number of straggler patterns evaluated.
+    pub patterns: usize,
+    /// Whether the sweep was exhaustive over all C(n, s) patterns.
+    pub exhaustive: bool,
+}
+
+/// Condition number of the decode operator for one responder set:
+/// `cond(V_F)` when square (`|F| = n-s`), `cond(V_F V_F^T)` otherwise —
+/// the latter is the quantity in Theorem 2's definition of γ.
+pub fn decode_condition(v: &Matrix, responders: &[usize]) -> f64 {
+    let g = v.select_cols(responders);
+    if g.cols() == g.rows() {
+        condition_number(&g)
+    } else {
+        let gram = g.matmul(&g.transpose());
+        condition_number(&gram)
+    }
+}
+
+/// Sweep straggler patterns of size exactly `s`. Exhaustive when
+/// `C(n, s) <= budget`, otherwise `budget` seeded-random patterns.
+pub fn max_condition_number(
+    code: &dyn GradientCode,
+    budget: usize,
+    seed: u64,
+) -> StabilityReport {
+    let cfg = *code.config();
+    let v = code.matrix_v();
+    let total = binomial(cfg.n, cfg.s);
+    let mut worst = (0.0f64, Vec::new());
+    let mut patterns = 0usize;
+    let mut consider = |stragglers: &[usize]| {
+        let responders: Vec<usize> =
+            (0..cfg.n).filter(|w| !stragglers.contains(w)).collect();
+        let c = decode_condition(&v, &responders);
+        patterns += 1;
+        if c > worst.0 {
+            worst = (c, stragglers.to_vec());
+        }
+    };
+    let exhaustive = total <= budget as u128;
+    if exhaustive {
+        let mut pattern = Vec::new();
+        enumerate_subsets(cfg.n, cfg.s, 0, &mut pattern, &mut consider);
+    } else {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        for _ in 0..budget {
+            let st = rng.sample_indices(cfg.n, cfg.s);
+            consider(&st);
+        }
+    }
+    StabilityReport {
+        worst_cond: worst.0,
+        worst_stragglers: worst.1,
+        patterns,
+        exhaustive,
+    }
+}
+
+/// Worst measured ℓ∞ relative reconstruction error over `trials`
+/// random-gradient round trips with random straggler patterns.
+/// Returns `f64::INFINITY` if any decode fails outright (the paper's
+/// "our algorithm crushes" regime at n = 26).
+pub fn reconstruction_error(
+    code: &dyn GradientCode,
+    l: usize,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let cfg = *code.config();
+    let mut rng = Pcg64::seed_from_u64(seed);
+    // Pre-build encoders once (they are per-worker, pattern-independent).
+    let encoders: Vec<Encoder> = match (0..cfg.n)
+        .map(|w| Encoder::new(code, w))
+        .collect::<Result<Vec<_>, _>>()
+    {
+        Ok(e) => e,
+        Err(_) => return f64::INFINITY,
+    };
+    let mut worst = 0.0f64;
+    for _ in 0..trials {
+        let grads: Vec<Vec<f32>> = (0..cfg.n)
+            .map(|_| (0..l).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect())
+            .collect();
+        let mut transmitted = Vec::with_capacity(cfg.n);
+        for w in 0..cfg.n {
+            let views: Vec<&[f32]> = code
+                .placement()
+                .assigned(w)
+                .iter()
+                .map(|&t| grads[t].as_slice())
+                .collect();
+            match encoders[w].encode(&views) {
+                Ok(f) => transmitted.push(f),
+                Err(_) => return f64::INFINITY,
+            }
+        }
+        let stragglers = rng.sample_indices(cfg.n, cfg.s);
+        let available: Vec<usize> =
+            (0..cfg.n).filter(|w| !stragglers.contains(w)).collect();
+        let dec = match Decoder::new(code, &available) {
+            Ok(d) => d,
+            Err(_) => return f64::INFINITY,
+        };
+        let fs: Vec<&[f32]> =
+            dec.used_workers().iter().map(|&w| transmitted[w].as_slice()).collect();
+        let got = match dec.decode(&fs) {
+            Ok(g) => g,
+            Err(_) => return f64::INFINITY,
+        };
+        // oracle
+        let mut want = vec![0.0f64; l];
+        for g in &grads {
+            for (o, &x) in want.iter_mut().zip(g.iter()) {
+                *o += x as f64;
+            }
+        }
+        let scale = want.iter().fold(0.0f64, |a, &x| a.max(x.abs())).max(1e-30);
+        let err = got
+            .iter()
+            .zip(&want)
+            .fold(0.0f64, |a, (&x, &y)| a.max((x as f64 - y).abs()))
+            / scale;
+        if !err.is_finite() {
+            return f64::INFINITY;
+        }
+        worst = worst.max(err);
+    }
+    worst
+}
+
+/// Same round trip in f64 end to end — the paper's precision (§III-C was
+/// measured in Python doubles). Use this to reproduce the paper's
+/// stability table; [`reconstruction_error`] measures the deployed f32
+/// payload path instead.
+pub fn reconstruction_error_f64(
+    code: &dyn GradientCode,
+    l: usize,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let cfg = *code.config();
+    let m = cfg.m;
+    if l % m != 0 {
+        return f64::INFINITY;
+    }
+    let lv = l / m;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let coeffs: Vec<Vec<f64>> = match (0..cfg.n)
+        .map(|w| code.encode_coeffs(w))
+        .collect::<Result<Vec<_>, _>>()
+    {
+        Ok(c) => c,
+        Err(_) => return f64::INFINITY,
+    };
+    let mut worst = 0.0f64;
+    for _ in 0..trials {
+        let grads: Vec<Vec<f64>> = (0..cfg.n)
+            .map(|_| (0..l).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+            .collect();
+        // encode in f64
+        let mut fs: Vec<Vec<f64>> = Vec::with_capacity(cfg.n);
+        for w in 0..cfg.n {
+            let assigned = code.placement().assigned(w);
+            let mut f = vec![0.0f64; lv];
+            for (j, &t) in assigned.iter().enumerate() {
+                for (v, fv) in f.iter_mut().enumerate() {
+                    for u in 0..m {
+                        *fv += coeffs[w][j * m + u] * grads[t][v * m + u];
+                    }
+                }
+            }
+            fs.push(f);
+        }
+        let stragglers = rng.sample_indices(cfg.n, cfg.s);
+        let available: Vec<usize> =
+            (0..cfg.n).filter(|w| !stragglers.contains(w)).collect();
+        let dw = match code.decode_weights(&available) {
+            Ok(d) => d,
+            Err(_) => return f64::INFINITY,
+        };
+        let mut got = vec![0.0f64; l];
+        for (i, &w) in dw.used.iter().enumerate() {
+            for v in 0..lv {
+                for u in 0..m {
+                    got[v * m + u] += dw.weight(i, u) * fs[w][v];
+                }
+            }
+        }
+        let mut want = vec![0.0f64; l];
+        for g in &grads {
+            for (o, &x) in want.iter_mut().zip(g.iter()) {
+                *o += x;
+            }
+        }
+        let scale = want.iter().fold(0.0f64, |a, &x| a.max(x.abs())).max(1e-30);
+        let err = got
+            .iter()
+            .zip(&want)
+            .fold(0.0f64, |a, (&x, &y)| a.max((x - y).abs()))
+            / scale;
+        if !err.is_finite() {
+            return f64::INFINITY;
+        }
+        worst = worst.max(err);
+    }
+    worst
+}
+
+/// Monte-Carlo estimate of Theorem 2's `γ(n, n₁, ·, κ)` for Gaussian `V`:
+/// the smallest responder count `n₃ >= n₁` such that the sampled maximum
+/// of `cond(V_F V_F^T)` over `|F| = n₃` is `<= κ`. Returns `None` if even
+/// `n₃ = n` exceeds `κ`.
+pub fn gamma_gaussian(
+    n: usize,
+    n1: usize,
+    kappa: f64,
+    trials: usize,
+    seed: u64,
+) -> Option<usize> {
+    assert!(n1 <= n);
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut normal = crate::rngs::Normal::new();
+    let v = Matrix::from_fn(n1, n, |_, _| normal.sample(&mut rng));
+    'outer: for n3 in n1..=n {
+        let total = binomial(n, n - n3);
+        let mut worst = 0.0f64;
+        if total <= trials as u128 {
+            let mut pattern = Vec::new();
+            let mut check = |stragglers: &[usize]| {
+                let f: Vec<usize> = (0..n).filter(|w| !stragglers.contains(w)).collect();
+                worst = worst.max(decode_condition(&v, &f));
+            };
+            enumerate_subsets(n, n - n3, 0, &mut pattern, &mut check);
+        } else {
+            for _ in 0..trials {
+                let f = rng.sample_indices(n, n3);
+                worst = worst.max(decode_condition(&v, &f));
+            }
+        }
+        if worst <= kappa {
+            return Some(n3);
+        }
+        if n3 == n {
+            break 'outer;
+        }
+    }
+    None
+}
+
+/// C(n, k) in u128 (saturating; only used to pick exhaustive vs sampled).
+fn binomial(n: usize, k: usize) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc.saturating_mul((n - i) as u128) / (i + 1) as u128;
+    }
+    acc
+}
+
+fn enumerate_subsets(
+    n: usize,
+    k: usize,
+    start: usize,
+    pattern: &mut Vec<usize>,
+    f: &mut impl FnMut(&[usize]),
+) {
+    if pattern.len() == k {
+        f(pattern);
+        return;
+    }
+    for i in start..n {
+        pattern.push(i);
+        enumerate_subsets(n, k, i + 1, pattern, f);
+        pattern.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{PolynomialCode, RandomCode, SchemeConfig};
+
+    #[test]
+    fn binomial_values() {
+        assert_eq!(binomial(5, 2), 10);
+        assert_eq!(binomial(20, 0), 1);
+        assert_eq!(binomial(10, 10), 1);
+        assert_eq!(binomial(30, 15), 155117520);
+    }
+
+    #[test]
+    fn exhaustive_sweep_counts_patterns() {
+        let code = PolynomialCode::new(SchemeConfig::tight(6, 2, 1).unwrap()).unwrap();
+        let rep = max_condition_number(&code, 1000, 0);
+        assert!(rep.exhaustive);
+        assert_eq!(rep.patterns, 15); // C(6,2)
+        assert!(rep.worst_cond >= 1.0);
+    }
+
+    #[test]
+    fn vandermonde_n20_error_small_as_paper_claims() {
+        let code = PolynomialCode::new(SchemeConfig::tight(20, 2, 2).unwrap()).unwrap();
+        let err = reconstruction_error(&code, 40, 10, 1);
+        // §III-C: "when n <= 20 ... relative error less than 0.2%"
+        assert!(err < 2e-3, "n=20 rel err {err}");
+    }
+
+    #[test]
+    fn f64_roundtrip_matches_paper_precision_regime() {
+        // In the paper's (double) precision, the n=20 Vandermonde scheme is
+        // far below the 0.2% bound in the regime its experiments exercise
+        // (m <= 2; the best Fig. 3 configs use small m). Measured boundary
+        // for larger m is reported by the stability bench + EXPERIMENTS.md.
+        let code = PolynomialCode::new(SchemeConfig::tight(20, 2, 2).unwrap()).unwrap();
+        let err = reconstruction_error_f64(&code, 40, 5, 4);
+        assert!(err < 2e-3, "n=20 m=2 f64 rel err {err}");
+        // And the f64 path is no worse than the f32 path on easy configs.
+        let easy = PolynomialCode::new(SchemeConfig::tight(8, 2, 2).unwrap()).unwrap();
+        let e32 = reconstruction_error(&easy, 32, 5, 5);
+        let e64 = reconstruction_error_f64(&easy, 32, 5, 5);
+        assert!(e64 <= e32 * 1.5 + 1e-12, "f64 {e64} vs f32 {e32}");
+    }
+
+    #[test]
+    fn gaussian_beats_vandermonde_at_n26() {
+        // §IV's motivation, measured: at n=26 the Vandermonde scheme is
+        // unusable while the Gaussian scheme still reconstructs.
+        let cfg = SchemeConfig::tight(26, 2, 2).unwrap();
+        let vander = PolynomialCode::new(cfg).unwrap();
+        let gauss = RandomCode::new(cfg, 9).unwrap();
+        let ev = reconstruction_error_f64(&vander, 52, 5, 6);
+        let eg = reconstruction_error_f64(&gauss, 52, 5, 6);
+        assert!(ev > 1e-3, "vandermonde unexpectedly fine at n=26: {ev}");
+        assert!(eg < 1e-6, "gaussian should be stable at n=26: {eg}");
+    }
+
+    #[test]
+    fn vandermonde_n26_blows_up() {
+        let code = PolynomialCode::new(SchemeConfig::tight(26, 3, 2).unwrap()).unwrap();
+        let err = reconstruction_error(&code, 40, 10, 2);
+        // §III-C: "when n = 26, our algorithm crushes" — anything beyond a
+        // few percent counts as unusable; typically it is O(1) or worse.
+        assert!(err > 0.05, "n=26 rel err unexpectedly small: {err}");
+    }
+
+    #[test]
+    fn gaussian_n30_stays_stable() {
+        let code = RandomCode::new(SchemeConfig::tight(30, 3, 3).unwrap(), 5).unwrap();
+        let err = reconstruction_error(&code, 60, 5, 3);
+        assert!(err < 5e-2, "n=30 Gaussian rel err {err}");
+    }
+
+    #[test]
+    fn gamma_is_monotone_in_kappa() {
+        let g_loose = gamma_gaussian(16, 12, 1e6, 60, 11);
+        let g_tight = gamma_gaussian(16, 12, 1e2, 60, 11);
+        let gl = g_loose.unwrap();
+        if let Some(gt) = g_tight {
+            assert!(gt >= gl, "γ must not decrease as κ tightens: {gt} < {gl}");
+        }
+        assert!(gl >= 12);
+    }
+}

@@ -1,0 +1,88 @@
+//! The naive uncoded baseline (§V "naive scheme"): data divided uniformly
+//! with no replication (`d = 1`), every worker transmits its full partial
+//! gradient (`m = 1`), and the master must wait for all `n` workers
+//! (`s = 0`). Expressed through the [`GradientCode`] interface so the
+//! coordinator and benches treat it uniformly.
+
+use super::{
+    CodingError, DecodeWeights, GradientCode, Placement, SchemeConfig,
+};
+use crate::linalg::Matrix;
+
+/// `d = 1, s = 0, m = 1`, identity encode, all-ones decode.
+pub struct UncodedScheme {
+    cfg: SchemeConfig,
+    placement: Placement,
+}
+
+impl UncodedScheme {
+    pub fn new(n: usize) -> Self {
+        UncodedScheme {
+            cfg: SchemeConfig { n, d: 1, s: 0, m: 1 },
+            placement: Placement::cyclic(n, 1),
+        }
+    }
+}
+
+impl GradientCode for UncodedScheme {
+    fn config(&self) -> &SchemeConfig {
+        &self.cfg
+    }
+
+    fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    fn encode_coeffs(&self, worker: usize) -> Result<Vec<f64>, CodingError> {
+        if worker >= self.cfg.n {
+            return Err(CodingError::WorkerOutOfRange(worker));
+        }
+        Ok(vec![1.0])
+    }
+
+    fn decode_weights(&self, available: &[usize]) -> Result<DecodeWeights, CodingError> {
+        let n = self.cfg.n;
+        if available.len() < n {
+            return Err(CodingError::NotEnoughWorkers { need: n, got: available.len() });
+        }
+        let used: Vec<usize> = available[..n].to_vec();
+        Ok(DecodeWeights { weights: vec![1.0; n], used, m: 1 })
+    }
+
+    fn matrix_b(&self) -> Matrix {
+        Matrix::identity(self.cfg.n)
+    }
+
+    fn matrix_v(&self) -> Matrix {
+        Matrix::identity(self.cfg.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{Decoder, Encoder};
+
+    #[test]
+    fn uncoded_roundtrip_is_plain_sum() {
+        let code = UncodedScheme::new(4);
+        let grads: Vec<Vec<f32>> =
+            (0..4).map(|t| vec![t as f32, 2.0 * t as f32, -1.0]).collect();
+        let mut fs = Vec::new();
+        for w in 0..4 {
+            let enc = Encoder::new(&code, w).unwrap();
+            fs.push(enc.encode(&[&grads[w]]).unwrap());
+            assert_eq!(fs[w], grads[w], "uncoded transmit = own gradient");
+        }
+        let dec = Decoder::new(&code, &[0, 1, 2, 3]).unwrap();
+        let views: Vec<&[f32]> = fs.iter().map(|f| f.as_slice()).collect();
+        let got = dec.decode(&views).unwrap();
+        assert_eq!(got, vec![0.0 + 1.0 + 2.0 + 3.0, 0.0 + 2.0 + 4.0 + 6.0, -4.0]);
+    }
+
+    #[test]
+    fn uncoded_cannot_tolerate_stragglers() {
+        let code = UncodedScheme::new(4);
+        assert!(code.decode_weights(&[0, 1, 2]).is_err());
+    }
+}

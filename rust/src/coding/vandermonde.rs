@@ -1,0 +1,79 @@
+//! Vandermonde evaluation matrix and the paper's θ grid.
+
+use crate::linalg::Matrix;
+
+/// The paper's evaluation points (Eq. 23):
+/// even `n`:  {±(1 + i/2) : i = 0..n/2-1}
+/// odd  `n`:  {0} ∪ {±(1 + i/2) : i = 0..(n-1)/2-1}
+///
+/// Returned ascending, so `n = 5` gives `{-1.5, -1, 0, 1, 1.5}`. (The toy
+/// Fig. 2 example instead uses `{-2,-1,0,1,2}`; pass custom θ for that.)
+pub fn paper_thetas(n: usize) -> Vec<f64> {
+    assert!(n > 0);
+    let mut t = Vec::with_capacity(n);
+    let half = n / 2;
+    if n % 2 == 1 {
+        t.push(0.0);
+    }
+    for i in 0..half {
+        let v = 1.0 + i as f64 / 2.0;
+        t.push(v);
+        t.push(-v);
+    }
+    t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    t
+}
+
+/// `rows × thetas.len()` Vandermonde matrix `V[r][j] = θ_j^r` (Eq. 22).
+pub fn vandermonde(rows: usize, thetas: &[f64]) -> Matrix {
+    Matrix::from_fn(rows, thetas.len(), |r, j| thetas[j].powi(r as i32))
+}
+
+/// Integer evaluation grid centered at zero (`{-2,-1,0,1,2}` for n=5),
+/// used by the paper's Fig. 2 / Table II example.
+pub fn integer_thetas(n: usize) -> Vec<f64> {
+    (0..n).map(|i| i as f64 - ((n - 1) as f64) / 2.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_thetas_even() {
+        let t = paper_thetas(4);
+        assert_eq!(t, vec![-1.5, -1.0, 1.0, 1.5]);
+    }
+
+    #[test]
+    fn paper_thetas_odd() {
+        let t = paper_thetas(5);
+        assert_eq!(t, vec![-1.5, -1.0, 0.0, 1.0, 1.5]);
+    }
+
+    #[test]
+    fn thetas_distinct_for_all_n() {
+        for n in 1..=30 {
+            let t = paper_thetas(n);
+            assert_eq!(t.len(), n);
+            for w in t.windows(2) {
+                assert!(w[0] < w[1], "n={n}: {:?}", t);
+            }
+        }
+    }
+
+    #[test]
+    fn vandermonde_shape_and_entries() {
+        let t = [2.0, 3.0];
+        let v = vandermonde(3, &t);
+        assert_eq!((v.rows(), v.cols()), (3, 2));
+        assert_eq!(v[(0, 0)], 1.0);
+        assert_eq!(v[(2, 1)], 9.0);
+    }
+
+    #[test]
+    fn integer_thetas_centered() {
+        assert_eq!(integer_thetas(5), vec![-2.0, -1.0, 0.0, 1.0, 2.0]);
+        assert_eq!(integer_thetas(4), vec![-1.5, -0.5, 0.5, 1.5]);
+    }
+}

@@ -1,0 +1,265 @@
+//! Worker compute backends.
+//!
+//! [`ComputeBackend`] is the seam between the coordinator and the numeric
+//! stack: given the broadcast parameters it produces worker `w`'s coded
+//! vector `f_w`. [`RustBackend`] is the pure-rust reference
+//! implementation (partial gradients via `model::LogisticModel`, coded
+//! combine via `coding::Encoder`); `runtime::PjrtBackend` (same trait)
+//! executes the AOT JAX/Pallas artifact instead.
+//!
+//! Mini-batch SGD (§II: "our results apply to both batch gradient
+//! descent and mini-batch SGD"): [`RustBackend::with_minibatch`] samples
+//! a per-iteration row subset of every data subset. The sample is a
+//! deterministic function of `(iteration, subset index)` — NOT of the
+//! worker — so all `d` holders of a subset compute the *same* partial
+//! gradient and the coded decode stays exact.
+
+use std::sync::Arc;
+
+use crate::coding::{Encoder, GradientCode};
+use crate::data::DenseDataset;
+use crate::model::LogisticModel;
+use crate::rngs::{Pcg64, Rng};
+
+/// Computes a worker's transmitted vector. Implementations must be
+/// thread-safe: each worker thread calls into its own worker id, but the
+/// backend object is shared.
+pub trait ComputeBackend: Send + Sync {
+    /// Gradient dimension `l` (already padded to a multiple of `m`).
+    fn dim(&self) -> usize;
+
+    /// Transmitted dimension `l/m`.
+    fn out_dim(&self) -> usize;
+
+    /// Compute `f_w` for iteration `iter` into `out` (resized /
+    /// overwritten). `iter` seeds mini-batch selection; full-batch
+    /// backends ignore it.
+    fn encoded_gradient(
+        &self,
+        worker: usize,
+        iter: usize,
+        beta: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()>;
+}
+
+/// Pure-rust backend: per-subset logistic partial gradients + encode.
+pub struct RustBackend {
+    /// `D_1..D_n`, shared (each subset is referenced by `d` workers).
+    subsets: Vec<Arc<DenseDataset>>,
+    /// Per-worker assigned subset indices (placement order).
+    assigned: Vec<Vec<usize>>,
+    /// Per-worker encoder.
+    encoders: Vec<Encoder>,
+    l: usize,
+    m: usize,
+    /// Mini-batch fraction in (0, 1]; `None` = full batch.
+    minibatch: Option<f64>,
+    /// Base seed for the (iter, subset) → row-sample map.
+    mb_seed: u64,
+}
+
+impl RustBackend {
+    /// Full-batch backend. Partitions `train` into `n` equal subsets per
+    /// the scheme's placement and prebuilds encoders. `train.cols` must
+    /// already be a multiple of `m`.
+    pub fn new(code: &dyn GradientCode, train: &DenseDataset) -> anyhow::Result<Self> {
+        Self::build(code, train, None, 0)
+    }
+
+    /// Mini-batch SGD backend: each iteration every subset contributes a
+    /// deterministic `fraction` sample of its rows.
+    pub fn with_minibatch(
+        code: &dyn GradientCode,
+        train: &DenseDataset,
+        fraction: f64,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            fraction > 0.0 && fraction <= 1.0,
+            "minibatch fraction must be in (0,1], got {fraction}"
+        );
+        Self::build(code, train, Some(fraction), seed)
+    }
+
+    fn build(
+        code: &dyn GradientCode,
+        train: &DenseDataset,
+        minibatch: Option<f64>,
+        mb_seed: u64,
+    ) -> anyhow::Result<Self> {
+        let cfg = *code.config();
+        cfg.check_dim(train.cols)?;
+        let parts = crate::data::partition_rows(train.rows, cfg.n);
+        let subsets: Vec<Arc<DenseDataset>> =
+            parts.iter().map(|idx| Arc::new(train.select_rows(idx))).collect();
+        let mut assigned = Vec::with_capacity(cfg.n);
+        let mut encoders = Vec::with_capacity(cfg.n);
+        for w in 0..cfg.n {
+            assigned.push(code.placement().assigned(w));
+            encoders.push(Encoder::new(code, w)?);
+        }
+        Ok(RustBackend {
+            subsets,
+            assigned,
+            encoders,
+            l: train.cols,
+            m: cfg.m,
+            minibatch,
+            mb_seed,
+        })
+    }
+
+    /// The deterministic row sample of subset `t` at iteration `iter`.
+    /// Same for every worker holding `t` — the coded-decode invariant.
+    fn minibatch_rows(&self, iter: usize, t: usize, rows: usize) -> Option<Vec<usize>> {
+        let fraction = self.minibatch?;
+        let count = ((rows as f64 * fraction).round() as usize).clamp(1, rows);
+        if count == rows {
+            return None; // full subset
+        }
+        // Seed mixes (base, iter, subset) but NOT the worker id.
+        let seed = self
+            .mb_seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add((iter as u64) << 20)
+            .wrapping_add(t as u64);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        Some(rng.sample_indices(rows, count))
+    }
+
+    /// Partial gradient of subset `t` at iteration `iter` (mini-batch
+    /// aware); used by both the worker path and the test oracle.
+    pub fn subset_gradient(&self, iter: usize, t: usize, beta: &[f32]) -> Vec<f32> {
+        let ds = &self.subsets[t];
+        match self.minibatch_rows(iter, t, ds.rows) {
+            None => LogisticModel::gradient(ds, beta),
+            Some(rows) => LogisticModel::gradient(&ds.select_rows(&rows), beta),
+        }
+    }
+
+    /// Direct (un-coded) sum gradient over all subsets — test oracle.
+    pub fn full_gradient(&self, iter: usize, beta: &[f32]) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.l];
+        for t in 0..self.subsets.len() {
+            let part = self.subset_gradient(iter, t, beta);
+            crate::linalg::axpy_f32(1.0, &part, &mut g);
+        }
+        g
+    }
+}
+
+impl ComputeBackend for RustBackend {
+    fn dim(&self) -> usize {
+        self.l
+    }
+
+    fn out_dim(&self) -> usize {
+        self.l / self.m
+    }
+
+    fn encoded_gradient(
+        &self,
+        worker: usize,
+        iter: usize,
+        beta: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        let assigned = &self.assigned[worker];
+        // d partial gradients, then the coded combine.
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(assigned.len());
+        for &t in assigned {
+            grads.push(self.subset_gradient(iter, t, beta));
+        }
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        self.encoders[worker].encode_into(&views, out)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{Decoder, PolynomialCode, SchemeConfig};
+    use crate::data::{CategoricalConfig, SyntheticCategorical};
+
+    fn setup(n: usize, s: usize, m: usize) -> (PolynomialCode, DenseDataset) {
+        let code = PolynomialCode::new(SchemeConfig::tight(n, s, m).unwrap()).unwrap();
+        let gen = SyntheticCategorical::new(CategoricalConfig::default(), 31);
+        let ds = gen.generate(n * 20, 32);
+        let ds = SyntheticCategorical::pad_to_multiple(&ds, m);
+        (code, ds)
+    }
+
+    fn check_roundtrip(code: &PolynomialCode, backend: &RustBackend, iter: usize, l: usize) {
+        let beta = vec![0.01f32; l];
+        let n = code.config().n;
+        let mut fs = Vec::new();
+        for w in 0..n {
+            let mut f = Vec::new();
+            backend.encoded_gradient(w, iter, &beta, &mut f).unwrap();
+            assert_eq!(f.len(), backend.out_dim());
+            fs.push(f);
+        }
+        let avail: Vec<usize> = (0..n).filter(|&w| w != 2).collect();
+        let dec = Decoder::new(code, &avail).unwrap();
+        let views: Vec<&[f32]> =
+            dec.used_workers().iter().map(|&w| fs[w].as_slice()).collect();
+        let got = dec.decode(&views).unwrap();
+        let want = backend.full_gradient(iter, &beta);
+        let scale = want.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-20);
+        for j in 0..got.len() {
+            assert!(
+                (got[j] - want[j]).abs() / scale < 1e-4,
+                "iter {iter} coord {j}: {} vs {}",
+                got[j],
+                want[j]
+            );
+        }
+    }
+
+    #[test]
+    fn coded_pipeline_reconstructs_full_gradient() {
+        let (code, ds) = setup(5, 1, 2);
+        let backend = RustBackend::new(&code, &ds).unwrap();
+        check_roundtrip(&code, &backend, 0, ds.cols);
+    }
+
+    #[test]
+    fn minibatch_pipeline_reconstructs_minibatch_gradient() {
+        // The decode must equal the sum of *mini-batch* gradients: all d
+        // holders of a subset sampled identical rows.
+        let (code, ds) = setup(5, 1, 2);
+        let backend = RustBackend::with_minibatch(&code, &ds, 0.5, 99).unwrap();
+        for iter in [0usize, 1, 7] {
+            check_roundtrip(&code, &backend, iter, ds.cols);
+        }
+    }
+
+    #[test]
+    fn minibatch_varies_with_iteration_but_not_worker() {
+        let (code, ds) = setup(4, 1, 1);
+        let backend = RustBackend::with_minibatch(&code, &ds, 0.4, 3).unwrap();
+        let beta = vec![0.02f32; ds.cols];
+        let g0 = backend.subset_gradient(0, 1, &beta);
+        let g0_again = backend.subset_gradient(0, 1, &beta);
+        let g1 = backend.subset_gradient(1, 1, &beta);
+        assert_eq!(g0, g0_again, "same (iter, subset) must be deterministic");
+        assert_ne!(g0, g1, "different iterations must resample");
+    }
+
+    #[test]
+    fn backend_dims_are_consistent() {
+        let (code, ds) = setup(6, 2, 2);
+        let backend = RustBackend::new(&code, &ds).unwrap();
+        assert_eq!(backend.dim(), ds.cols);
+        assert_eq!(backend.out_dim(), ds.cols / 2);
+    }
+
+    #[test]
+    fn minibatch_rejects_bad_fraction() {
+        let (code, ds) = setup(4, 1, 1);
+        assert!(RustBackend::with_minibatch(&code, &ds, 0.0, 1).is_err());
+        assert!(RustBackend::with_minibatch(&code, &ds, 1.5, 1).is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! The in-process cluster: spawns worker threads, owns the channels, and
+//! gathers per-iteration responses for the master.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::backend::ComputeBackend;
+use super::messages::{Task, WorkerResult};
+use super::worker::{DelayInjector, WorkerLoop};
+use crate::coding::SchemeConfig;
+use crate::rngs::{Pcg64, ShiftedExponential};
+use crate::simulator::DelayParams;
+
+/// How straggling and time are realized.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ExecutionMode {
+    /// Collect all `n` results; responder order and the iteration clock
+    /// come from sampled virtual delays. Deterministic given seeds.
+    Virtual,
+    /// Workers sleep `scale ×` their sampled delay; the master takes the
+    /// first `n-s` arrivals off the wire. Exercises the real racy path.
+    RealTime { scale: f64 },
+}
+
+/// Result of one gathered iteration.
+#[derive(Debug)]
+pub struct GatherResult {
+    /// Results ordered by (virtual or wall-clock) arrival.
+    pub results: Vec<WorkerResult>,
+    /// Iteration runtime on the relevant clock (seconds): virtual finish
+    /// of the `(n-s)`-th responder, or measured wall time.
+    pub iteration_time: f64,
+    /// Max measured worker compute among used responders.
+    pub worker_compute: f64,
+}
+
+/// In-process master handle over `n` worker threads.
+pub struct Cluster {
+    cfg: SchemeConfig,
+    mode: ExecutionMode,
+    task_txs: Vec<Sender<Task>>,
+    results: Receiver<WorkerResult>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Cluster {
+    /// Spawn the workers. `delays` enables §VI delay injection (scaled by
+    /// the scheme's `d` and `m` per assumptions 1–2); `seed` drives all
+    /// worker RNGs.
+    pub fn spawn(
+        cfg: SchemeConfig,
+        backend: Arc<dyn ComputeBackend>,
+        mode: ExecutionMode,
+        delays: Option<DelayParams>,
+        seed: u64,
+    ) -> Self {
+        let (result_tx, result_rx) = channel::<WorkerResult>();
+        let mut task_txs = Vec::with_capacity(cfg.n);
+        let mut handles = Vec::with_capacity(cfg.n);
+        let mut root = Pcg64::seed_from_u64(seed);
+        for w in 0..cfg.n {
+            let (task_tx, task_rx) = channel::<Task>();
+            task_txs.push(task_tx);
+            let injector = delays.as_ref().map(|p| {
+                DelayInjector::new(
+                    ShiftedExponential::new(cfg.d as f64 * p.t1, p.lambda1 / cfg.d as f64),
+                    ShiftedExponential::new(p.t2 / cfg.m as f64, cfg.m as f64 * p.lambda2),
+                    root.fork(w as u64 + 1),
+                )
+            });
+            let looper = WorkerLoop {
+                id: w,
+                backend: Arc::clone(&backend),
+                tasks: task_rx,
+                results: result_tx.clone(),
+                delays: injector,
+                sleep_scale: match mode {
+                    ExecutionMode::Virtual => 0.0,
+                    ExecutionMode::RealTime { scale } => scale,
+                },
+                skip_stale: matches!(mode, ExecutionMode::RealTime { .. }),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gradcode-worker-{w}"))
+                    .spawn(move || looper.run())
+                    .expect("spawn worker"),
+            );
+        }
+        Cluster { cfg, mode, task_txs, results: result_rx, handles }
+    }
+
+    pub fn n(&self) -> usize {
+        self.cfg.n
+    }
+
+    /// Broadcast an iteration and gather responses.
+    ///
+    /// Virtual mode: waits for all `n` results, sorts by virtual finish,
+    /// returns all (the trainer uses the first `n-s`).
+    /// Real-time mode: returns after the first `n-s` results for this
+    /// iteration arrive; stale results from previous iterations are
+    /// discarded.
+    pub fn run_iteration(&mut self, iter: usize, beta: Arc<Vec<f32>>) -> GatherResult {
+        let t0 = Instant::now();
+        for tx in &self.task_txs {
+            // A dead worker (backend error) is a permanent straggler; the
+            // send fails silently and the decode path handles the gap.
+            let _ = tx.send(Task { iter, beta: Arc::clone(&beta) });
+        }
+        let wait_for = self.cfg.wait_for();
+        let mut results: Vec<WorkerResult> = Vec::with_capacity(self.cfg.n);
+        match self.mode {
+            ExecutionMode::Virtual => {
+                // Every worker reports exactly once per iteration, failures
+                // included (a backend failure is a permanent straggler and
+                // reports `failed = true` rather than going silent).
+                let mut received = 0usize;
+                while received < self.cfg.n {
+                    match self.results.recv() {
+                        Ok(r) if r.iter == iter => {
+                            received += 1;
+                            if !r.failed {
+                                results.push(r);
+                            }
+                        }
+                        Ok(_) => continue, // stale (shouldn't happen here)
+                        Err(_) => break,   // all workers died
+                    }
+                }
+                assert!(
+                    results.len() >= wait_for,
+                    "only {} healthy results of {} workers (need {wait_for}; \
+                     the scheme tolerates s = {} failures)",
+                    results.len(),
+                    self.cfg.n,
+                    self.cfg.s
+                );
+                results.sort_by(|a, b| {
+                    a.virtual_finish.partial_cmp(&b.virtual_finish).unwrap()
+                });
+                let iteration_time = results[wait_for - 1].virtual_finish;
+                let worker_compute = results[..wait_for]
+                    .iter()
+                    .map(|r| r.compute_secs)
+                    .fold(0.0, f64::max);
+                GatherResult { results, iteration_time, worker_compute }
+            }
+            ExecutionMode::RealTime { .. } => {
+                let mut failures = 0usize;
+                while results.len() < wait_for {
+                    match self.results.recv() {
+                        Ok(r) if r.iter == iter => {
+                            if r.failed {
+                                failures += 1;
+                                assert!(
+                                    failures <= self.cfg.s,
+                                    "{failures} worker failures exceed straggler tolerance s = {}",
+                                    self.cfg.s
+                                );
+                            } else {
+                                results.push(r);
+                            }
+                        }
+                        Ok(_) => continue, // stale from a previous iteration
+                        Err(_) => panic!("all workers exited mid-iteration"),
+                    }
+                }
+                let iteration_time = t0.elapsed().as_secs_f64();
+                let worker_compute =
+                    results.iter().map(|r| r.compute_secs).fold(0.0, f64::max);
+                GatherResult { results, iteration_time, worker_compute }
+            }
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.task_txs.clear(); // close task channels -> workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{GradientCode, PolynomialCode};
+    use crate::coordinator::backend::RustBackend;
+    use crate::data::{CategoricalConfig, SyntheticCategorical};
+
+    fn setup(
+        n: usize,
+        s: usize,
+        m: usize,
+    ) -> (Arc<PolynomialCode>, Arc<RustBackend>, usize) {
+        let code =
+            Arc::new(PolynomialCode::new(SchemeConfig::tight(n, s, m).unwrap()).unwrap());
+        let gen = SyntheticCategorical::new(CategoricalConfig::default(), 41);
+        let ds = SyntheticCategorical::pad_to_multiple(&gen.generate(n * 12, 42), m);
+        let backend = Arc::new(RustBackend::new(code.as_ref(), &ds).unwrap());
+        let l = ds.cols;
+        (code, backend, l)
+    }
+
+    #[test]
+    fn virtual_mode_gathers_all_and_orders() {
+        let (code, backend, l) = setup(5, 1, 2);
+        let mut cluster = Cluster::spawn(
+            *code.config(),
+            backend,
+            ExecutionMode::Virtual,
+            Some(DelayParams::table_vi1()),
+            1,
+        );
+        let beta = Arc::new(vec![0.0f32; l]);
+        for iter in 0..3 {
+            let g = cluster.run_iteration(iter, Arc::clone(&beta));
+            assert_eq!(g.results.len(), 5);
+            for w in g.results.windows(2) {
+                assert!(w[0].virtual_finish <= w[1].virtual_finish);
+            }
+            assert_eq!(g.iteration_time, g.results[3].virtual_finish);
+            for r in &g.results {
+                assert_eq!(r.f.len(), l / 2);
+                assert_eq!(r.iter, iter);
+            }
+        }
+    }
+
+    #[test]
+    fn realtime_mode_returns_after_quorum() {
+        let (code, backend, l) = setup(5, 2, 1);
+        let mut cluster = Cluster::spawn(
+            *code.config(),
+            backend,
+            // tiny sleep scale so the test is fast but ordering is racy
+            ExecutionMode::RealTime { scale: 1e-4 },
+            Some(DelayParams::table_vi1()),
+            2,
+        );
+        let beta = Arc::new(vec![0.0f32; l]);
+        for iter in 0..3 {
+            let g = cluster.run_iteration(iter, Arc::clone(&beta));
+            assert!(g.results.len() >= 3, "quorum is n-s = 3");
+            assert!(g.results.iter().all(|r| r.iter == iter));
+        }
+    }
+
+    #[test]
+    fn no_delay_injection_gives_zero_virtual_time() {
+        let (code, backend, l) = setup(4, 1, 1);
+        let mut cluster =
+            Cluster::spawn(*code.config(), backend, ExecutionMode::Virtual, None, 3);
+        let g = cluster.run_iteration(0, Arc::new(vec![0.0f32; l]));
+        assert!(g.results.iter().all(|r| r.virtual_finish == 0.0));
+    }
+}

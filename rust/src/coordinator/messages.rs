@@ -1,0 +1,28 @@
+//! Master ⇄ worker protocol messages.
+
+use std::sync::Arc;
+
+/// Master → worker: compute the coded gradient at `beta` for `iter`.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub iter: usize,
+    /// Shared parameter vector (broadcast without copying per worker).
+    pub beta: Arc<Vec<f32>>,
+}
+
+/// Worker → master: the coded `l/m`-dimensional vector plus timing.
+#[derive(Debug, Clone)]
+pub struct WorkerResult {
+    pub worker: usize,
+    pub iter: usize,
+    /// Transmitted coded vector `f_w` (empty when `failed`).
+    pub f: Vec<f32>,
+    /// Sampled virtual finish time under the §VI delay model (seconds);
+    /// 0 when delay injection is disabled.
+    pub virtual_finish: f64,
+    /// Measured wall-clock seconds spent in gradient + encode.
+    pub compute_secs: f64,
+    /// Backend failure: the worker behaves as a permanent straggler; the
+    /// scheme tolerates up to `s` of these.
+    pub failed: bool,
+}

@@ -1,0 +1,35 @@
+//! L3 coordinator: the distributed synchronous gradient-descent runtime.
+//!
+//! Topology is the paper's: one master, `n` workers. Workers compute the
+//! partial gradients of their `d` assigned subsets and transmit the coded
+//! `l/m`-dimensional vector; the master waits for the first `n-s`
+//! responders, decodes the sum gradient, and steps the optimizer.
+//!
+//! Offline substitution for the paper's EC2/mpi4py deployment: each
+//! worker is an OS thread connected by channels ([`Cluster`]), and
+//! straggling is injected from the §VI shifted-exponential delay model.
+//! Two execution modes:
+//! - [`ExecutionMode::Virtual`] — all results are collected, responder
+//!   order and the iteration clock come from sampled virtual delays
+//!   (bit-reproducible; used by the figure benches);
+//! - [`ExecutionMode::RealTime`] — workers *sleep* their sampled delays
+//!   (scaled) and the master takes the first `n-s` arrivals off the wire,
+//!   exercising the real racy straggler path.
+//!
+//! The gradient+encode compute itself always runs for real, through a
+//! [`ComputeBackend`] — either the pure-rust reference backend or the
+//! PJRT backend executing the AOT-compiled JAX/Pallas artifacts.
+
+mod backend;
+mod cluster;
+mod messages;
+pub mod remote;
+mod trainer;
+pub mod wire;
+mod worker;
+
+pub use backend::{ComputeBackend, RustBackend};
+pub use cluster::{Cluster, ExecutionMode};
+pub use messages::{Task, WorkerResult};
+pub use remote::{run_worker, RemoteMaster};
+pub use trainer::{train, OptChoice, SchemeSpec, TrainConfig, Trainer};

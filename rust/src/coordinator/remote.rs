@@ -1,0 +1,337 @@
+//! TCP deployment: master and workers as separate processes over real
+//! sockets — the offline analogue of the paper's mpi4py EC2 deployment.
+//!
+//! - [`RemoteMaster`] listens, handshakes `n` workers (Hello → Setup),
+//!   broadcasts `Task` frames each iteration and gathers `Result`s from
+//!   the first `n - s` responders (arrival order — real network racing).
+//! - [`run_worker`] is the worker process body: connect, receive Setup,
+//!   rebuild scheme + data shard deterministically from the seeds, then
+//!   serve the task loop until Shutdown.
+//!
+//! The data "distribution" step is seed-based regeneration (every worker
+//! derives its shard from `data_seed`), standing in for the shared
+//! filesystem / S3 load of the real deployment.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{ComputeBackend, RustBackend};
+use super::trainer::SchemeSpec;
+use super::wire::{Message, Setup, MAGIC};
+use crate::coding::GradientCode;
+use crate::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
+
+/// Rebuild the scheme from a Setup frame (both sides do this, so encode
+/// coefficients and decode weights agree without shipping matrices).
+pub fn scheme_from_setup(setup: &Setup) -> Result<std::sync::Arc<dyn GradientCode>> {
+    let spec = match setup.scheme_kind {
+        0 => SchemeSpec::Poly { s: setup.s as usize, m: setup.m as usize },
+        1 => SchemeSpec::Random {
+            s: setup.s as usize,
+            m: setup.m as usize,
+            seed: setup.scheme_seed,
+        },
+        2 => SchemeSpec::Uncoded,
+        other => bail!("unknown scheme kind {other}"),
+    };
+    spec.build(setup.n as usize)
+}
+
+/// Regenerate the deterministic training set both sides agree on.
+pub fn dataset_from_setup(setup: &Setup) -> DenseDataset {
+    let gen = SyntheticCategorical::new(
+        CategoricalConfig { columns: 10, cardinality: (16, 48), ..Default::default() },
+        setup.data_seed,
+    );
+    gen.generate(setup.rows as usize, setup.data_seed + 1)
+        .pad_cols(setup.dim as usize)
+}
+
+/// One gathered remote iteration.
+#[derive(Debug)]
+pub struct RemoteGather {
+    /// (worker id, coded vector), in arrival order, length `n - s`.
+    pub results: Vec<(usize, Vec<f32>)>,
+    /// Wall-clock seconds from broadcast to quorum.
+    pub elapsed: f64,
+}
+
+/// Master side of the TCP deployment.
+pub struct RemoteMaster {
+    setup: Setup,
+    writers: Vec<BufWriter<TcpStream>>,
+    /// Fan-in channel fed by per-connection reader threads.
+    results: Receiver<(usize, Message)>,
+    _reader_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RemoteMaster {
+    /// Bind, accept `setup.n` workers, handshake each.
+    pub fn listen(addr: impl ToSocketAddrs, setup: Setup) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("binding master socket")?;
+        let mut writers: Vec<Option<BufWriter<TcpStream>>> =
+            (0..setup.n).map(|_| None).collect();
+        let (tx, rx) = channel();
+        let mut handles = Vec::new();
+        for _ in 0..setup.n {
+            let (stream, peer) = listener.accept().context("accepting worker")?;
+            stream.set_nodelay(true).ok();
+            let mut reader = BufReader::new(stream.try_clone()?);
+            // Handshake: Hello -> Setup.
+            let hello = Message::read_from(&mut reader)?;
+            let worker_id = match hello {
+                Message::Hello { magic, worker_id } if magic == MAGIC => worker_id as usize,
+                Message::Hello { magic, .. } => bail!("bad magic {magic:#x} from {peer}"),
+                other => bail!("expected Hello from {peer}, got {other:?}"),
+            };
+            if worker_id >= setup.n as usize {
+                bail!("worker id {worker_id} out of range");
+            }
+            if writers[worker_id].is_some() {
+                bail!("duplicate worker id {worker_id}");
+            }
+            let mut writer = BufWriter::new(stream);
+            Message::Setup(setup).write_to(&mut writer)?;
+            writers[worker_id] = Some(writer);
+            // Reader thread: pump results into the fan-in channel.
+            let tx: Sender<(usize, Message)> = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                loop {
+                    match Message::read_from(&mut reader) {
+                        Ok(msg) => {
+                            if tx.send((worker_id, msg)).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => return, // connection closed
+                    }
+                }
+            }));
+        }
+        let writers: Vec<BufWriter<TcpStream>> =
+            writers.into_iter().map(|w| w.expect("all ids seen")).collect();
+        Ok(RemoteMaster { setup, writers, results: rx, _reader_handles: handles })
+    }
+
+    pub fn setup(&self) -> &Setup {
+        &self.setup
+    }
+
+    /// Broadcast an iteration and gather the first `n - s` results.
+    pub fn run_iteration(&mut self, iter: u64, beta: &[f32]) -> Result<RemoteGather> {
+        let t0 = Instant::now();
+        let msg = Message::Task { iter, beta: beta.to_vec() };
+        for w in self.writers.iter_mut() {
+            // A dead connection = permanent straggler.
+            let _ = msg.write_to(w);
+        }
+        let quorum = (self.setup.n - self.setup.s) as usize;
+        let mut results = Vec::with_capacity(quorum);
+        let mut failures = 0u32;
+        while results.len() < quorum {
+            let (wid, msg) = self
+                .results
+                .recv()
+                .context("all worker connections closed before quorum")?;
+            match msg {
+                Message::Result { iter: rit, failed, f, .. } if rit == iter => {
+                    if failed {
+                        failures += 1;
+                        if failures > self.setup.s {
+                            bail!("{failures} worker failures exceed s = {}", self.setup.s);
+                        }
+                    } else {
+                        results.push((wid, f));
+                    }
+                }
+                Message::Result { .. } => continue, // stale iteration
+                other => bail!("unexpected message from worker {wid}: {other:?}"),
+            }
+        }
+        Ok(RemoteGather { results, elapsed: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Send Shutdown to everyone.
+    pub fn shutdown(mut self) {
+        for w in self.writers.iter_mut() {
+            let _ = Message::Shutdown.write_to(w);
+        }
+    }
+}
+
+/// Worker process body: connect to the master and serve until Shutdown.
+/// Returns the number of tasks served.
+pub fn run_worker(addr: impl ToSocketAddrs, worker_id: usize) -> Result<usize> {
+    let stream = TcpStream::connect(addr).context("connecting to master")?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    Message::Hello { magic: MAGIC, worker_id: worker_id as u32 }.write_to(&mut writer)?;
+    let setup = match Message::read_from(&mut reader)? {
+        Message::Setup(s) => s,
+        other => bail!("expected Setup, got {other:?}"),
+    };
+    let code = scheme_from_setup(&setup)?;
+    let train = dataset_from_setup(&setup);
+    let backend = RustBackend::new(code.as_ref(), &train)?;
+
+    let mut served = 0usize;
+    let mut out = Vec::new();
+    loop {
+        match Message::read_from(&mut reader)? {
+            Message::Task { iter, beta } => {
+                let failed =
+                    backend.encoded_gradient(worker_id, iter as usize, &beta, &mut out).is_err();
+                Message::Result {
+                    worker: worker_id as u32,
+                    iter,
+                    failed,
+                    f: if failed { Vec::new() } else { out.clone() },
+                }
+                .write_to(&mut writer)?;
+                served += 1;
+            }
+            Message::Shutdown => return Ok(served),
+            other => bail!("unexpected message: {other:?}"),
+        }
+    }
+}
+
+/// Decode helper for the master: reconstruct the sum gradient from a
+/// remote gather (arrival-ordered responder list).
+pub fn decode_gather(
+    code: &dyn GradientCode,
+    gather: &RemoteGather,
+    cache: &mut HashMap<u64, crate::coding::Decoder>,
+) -> Result<Vec<f32>> {
+    let mut responders: Vec<usize> = gather.results.iter().map(|(w, _)| *w).collect();
+    responders.sort_unstable();
+    let key = responders.iter().fold(0u64, |acc, &w| acc | (1 << w));
+    if !cache.contains_key(&key) {
+        cache.insert(key, crate::coding::Decoder::new(code, &responders)?);
+    }
+    let dec = &cache[&key];
+    let by_worker: HashMap<usize, &[f32]> =
+        gather.results.iter().map(|(w, f)| (*w, f.as_slice())).collect();
+    let fs: Vec<&[f32]> =
+        dec.used_workers().iter().map(|w| by_worker[w]).collect();
+    Ok(dec.decode(&fs)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_setup(n: u32, s: u32, m: u32) -> Setup {
+        Setup {
+            n,
+            d: s + m,
+            s,
+            m,
+            scheme_kind: 0,
+            scheme_seed: 1,
+            data_seed: 777,
+            rows: n * 16,
+            dim: 512,
+        }
+    }
+
+    /// Full multi-"process" deployment over loopback TCP: one master,
+    /// n worker bodies on threads, real sockets, real decode.
+    #[test]
+    fn tcp_cluster_trains_over_loopback() {
+        let setup = test_setup(5, 1, 2);
+        let listener_addr = {
+            // reserve a free port
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = l.local_addr().unwrap();
+            drop(l);
+            addr
+        };
+        let master_thread = {
+            let setup = setup;
+            std::thread::spawn(move || -> Result<Vec<f32>> {
+                let mut master = RemoteMaster::listen(listener_addr, setup)?;
+                let code = scheme_from_setup(&setup)?;
+                let train = dataset_from_setup(&setup);
+                let backend = RustBackend::new(code.as_ref(), &train)?;
+                let mut cache = HashMap::new();
+                let mut beta = vec![0.0f32; setup.dim as usize];
+                let lr = 4.0 / train.rows as f32;
+                for iter in 0..5u64 {
+                    let gather = master.run_iteration(iter, &beta)?;
+                    assert_eq!(gather.results.len(), 4); // n - s
+                    let grad = decode_gather(code.as_ref(), &gather, &mut cache)?;
+                    // cross-check against the local oracle
+                    let want = backend.full_gradient(iter as usize, &beta);
+                    let scale =
+                        want.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+                    for j in 0..grad.len() {
+                        assert!(
+                            (grad[j] - want[j]).abs() / scale < 1e-3,
+                            "iter {iter} coord {j}"
+                        );
+                    }
+                    for (b, g) in beta.iter_mut().zip(&grad) {
+                        *b -= lr * g;
+                    }
+                }
+                master.shutdown();
+                Ok(beta)
+            })
+        };
+        // workers (threads standing in for processes; the wire path is
+        // identical)
+        let worker_threads: Vec<_> = (0..5)
+            .map(|w| std::thread::spawn(move || run_worker(listener_addr, w)))
+            .collect();
+        let beta = master_thread.join().unwrap().unwrap();
+        assert!(beta.iter().any(|&b| b != 0.0), "training moved the params");
+        for (w, h) in worker_threads.into_iter().enumerate() {
+            let served = h.join().unwrap().unwrap();
+            assert_eq!(served, 5, "worker {w} served all iterations");
+        }
+    }
+
+    #[test]
+    fn duplicate_worker_id_rejected() {
+        let setup = test_setup(2, 0, 1);
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        drop(l);
+        let master = std::thread::spawn(move || RemoteMaster::listen(addr, setup));
+        // two workers claim id 0
+        let w1 = std::thread::spawn(move || run_worker(addr, 0));
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let _w2 = std::thread::spawn(move || run_worker(addr, 0));
+        let res = master.join().unwrap();
+        assert!(res.is_err(), "duplicate id must fail the handshake");
+        drop(w1);
+    }
+
+    #[test]
+    fn scheme_from_setup_kinds() {
+        let mut s = test_setup(4, 1, 1);
+        assert_eq!(scheme_from_setup(&s).unwrap().config().d, 2);
+        s.scheme_kind = 1;
+        assert!(scheme_from_setup(&s).is_ok());
+        s.scheme_kind = 2;
+        assert_eq!(scheme_from_setup(&s).unwrap().config().d, 1);
+        s.scheme_kind = 9;
+        assert!(scheme_from_setup(&s).is_err());
+    }
+
+    #[test]
+    fn dataset_from_setup_is_deterministic() {
+        let s = test_setup(4, 1, 1);
+        let a = dataset_from_setup(&s);
+        let b = dataset_from_setup(&s);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.cols, 512);
+    }
+}

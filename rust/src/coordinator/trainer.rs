@@ -1,0 +1,394 @@
+//! The training loop: scheme + cluster + optimizer + metrics.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::backend::{ComputeBackend, RustBackend};
+use super::cluster::{Cluster, ExecutionMode};
+use crate::coding::{
+    Decoder, GradientCode, PolynomialCode, RandomCode, SchemeConfig, UncodedScheme,
+};
+use crate::data::{auc, DenseDataset, SyntheticCategorical};
+use crate::metrics::{IterationRecord, RunLog};
+use crate::model::LogisticModel;
+use crate::optim::{Momentum, Nag, Optimizer, Sgd};
+use crate::simulator::DelayParams;
+
+/// Which coding scheme to deploy.
+#[derive(Debug, Clone, Copy)]
+pub enum SchemeSpec {
+    /// §III recursive-polynomial scheme with the paper's θ grid.
+    Poly { s: usize, m: usize },
+    /// §IV Gaussian random-matrix scheme.
+    Random { s: usize, m: usize, seed: u64 },
+    /// Naive uncoded baseline (d=1, wait for all).
+    Uncoded,
+}
+
+impl SchemeSpec {
+    /// Human-readable label used in logs and bench tables.
+    pub fn label(&self) -> String {
+        match self {
+            SchemeSpec::Poly { s, m } => format!("poly(s={s},m={m})"),
+            SchemeSpec::Random { s, m, .. } => format!("random(s={s},m={m})"),
+            SchemeSpec::Uncoded => "naive".to_string(),
+        }
+    }
+
+    /// Instantiate the scheme for `n` workers.
+    pub fn build(&self, n: usize) -> anyhow::Result<Arc<dyn GradientCode>> {
+        Ok(match *self {
+            SchemeSpec::Poly { s, m } => {
+                Arc::new(PolynomialCode::new(SchemeConfig::tight(n, s, m)?)?)
+            }
+            SchemeSpec::Random { s, m, seed } => {
+                Arc::new(RandomCode::new(SchemeConfig::tight(n, s, m)?, seed)?)
+            }
+            SchemeSpec::Uncoded => Arc::new(UncodedScheme::new(n)),
+        })
+    }
+}
+
+/// Optimizer choice (the paper uses NAG).
+#[derive(Debug, Clone, Copy)]
+pub enum OptChoice {
+    Nag { lr: f32, momentum: f32 },
+    NagScheduled { lr: f32 },
+    Sgd { lr: f32 },
+    Momentum { lr: f32, mu: f32 },
+}
+
+impl OptChoice {
+    fn build(&self, x0: Vec<f32>) -> Box<dyn Optimizer> {
+        match *self {
+            OptChoice::Nag { lr, momentum } => Box::new(Nag::new(x0, lr, momentum)),
+            OptChoice::NagScheduled { lr } => Box::new(Nag::scheduled(x0, lr)),
+            OptChoice::Sgd { lr } => Box::new(Sgd::new(x0, lr)),
+            OptChoice::Momentum { lr, mu } => Box::new(Momentum::new(x0, lr, mu)),
+        }
+    }
+}
+
+/// Full training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub n: usize,
+    pub scheme: SchemeSpec,
+    pub iters: usize,
+    pub opt: OptChoice,
+    /// Evaluate loss/AUC every this many iterations (and at the end).
+    pub eval_every: usize,
+    /// §VI delay injection; `None` disables straggler simulation.
+    pub delays: Option<DelayParams>,
+    pub mode: ExecutionMode,
+    pub seed: u64,
+    /// Mini-batch fraction in (0, 1] for the rust backend; `None` = full
+    /// batch (§II: the scheme applies to both batch GD and mini-batch SGD).
+    pub minibatch: Option<f64>,
+}
+
+impl TrainConfig {
+    pub fn quick(n: usize, scheme: SchemeSpec, iters: usize) -> Self {
+        TrainConfig {
+            n,
+            scheme,
+            iters,
+            opt: OptChoice::Nag { lr: 1e-3, momentum: 0.9 },
+            eval_every: 10,
+            delays: Some(DelayParams::table_vi1()),
+            mode: ExecutionMode::Virtual,
+            seed: 0xfeed,
+            minibatch: None,
+        }
+    }
+}
+
+/// Owns the cluster and optimizer for one training run.
+pub struct Trainer {
+    cfg: TrainConfig,
+    code: Arc<dyn GradientCode>,
+    cluster: Cluster,
+    out_dim: usize,
+    opt: Box<dyn Optimizer>,
+    decoder_cache: HashMap<u64, Decoder>,
+    /// Eval data (train loss / test AUC); train eval is subsampled.
+    train_eval: DenseDataset,
+    test: Option<DenseDataset>,
+}
+
+impl Trainer {
+    /// Build with the pure-rust backend over `train`.
+    pub fn new(
+        cfg: TrainConfig,
+        train: &DenseDataset,
+        test: Option<&DenseDataset>,
+    ) -> anyhow::Result<Self> {
+        let code = cfg.scheme.build(cfg.n)?;
+        let m = code.config().m;
+        let train_padded = SyntheticCategorical::pad_to_multiple(train, m);
+        let backend: Arc<dyn ComputeBackend> = match cfg.minibatch {
+            None => Arc::new(RustBackend::new(code.as_ref(), &train_padded)?),
+            Some(frac) => Arc::new(RustBackend::with_minibatch(
+                code.as_ref(),
+                &train_padded,
+                frac,
+                cfg.seed ^ 0x6d62, // "mb"
+            )?),
+        };
+        Self::with_backend(cfg, code, backend, &train_padded, test)
+    }
+
+    /// Build with an explicit backend (e.g. the PJRT artifact backend).
+    /// `train_eval` must already be padded to the scheme's `m`.
+    pub fn with_backend(
+        cfg: TrainConfig,
+        code: Arc<dyn GradientCode>,
+        backend: Arc<dyn ComputeBackend>,
+        train_eval: &DenseDataset,
+        test: Option<&DenseDataset>,
+    ) -> anyhow::Result<Self> {
+        let l = backend.dim();
+        let out_dim = backend.out_dim();
+        anyhow::ensure!(l % code.config().m == 0, "backend dim not divisible by m");
+        // Subsample train eval to bound metric cost on big runs.
+        let train_eval = if train_eval.rows > 4096 {
+            let idx: Vec<usize> = (0..4096).map(|i| i * (train_eval.rows / 4096)).collect();
+            train_eval.select_rows(&idx)
+        } else {
+            train_eval.clone()
+        };
+        let cluster = Cluster::spawn(
+            *code.config(),
+            backend,
+            cfg.mode,
+            cfg.delays,
+            cfg.seed,
+        );
+        let opt = cfg.opt.build(vec![0.0f32; l]);
+        let test = test.map(|t| {
+            // Pad test data columns to match l if needed.
+            if t.cols == l {
+                t.clone()
+            } else {
+                assert!(t.cols < l, "test wider than train");
+                let mut x = vec![0.0f32; t.rows * l];
+                for r in 0..t.rows {
+                    x[r * l..r * l + t.cols].copy_from_slice(t.row(r));
+                }
+                DenseDataset { x, y: t.y.clone(), rows: t.rows, cols: l }
+            }
+        });
+        Ok(Trainer {
+            cfg,
+            code,
+            cluster,
+            out_dim,
+            opt,
+            decoder_cache: HashMap::new(),
+            train_eval,
+            test,
+        })
+    }
+
+    /// Bitmask cache key for a sorted responder set (n <= 64).
+    fn mask(responders: &[usize]) -> u64 {
+        responders.iter().fold(0u64, |acc, &w| acc | (1 << w))
+    }
+
+    /// Run the configured number of iterations.
+    pub fn run(&mut self) -> anyhow::Result<RunLog> {
+        let mut log = RunLog::new(self.cfg.scheme.label());
+        let mut sim_clock = 0.0f64;
+        let wait_for = self.code.config().wait_for();
+        let mut grad = Vec::with_capacity(self.out_dim * self.code.config().m);
+        for iter in 0..self.cfg.iters {
+            let beta = Arc::new(self.opt.eval_point().to_vec());
+            let gather = self.cluster.run_iteration(iter, beta);
+            let t0 = Instant::now();
+
+            // Responders: first n-s by arrival order, then sorted so the
+            // decoder cache key is order-insensitive.
+            let mut responders: Vec<usize> = gather
+                .results
+                .iter()
+                .take(wait_for)
+                .map(|r| r.worker)
+                .collect();
+            responders.sort_unstable();
+            let key = Self::mask(&responders);
+            if !self.decoder_cache.contains_key(&key) {
+                let dec = Decoder::new(self.code.as_ref(), &responders)?;
+                self.decoder_cache.insert(key, dec);
+            }
+            let dec = &self.decoder_cache[&key];
+
+            // Map worker id -> returned vector.
+            let mut by_worker: Vec<Option<&[f32]>> = vec![None; self.cfg.n];
+            for r in &gather.results {
+                by_worker[r.worker] = Some(&r.f);
+            }
+            let fs: Vec<&[f32]> = dec
+                .used_workers()
+                .iter()
+                .map(|&w| by_worker[w].expect("responder result present"))
+                .collect();
+            dec.decode_into(&fs, &mut grad)?;
+            self.opt.step(&grad);
+            let master_compute = t0.elapsed().as_secs_f64();
+
+            sim_clock += gather.iteration_time;
+            let evaluate = iter % self.cfg.eval_every == 0 || iter + 1 == self.cfg.iters;
+            let (loss, auc_val) = if evaluate {
+                let beta_now = self.opt.iterate();
+                let loss = LogisticModel::loss(&self.train_eval, beta_now);
+                let auc_val = self.test.as_ref().map(|t| {
+                    auc(&LogisticModel::predict(t, beta_now), &t.y)
+                });
+                (Some(loss), auc_val)
+            } else {
+                (None, None)
+            };
+            log.push(IterationRecord {
+                iter,
+                sim_time: gather.iteration_time,
+                sim_clock,
+                master_compute,
+                worker_compute: gather.worker_compute,
+                responders,
+                floats_transmitted: gather.results.len() * self.out_dim,
+                loss,
+                auc: auc_val,
+            });
+        }
+        Ok(log)
+    }
+
+    /// Current parameters.
+    pub fn params(&self) -> &[f32] {
+        self.opt.iterate()
+    }
+
+    pub fn scheme(&self) -> &dyn GradientCode {
+        self.code.as_ref()
+    }
+}
+
+/// One-call convenience: train and return (log, final parameters).
+pub fn train(
+    cfg: TrainConfig,
+    train_ds: &DenseDataset,
+    test_ds: Option<&DenseDataset>,
+) -> anyhow::Result<(RunLog, Vec<f32>)> {
+    let mut tr = Trainer::new(cfg, train_ds, test_ds)?;
+    let log = tr.run()?;
+    let params = tr.params().to_vec();
+    Ok((log, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{train_test_split, CategoricalConfig};
+
+    fn dataset(rows: usize, seed: u64) -> (DenseDataset, DenseDataset) {
+        let gen = SyntheticCategorical::new(CategoricalConfig::default(), seed);
+        let ds = gen.generate(rows, seed + 1);
+        train_test_split(&ds, 0.25, seed + 2)
+    }
+
+    #[test]
+    fn coded_training_learns() {
+        let (train_ds, test_ds) = dataset(1200, 51);
+        let lr = 6.0 / train_ds.rows as f32;
+        let cfg = TrainConfig {
+            n: 5,
+            scheme: SchemeSpec::Poly { s: 1, m: 2 },
+            iters: 150,
+            opt: OptChoice::Nag { lr, momentum: 0.9 },
+            eval_every: 10,
+            delays: Some(DelayParams::table_vi1()),
+            mode: ExecutionMode::Virtual,
+            seed: 7,
+            minibatch: None,
+        };
+        let (log, _beta) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
+        assert_eq!(log.records.len(), 150);
+        let first_loss = log.records[0].loss.unwrap();
+        let last_loss = log.final_loss().unwrap();
+        assert!(last_loss < first_loss * 0.9, "{first_loss} -> {last_loss}");
+        assert!(log.final_auc().unwrap() > 0.7, "AUC {:?}", log.final_auc());
+        assert!(log.total_sim_time() > 0.0);
+    }
+
+    #[test]
+    fn coded_and_uncoded_reach_same_solution() {
+        // The paper's point: coding changes the clock, not the learning —
+        // identical gradients mean identical trajectories.
+        let (train_ds, _) = dataset(400, 61);
+        let lr = 4.0 / train_ds.rows as f32;
+        let mk = |scheme| TrainConfig {
+            n: 4,
+            scheme,
+            iters: 25,
+            opt: OptChoice::Nag { lr, momentum: 0.9 },
+            eval_every: 25,
+            delays: None,
+            mode: ExecutionMode::Virtual,
+            seed: 9,
+            minibatch: None,
+        };
+        let (_, beta_coded) =
+            train(mk(SchemeSpec::Poly { s: 1, m: 1 }), &train_ds, None).unwrap();
+        let (_, beta_naive) = train(mk(SchemeSpec::Uncoded), &train_ds, None).unwrap();
+        let max_diff = beta_coded
+            .iter()
+            .zip(&beta_naive)
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()));
+        let scale = beta_naive.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+        assert!(
+            max_diff / scale < 1e-2,
+            "trajectory divergence {max_diff} (scale {scale})"
+        );
+    }
+
+    #[test]
+    fn random_scheme_trains_too() {
+        let (train_ds, test_ds) = dataset(400, 71);
+        let lr = 4.0 / train_ds.rows as f32;
+        let cfg = TrainConfig {
+            n: 6,
+            scheme: SchemeSpec::Random { s: 2, m: 2, seed: 3 },
+            iters: 40,
+            opt: OptChoice::NagScheduled { lr },
+            eval_every: 10,
+            delays: Some(DelayParams::table_vi1()),
+            mode: ExecutionMode::Virtual,
+            seed: 11,
+            minibatch: None,
+        };
+        let (log, _) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
+        assert!(log.final_auc().unwrap() > 0.65);
+    }
+
+    #[test]
+    fn realtime_mode_trains() {
+        let (train_ds, _) = dataset(300, 81);
+        let lr = 4.0 / train_ds.rows as f32;
+        let cfg = TrainConfig {
+            n: 4,
+            scheme: SchemeSpec::Poly { s: 1, m: 1 },
+            iters: 8,
+            opt: OptChoice::Sgd { lr },
+            eval_every: 4,
+            delays: Some(DelayParams::table_vi1()),
+            mode: ExecutionMode::RealTime { scale: 1e-4 },
+            seed: 13,
+            minibatch: None,
+        };
+        let (log, _) = train(cfg, &train_ds, None).unwrap();
+        assert_eq!(log.records.len(), 8);
+        // responders are a strict subset when s > 0
+        assert!(log.records.iter().all(|r| r.responders.len() == 3));
+    }
+}

@@ -1,0 +1,294 @@
+//! Wire protocol for the TCP transport (multi-process deployment).
+//!
+//! The paper ran master and workers as MPI ranks over a real network;
+//! this module is the equivalent seam: a small length-prefixed binary
+//! protocol (no serde available offline). All integers are little-endian.
+//!
+//! Frame:  `u32 payload_len | u8 tag | payload`
+//!
+//! Messages:
+//! - `Hello { worker_id }`                        worker → master
+//! - `Setup { n, d, s, m, scheme, seed, rows, dim, minibatch }`
+//!                                                master → worker
+//! - `Task { iter, beta[f32; dim] }`              master → worker
+//! - `Result { worker, iter, failed, f[f32] }`    worker → master
+//! - `Shutdown`                                   master → worker
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Protocol magic, checked in the Hello frame.
+pub const MAGIC: u32 = 0x6743_0001; // "gC" v1
+
+const TAG_HELLO: u8 = 1;
+const TAG_SETUP: u8 = 2;
+const TAG_TASK: u8 = 3;
+const TAG_RESULT: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+/// Maximum accepted payload (guards against corrupt frames).
+const MAX_PAYLOAD: usize = 1 << 30;
+
+/// A decoded protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Hello { magic: u32, worker_id: u32 },
+    Setup(Setup),
+    Task { iter: u64, beta: Vec<f32> },
+    Result { worker: u32, iter: u64, failed: bool, f: Vec<f32> },
+    Shutdown,
+}
+
+/// Scheme + data configuration sent to each worker at handshake. Workers
+/// regenerate their shard deterministically from `data_seed` (the
+/// stand-in for "load your shard from shared storage").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Setup {
+    pub n: u32,
+    pub d: u32,
+    pub s: u32,
+    pub m: u32,
+    /// 0 = poly, 1 = random, 2 = uncoded.
+    pub scheme_kind: u8,
+    pub scheme_seed: u64,
+    pub data_seed: u64,
+    pub rows: u32,
+    pub dim: u32,
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame: need {n} at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
+        let raw = self.take(count * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes in frame", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+impl Message {
+    /// Encode as a full frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        let tag = match self {
+            Message::Hello { magic, worker_id } => {
+                payload.extend_from_slice(&magic.to_le_bytes());
+                payload.extend_from_slice(&worker_id.to_le_bytes());
+                TAG_HELLO
+            }
+            Message::Setup(s) => {
+                for v in [s.n, s.d, s.s, s.m] {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+                payload.push(s.scheme_kind);
+                payload.extend_from_slice(&s.scheme_seed.to_le_bytes());
+                payload.extend_from_slice(&s.data_seed.to_le_bytes());
+                payload.extend_from_slice(&s.rows.to_le_bytes());
+                payload.extend_from_slice(&s.dim.to_le_bytes());
+                TAG_SETUP
+            }
+            Message::Task { iter, beta } => {
+                payload.extend_from_slice(&iter.to_le_bytes());
+                put_f32s(&mut payload, beta);
+                TAG_TASK
+            }
+            Message::Result { worker, iter, failed, f } => {
+                payload.extend_from_slice(&worker.to_le_bytes());
+                payload.extend_from_slice(&iter.to_le_bytes());
+                payload.push(u8::from(*failed));
+                put_f32s(&mut payload, f);
+                TAG_RESULT
+            }
+            Message::Shutdown => TAG_SHUTDOWN,
+        };
+        let mut frame = Vec::with_capacity(payload.len() + 5);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.push(tag);
+        frame.extend_from_slice(&payload);
+        frame
+    }
+
+    /// Decode one message from tag + payload.
+    fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
+        let mut c = Cursor::new(payload);
+        let msg = match tag {
+            TAG_HELLO => Message::Hello { magic: c.u32()?, worker_id: c.u32()? },
+            TAG_SETUP => Message::Setup(Setup {
+                n: c.u32()?,
+                d: c.u32()?,
+                s: c.u32()?,
+                m: c.u32()?,
+                scheme_kind: c.u8()?,
+                scheme_seed: c.u64()?,
+                data_seed: c.u64()?,
+                rows: c.u32()?,
+                dim: c.u32()?,
+            }),
+            TAG_TASK => {
+                let iter = c.u64()?;
+                let remaining = payload.len() - 8;
+                if remaining % 4 != 0 {
+                    bail!("task payload not f32-aligned");
+                }
+                Message::Task { iter, beta: c.f32s(remaining / 4)? }
+            }
+            TAG_RESULT => {
+                let worker = c.u32()?;
+                let iter = c.u64()?;
+                let failed = c.u8()? != 0;
+                let remaining = payload.len() - 13;
+                if remaining % 4 != 0 {
+                    bail!("result payload not f32-aligned");
+                }
+                Message::Result { worker, iter, failed, f: c.f32s(remaining / 4)? }
+            }
+            TAG_SHUTDOWN => Message::Shutdown,
+            other => bail!("unknown message tag {other}"),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+
+    /// Write a full frame to a stream.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&self.encode()).context("writing frame")?;
+        w.flush().context("flushing frame")
+    }
+
+    /// Read one full frame from a stream.
+    pub fn read_from(r: &mut impl Read) -> Result<Message> {
+        let mut header = [0u8; 5];
+        r.read_exact(&mut header).context("reading frame header")?;
+        let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+        let tag = header[4];
+        if len > MAX_PAYLOAD {
+            bail!("frame too large: {len}");
+        }
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload).context("reading frame payload")?;
+        Message::decode(tag, &payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let frame = msg.encode();
+        let mut cursor = std::io::Cursor::new(frame);
+        let back = Message::read_from(&mut cursor).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Message::Hello { magic: MAGIC, worker_id: 3 });
+        roundtrip(Message::Setup(Setup {
+            n: 10,
+            d: 3,
+            s: 1,
+            m: 2,
+            scheme_kind: 0,
+            scheme_seed: 7,
+            data_seed: 99,
+            rows: 640,
+            dim: 512,
+        }));
+        roundtrip(Message::Task { iter: 42, beta: vec![1.5, -2.25, 0.0] });
+        roundtrip(Message::Result {
+            worker: 9,
+            iter: 42,
+            failed: false,
+            f: vec![0.125; 7],
+        });
+        roundtrip(Message::Result { worker: 1, iter: 0, failed: true, f: vec![] });
+        roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn f32_payload_is_exact() {
+        let beta: Vec<f32> = (0..100).map(|i| (i as f32).exp() * 1e-3).collect();
+        let msg = Message::Task { iter: 1, beta: beta.clone() };
+        let mut cursor = std::io::Cursor::new(msg.encode());
+        match Message::read_from(&mut cursor).unwrap() {
+            Message::Task { beta: got, .. } => assert_eq!(got, beta),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_errors() {
+        let frame = Message::Shutdown.encode();
+        let cursor = std::io::Cursor::new(&frame[..frame.len() - 1]);
+        // shutdown has empty payload; truncate the header instead
+        let mut short = std::io::Cursor::new(&frame[..3]);
+        assert!(Message::read_from(&mut short).is_err());
+        let _ = cursor; // (full shutdown frame is 5 bytes header only)
+    }
+
+    #[test]
+    fn unknown_tag_errors() {
+        let mut frame = Message::Shutdown.encode();
+        frame[4] = 250;
+        let mut cursor = std::io::Cursor::new(frame);
+        assert!(Message::read_from(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn misaligned_task_errors() {
+        // 5-byte payload after iter: not a multiple of 4
+        let mut payload = 7u64.to_le_bytes().to_vec();
+        payload.extend_from_slice(&[1, 2, 3]);
+        let mut frame = (payload.len() as u32).to_le_bytes().to_vec();
+        frame.push(3); // TAG_TASK
+        frame.extend_from_slice(&payload);
+        let mut cursor = std::io::Cursor::new(frame);
+        assert!(Message::read_from(&mut cursor).is_err());
+    }
+}

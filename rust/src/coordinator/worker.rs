@@ -1,0 +1,88 @@
+//! Worker thread: receive a task, compute the coded gradient through the
+//! backend, optionally sleep an injected delay (real-time mode), report.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::backend::ComputeBackend;
+use super::messages::{Task, WorkerResult};
+use crate::rngs::{Pcg64, ShiftedExponential};
+
+/// Per-worker delay injector (the §VI model's two components).
+pub struct DelayInjector {
+    comp: ShiftedExponential,
+    comm: ShiftedExponential,
+    rng: Pcg64,
+}
+
+impl DelayInjector {
+    pub fn new(comp: ShiftedExponential, comm: ShiftedExponential, rng: Pcg64) -> Self {
+        DelayInjector { comp, comm, rng }
+    }
+
+    /// Sample a total virtual finish time (computation + communication).
+    pub fn sample(&mut self) -> f64 {
+        self.comp.sample(&mut self.rng) + self.comm.sample(&mut self.rng)
+    }
+}
+
+pub(super) struct WorkerLoop {
+    pub id: usize,
+    pub backend: Arc<dyn ComputeBackend>,
+    pub tasks: Receiver<Task>,
+    pub results: Sender<WorkerResult>,
+    pub delays: Option<DelayInjector>,
+    /// Seconds of real sleep per unit of virtual delay (0 = virtual mode,
+    /// no sleeping).
+    pub sleep_scale: f64,
+    /// In real-time mode, skip to the newest queued task (stale tasks
+    /// would only produce results the master already gave up on).
+    pub skip_stale: bool,
+}
+
+impl WorkerLoop {
+    pub fn run(mut self) {
+        let mut out = Vec::new();
+        while let Ok(mut task) = self.tasks.recv() {
+            if self.skip_stale {
+                while let Ok(newer) = self.tasks.try_recv() {
+                    task = newer;
+                }
+            }
+            let virtual_finish = self.delays.as_mut().map_or(0.0, |d| d.sample());
+            if self.sleep_scale > 0.0 && virtual_finish > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    virtual_finish * self.sleep_scale,
+                ));
+            }
+            let t0 = Instant::now();
+            let failed = match self
+                .backend
+                .encoded_gradient(self.id, task.iter, &task.beta, &mut out)
+            {
+                Ok(()) => false,
+                Err(e) => {
+                    // A failed worker behaves like a straggler, but it must
+                    // still REPORT (an unreported failure would deadlock the
+                    // virtual-mode gather). The master tolerates up to s.
+                    eprintln!("worker {}: backend error: {e}", self.id);
+                    out.clear();
+                    true
+                }
+            };
+            let compute_secs = t0.elapsed().as_secs_f64();
+            let msg = WorkerResult {
+                worker: self.id,
+                iter: task.iter,
+                f: out.clone(),
+                virtual_finish,
+                compute_secs,
+                failed,
+            };
+            if self.results.send(msg).is_err() {
+                return; // master gone
+            }
+        }
+    }
+}

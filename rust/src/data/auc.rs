@@ -1,0 +1,87 @@
+//! Area under the ROC curve via the rank-sum (Mann–Whitney) statistic,
+//! with midrank tie handling — the paper's "Generalization AUC" metric
+//! (computed there with `sklearn.metrics.auc`).
+
+/// AUC of `scores` against binary `labels` (1.0 = positive).
+/// Returns 0.5 when one class is empty.
+pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // Midranks (1-based), averaging within tied score groups.
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let pos = labels.iter().filter(|&&y| y >= 0.5).count();
+    let neg = n - pos;
+    if pos == 0 || neg == 0 {
+        return 0.5;
+    }
+    let rank_sum_pos: f64 = (0..n).filter(|&k| labels[k] >= 0.5).map(|k| ranks[k]).sum();
+    let u = rank_sum_pos - (pos * (pos + 1)) as f64 / 2.0;
+    u / (pos as f64 * neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation_is_one() {
+        let scores = [0.1f32, 0.2, 0.8, 0.9];
+        let labels = [0.0f32, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&scores, &labels), 1.0);
+    }
+
+    #[test]
+    fn reversed_separation_is_zero() {
+        let scores = [0.9f32, 0.8, 0.2, 0.1];
+        let labels = [0.0f32, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&scores, &labels), 0.0);
+    }
+
+    #[test]
+    fn all_tied_is_half() {
+        let scores = [0.5f32; 6];
+        let labels = [0.0f32, 1.0, 0.0, 1.0, 0.0, 1.0];
+        assert!((auc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_class_is_half() {
+        assert_eq!(auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn matches_pairwise_definition() {
+        // AUC = P(score_pos > score_neg) + 0.5 P(tie), checked brute force.
+        let scores = [0.3f32, 0.7, 0.7, 0.1, 0.9, 0.4];
+        let labels = [0.0f32, 1.0, 0.0, 0.0, 1.0, 1.0];
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..6 {
+            for j in 0..6 {
+                if labels[i] >= 0.5 && labels[j] < 0.5 {
+                    den += 1.0;
+                    if scores[i] > scores[j] {
+                        num += 1.0;
+                    } else if scores[i] == scores[j] {
+                        num += 0.5;
+                    }
+                }
+            }
+        }
+        assert!((auc(&scores, &labels) - num / den).abs() < 1e-12);
+    }
+}

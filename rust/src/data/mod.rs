@@ -1,0 +1,85 @@
+//! Dataset substrate.
+//!
+//! The paper trains logistic regression on the Amazon Employee Access
+//! dataset (Kaggle): categorical features one-hot encoded (with
+//! interactions) to `l = 343,474` binary columns, `N = 26,220` training
+//! samples. That data cannot be redistributed, so [`categorical`]
+//! generates a synthetic stand-in with the same compute shape: skewed
+//! categorical columns, one-hot encoding (optionally with pairwise
+//! interactions), labels from a sparse ground-truth logistic model.
+//! [`auc`](crate::data::auc::auc) provides the generalization AUC metric
+//! and [`split`]/`partition_rows` the train/test and `D_1..D_k` splits.
+
+pub mod auc;
+pub mod categorical;
+pub mod split;
+
+pub use auc::auc;
+pub use categorical::{CategoricalConfig, SyntheticCategorical};
+pub use split::{partition_rows, train_test_split};
+
+/// Dense row-major f32 design matrix + labels.
+#[derive(Debug, Clone)]
+pub struct DenseDataset {
+    /// `rows × cols`, row-major.
+    pub x: Vec<f32>,
+    /// Length `rows`, values in {0, 1}.
+    pub y: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl DenseDataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Restrict to a set of row indices (subset extraction).
+    pub fn select_rows(&self, idx: &[usize]) -> DenseDataset {
+        let mut x = Vec::with_capacity(idx.len() * self.cols);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        DenseDataset { x, y, rows: idx.len(), cols: self.cols }
+    }
+
+    /// Zero-pad columns up to `target` (e.g. to match a fixed-shape AOT
+    /// artifact). No-op if already that wide.
+    pub fn pad_cols(&self, target: usize) -> DenseDataset {
+        assert!(target >= self.cols, "cannot shrink from {} to {target}", self.cols);
+        if target == self.cols {
+            return self.clone();
+        }
+        let mut x = vec![0.0f32; self.rows * target];
+        for r in 0..self.rows {
+            x[r * target..r * target + self.cols].copy_from_slice(self.row(r));
+        }
+        DenseDataset { x, y: self.y.clone(), rows: self.rows, cols: target }
+    }
+
+    /// Positive-label rate (sanity diagnostics).
+    pub fn positive_rate(&self) -> f64 {
+        self.y.iter().map(|&v| v as f64).sum::<f64>() / self.rows.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_rows_picks_correct_data() {
+        let d = DenseDataset {
+            x: vec![1., 2., 3., 4., 5., 6.],
+            y: vec![0., 1., 0.],
+            rows: 3,
+            cols: 2,
+        };
+        let s = d.select_rows(&[2, 0]);
+        assert_eq!(s.x, vec![5., 6., 1., 2.]);
+        assert_eq!(s.y, vec![0., 0.]);
+        assert_eq!(s.rows, 2);
+    }
+}

@@ -1,0 +1,81 @@
+//! Train/test splitting and the `D_1..D_k` partition.
+
+use super::DenseDataset;
+use crate::rngs::{Pcg64, Rng};
+
+/// Shuffle rows and split into (train, test) with `test_fraction` held out.
+pub fn train_test_split(
+    ds: &DenseDataset,
+    test_fraction: f64,
+    seed: u64,
+) -> (DenseDataset, DenseDataset) {
+    assert!((0.0..1.0).contains(&test_fraction));
+    let mut idx: Vec<usize> = (0..ds.rows).collect();
+    let mut rng = Pcg64::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+    let n_test = ((ds.rows as f64) * test_fraction).round() as usize;
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    (ds.select_rows(train_idx), ds.select_rows(test_idx))
+}
+
+/// Partition rows into `k` equal-size subsets `D_1..D_k` (trailing rows
+/// that don't fill a subset are dropped, matching the equal-size
+/// assumption in §II). Returns the row-index sets.
+pub fn partition_rows(rows: usize, k: usize) -> Vec<Vec<usize>> {
+    assert!(k > 0);
+    let per = rows / k;
+    assert!(per > 0, "not enough rows ({rows}) for k={k} subsets");
+    (0..k).map(|i| (i * per..(i + 1) * per).collect()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(rows: usize) -> DenseDataset {
+        DenseDataset {
+            x: (0..rows * 2).map(|i| i as f32).collect(),
+            y: (0..rows).map(|i| (i % 2) as f32).collect(),
+            rows,
+            cols: 2,
+        }
+    }
+
+    #[test]
+    fn split_sizes_and_disjointness() {
+        let ds = toy(100);
+        let (train, test) = train_test_split(&ds, 0.25, 1);
+        assert_eq!(test.rows, 25);
+        assert_eq!(train.rows, 75);
+        // disjoint: each original row id (encoded in x) appears once
+        let mut seen: Vec<f32> = train
+            .x
+            .chunks(2)
+            .chain(test.x.chunks(2))
+            .map(|r| r[0])
+            .collect();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want: Vec<f32> = (0..100).map(|i| (i * 2) as f32).collect();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn partition_equal_sizes() {
+        let parts = partition_rows(103, 10);
+        assert_eq!(parts.len(), 10);
+        for p in &parts {
+            assert_eq!(p.len(), 10);
+        }
+        // disjoint and within range
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough rows")]
+    fn partition_rejects_tiny_datasets() {
+        partition_rows(3, 10);
+    }
+}

@@ -1,0 +1,43 @@
+//! # gradcode
+//!
+//! A production-grade reproduction of *Communication-Computation Efficient
+//! Gradient Coding* (Ye & Abbe, ICML 2018): distributed synchronous
+//! gradient descent where workers both replicate data subsets (to tolerate
+//! `s` stragglers) and code across gradient-vector components (to cut
+//! per-worker communication by a factor `m`), achieving the optimal
+//! tradeoff `d >= s + m` (with `k = n` data subsets).
+//!
+//! The crate is the L3 (rust) layer of a three-layer stack:
+//! - L1: Pallas kernels (`python/compile/kernels/`) for the partial
+//!   gradient and the coded-encode hot spots,
+//! - L2: a JAX model (`python/compile/model.py`) AOT-lowered to HLO text,
+//! - L3: this crate — coordinator, coding math, runtime model, and the
+//!   PJRT runtime that executes the AOT artifacts on the request path
+//!   with no python anywhere.
+//!
+//! Module map (see DESIGN.md for the per-experiment index):
+//! - [`coding`] — the paper's constructions: §III polynomial scheme,
+//!   §IV random-matrix scheme, encode/decode, stability certification.
+//! - [`simulator`] — §VI probabilistic runtime model and optimal-triple
+//!   search; also the virtual cluster used by the figure benches.
+//! - [`coordinator`] — master/worker threads, transport, training loop.
+//! - [`runtime`] — PJRT execution of AOT artifacts (`xla` crate).
+//! - [`data`], [`optim`], [`model`] — dataset/AUC, optimizers, pure-rust
+//!   logistic reference backend.
+//! - [`linalg`], [`rngs`], [`cli`], [`testkit`], `bench`, [`metrics`]
+//!   — substrates (no external crates available offline).
+
+pub mod bench;
+pub mod checkpoint;
+pub mod cli;
+pub mod coding;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod rngs;
+pub mod runtime;
+pub mod simulator;
+pub mod testkit;

@@ -1,0 +1,209 @@
+//! Low-level kernels. The f32 routines are the L3 hot path: the master's
+//! decode is a weighted sum of `(n-s)` returned vectors of length `l/m`,
+//! and the rust reference backend's encode is a `(l/m, d·m) × (d·m)`
+//! matvec. Loops are written unrolled-by-4 over contiguous slices so LLVM
+//! auto-vectorizes them.
+
+/// `y += a * x` over f32 slices (hot decode kernel).
+#[inline]
+pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    let n = x.len();
+    let chunks = n / 8 * 8;
+    // Manually chunked so the bound checks vanish and LLVM emits SIMD.
+    let (xh, xt) = x.split_at(chunks);
+    let (yh, yt) = y.split_at_mut(chunks);
+    for (xc, yc) in xh.chunks_exact(8).zip(yh.chunks_exact_mut(8)) {
+        for k in 0..8 {
+            yc[k] += a * xc[k];
+        }
+    }
+    for (xv, yv) in xt.iter().zip(yt.iter_mut()) {
+        *yv += a * xv;
+    }
+}
+
+/// Weighted sum `out = Σ_i w[i] * xs[i]` of equal-length f32 vectors.
+/// Processes four vectors per pass to stay in cache and amortize the
+/// traversal of `out` (the decode inner loop).
+pub fn weighted_sum_f32(w: &[f32], xs: &[&[f32]], out: &mut [f32]) {
+    assert_eq!(w.len(), xs.len(), "weights/vectors mismatch");
+    out.iter_mut().for_each(|o| *o = 0.0);
+    let mut i = 0;
+    while i + 4 <= xs.len() {
+        let (w0, w1, w2, w3) = (w[i], w[i + 1], w[i + 2], w[i + 3]);
+        let (x0, x1, x2, x3) = (xs[i], xs[i + 1], xs[i + 2], xs[i + 3]);
+        assert!(x0.len() == out.len() && x1.len() == out.len() && x2.len() == out.len() && x3.len() == out.len());
+        for (k, o) in out.iter_mut().enumerate() {
+            *o += w0 * x0[k] + w1 * x1[k] + w2 * x2[k] + w3 * x3[k];
+        }
+        i += 4;
+    }
+    while i < xs.len() {
+        axpy_f32(w[i], xs[i], out);
+        i += 1;
+    }
+}
+
+/// Row-major f32 GEMV: `out[r] = Σ_c a[r*cols+c] v[c]`.
+pub fn gemv_f32(rows: usize, cols: usize, a: &[f32], v: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(v.len(), cols);
+    assert_eq!(out.len(), rows);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &a[r * cols..(r + 1) * cols];
+        let mut acc0 = 0.0f32;
+        let mut acc1 = 0.0f32;
+        let mut acc2 = 0.0f32;
+        let mut acc3 = 0.0f32;
+        let chunks = cols / 4 * 4;
+        let mut c = 0;
+        while c < chunks {
+            acc0 += row[c] * v[c];
+            acc1 += row[c + 1] * v[c + 1];
+            acc2 += row[c + 2] * v[c + 2];
+            acc3 += row[c + 3] * v[c + 3];
+            c += 4;
+        }
+        let mut acc = acc0 + acc1 + acc2 + acc3;
+        for k in chunks..cols {
+            acc += row[k] * v[k];
+        }
+        *o = acc;
+    }
+}
+
+/// Column-traversal f32 GEMV for a row-major matrix: `out += a^T-layout`
+/// access pattern `out[r] = Σ_c a[c*rows + r] v[c]` — i.e. `a` stores the
+/// matrix column-by-column (equivalently, computes `M^T v` for row-major
+/// `M`). This is the encode layout: gradients arrive as `d·m` contiguous
+/// rows of length `l/m`, and the output is a combination of those rows.
+pub fn gemv_colmajor_f32(rows: usize, cols: usize, a: &[f32], v: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(v.len(), cols);
+    assert_eq!(out.len(), rows);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for c in 0..cols {
+        axpy_f32(v[c], &a[c * rows..(c + 1) * rows], out);
+    }
+}
+
+/// f64 dot product with 4-way accumulators.
+#[inline]
+pub fn dot_f64(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4 * 4;
+    let mut acc = [0.0f64; 4];
+    let mut i = 0;
+    while i < chunks {
+        acc[0] += x[i] * y[i];
+        acc[1] += x[i + 1] * y[i + 1];
+        acc[2] += x[i + 2] * y[i + 2];
+        acc[3] += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for k in chunks..n {
+        s += x[k] * y[k];
+    }
+    s
+}
+
+/// Row-major f64 GEMM: `c[m×p] = a[m×n] * b[n×p]` (ikj loop order so the
+/// inner loop streams both `b` and `c` rows).
+pub fn gemm_f64(m: usize, n: usize, p: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), n * p);
+    assert_eq!(c.len(), m * p);
+    c.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..m {
+        let crow = &mut c[i * p..(i + 1) * p];
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * p..(k + 1) * p];
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = vec![1.0f32; 19];
+        let mut y = vec![2.0f32; 19];
+        axpy_f32(3.0, &x, &mut y);
+        assert!(y.iter().all(|&v| (v - 5.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn weighted_sum_matches_naive() {
+        let xs_store: Vec<Vec<f32>> = (0..7)
+            .map(|i| (0..33).map(|k| (i * 33 + k) as f32 * 0.1).collect())
+            .collect();
+        let xs: Vec<&[f32]> = xs_store.iter().map(|v| v.as_slice()).collect();
+        let w: Vec<f32> = (0..7).map(|i| 0.3 - 0.1 * i as f32).collect();
+        let mut out = vec![0.0f32; 33];
+        weighted_sum_f32(&w, &xs, &mut out);
+        for k in 0..33 {
+            let naive: f32 = (0..7).map(|i| w[i] * xs[i][k]).sum();
+            assert!((out[k] - naive).abs() < 1e-4, "k={k}: {} vs {naive}", out[k]);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let (rows, cols) = (5, 13);
+        let a: Vec<f32> = (0..rows * cols).map(|i| (i as f32).sin()).collect();
+        let v: Vec<f32> = (0..cols).map(|i| (i as f32).cos()).collect();
+        let mut out = vec![0.0f32; rows];
+        gemv_f32(rows, cols, &a, &v, &mut out);
+        for r in 0..rows {
+            let naive: f32 = (0..cols).map(|c| a[r * cols + c] * v[c]).sum();
+            assert!((out[r] - naive).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemv_colmajor_matches_transposed_gemv() {
+        let (rows, cols) = (9, 4);
+        let a_col: Vec<f32> = (0..rows * cols).map(|i| (i as f32 * 0.7).sin()).collect();
+        let v: Vec<f32> = (0..cols).map(|i| i as f32 + 0.5).collect();
+        let mut out = vec![0.0f32; rows];
+        gemv_colmajor_f32(rows, cols, &a_col, &v, &mut out);
+        for r in 0..rows {
+            let naive: f32 = (0..cols).map(|c| a_col[c * rows + r] * v[c]).sum();
+            assert!((out[r] - naive).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dot_f64_known() {
+        let x: Vec<f64> = (0..9).map(|i| i as f64).collect();
+        let y = vec![2.0; 9];
+        assert_eq!(dot_f64(&x, &y), 2.0 * 36.0);
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let (m, n, p) = (3, 4, 5);
+        let a: Vec<f64> = (0..m * n).map(|i| (i as f64 * 0.3).cos()).collect();
+        let b: Vec<f64> = (0..n * p).map(|i| (i as f64 * 0.2).sin()).collect();
+        let mut c = vec![0.0; m * p];
+        gemm_f64(m, n, p, &a, &b, &mut c);
+        for i in 0..m {
+            for j in 0..p {
+                let naive: f64 = (0..n).map(|k| a[i * n + k] * b[k * p + j]).sum();
+                assert!((c[i * p + j] - naive).abs() < 1e-12);
+            }
+        }
+    }
+}

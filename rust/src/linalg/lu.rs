@@ -1,0 +1,179 @@
+//! LU decomposition with partial pivoting.
+//!
+//! Used to invert the `(n-s)×(n-s)` Vandermonde submatrix `A` (Eq. 20) in
+//! the decode path, to form `S_i^{-1}` in the random-matrix construction
+//! (§IV), and as a general solve for the runtime-model fits. Matrices here
+//! are tiny (`n <= 30`), so a dense textbook factorization is the right
+//! tool; stability of the *inputs* is what the paper's §III-C/§IV is
+//! about, and that is handled by `coding::stability`.
+
+use super::{LinalgError, Matrix};
+
+/// Packed LU factorization `P·A = L·U` with row pivots.
+pub struct Lu {
+    lu: Matrix,
+    piv: Vec<usize>,
+    /// Number of row swaps (determinant sign).
+    swaps: usize,
+}
+
+impl Lu {
+    /// Factor a square matrix. Errors if a pivot underflows.
+    pub fn factor(a: &Matrix) -> Result<Lu, LinalgError> {
+        if a.rows() != a.cols() {
+            return Err(LinalgError::Dimension(format!(
+                "LU requires square matrix, got {}x{}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut swaps = 0usize;
+
+        for k in 0..n {
+            // Partial pivot: largest |entry| in column k at/below diagonal.
+            let mut p = k;
+            let mut pmax = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if pmax < f64::MIN_POSITIVE * 16.0 {
+                return Err(LinalgError::Singular { step: k, pivot: pmax });
+            }
+            if p != k {
+                for j in 0..n {
+                    let t = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = t;
+                }
+                piv.swap(k, p);
+                swaps += 1;
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let f = lu[(i, k)] / pivot;
+                lu[(i, k)] = f;
+                for j in k + 1..n {
+                    let upd = lu[(k, j)] * f;
+                    lu[(i, j)] -= upd;
+                }
+            }
+        }
+        Ok(Lu { lu, piv, swaps })
+    }
+
+    fn n(&self) -> usize {
+        self.lu.rows()
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+        let n = self.n();
+        if b.len() != n {
+            return Err(LinalgError::Dimension(format!(
+                "rhs length {} != {}",
+                b.len(),
+                n
+            )));
+        }
+        // Apply permutation then forward/back substitution.
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        for i in 1..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s;
+        }
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        Ok(x)
+    }
+
+    /// Full inverse (column-by-column solve).
+    pub fn inverse(&self) -> Result<Matrix, LinalgError> {
+        let n = self.n();
+        let mut inv = Matrix::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e)?;
+            e[j] = 0.0;
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+        }
+        Ok(inv)
+    }
+
+    /// Determinant from the diagonal of U and swap parity.
+    pub fn det(&self) -> f64 {
+        let n = self.n();
+        let mut d = if self.swaps % 2 == 0 { 1.0 } else { -1.0 };
+        for i in 0..n {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_known_system() {
+        // [2 1; 1 3] x = [3; 5] -> x = [4/5, 7/5]
+        let a = Matrix::from_rows(2, 2, &[2., 1., 1., 3.]);
+        let x = Lu::factor(&a).unwrap().solve(&[3., 5.]).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-14);
+        assert!((x[1] - 1.4).abs() < 1e-14);
+    }
+
+    #[test]
+    fn det_of_permutation_needs_sign() {
+        let a = Matrix::from_rows(2, 2, &[0., 1., 1., 0.]);
+        let d = Lu::factor(&a).unwrap().det();
+        assert!((d + 1.0).abs() < 1e-14, "det {d}");
+    }
+
+    #[test]
+    fn inverse_of_vandermonde_5() {
+        // The paper's θ grid for n=5: {0, ±1, ±1.5} style points.
+        let theta: [f64; 5] = [-2.0, -1.0, 0.0, 1.0, 2.0];
+        let a = Matrix::from_fn(5, 5, |i, j| theta[j].powi(i as i32));
+        let inv = Lu::factor(&a).unwrap().inverse().unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.sub(&Matrix::identity(5)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_solve_residual_small() {
+        // Deterministic pseudo-random fill.
+        let n = 12;
+        let a = Matrix::from_fn(n, n, |i, j| ((i * 31 + j * 17) as f64 * 0.739).sin() + if i == j { 3.0 } else { 0.0 });
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 1.3).cos()).collect();
+        let x = Lu::factor(&a).unwrap().solve(&b).unwrap();
+        let r = a.matvec(&x);
+        for i in 0..n {
+            assert!((r[i] - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn singular_reports_error() {
+        let a = Matrix::from_rows(3, 3, &[1., 2., 3., 2., 4., 6., 1., 0., 1.]);
+        assert!(matches!(Lu::factor(&a), Err(LinalgError::Singular { .. })));
+    }
+}

@@ -1,0 +1,266 @@
+//! Dense linear-algebra substrate.
+//!
+//! No BLAS/LAPACK or `ndarray`/`nalgebra` crates are available in the
+//! offline build environment, so the coding layer's matrix machinery —
+//! LU solves for Vandermonde inversion, Jacobi SVD for condition numbers,
+//! and the f32 hot-path kernels for encode/decode — is implemented here.
+//!
+//! Coefficient matrices (`B`, `V`, decode weights) are small (`O(n·m)` with
+//! `n <= 30`) and kept in `f64`. Gradient payloads are large (`l` up to
+//! hundreds of thousands) and kept in `f32`, matching the PJRT artifacts.
+
+mod blas;
+mod lu;
+mod svd;
+
+pub use blas::{axpy_f32, dot_f64, gemv_colmajor_f32, gemv_f32, gemm_f64, weighted_sum_f32};
+pub use lu::Lu;
+pub use svd::{condition_number, singular_values};
+
+use std::fmt;
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data: data.to_vec() }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Submatrix from row and column index sets (order preserved).
+    pub fn submatrix(&self, row_idx: &[usize], col_idx: &[usize]) -> Matrix {
+        Matrix::from_fn(row_idx.len(), col_idx.len(), |i, j| self[(row_idx[i], col_idx[j])])
+    }
+
+    /// Select whole columns.
+    pub fn select_cols(&self, col_idx: &[usize]) -> Matrix {
+        let rows: Vec<usize> = (0..self.rows).collect();
+        self.submatrix(&rows, col_idx)
+    }
+
+    /// Matrix product `self * rhs`.
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "inner dimension mismatch");
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        gemm_f64(
+            self.rows,
+            self.cols,
+            rhs.cols,
+            &self.data,
+            &rhs.data,
+            &mut out.data,
+        );
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "dimension mismatch");
+        (0..self.rows).map(|i| dot_f64(self.row(i), v)).collect()
+    }
+
+    /// Max-abs entry (ℓ∞ on entries).
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |a, &x| a.max(x.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// `self - rhs`.
+    pub fn sub(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let data: Vec<f64> =
+            self.data.iter().zip(&rhs.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Scale all entries.
+    pub fn scale(&self, s: f64) -> Matrix {
+        let data: Vec<f64> = self.data.iter().map(|x| x * s).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Inverse via LU with partial pivoting. Errors on singular input.
+    pub fn inverse(&self) -> Result<Matrix, LinalgError> {
+        Lu::factor(self)?.inverse()
+    }
+
+    /// Solve `self * x = b`.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+        Lu::factor(self)?.solve(b)
+    }
+
+    /// 2-norm condition number via Jacobi SVD.
+    pub fn cond2(&self) -> f64 {
+        condition_number(self)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Errors from dense factorizations.
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix is singular (pivot {pivot:.3e} at step {step})")]
+    Singular { step: usize, pivot: f64 },
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul_is_noop() {
+        let a = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let i = Matrix::identity(2);
+        assert_eq!(i.matmul(&a).data(), a.data());
+        let i3 = Matrix::identity(3);
+        assert_eq!(a.matmul(&i3).data(), a.data());
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_rows(2, 2, &[1., 2., 3., 4.]);
+        let b = Matrix::from_rows(2, 2, &[5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose().data(), a.data());
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_rows(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let v = vec![0.5, -1.0];
+        let got = a.matvec(&v);
+        assert_eq!(got, vec![1. * 0.5 - 2., 3. * 0.5 - 4., 5. * 0.5 - 6.]);
+    }
+
+    #[test]
+    fn submatrix_and_select_cols() {
+        let a = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let s = a.submatrix(&[1, 3], &[0, 2]);
+        assert_eq!(s.data(), &[4., 6., 12., 14.]);
+        let c = a.select_cols(&[3]);
+        assert_eq!(c.data(), &[3., 7., 11., 15.]);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = Matrix::from_rows(3, 3, &[4., 2., 1., 2., 5., 3., 1., 3., 6.]);
+        let inv = a.inverse().unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.sub(&Matrix::identity(3)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_matrix_errors() {
+        let a = Matrix::from_rows(2, 2, &[1., 2., 2., 4.]);
+        assert!(a.inverse().is_err());
+    }
+}

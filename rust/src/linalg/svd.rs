@@ -1,0 +1,139 @@
+//! Singular values via one-sided Jacobi, used for 2-norm condition
+//! numbers.
+//!
+//! Theorem 2's achievable region is phrased through an upper bound `κ` on
+//! the condition number of `V_F V_F^T` over all straggler patterns `F`;
+//! `coding::stability` sweeps those patterns calling into here. One-sided
+//! Jacobi is slow but extremely robust and accurate for the tiny
+//! (≤ 30×30) matrices involved — exactly what a certification pass wants.
+
+use super::Matrix;
+
+/// Singular values of `a` in non-increasing order, via one-sided Jacobi
+/// rotations applied to the columns of a working copy of `a` (for
+/// rows < cols the transpose is factored instead, singular values match).
+pub fn singular_values(a: &Matrix) -> Vec<f64> {
+    let work = if a.rows() >= a.cols() { a.clone() } else { a.transpose() };
+    let m = work.rows();
+    let n = work.cols();
+    // Column-major copy for cache-friendly column rotations.
+    let mut u: Vec<Vec<f64>> = (0..n).map(|j| work.col(j)).collect();
+
+    let eps = 1e-15;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                // 2x2 Gram block [app apq; apq aqq].
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    app += u[p][i] * u[p][i];
+                    aqq += u[q][i] * u[q][i];
+                    apq += u[p][i] * u[q][i];
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(f64::MIN_POSITIVE));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[p][i];
+                    let uq = u[q][i];
+                    u[p][i] = c * up - s * uq;
+                    u[q][i] = s * up + c * uq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    let mut sv: Vec<f64> = u
+        .iter()
+        .map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// 2-norm condition number `σ_max / σ_min`; `f64::INFINITY` if rank
+/// deficient to machine precision.
+pub fn condition_number(a: &Matrix) -> f64 {
+    let sv = singular_values(a);
+    let smax = sv[0];
+    let smin = *sv.last().unwrap();
+    if smin <= smax * 1e-300 || smin == 0.0 {
+        f64::INFINITY
+    } else {
+        smax / smin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_singular_values() {
+        let a = Matrix::from_rows(3, 3, &[3., 0., 0., 0., -5., 0., 0., 0., 1.]);
+        let sv = singular_values(&a);
+        assert!((sv[0] - 5.0).abs() < 1e-12);
+        assert!((sv[1] - 3.0).abs() < 1e-12);
+        assert!((sv[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn orthogonal_matrix_cond_is_one() {
+        let t = std::f64::consts::FRAC_PI_4;
+        let a = Matrix::from_rows(2, 2, &[t.cos(), -t.sin(), t.sin(), t.cos()]);
+        assert!((condition_number(&a) - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn rank_deficient_is_infinite() {
+        let a = Matrix::from_rows(2, 2, &[1., 2., 2., 4.]);
+        assert!(condition_number(&a).is_infinite());
+    }
+
+    #[test]
+    fn rectangular_matches_gram_eigs() {
+        // For A (4x2), σ_i^2 are eigenvalues of A^T A; verify against a
+        // hand-computable case.
+        let a = Matrix::from_rows(4, 2, &[1., 0., 0., 1., 1., 0., 0., 1.]);
+        let sv = singular_values(&a);
+        assert_eq!(sv.len(), 2);
+        assert!((sv[0] - 2.0f64.sqrt()).abs() < 1e-12);
+        assert!((sv[1] - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frobenius_identity_holds() {
+        // Σ σ_i^2 = ||A||_F^2 for a pseudo-random matrix.
+        let a = Matrix::from_fn(6, 5, |i, j| ((i * 7 + j * 3) as f64 * 0.41).sin());
+        let sv = singular_values(&a);
+        let sum_sq: f64 = sv.iter().map(|s| s * s).sum();
+        let fro2 = a.frobenius().powi(2);
+        assert!((sum_sq - fro2).abs() < 1e-10, "{sum_sq} vs {fro2}");
+    }
+
+    #[test]
+    fn vandermonde_condition_grows_with_n() {
+        // The §III-C observation: Vandermonde condition numbers blow up.
+        let cond_of = |n: usize| {
+            let theta: Vec<f64> = (0..n).map(|i| i as f64 - (n as f64 - 1.0) / 2.0).collect();
+            let v = Matrix::from_fn(n, n, |i, j| theta[j].powi(i as i32));
+            condition_number(&v)
+        };
+        let c5 = cond_of(5);
+        let c10 = cond_of(10);
+        assert!(c10 > c5 * 10.0, "c5={c5:.3e} c10={c10:.3e}");
+    }
+}

@@ -1,0 +1,366 @@
+//! `gradcode` — the leader binary.
+//!
+//! Subcommands:
+//! - `info`       PJRT platform + artifact inventory
+//! - `train`      run coded distributed training on synthetic data
+//! - `plan`       §VI model: optimal (d, s, m) for given delay parameters
+//! - `stability`  condition-number / reconstruction-error sweep
+//!
+//! Examples live in `examples/`; the table/figure regenerators in
+//! `rust/benches/`.
+
+use std::sync::Arc;
+
+use gradcode::cli::{App, Command};
+use gradcode::coding::{
+    max_condition_number, reconstruction_error, PolynomialCode, RandomCode, SchemeConfig,
+};
+use gradcode::coordinator::{
+    train, ExecutionMode, OptChoice, SchemeSpec, TrainConfig, Trainer,
+};
+use gradcode::data::{train_test_split, CategoricalConfig, SyntheticCategorical};
+use gradcode::runtime::{Manifest, PjrtBackend};
+use gradcode::simulator::{optimal_triple, DelayParams};
+
+fn app() -> App {
+    App::new("gradcode", "communication-computation efficient gradient coding")
+        .command(Command::new("info", "PJRT platform + artifact inventory"))
+        .command(
+            Command::new("train", "coded distributed training on synthetic data")
+                .flag("n", "10", "number of workers (= data subsets)")
+                .flag("s", "1", "straggler tolerance")
+                .flag("m", "2", "communication reduction factor")
+                .flag("scheme", "poly", "poly | random | naive")
+                .flag("iters", "200", "training iterations")
+                .flag("rows", "640", "training rows")
+                .flag("lr", "0.01", "learning rate")
+                .flag("momentum", "0.9", "NAG momentum")
+                .flag("seed", "7", "experiment seed")
+                .flag("eval-every", "10", "evaluation period")
+                .switch("pjrt", "use the AOT PJRT backend (needs artifacts)")
+                .switch("no-delays", "disable straggler injection")
+                .switch("csv", "dump per-iteration CSV to stdout"),
+        )
+        .command(
+            Command::new("plan", "optimal (d,s,m) from the §VI runtime model")
+                .flag("n", "10", "number of workers")
+                .flag("lambda1", "0.6", "computation straggling rate")
+                .flag("t1", "1.5", "min per-subset computation time")
+                .flag("lambda2", "0.1", "communication straggling rate")
+                .flag("t2", "6", "min full-vector communication time"),
+        )
+        .command(
+            Command::new("stability", "condition-number and error sweep")
+                .flag("n", "10", "number of workers")
+                .flag("s", "2", "straggler tolerance")
+                .flag("m", "2", "communication reduction factor")
+                .flag("scheme", "poly", "poly | random")
+                .flag("dim", "64", "gradient dimension for error trials")
+                .flag("trials", "20", "round-trip trials")
+                .flag("budget", "2000", "max straggler patterns to sweep"),
+        )
+        .command(
+            Command::new("grid", "E[T_tot] grid for all (d,m) at given delay params")
+                .flag("n", "8", "number of workers")
+                .flag("lambda1", "0.8", "computation straggling rate")
+                .flag("t1", "1.6", "min per-subset computation time")
+                .flag("lambda2", "0.1", "communication straggling rate")
+                .flag("t2", "6", "min full-vector communication time"),
+        )
+        .command(
+            Command::new("leader", "TCP master: coordinate remote workers")
+                .flag("listen", "127.0.0.1:7070", "listen address")
+                .flag("n", "4", "number of workers")
+                .flag("s", "1", "straggler tolerance")
+                .flag("m", "2", "communication reduction factor")
+                .flag("scheme", "poly", "poly | random | naive")
+                .flag("iters", "100", "training iterations")
+                .flag("rows", "256", "training rows (shared-seed data)")
+                .flag("dim", "512", "gradient dimension")
+                .flag("lr", "0.02", "learning rate")
+                .flag("data-seed", "2018", "shared dataset seed")
+                .flag("checkpoint", "", "optional checkpoint path (save/resume)"),
+        )
+        .command(
+            Command::new("worker", "TCP worker: serve coded gradients")
+                .flag("connect", "127.0.0.1:7070", "master address")
+                .flag("id", "0", "worker id (0-based)"),
+        )
+}
+
+fn cmd_leader(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    use gradcode::checkpoint::Checkpoint;
+    use gradcode::coordinator::remote::{
+        dataset_from_setup, decode_gather, scheme_from_setup, RemoteMaster,
+    };
+    use gradcode::coordinator::wire::Setup;
+    let scheme_kind = match a.get_str("scheme") {
+        "poly" => 0u8,
+        "random" => 1,
+        "naive" => 2,
+        other => anyhow::bail!("unknown scheme {other:?}"),
+    };
+    let setup = Setup {
+        n: a.get_usize("n") as u32,
+        d: if scheme_kind == 2 { 1 } else { (a.get_usize("s") + a.get_usize("m")) as u32 },
+        s: if scheme_kind == 2 { 0 } else { a.get_usize("s") as u32 },
+        m: if scheme_kind == 2 { 1 } else { a.get_usize("m") as u32 },
+        scheme_kind,
+        scheme_seed: a.get_u64("data-seed") ^ 0x5c,
+        data_seed: a.get_u64("data-seed"),
+        rows: a.get_usize("rows") as u32,
+        dim: a.get_usize("dim") as u32,
+    };
+    println!("leader: waiting for {} workers on {}", setup.n, a.get_str("listen"));
+    let mut master = RemoteMaster::listen(a.get_str("listen"), setup)?;
+    println!("leader: all workers connected");
+    let code = scheme_from_setup(&setup)?;
+    let train_ds = dataset_from_setup(&setup);
+    let lr = a.get_f64("lr") as f32;
+    let ck_path = a.get_str("checkpoint").to_string();
+    let (start_iter, beta0) = if !ck_path.is_empty()
+        && std::path::Path::new(&ck_path).exists()
+    {
+        let ck = Checkpoint::load(std::path::Path::new(&ck_path))?;
+        anyhow::ensure!(ck.beta.len() == setup.dim as usize, "checkpoint dim mismatch");
+        println!("leader: resumed from {ck_path} at iter {}", ck.iter);
+        (ck.iter, ck.beta)
+    } else {
+        (0, vec![0.0f32; setup.dim as usize])
+    };
+    let mut opt = gradcode::optim::Nag::new(beta0, lr, 0.9);
+    use gradcode::optim::Optimizer;
+    let mut cache = std::collections::HashMap::new();
+    let iters = a.get_usize("iters") as u64;
+    for iter in start_iter..iters {
+        let gather = master.run_iteration(iter, opt.eval_point())?;
+        let grad = decode_gather(code.as_ref(), &gather, &mut cache)?;
+        opt.step(&grad);
+        if iter % 10 == 0 || iter + 1 == iters {
+            let loss = gradcode::model::LogisticModel::loss(&train_ds, opt.iterate());
+            println!(
+                "iter {iter:>4}: loss {loss:.5}, quorum in {:.1} ms",
+                gather.elapsed * 1e3
+            );
+            if !ck_path.is_empty() {
+                Checkpoint::new(iter + 1, opt.iterate().to_vec())
+                    .save(std::path::Path::new(&ck_path))?;
+            }
+        }
+    }
+    master.shutdown();
+    println!("leader: done");
+    Ok(())
+}
+
+fn cmd_worker(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    let id = a.get_usize("id");
+    println!("worker {id}: connecting to {}", a.get_str("connect"));
+    let served = gradcode::coordinator::run_worker(a.get_str("connect"), id)?;
+    println!("worker {id}: served {served} tasks, shutting down");
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("platform: {}", gradcode::runtime::platform_name()?);
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}): {} entries", dir.display(), m.len());
+            for k in m.worker_keys() {
+                println!(
+                    "  worker n={} d={} m={} rows={} l={}",
+                    k.n, k.d, k.m, k.rows, k.dim
+                );
+            }
+        }
+        Err(_) => println!("artifacts: none (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    let n = a.get_usize("n");
+    let s = a.get_usize("s");
+    let m = a.get_usize("m");
+    let scheme = match a.get_str("scheme") {
+        "poly" => SchemeSpec::Poly { s, m },
+        "random" => SchemeSpec::Random { s, m, seed: a.get_u64("seed") },
+        "naive" => SchemeSpec::Uncoded,
+        other => anyhow::bail!("unknown scheme {other:?}"),
+    };
+    let gen = SyntheticCategorical::new(
+        CategoricalConfig { columns: 10, cardinality: (16, 48), ..Default::default() },
+        a.get_u64("seed"),
+    );
+    let ds = gen.generate(a.get_usize("rows"), a.get_u64("seed") + 1);
+    let (train_ds, test_ds) = train_test_split(&ds, 0.2, a.get_u64("seed") + 2);
+    let cfg = TrainConfig {
+        n,
+        scheme,
+        iters: a.get_usize("iters"),
+        opt: OptChoice::Nag { lr: a.get_f64("lr") as f32, momentum: a.get_f64("momentum") as f32 },
+        eval_every: a.get_usize("eval-every"),
+        delays: if a.get_bool("no-delays") { None } else { Some(DelayParams::table_vi1()) },
+        mode: ExecutionMode::Virtual,
+        seed: a.get_u64("seed"),
+        minibatch: None,
+    };
+    let log = if a.get_bool("pjrt") {
+        let code = scheme.build(n)?;
+        // PJRT artifacts are fixed-shape: pad to the artifact dims.
+        let padded = train_ds.pad_cols(512);
+        anyhow::ensure!(
+            padded.rows / n == 64,
+            "PJRT mode needs rows such that rows/n = 64 (artifact shape); \
+             use --rows {}",
+            64 * n * 5 / 4
+        );
+        let backend =
+            Arc::new(PjrtBackend::new(&Manifest::default_dir(), code.as_ref(), &padded)?);
+        let mut tr = Trainer::with_backend(cfg, code, backend, &padded, Some(&test_ds))?;
+        tr.run()?
+    } else {
+        let (log, _beta) = train(cfg, &train_ds, Some(&test_ds))?;
+        log
+    };
+    println!(
+        "scheme={} iters={} sim_time={:.2}s mean_iter={:.3}s floats={} final_loss={:.4} final_auc={:.4}",
+        log.scheme,
+        log.records.len(),
+        log.total_sim_time(),
+        log.mean_iteration_sim_time(),
+        log.total_floats_transmitted(),
+        log.final_loss().unwrap_or(f64::NAN),
+        log.final_auc().unwrap_or(f64::NAN),
+    );
+    if a.get_bool("csv") {
+        print!("{}", log.to_csv());
+    }
+    Ok(())
+}
+
+fn cmd_plan(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    let params = DelayParams {
+        lambda1: a.get_f64("lambda1"),
+        t1: a.get_f64("t1"),
+        lambda2: a.get_f64("lambda2"),
+        t2: a.get_f64("t2"),
+    };
+    let n = a.get_usize("n");
+    let best = optimal_triple(&params, n);
+    let naive = gradcode::simulator::optimize::naive_choice(&params, n);
+    let m1 = gradcode::simulator::optimize::optimal_triple_m1(&params, n);
+    println!("n = {n}, params = {params:?}");
+    println!(
+        "optimal: (d={}, s={}, m={})  E[T] = {:.4}",
+        best.d, best.s, best.m, best.expected_runtime
+    );
+    println!(
+        "best m=1 ([11]-[13]): (d={}, s={})  E[T] = {:.4}  (+{:.0}%)",
+        m1.d,
+        m1.s,
+        m1.expected_runtime,
+        100.0 * (m1.expected_runtime / best.expected_runtime - 1.0)
+    );
+    println!(
+        "naive: E[T] = {:.4}  (+{:.0}%)",
+        naive.expected_runtime,
+        100.0 * (naive.expected_runtime / best.expected_runtime - 1.0)
+    );
+    Ok(())
+}
+
+fn cmd_grid(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    use gradcode::simulator::order_stats::expected_total_runtime;
+    let n = a.get_usize("n");
+    let params = DelayParams {
+        lambda1: a.get_f64("lambda1"),
+        t1: a.get_f64("t1"),
+        lambda2: a.get_f64("lambda2"),
+        t2: a.get_f64("t2"),
+    };
+    let header: Vec<String> = std::iter::once("m \\ d".to_string())
+        .chain((1..=n).map(|d| d.to_string()))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = gradcode::bench::Table::new(
+        &format!("E[T_tot], s = d - m, n = {n}, {params:?}"),
+        &header_refs,
+    );
+    for m in 1..=n {
+        let mut row = vec![m.to_string()];
+        for d in 1..=n {
+            row.push(if m > d {
+                String::new()
+            } else {
+                format!("{:.4}", expected_total_runtime(&params, n, d, d - m, m))
+            });
+        }
+        table.row(&row);
+    }
+    table.print();
+    let best = optimal_triple(&params, n);
+    println!("optimum: (d={}, s={}, m={}) -> {:.4}", best.d, best.s, best.m, best.expected_runtime);
+    Ok(())
+}
+
+fn cmd_stability(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    let n = a.get_usize("n");
+    let s = a.get_usize("s");
+    let m = a.get_usize("m");
+    let cfg = SchemeConfig::tight(n, s, m)?;
+    let (report, err) = match a.get_str("scheme") {
+        "poly" => {
+            let c = PolynomialCode::new(cfg)?;
+            (
+                max_condition_number(&c, a.get_usize("budget"), 1),
+                reconstruction_error(&c, a.get_usize("dim"), a.get_usize("trials"), 2),
+            )
+        }
+        "random" => {
+            let c = RandomCode::new(cfg, 1)?;
+            (
+                max_condition_number(&c, a.get_usize("budget"), 1),
+                reconstruction_error(&c, a.get_usize("dim"), a.get_usize("trials"), 2),
+            )
+        }
+        other => anyhow::bail!("unknown scheme {other:?}"),
+    };
+    println!(
+        "scheme={} n={n} d={} s={s} m={m}",
+        a.get_str("scheme"),
+        cfg.d
+    );
+    println!(
+        "worst cond = {:.3e} over {} patterns (exhaustive: {}), at stragglers {:?}",
+        report.worst_cond, report.patterns, report.exhaustive, report.worst_stragglers
+    );
+    println!("worst ℓ∞ reconstruction rel-error = {err:.3e}");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    match app.dispatch(&argv) {
+        Ok((name, args)) => match name.as_str() {
+            "info" => cmd_info(),
+            "train" => cmd_train(args),
+            "plan" => cmd_plan(args),
+            "stability" => cmd_stability(args),
+            "grid" => cmd_grid(args),
+            "leader" => cmd_leader(args),
+            "worker" => cmd_worker(args),
+            _ => unreachable!(),
+        },
+        Err(gradcode::cli::CliError::HelpRequested) => {
+            println!("{}", app.help());
+            Ok(())
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", app.help());
+            std::process::exit(2);
+        }
+    }
+}

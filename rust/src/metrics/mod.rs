@@ -1,0 +1,140 @@
+//! Run-level metrics: per-iteration records, aggregation, and CSV export
+//! for the figure benches.
+
+use std::fmt::Write as _;
+
+/// One training iteration as observed by the master.
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    pub iter: usize,
+    /// Simulated cluster time for this iteration (§VI model), seconds.
+    pub sim_time: f64,
+    /// Cumulative simulated time at the end of this iteration.
+    pub sim_clock: f64,
+    /// Measured wall-clock spent in master-side compute (decode + step),
+    /// seconds.
+    pub master_compute: f64,
+    /// Measured wall-clock spent by workers on gradient+encode (max over
+    /// responders), seconds.
+    pub worker_compute: f64,
+    /// Workers whose results were used.
+    pub responders: Vec<usize>,
+    /// f32 values transmitted by all workers this iteration (comm cost).
+    pub floats_transmitted: usize,
+    /// Training loss at eval points (`None` when not evaluated).
+    pub loss: Option<f64>,
+    /// Test AUC at eval points.
+    pub auc: Option<f64>,
+}
+
+/// Full log of a training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub records: Vec<IterationRecord>,
+    pub scheme: String,
+}
+
+impl RunLog {
+    pub fn new(scheme: impl Into<String>) -> Self {
+        RunLog { records: Vec::new(), scheme: scheme.into() }
+    }
+
+    pub fn push(&mut self, r: IterationRecord) {
+        self.records.push(r);
+    }
+
+    pub fn total_sim_time(&self) -> f64 {
+        self.records.last().map_or(0.0, |r| r.sim_clock)
+    }
+
+    pub fn mean_iteration_sim_time(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.sim_time).sum::<f64>() / self.records.len() as f64
+    }
+
+    pub fn total_floats_transmitted(&self) -> usize {
+        self.records.iter().map(|r| r.floats_transmitted).sum()
+    }
+
+    pub fn final_auc(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.auc)
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.loss)
+    }
+
+    /// (sim_clock, auc) series for Fig. 4-style curves.
+    pub fn auc_curve(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.auc.map(|a| (r.sim_clock, a)))
+            .collect()
+    }
+
+    /// CSV with one row per iteration.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "iter,sim_time,sim_clock,master_compute,worker_compute,n_responders,floats,loss,auc\n",
+        );
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{:.6},{:.6},{:.6},{:.6},{},{},{},{}",
+                r.iter,
+                r.sim_time,
+                r.sim_clock,
+                r.master_compute,
+                r.worker_compute,
+                r.responders.len(),
+                r.floats_transmitted,
+                r.loss.map_or(String::new(), |v| format!("{v:.6}")),
+                r.auc.map_or(String::new(), |v| format!("{v:.6}")),
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, t: f64, clock: f64, auc: Option<f64>) -> IterationRecord {
+        IterationRecord {
+            iter,
+            sim_time: t,
+            sim_clock: clock,
+            master_compute: 0.0,
+            worker_compute: 0.0,
+            responders: vec![0, 1],
+            floats_transmitted: 10,
+            loss: None,
+            auc,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut log = RunLog::new("test");
+        log.push(rec(0, 2.0, 2.0, None));
+        log.push(rec(1, 4.0, 6.0, Some(0.9)));
+        assert_eq!(log.total_sim_time(), 6.0);
+        assert_eq!(log.mean_iteration_sim_time(), 3.0);
+        assert_eq!(log.total_floats_transmitted(), 20);
+        assert_eq!(log.final_auc(), Some(0.9));
+        assert_eq!(log.auc_curve(), vec![(6.0, 0.9)]);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = RunLog::new("t");
+        log.push(rec(0, 1.0, 1.0, Some(0.8)));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("iter,"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("0.800000"));
+    }
+}

@@ -1,0 +1,186 @@
+//! Logistic regression: loss, probabilities, and the partial-gradient
+//! kernel `g = X^T (σ(Xβ) - y)` — the compute hot spot of the paper's
+//! workload (the L1 Pallas kernel implements exactly this map).
+
+use crate::data::DenseDataset;
+
+/// Stateless logistic-regression compute over dense f32 data.
+pub struct LogisticModel;
+
+/// 4-way-unrolled f32 dot (the forward half of the fused gradient pass).
+#[inline]
+fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / 4 * 4;
+    let mut acc = [0.0f32; 4];
+    let mut i = 0;
+    while i < chunks {
+        acc[0] += x[i] * y[i];
+        acc[1] += x[i + 1] * y[i + 1];
+        acc[2] += x[i + 2] * y[i + 2];
+        acc[3] += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for k in chunks..x.len() {
+        s += x[k] * y[k];
+    }
+    s
+}
+
+#[inline]
+pub(crate) fn sigmoid(z: f32) -> f32 {
+    // Numerically-stable split to avoid exp overflow.
+    if z >= 0.0 {
+        let e = (-z).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl LogisticModel {
+    /// Predicted probabilities `σ(Xβ)`.
+    pub fn predict(ds: &DenseDataset, beta: &[f32]) -> Vec<f32> {
+        assert_eq!(beta.len(), ds.cols);
+        let mut probs = vec![0.0f32; ds.rows];
+        crate::linalg::gemv_f32(ds.rows, ds.cols, &ds.x, beta, &mut probs);
+        for p in probs.iter_mut() {
+            *p = sigmoid(*p);
+        }
+        probs
+    }
+
+    /// Mean negative log-likelihood (cross-entropy) loss.
+    pub fn loss(ds: &DenseDataset, beta: &[f32]) -> f64 {
+        let probs = Self::predict(ds, beta);
+        let mut acc = 0.0f64;
+        for (&p, &y) in probs.iter().zip(&ds.y) {
+            let p = (p as f64).clamp(1e-12, 1.0 - 1e-12);
+            acc -= if y >= 0.5 { p.ln() } else { (1.0 - p).ln() };
+        }
+        acc / ds.rows as f64
+    }
+
+    /// Sum gradient over the dataset: `g = X^T (σ(Xβ) - y)`, length `cols`.
+    pub fn gradient(ds: &DenseDataset, beta: &[f32]) -> Vec<f32> {
+        let mut g = vec![0.0f32; ds.cols];
+        Self::gradient_into(ds, beta, &mut g);
+        g
+    }
+
+    /// Allocation-free gradient (hot path of the rust backend).
+    ///
+    /// Single fused pass over `X`: for each row, the forward dot
+    /// `z = x·β`, the residual `r = σ(z) - y`, and the rank-1 accumulate
+    /// `g += r·x` happen while the row is still in cache — halving the
+    /// memory traffic of the two-pass (GEMV then X^T·r) formulation.
+    /// (§Perf: two-pass measured 288 µs at 256×512; fused ~2× less X
+    /// traffic.)
+    pub fn gradient_into(ds: &DenseDataset, beta: &[f32], g: &mut Vec<f32>) {
+        assert_eq!(beta.len(), ds.cols);
+        g.clear();
+        g.resize(ds.cols, 0.0);
+        let cols = ds.cols;
+        let blocks = ds.rows / 4 * 4;
+        let mut i = 0;
+        // 4-row blocks: four forward dots, then one fused rank-4 update
+        // g += Σ r_k·x_k — a single pass over the (L1-resident) g per
+        // four rows instead of four.
+        while i < blocks {
+            let x0 = &ds.x[i * cols..(i + 1) * cols];
+            let x1 = &ds.x[(i + 1) * cols..(i + 2) * cols];
+            let x2 = &ds.x[(i + 2) * cols..(i + 3) * cols];
+            let x3 = &ds.x[(i + 3) * cols..(i + 4) * cols];
+            let r0 = sigmoid(dot_f32(x0, beta)) - ds.y[i];
+            let r1 = sigmoid(dot_f32(x1, beta)) - ds.y[i + 1];
+            let r2 = sigmoid(dot_f32(x2, beta)) - ds.y[i + 2];
+            let r3 = sigmoid(dot_f32(x3, beta)) - ds.y[i + 3];
+            for (k, gv) in g.iter_mut().enumerate() {
+                *gv += r0 * x0[k] + r1 * x1[k] + r2 * x2[k] + r3 * x3[k];
+            }
+            i += 4;
+        }
+        for (i, &y) in ds.y.iter().enumerate().skip(blocks) {
+            let row = ds.row(i);
+            let r = sigmoid(dot_f32(row, beta)) - y;
+            if r != 0.0 {
+                crate::linalg::axpy_f32(r, row, g);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CategoricalConfig, SyntheticCategorical};
+
+    fn toy() -> DenseDataset {
+        DenseDataset {
+            x: vec![1., 0., 0., 1., 1., 1.],
+            y: vec![1., 0., 1.],
+            rows: 3,
+            cols: 2,
+        }
+    }
+
+    #[test]
+    fn sigmoid_basic() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(20.0) > 0.999_999);
+        assert!(sigmoid(-20.0) < 1e-6);
+        // stability at extremes
+        assert!(sigmoid(500.0).is_finite());
+        assert!(sigmoid(-500.0).is_finite());
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let ds = toy();
+        let beta = vec![0.3f32, -0.2];
+        let g = LogisticModel::gradient(&ds, &beta);
+        let eps = 1e-3f32;
+        for j in 0..2 {
+            let mut bp = beta.clone();
+            bp[j] += eps;
+            let mut bm = beta.clone();
+            bm[j] -= eps;
+            // loss() is mean-NLL; gradient() is the SUM gradient.
+            let fd = (LogisticModel::loss(&ds, &bp) - LogisticModel::loss(&ds, &bm)) as f32
+                / (2.0 * eps)
+                * ds.rows as f32;
+            assert!((g[j] - fd).abs() < 1e-2, "coord {j}: {} vs {fd}", g[j]);
+        }
+    }
+
+    #[test]
+    fn zero_beta_gradient_is_half_minus_y_projection() {
+        // σ(0) = 0.5 → g = X^T (0.5 - y).
+        let ds = toy();
+        let g = LogisticModel::gradient(&ds, &[0.0, 0.0]);
+        // manual: rows (1,0),(0,1),(1,1); resid = (-.5, .5, -.5)
+        assert!((g[0] - (-0.5 + 0.0 - 0.5)).abs() < 1e-6);
+        assert!((g[1] - (0.0 + 0.5 - 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn training_reduces_loss_and_gets_good_auc() {
+        let gen = SyntheticCategorical::new(CategoricalConfig::default(), 11);
+        let ds = gen.generate(1500, 12);
+        let mut beta = vec![0.0f32; ds.cols];
+        let l0 = LogisticModel::loss(&ds, &beta);
+        let lr = 2.0 / ds.rows as f32;
+        for _ in 0..150 {
+            let g = LogisticModel::gradient(&ds, &beta);
+            for (b, &gv) in beta.iter_mut().zip(&g) {
+                *b -= lr * gv;
+            }
+        }
+        let l1 = LogisticModel::loss(&ds, &beta);
+        assert!(l1 < l0 * 0.8, "loss {l0} -> {l1}");
+        let auc = crate::data::auc(&LogisticModel::predict(&ds, &beta), &ds.y);
+        assert!(auc > 0.8, "train AUC {auc}");
+    }
+}

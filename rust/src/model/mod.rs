@@ -1,0 +1,11 @@
+//! Model layer: the pure-rust logistic-regression reference backend.
+//!
+//! The production request path computes partial gradients through the AOT
+//! PJRT artifacts (see `runtime/` and `python/compile/`); this module is
+//! the numerically-identical rust implementation used as (a) the hermetic
+//! test/bench backend when artifacts are absent, and (b) the oracle the
+//! PJRT integration tests compare against.
+
+mod logistic;
+
+pub use logistic::LogisticModel;

@@ -1,0 +1,56 @@
+//! Classical (heavy-ball) momentum.
+
+use super::Optimizer;
+
+/// `v ← μ·v - lr·g ; x ← x + v`.
+pub struct Momentum {
+    x: Vec<f32>,
+    v: Vec<f32>,
+    lr: f32,
+    mu: f32,
+    t: usize,
+}
+
+impl Momentum {
+    pub fn new(x0: Vec<f32>, lr: f32, mu: f32) -> Self {
+        assert!(lr > 0.0 && (0.0..1.0).contains(&mu));
+        let d = x0.len();
+        Momentum { x: x0, v: vec![0.0; d], lr, mu, t: 0 }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, grad: &[f32]) {
+        assert_eq!(grad.len(), self.x.len());
+        for ((x, v), &g) in self.x.iter_mut().zip(self.v.iter_mut()).zip(grad) {
+            *v = self.mu * *v - self.lr * g;
+            *x += *v;
+        }
+        self.t += 1;
+    }
+
+    fn eval_point(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn iterate(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn velocity_accumulates() {
+        let mut m = Momentum::new(vec![0.0], 1.0, 0.5);
+        m.step(&[-1.0]); // v = 1, x = 1
+        m.step(&[0.0]); // v = 0.5, x = 1.5
+        assert!((m.iterate()[0] - 1.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,104 @@
+//! Nesterov's Accelerated Gradient (Bubeck §3.7) — the optimizer used in
+//! the paper's EC2 experiments.
+//!
+//! Two-sequence form:
+//! `x_{t+1} = y_t - lr · ∇f(y_t)`
+//! `y_{t+1} = x_{t+1} + μ · (x_{t+1} - x_t)`
+//!
+//! The coordinator evaluates gradients at `y_t` ([`Optimizer::eval_point`])
+//! and reports metrics at `x_t` ([`Optimizer::iterate`]).
+
+use super::Optimizer;
+
+/// NAG with constant momentum `μ` (set `μ = 0` to recover plain GD).
+pub struct Nag {
+    /// Iterate `x_t`.
+    x: Vec<f32>,
+    /// Lookahead `y_t` (gradient evaluation point).
+    y: Vec<f32>,
+    lr: f32,
+    mu: f32,
+    t: usize,
+}
+
+impl Nag {
+    pub fn new(x0: Vec<f32>, lr: f32, mu: f32) -> Self {
+        assert!(lr > 0.0 && (0.0..1.0).contains(&mu));
+        Nag { y: x0.clone(), x: x0, lr, mu, t: 0 }
+    }
+
+    /// NAG with the `t/(t+3)` momentum schedule (the convex-case choice in
+    /// Bubeck §3.7); `mu` is ignored and recomputed each step.
+    pub fn scheduled(x0: Vec<f32>, lr: f32) -> Self {
+        let mut n = Nag::new(x0, lr, 0.0);
+        n.mu = f32::NAN; // sentinel: use schedule
+        n
+    }
+
+    fn momentum_at(&self, t: usize) -> f32 {
+        if self.mu.is_nan() {
+            t as f32 / (t as f32 + 3.0)
+        } else {
+            self.mu
+        }
+    }
+}
+
+impl Optimizer for Nag {
+    fn step(&mut self, grad: &[f32]) {
+        assert_eq!(grad.len(), self.x.len());
+        let mu = self.momentum_at(self.t + 1);
+        for i in 0..self.x.len() {
+            let x_new = self.y[i] - self.lr * grad[i];
+            let dx = x_new - self.x[i];
+            self.x[i] = x_new;
+            self.y[i] = x_new + mu * dx;
+        }
+        self.t += 1;
+    }
+
+    fn eval_point(&self) -> &[f32] {
+        &self.y
+    }
+
+    fn iterate(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_momentum_reduces_to_gd() {
+        let mut nag = Nag::new(vec![1.0], 0.1, 0.0);
+        nag.step(&[1.0]);
+        assert!((nag.iterate()[0] - 0.9).abs() < 1e-7);
+        assert_eq!(nag.eval_point(), nag.iterate());
+    }
+
+    #[test]
+    fn lookahead_differs_from_iterate_with_momentum() {
+        let mut nag = Nag::new(vec![1.0], 0.1, 0.9);
+        nag.step(&[1.0]);
+        // x = 0.9, y = 0.9 + 0.9·(0.9-1.0) = 0.81
+        assert!((nag.iterate()[0] - 0.9).abs() < 1e-7);
+        assert!((nag.eval_point()[0] - 0.81).abs() < 1e-7);
+    }
+
+    #[test]
+    fn scheduled_momentum_converges_on_quadratic() {
+        let c = 4.0f32;
+        let mut nag = Nag::scheduled(vec![0.0], 0.2);
+        for _ in 0..300 {
+            let g = vec![nag.eval_point()[0] - c];
+            nag.step(&g);
+        }
+        assert!((nag.iterate()[0] - c).abs() < 1e-3);
+    }
+}

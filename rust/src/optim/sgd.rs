@@ -1,0 +1,52 @@
+//! Plain (full-batch or mini-batch) gradient descent.
+
+use super::Optimizer;
+
+/// `x ← x - lr·g`.
+pub struct Sgd {
+    x: Vec<f32>,
+    lr: f32,
+    t: usize,
+}
+
+impl Sgd {
+    pub fn new(x0: Vec<f32>, lr: f32) -> Self {
+        assert!(lr > 0.0);
+        Sgd { x: x0, lr, t: 0 }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, grad: &[f32]) {
+        assert_eq!(grad.len(), self.x.len());
+        for (x, &g) in self.x.iter_mut().zip(grad) {
+            *x -= self.lr * g;
+        }
+        self.t += 1;
+    }
+
+    fn eval_point(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn iterate(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_moves_against_gradient() {
+        let mut s = Sgd::new(vec![1.0, 2.0], 0.5);
+        s.step(&[2.0, -2.0]);
+        assert_eq!(s.iterate(), &[0.0, 3.0]);
+        assert_eq!(s.t(), 1);
+    }
+}

@@ -1,0 +1,235 @@
+//! Distribution samplers used by the experiments.
+//!
+//! The §VI runtime model of the paper draws computation and communication
+//! times from *shifted exponential* distributions
+//! `Pr(T <= t) = 1 - exp(-λ (t - t0))` for `t >= t0`; the data generator
+//! uses Zipf-distributed categorical cardinalities and Bernoulli labels,
+//! and the random coding scheme (§IV) needs Gaussians.
+
+use super::Rng;
+
+/// Exponential distribution with rate `lambda` (mean `1/lambda`).
+#[derive(Debug, Clone, Copy)]
+pub struct Exponential {
+    lambda: f64,
+}
+
+impl Exponential {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "rate must be positive, got {lambda}");
+        Exponential { lambda }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        // Inverse-CDF: -ln(U)/λ with U in (0,1).
+        -rng.next_f64_open().ln() / self.lambda
+    }
+
+    pub fn mean(&self) -> f64 {
+        1.0 / self.lambda
+    }
+}
+
+/// Shifted exponential: constant `shift` plus `Exp(lambda)` — the paper's
+/// model for both per-subset computation time and full-vector
+/// communication time (§VI assumptions 1–2).
+#[derive(Debug, Clone, Copy)]
+pub struct ShiftedExponential {
+    pub shift: f64,
+    pub exp: Exponential,
+}
+
+impl ShiftedExponential {
+    pub fn new(shift: f64, lambda: f64) -> Self {
+        assert!(shift >= 0.0, "shift must be nonnegative, got {shift}");
+        ShiftedExponential { shift, exp: Exponential::new(lambda) }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> f64 {
+        self.shift + self.exp.sample(rng)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.shift + self.exp.mean()
+    }
+
+    /// CDF `Pr(T <= t)`.
+    pub fn cdf(&self, t: f64) -> f64 {
+        if t < self.shift {
+            0.0
+        } else {
+            1.0 - (-(t - self.shift) * self.exp.lambda).exp()
+        }
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.exp.lambda
+    }
+}
+
+/// Standard normal via Box–Muller (polar form); caches the spare value.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Normal {
+    spare: Option<f64>,
+}
+
+impl Normal {
+    pub fn new() -> Self {
+        Normal { spare: None }
+    }
+
+    /// Standard normal sample.
+    pub fn sample<R: Rng>(&mut self, rng: &mut R) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Normal with given mean / standard deviation.
+    pub fn sample_with<R: Rng>(&mut self, rng: &mut R, mean: f64, std: f64) -> f64 {
+        mean + std * self.sample(rng)
+    }
+}
+
+/// Zipf distribution on `{1, ..., n}` with exponent `a`: used for the
+/// synthetic categorical dataset's column cardinalities / value skew
+/// (one-hot categorical data such as Amazon Employee Access is heavily
+/// skewed).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    /// Cumulative probabilities, `cum[i] = Pr(X <= i+1)`.
+    cum: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, a: f64) -> Self {
+        assert!(n > 0, "support must be non-empty");
+        assert!(a > 0.0, "exponent must be positive");
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for k in 1..=n {
+            total += (k as f64).powf(-a);
+            cum.push(total);
+        }
+        for c in cum.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cum }
+    }
+
+    /// Sample a value in `{1, ..., n}`.
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> usize {
+        let u = rng.next_f64();
+        // Binary search for the first cum[i] >= u.
+        match self.cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i + 1,
+            Err(i) => (i + 1).min(self.cum.len()),
+        }
+    }
+}
+
+/// Bernoulli(p).
+#[derive(Debug, Clone, Copy)]
+pub struct Bernoulli {
+    p: f64,
+}
+
+impl Bernoulli {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p must be in [0,1], got {p}");
+        Bernoulli { p }
+    }
+
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> bool {
+        rng.next_f64() < self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Pcg64;
+
+    #[test]
+    fn exponential_mean_matches() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let d = Exponential::new(0.5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn shifted_exponential_support_and_mean() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let d = ShiftedExponential::new(1.6, 0.8);
+        let n = 100_000;
+        let mut mean = 0.0;
+        for _ in 0..n {
+            let x = d.sample(&mut rng);
+            assert!(x >= 1.6);
+            mean += x;
+        }
+        mean /= n as f64;
+        assert!((mean - (1.6 + 1.25)).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn shifted_exponential_cdf() {
+        let d = ShiftedExponential::new(2.0, 1.0);
+        assert_eq!(d.cdf(1.0), 0.0);
+        assert!((d.cdf(3.0) - (1.0 - (-1.0f64).exp())).abs() < 1e-12);
+        assert!(d.cdf(50.0) > 0.999_999);
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut rng = Pcg64::seed_from_u64(13);
+        let mut nd = Normal::new();
+        let n = 200_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = nd.sample(&mut rng);
+            m += z;
+            v += z * z;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.01, "mean {m}");
+        assert!((v - 1.0).abs() < 0.02, "var {v}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_support() {
+        let mut rng = Pcg64::seed_from_u64(14);
+        let z = Zipf::new(100, 1.2);
+        let mut c1 = 0usize;
+        for _ in 0..10_000 {
+            let x = z.sample(&mut rng);
+            assert!((1..=100).contains(&x));
+            if x == 1 {
+                c1 += 1;
+            }
+        }
+        // value 1 should dominate under Zipf(1.2)
+        assert!(c1 > 2_000, "count of 1s: {c1}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg64::seed_from_u64(15);
+        let b = Bernoulli::new(0.3);
+        let hits = (0..100_000).filter(|_| b.sample(&mut rng)).count();
+        assert!((28_000..32_000).contains(&hits), "hits {hits}");
+    }
+}

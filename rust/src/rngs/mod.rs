@@ -1,0 +1,128 @@
+//! Random-number substrate.
+//!
+//! The offline build environment ships no `rand` crate, so the library
+//! carries its own deterministic PRNG ([`Pcg64`], the PCG-XSL-RR 128/64
+//! generator) plus the distribution samplers the paper's experiments need
+//! (uniform, normal, exponential, shifted exponential, Zipf, Bernoulli).
+//!
+//! Every stochastic experiment in the repository takes an explicit seed so
+//! that tables and figures regenerate bit-identically.
+
+mod dist;
+mod pcg;
+
+pub use dist::{Bernoulli, Exponential, Normal, ShiftedExponential, Zipf};
+pub use pcg::Pcg64;
+
+/// Minimal RNG interface used across the crate.
+pub trait Rng {
+    /// Next raw 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits: (u >> 11) * 2^-53.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in the open interval `(0, 1)`; safe for `ln()`.
+    fn next_f64_open(&mut self) -> f64 {
+        loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                return u;
+            }
+        }
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's rejection method.
+    fn next_bounded(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "bound must be positive");
+        // 128-bit multiply-shift with rejection to remove modulo bias.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` in `[0, bound)`.
+    fn next_index(&mut self, bound: usize) -> usize {
+        self.next_bounded(bound as u64) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (straggler sets etc.).
+    fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        let mut all: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut all);
+        all.truncate(k);
+        all.sort_unstable();
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let u = rng.next_f64();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn bounded_is_in_range_and_roughly_uniform() {
+        let mut rng = Pcg64::seed_from_u64(42);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[rng.next_bounded(10) as usize] += 1;
+        }
+        for &c in &counts {
+            // expected 10_000 per bucket; allow generous slack
+            assert!((8_000..12_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        for _ in 0..100 {
+            let s = rng.sample_indices(20, 7);
+            assert_eq!(s.len(), 7);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(s.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,151 @@
+//! Artifact resolution: map (kind, shape signature) -> HLO file via the
+//! manifest written by `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Shape signature of an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    /// "worker" or "predict".
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub d: usize,
+    pub m: usize,
+    pub rows: usize,
+    pub dim: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Worker,
+    Predict,
+}
+
+impl ArtifactKey {
+    pub fn worker(n: usize, d: usize, m: usize, rows: usize, dim: usize) -> Self {
+        ArtifactKey { kind: ArtifactKind::Worker, n, d, m, rows, dim }
+    }
+
+    pub fn predict(rows: usize, dim: usize) -> Self {
+        ArtifactKey { kind: ArtifactKind::Predict, n: 0, d: 0, m: 0, rows, dim }
+    }
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    dir: PathBuf,
+    entries: HashMap<ArtifactKey, String>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`. Each line: `name kind n d m rows dim`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(
+                parts.len() == 7,
+                "manifest line {} malformed: {line:?}",
+                lineno + 1
+            );
+            let kind = match parts[1] {
+                "worker" => ArtifactKind::Worker,
+                "predict" => ArtifactKind::Predict,
+                other => anyhow::bail!("unknown artifact kind {other:?}"),
+            };
+            let nums: Vec<usize> = parts[2..7]
+                .iter()
+                .map(|p| p.parse().context("manifest number"))
+                .collect::<Result<_>>()?;
+            let key = ArtifactKey {
+                kind,
+                n: nums[0],
+                d: nums[1],
+                m: nums[2],
+                rows: nums[3],
+                dim: nums[4],
+            };
+            entries.insert(key, parts[0].to_string());
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Path of the artifact for `key`, if present.
+    pub fn resolve(&self, key: &ArtifactKey) -> Option<PathBuf> {
+        self.entries.get(key).map(|name| self.dir.join(name))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All worker-artifact keys (for `gradcode info`).
+    pub fn worker_keys(&self) -> Vec<ArtifactKey> {
+        let mut v: Vec<ArtifactKey> = self
+            .entries
+            .keys()
+            .filter(|k| k.kind == ArtifactKind::Worker)
+            .copied()
+            .collect();
+        v.sort_by_key(|k| (k.n, k.d, k.m, k.rows, k.dim));
+        v
+    }
+
+    /// Default artifacts directory: `$GRADCODE_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GRADCODE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_and_resolves() {
+        let dir = std::env::temp_dir().join(format!("gradcode-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            "worker_n10_d3_m2_r64_l512.hlo.txt worker 10 3 2 64 512\n\
+             predict_r256_l512.hlo.txt predict 0 0 0 256 512\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        let p = m.resolve(&ArtifactKey::worker(10, 3, 2, 64, 512)).unwrap();
+        assert!(p.ends_with("worker_n10_d3_m2_r64_l512.hlo.txt"));
+        assert!(m.resolve(&ArtifactKey::worker(9, 3, 2, 64, 512)).is_none());
+        assert_eq!(m.worker_keys().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        let dir = std::env::temp_dir().join(format!("gradcode-manifest-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, "bad line\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

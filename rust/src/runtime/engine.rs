@@ -1,0 +1,89 @@
+//! PJRT client + executable wrappers over the `xla` crate.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client. Compilation is serialized behind a mutex (the
+/// underlying client is not documented thread-safe for compile); execution
+/// of distinct executables proceeds without locking.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    compile_lock: Mutex<()>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine { client, compile_lock: Mutex::new(()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let _guard = self.compile_lock.lock().unwrap();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled HLO module. All our artifacts are lowered with
+/// `return_tuple=True`, so outputs are unwrapped from a 1-tuple.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 buffer inputs of the given shapes; returns the
+    /// first (and only) tuple element as a flat f32 vector.
+    ///
+    /// `inputs` are (data, dims) pairs; data length must equal the dim
+    /// product.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expected: usize = dims.iter().product();
+            anyhow::ensure!(
+                data.len() == expected,
+                "input length {} != shape product {expected}",
+                data.len()
+            );
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims_i64)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_creates_cpu_client() {
+        let engine = PjrtEngine::cpu().unwrap();
+        assert_eq!(engine.platform_name(), "cpu");
+        assert!(engine.device_count() >= 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them on
+//! the request path — the rust binary is self-contained once
+//! `make artifacts` has run; python never executes at serving time.
+//!
+//! - [`PjrtEngine`] wraps the `xla` crate's CPU PJRT client and compiles
+//!   HLO-text modules into reusable executables.
+//! - [`artifact`] resolves artifact files by shape signature via the
+//!   manifest `python/compile/aot.py` writes.
+//! - [`PjrtBackend`] implements [`crate::coordinator::ComputeBackend`]
+//!   by invoking the `worker_step` artifact (Pallas gradient + coded
+//!   encode fused into one HLO module).
+
+pub mod artifact;
+mod engine;
+mod pjrt_backend;
+
+pub use artifact::{ArtifactKey, Manifest};
+pub use engine::{Executable, PjrtEngine};
+pub use pjrt_backend::{PjrtBackend, PjrtPredictor};
+
+use anyhow::Result;
+
+/// Returns the PJRT CPU platform name (build-chain smoke check, also used
+/// by `gradcode info`).
+pub fn platform_name() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}

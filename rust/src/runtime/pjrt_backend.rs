@@ -1,0 +1,221 @@
+//! [`ComputeBackend`] implementation that executes the AOT-compiled
+//! `worker_step` artifact (L1 Pallas gradient + coded encode fused in one
+//! HLO module) through PJRT.
+//!
+//! The `xla` crate's client and executables are `Rc`-based (`!Send`), so
+//! they live on a dedicated **executor service thread**; worker threads
+//! submit requests over a channel and block on a reply. Execution is
+//! therefore serialized at the PJRT boundary — the CPU PJRT runtime
+//! parallelizes internally across its own thread pool, so worker-level
+//! concurrency would buy nothing on this backend anyway.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactKey, Manifest};
+use super::engine::PjrtEngine;
+use crate::coding::GradientCode;
+use crate::coordinator::ComputeBackend;
+use crate::data::DenseDataset;
+
+/// Per-worker frozen inputs (the worker's data shards never change).
+struct WorkerInputs {
+    /// `d·rows·dim` flattened design blocks.
+    xs: Vec<f32>,
+    /// `d·rows` labels.
+    ys: Vec<f32>,
+    /// `d·m` encode coefficients.
+    coeffs: Vec<f32>,
+}
+
+struct EncodeRequest {
+    worker: usize,
+    beta: Vec<f32>,
+    reply: Sender<Result<Vec<f32>>>,
+}
+
+/// PJRT-backed compute: the request path the paper's workers run.
+pub struct PjrtBackend {
+    tx: Mutex<Option<Sender<EncodeRequest>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    m: usize,
+    dim: usize,
+}
+
+impl PjrtBackend {
+    /// Build from a scheme + padded training data, resolving the worker
+    /// artifact via the manifest in `artifact_dir`. Spawns the executor
+    /// thread and fails fast if the artifact is missing or won't compile.
+    pub fn new(
+        artifact_dir: &Path,
+        code: &dyn GradientCode,
+        train: &DenseDataset,
+    ) -> Result<Self> {
+        let cfg = *code.config();
+        cfg.check_dim(train.cols)?;
+        let rows = train.rows / cfg.n;
+        anyhow::ensure!(rows > 0, "not enough rows for n={} subsets", cfg.n);
+        let manifest = Manifest::load(artifact_dir)?;
+        let key = ArtifactKey::worker(cfg.n, cfg.d, cfg.m, rows, train.cols);
+        let path: PathBuf = manifest.resolve(&key).with_context(|| {
+            format!(
+                "no artifact for n={} d={} m={} rows={rows} dim={} — run \
+                 `make artifacts` or python -m compile.aot with these shapes",
+                cfg.n, cfg.d, cfg.m, train.cols
+            )
+        })?;
+
+        // Freeze per-worker inputs (pure-rust work, done on this thread).
+        let parts = crate::data::partition_rows(rows * cfg.n, cfg.n);
+        let subsets: Vec<DenseDataset> =
+            parts.iter().map(|idx| train.select_rows(idx)).collect();
+        let mut workers = Vec::with_capacity(cfg.n);
+        for w in 0..cfg.n {
+            let assigned = code.placement().assigned(w);
+            let mut xs = Vec::with_capacity(cfg.d * rows * train.cols);
+            let mut ys = Vec::with_capacity(cfg.d * rows);
+            for &t in &assigned {
+                xs.extend_from_slice(&subsets[t].x);
+                ys.extend_from_slice(&subsets[t].y);
+            }
+            let coeffs: Vec<f32> =
+                code.encode_coeffs(w)?.iter().map(|&c| c as f32).collect();
+            workers.push(WorkerInputs { xs, ys, coeffs });
+        }
+
+        let (tx, rx) = channel::<EncodeRequest>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let (d, m, dim) = (cfg.d, cfg.m, train.cols);
+        let handle = std::thread::Builder::new()
+            .name("gradcode-pjrt".into())
+            .spawn(move || {
+                executor_loop(path, workers, d, m, rows, dim, rx, ready_tx)
+            })
+            .context("spawning PJRT executor thread")?;
+        ready_rx
+            .recv()
+            .context("PJRT executor thread died during startup")??;
+        Ok(PjrtBackend {
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            m: cfg.m,
+            dim: train.cols,
+        })
+    }
+}
+
+fn executor_loop(
+    path: PathBuf,
+    workers: Vec<WorkerInputs>,
+    d: usize,
+    m: usize,
+    rows: usize,
+    dim: usize,
+    rx: Receiver<EncodeRequest>,
+    ready_tx: Sender<Result<()>>,
+) {
+    // All PJRT (Rc-based) state is created and used on this thread only.
+    let setup = (|| -> Result<_> {
+        let engine = PjrtEngine::cpu()?;
+        let exe = engine.load_hlo_text(&path)?;
+        Ok((engine, exe))
+    })();
+    let (_engine, exe) = match setup {
+        Ok(pair) => {
+            let _ = ready_tx.send(Ok(()));
+            pair
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        let wi = &workers[req.worker];
+        let result = exe.run_f32(&[
+            (&wi.xs, &[d, rows, dim]),
+            (&wi.ys, &[d, rows]),
+            (&req.beta, &[dim]),
+            (&wi.coeffs, &[d, m]),
+        ]);
+        let _ = req.reply.send(result);
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.dim / self.m
+    }
+
+    fn encoded_gradient(
+        &self,
+        worker: usize,
+        _iter: usize,
+        beta: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let (reply_tx, reply_rx) = channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard.as_ref().context("PJRT executor stopped")?;
+            tx.send(EncodeRequest {
+                worker,
+                beta: beta.to_vec(),
+                reply: reply_tx,
+            })
+            .ok()
+            .context("PJRT executor channel closed")?;
+        }
+        let result = reply_rx.recv().context("PJRT executor dropped request")??;
+        out.clear();
+        out.extend_from_slice(&result);
+        Ok(())
+    }
+}
+
+impl Drop for PjrtBackend {
+    fn drop(&mut self) {
+        // Close the request channel, then join the executor.
+        self.tx.lock().unwrap().take();
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Master-side evaluator backed by the `predict` artifact. Single-thread
+/// use (`!Send` PJRT state stays on the caller's thread).
+pub struct PjrtPredictor {
+    exe: super::engine::Executable,
+    rows: usize,
+    dim: usize,
+}
+
+impl PjrtPredictor {
+    pub fn new(
+        engine: &PjrtEngine,
+        artifact_dir: &Path,
+        rows: usize,
+        dim: usize,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let key = ArtifactKey::predict(rows, dim);
+        let path = manifest
+            .resolve(&key)
+            .with_context(|| format!("no predict artifact for rows={rows} dim={dim}"))?;
+        Ok(PjrtPredictor { exe: engine.load_hlo_text(&path)?, rows, dim })
+    }
+
+    /// σ(Xβ) for an `rows × dim` block.
+    pub fn predict(&self, x: &[f32], beta: &[f32]) -> Result<Vec<f32>> {
+        self.exe.run_f32(&[(x, &[self.rows, self.dim]), (beta, &[self.dim])])
+    }
+}

@@ -1,0 +1,25 @@
+//! §VI probabilistic runtime model and the virtual cluster built on it.
+//!
+//! The paper models per-worker computation time as `d·T⁽¹⁾` with
+//! `T⁽¹⁾ ~ t₁ + Exp(λ₁)` and communication time for an `l/m`-dimensional
+//! vector as `T⁽²⁾/m` with `T⁽²⁾ ~ t₂ + Exp(λ₂)` (assumptions 1–3).
+//! The total per-iteration runtime is the `(n-s)`-th order statistic of
+//! the n i.i.d. worker finish times (Eq. 28–29).
+//!
+//! - [`model`]: the mixture distribution (Eq. 27) and `E[T_tot]`
+//!   quadrature — regenerates the §VI-A numeric tables.
+//! - [`order_stats`]: generic order-statistic expectation machinery.
+//! - [`quadrature`]: adaptive Simpson integrator substrate.
+//! - [`optimize`]: optimal `(d, s, m)` search + Propositions 1–2.
+//! - [`virtual_cluster`]: Monte-Carlo event simulation used by the Fig. 3
+//!   and Fig. 4 benches (and by the coordinator's virtual-time mode).
+
+pub mod model;
+pub mod optimize;
+pub mod order_stats;
+pub mod quadrature;
+pub mod virtual_cluster;
+
+pub use model::{DelayParams, WorkerRuntime};
+pub use optimize::{optimal_alpha, optimal_triple, prop1_optimal_d, TripleChoice};
+pub use virtual_cluster::{ClusterSample, VirtualCluster};

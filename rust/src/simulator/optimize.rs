@@ -1,0 +1,220 @@
+//! Optimal-triple search and the paper's closed-form extremes.
+//!
+//! The achievability frontier is `d = s + m` (Eq. 5), so the search space
+//! for fixed `n` is `{(d, m) : 1 <= m <= d <= n}` with `s = d - m` —
+//! exactly the lower-triangular table of §VI-A. Propositions 1 and 2 are
+//! provided both as closed forms and as test oracles for the search.
+
+use super::model::DelayParams;
+use super::order_stats::expected_total_runtime;
+
+/// A chosen design point with its predicted expected iteration time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TripleChoice {
+    pub d: usize,
+    pub s: usize,
+    pub m: usize,
+    pub expected_runtime: f64,
+}
+
+/// Exhaustive search over the tight frontier `s = d - m`.
+pub fn optimal_triple(params: &DelayParams, n: usize) -> TripleChoice {
+    let mut best: Option<TripleChoice> = None;
+    for d in 1..=n {
+        for m in 1..=d {
+            let s = d - m;
+            let e = expected_total_runtime(params, n, d, s, m);
+            if best.map_or(true, |b| e < b.expected_runtime) {
+                best = Some(TripleChoice { d, s, m, expected_runtime: e });
+            }
+        }
+    }
+    best.expect("n >= 1")
+}
+
+/// Search restricted to `m = 1` — the best the straggler-only schemes of
+/// \[11\]–\[13\] can do (baseline for Fig. 3 / §VI-A comparisons).
+pub fn optimal_triple_m1(params: &DelayParams, n: usize) -> TripleChoice {
+    let mut best: Option<TripleChoice> = None;
+    for d in 1..=n {
+        let s = d - 1;
+        let e = expected_total_runtime(params, n, d, s, 1);
+        if best.map_or(true, |b| e < b.expected_runtime) {
+            best = Some(TripleChoice { d, s, m: 1, expected_runtime: e });
+        }
+    }
+    best.expect("n >= 1")
+}
+
+/// The naive uncoded scheme: `d = 1, s = 0, m = 1` (wait for everyone).
+pub fn naive_choice(params: &DelayParams, n: usize) -> TripleChoice {
+    TripleChoice {
+        d: 1,
+        s: 0,
+        m: 1,
+        expected_runtime: expected_total_runtime(params, n, 1, 0, 1),
+    }
+}
+
+/// Proposition 1 (computation-dominant): the optimal `d` is `n` when
+/// `λ₁·t₁ < (Σ_{i=2}^n 1/i)/(n-1)` and `1` otherwise.
+pub fn prop1_optimal_d(params: &DelayParams, n: usize) -> usize {
+    let threshold: f64 = (2..=n).map(|i| 1.0 / i as f64).sum::<f64>() / (n as f64 - 1.0);
+    if params.lambda1 * params.t1 < threshold {
+        n
+    } else {
+        1
+    }
+}
+
+/// Proposition 2 (communication-dominant, large n): the optimal ratio
+/// `α = m/n` is the unique root in (0,1) of
+/// `α/(1-α) + ln(1-α) = λ₂·t₂`. Solved by bisection.
+pub fn optimal_alpha(lambda2: f64, t2: f64) -> f64 {
+    let target = lambda2 * t2;
+    let h = |a: f64| a / (1.0 - a) + (1.0 - a).ln() - target;
+    let (mut lo, mut hi) = (1e-12, 1.0 - 1e-12);
+    // h is increasing, h(0)=-target<0, h(1-)=+inf.
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if h(mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::order_stats::computation_dominant_expectation;
+
+    #[test]
+    fn table_vi1_optimum_is_d4_m3() {
+        let p = DelayParams::table_vi1();
+        let best = optimal_triple(&p, 8);
+        assert_eq!((best.d, best.s, best.m), (4, 1, 3));
+        assert!((best.expected_runtime - 21.3697).abs() < 5e-4);
+    }
+
+    #[test]
+    fn table_vi1_best_m1_is_d8() {
+        let p = DelayParams::table_vi1();
+        let best = optimal_triple_m1(&p, 8);
+        assert_eq!((best.d, best.s, best.m), (8, 7, 1));
+        assert!((best.expected_runtime - 24.1063).abs() < 5e-4);
+    }
+
+    #[test]
+    fn improvement_factors_match_paper() {
+        // §VI-A: "outperforms the uncoded scheme by 41% and the schemes in
+        // [11]-[13] by 11%".
+        let p = DelayParams::table_vi1();
+        let ours = optimal_triple(&p, 8).expected_runtime;
+        let naive = naive_choice(&p, 8).expected_runtime;
+        let m1 = optimal_triple_m1(&p, 8).expected_runtime;
+        let vs_naive = 1.0 - ours / naive;
+        let vs_m1 = 1.0 - ours / m1;
+        assert!((vs_naive - 0.41).abs() < 0.01, "vs naive {vs_naive}");
+        assert!((vs_m1 - 0.11).abs() < 0.01, "vs m1 {vs_m1}");
+    }
+
+    #[test]
+    fn prop1_extremes() {
+        // Small λ₁t₁ → replicate everything (d = n); large → d = 1.
+        let n = 10;
+        let fast = DelayParams { lambda1: 0.1, t1: 0.1, lambda2: 1.0, t2: 0.0 };
+        assert_eq!(prop1_optimal_d(&fast, n), n);
+        let slow = DelayParams { lambda1: 2.0, t1: 2.0, lambda2: 1.0, t2: 0.0 };
+        assert_eq!(prop1_optimal_d(&slow, n), 1);
+    }
+
+    #[test]
+    fn prop1_agrees_with_closed_form_search() {
+        // In the computation-dominant regime, searching the closed form
+        // (Eq. 30) over d must yield the Prop-1 endpoint.
+        let n = 12;
+        for (l1, t1) in [(0.3, 0.2), (1.5, 1.2), (0.9, 0.3), (0.8, 1.0)] {
+            let p = DelayParams { lambda1: l1, t1, lambda2: 1e9, t2: 0.0 };
+            let best_d = (1..=n)
+                .min_by(|&a, &b| {
+                    computation_dominant_expectation(&p, n, a)
+                        .partial_cmp(&computation_dominant_expectation(&p, n, b))
+                        .unwrap()
+                })
+                .unwrap();
+            assert_eq!(best_d, prop1_optimal_d(&p, n), "λ₁t₁ = {}", l1 * t1);
+        }
+    }
+
+    #[test]
+    fn optimal_alpha_solves_equation() {
+        for (l2, t2) in [(0.1, 6.0), (0.5, 2.0), (1.0, 10.0)] {
+            let a = optimal_alpha(l2, t2);
+            assert!(a > 0.0 && a < 1.0);
+            let lhs = a / (1.0 - a) + (1.0 - a).ln();
+            assert!((lhs - l2 * t2).abs() < 1e-9, "α={a}");
+        }
+    }
+
+    #[test]
+    fn optimal_alpha_increases_with_t2() {
+        // More fixed communication cost → larger reduction factor.
+        let a1 = optimal_alpha(0.1, 2.0);
+        let a2 = optimal_alpha(0.1, 20.0);
+        assert!(a2 > a1);
+    }
+
+    #[test]
+    fn table_vi2_spot_cells() {
+        // §VI-A second table (n=10, λ₁=0.6, t₁=1.5):
+        //   λ₂=0.05, t₂=1.5  → (10,9,1)
+        //   λ₂=0.1,  t₂=12   → (4,1,3)
+        //   λ₂=0.3,  t₂=1.5  → (1,0,1)
+        //   λ₂=0.2,  t₂=48   → (10,6,4)
+        let cases = [
+            (0.05, 1.5, (10, 9, 1)),
+            (0.1, 12.0, (4, 1, 3)),
+            (0.3, 1.5, (1, 0, 1)),
+            (0.2, 48.0, (10, 6, 4)),
+        ];
+        for (l2, t2, want) in cases {
+            let p = DelayParams::table_vi2_base(l2, t2);
+            let best = optimal_triple(&p, 10);
+            assert_eq!(
+                (best.d, best.s, best.m),
+                want,
+                "λ₂={l2}, t₂={t2}: got ({},{},{})",
+                best.d,
+                best.s,
+                best.m
+            );
+        }
+    }
+
+    #[test]
+    fn table_vi3_spot_cells() {
+        // §VI-A third table (n=10, λ₂=0.1, t₂=6):
+        //   λ₁=0.5, t₁=1   → (10,8,2);  λ₁=0.8, t₁=1.6 → (4,1,3);
+        //   λ₁=0.5, t₁=2.8 → (2,0,2).
+        let cases = [
+            (0.5, 1.0, (10, 8, 2)),
+            (0.8, 1.6, (4, 1, 3)),
+            (0.5, 2.8, (2, 0, 2)),
+        ];
+        for (l1, t1, want) in cases {
+            let p = DelayParams::table_vi3_base(l1, t1);
+            let best = optimal_triple(&p, 10);
+            assert_eq!(
+                (best.d, best.s, best.m),
+                want,
+                "λ₁={l1}, t₁={t1}: got ({},{},{})",
+                best.d,
+                best.s,
+                best.m
+            );
+        }
+    }
+}

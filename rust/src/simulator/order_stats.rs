@@ -1,0 +1,151 @@
+//! Order-statistic expectations (Eq. 29).
+//!
+//! `T_{d,s,m}` is the `(n-s)`-th order statistic of `n` i.i.d. copies of
+//! the random part `T`. Its density is
+//! `n!/((n-s-1)!·s!) · F(t)^{n-s-1} · (1-F(t))^s · f(t)`,
+//! and `E[T_tot] = d·t₁ + t₂/m + ∫ t·dens(t) dt`.
+
+use super::model::{DelayParams, WorkerRuntime};
+use super::quadrature::integrate_tail;
+
+/// ln n! via lgamma-free accumulation (n <= a few hundred here).
+fn ln_factorial(n: usize) -> f64 {
+    (2..=n).map(|i| (i as f64).ln()).sum()
+}
+
+/// The combinatorial prefactor `n!/((n-s-1)!·s!)` (in log space to avoid
+/// overflow for larger n).
+fn order_prefactor(n: usize, s: usize) -> f64 {
+    (ln_factorial(n) - ln_factorial(n - s - 1) - ln_factorial(s)).exp()
+}
+
+/// Density of the `(n-s)`-th order statistic of the random part.
+pub fn order_stat_pdf(w: &WorkerRuntime, n: usize, s: usize, t: f64) -> f64 {
+    let f = w.cdf_random(t);
+    let pdf = w.pdf_random(t);
+    if pdf == 0.0 {
+        return 0.0;
+    }
+    let pre = order_prefactor(n, s);
+    pre * f.powi((n - s - 1) as i32) * (1.0 - f).powi(s as i32) * pdf
+}
+
+/// `E[T_{d,s,m}]` — expectation of the `(n-s)`-th order statistic.
+pub fn expected_order_stat(w: &WorkerRuntime, n: usize, s: usize) -> f64 {
+    // Scale: order stats of n samples sit around mean·ln(n) at worst.
+    let scale = w.mean_random() * (1.0 + (n as f64).ln());
+    integrate_tail(
+        |t| t * order_stat_pdf(w, n, s, t),
+        scale,
+        w.a.min(w.b),
+        1e-10,
+    )
+}
+
+/// Full expected iteration runtime (Eq. 28 expectation):
+/// `E[T_tot] = d·t₁ + t₂/m + E[T_{d,s,m}]`.
+pub fn expected_total_runtime(params: &DelayParams, n: usize, d: usize, s: usize, m: usize) -> f64 {
+    let w = WorkerRuntime::new(params, d, m);
+    w.shift + expected_order_stat(&w, n, s)
+}
+
+/// Closed form for the computation-dominant extreme (§VI, Eq. 30):
+/// `E[T_tot] = d·t₁ + (d/λ₁)·Σ_{i=0}^{n-d} 1/(n-i)` for `m = 1, s = d-1`,
+/// ignoring communication. Used as a test oracle.
+pub fn computation_dominant_expectation(params: &DelayParams, n: usize, d: usize) -> f64 {
+    let sum: f64 = (0..=n - d).map(|i| 1.0 / (n - i) as f64).sum();
+    d as f64 * params.t1 + d as f64 / params.lambda1 * sum
+}
+
+/// Closed form for the communication-dominant extreme (§VI):
+/// `E[T_tot] = t₂/m + (1/(m·λ₂))·Σ_{i=0}^{m-1} 1/(n-i)` for `d = n`,
+/// `s = n-m`, ignoring computation.
+pub fn communication_dominant_expectation(params: &DelayParams, n: usize, m: usize) -> f64 {
+    let sum: f64 = (0..m).map(|i| 1.0 / (n - i) as f64).sum();
+    params.t2 / m as f64 + sum / (m as f64 * params.lambda2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefactor_small_values() {
+        // n=5, s=1: 5!/3!/1! = 20
+        assert!((order_prefactor(5, 1) - 20.0).abs() < 1e-9);
+        // n=8, s=0: 8!/7!/0! = 8
+        assert!((order_prefactor(8, 0) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn order_stat_pdf_integrates_to_one() {
+        let p = DelayParams::table_vi1();
+        let w = WorkerRuntime::new(&p, 4, 3);
+        let mass = integrate_tail(
+            |t| order_stat_pdf(&w, 8, 1, t),
+            w.mean_random() * 3.0,
+            w.a.min(w.b),
+            1e-10,
+        );
+        assert!((mass - 1.0).abs() < 1e-6, "mass {mass}");
+    }
+
+    #[test]
+    fn max_order_stat_of_exponentials_harmonic() {
+        // Degenerate check: communication rate huge → T ≈ Exp(λ₁/d) alone;
+        // s = 0 (wait for all) gives E[max] = (d/λ₁)·H_n.
+        let p = DelayParams { lambda1: 1.0, t1: 0.0, lambda2: 1e9, t2: 0.0 };
+        let w = WorkerRuntime::new(&p, 1, 1);
+        let n = 6;
+        let got = expected_order_stat(&w, n, 0);
+        let want: f64 = (1..=n).map(|i| 1.0 / i as f64).sum();
+        assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+    }
+
+    #[test]
+    fn computation_dominant_matches_quadrature() {
+        // λ₂ huge and t₂ = 0 → communication vanishes; quadrature must
+        // match the Eq. 30 closed form.
+        let p = DelayParams { lambda1: 0.8, t1: 1.6, lambda2: 1e9, t2: 0.0 };
+        for d in [1usize, 3, 8] {
+            let n = 8;
+            let s = d - 1;
+            let got = expected_total_runtime(&p, n, d, s, 1);
+            let want = computation_dominant_expectation(&p, n, d);
+            assert!((got - want).abs() < 2e-3, "d={d}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn communication_dominant_matches_quadrature() {
+        let p = DelayParams { lambda1: 1e9, t1: 0.0, lambda2: 0.1, t2: 6.0 };
+        let n = 10;
+        for m in [1usize, 2, 5] {
+            let got = expected_total_runtime(&p, n, n, n - m, m);
+            let want = communication_dominant_expectation(&p, n, m);
+            assert!((got - want).abs() < 2e-3, "m={m}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn table_vi1_spot_values() {
+        // §VI-A numeric table (n=8, λ₁=.8, λ₂=.1, t₁=1.6, t₂=6), s=d-m:
+        // uncoded (1,0,1) = 36.1138; optimum (4,1,3) = 21.3697;
+        // best m=1 (8,7,1) = 24.1063.
+        let p = DelayParams::table_vi1();
+        let cases = [
+            (1usize, 0usize, 1usize, 36.1138),
+            (4, 1, 3, 21.3697),
+            (8, 7, 1, 24.1063),
+            (2, 0, 2, 23.1036),
+            (8, 0, 8, 42.0638),
+        ];
+        for (d, s, m, want) in cases {
+            let got = expected_total_runtime(&p, 8, d, s, m);
+            assert!(
+                (got - want).abs() < 5e-4,
+                "(d={d},s={s},m={m}): got {got:.4}, paper {want}"
+            );
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Property-testing substrate (no `proptest` offline).
+//!
+//! A small seeded harness: generate `cases` random inputs from closures
+//! over a [`Pcg64`], check an invariant, and on failure report the exact
+//! case index + root seed so the failure replays deterministically. Used
+//! to sweep coding-scheme invariants (any-(n-s)-workers decodability,
+//! placement counts, bound tightness) across randomized parameter space.
+
+use crate::rngs::{Pcg64, Rng};
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0x5eed_c0de }
+    }
+}
+
+/// Outcome of a single case.
+pub enum CaseResult {
+    Pass,
+    /// Failure with human-readable context.
+    Fail(String),
+    /// Case rejected by a precondition; does not count toward `cases`.
+    Discard,
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with replay info
+/// on the first failure. `gen` draws an input from the RNG.
+pub fn check<T: std::fmt::Debug>(
+    cfg: Config,
+    name: &str,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> CaseResult,
+) {
+    let mut rng = Pcg64::seed_from_u64(cfg.seed);
+    let mut passed = 0usize;
+    let mut discarded = 0usize;
+    let max_attempts = cfg.cases * 20;
+    let mut attempts = 0usize;
+    while passed < cfg.cases && attempts < max_attempts {
+        attempts += 1;
+        // Fork a per-case RNG so a failing case replays from (seed, index).
+        let mut case_rng = rng.fork(attempts as u64);
+        let input = gen(&mut case_rng);
+        match prop(&input) {
+            CaseResult::Pass => passed += 1,
+            CaseResult::Discard => discarded += 1,
+            CaseResult::Fail(why) => panic!(
+                "property `{name}` failed at attempt {attempts} \
+                 (seed={:#x}): {why}\ninput: {input:?}",
+                cfg.seed
+            ),
+        }
+    }
+    assert!(
+        passed >= cfg.cases,
+        "property `{name}`: too many discards ({discarded} discards, {passed} passes)"
+    );
+}
+
+/// Convenience: boolean property.
+pub fn check_bool<T: std::fmt::Debug>(
+    cfg: Config,
+    name: &str,
+    gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    check(cfg, name, gen, |t| {
+        if prop(t) {
+            CaseResult::Pass
+        } else {
+            CaseResult::Fail("predicate returned false".into())
+        }
+    });
+}
+
+/// Generator helpers for common parameter shapes.
+pub mod gen {
+    use super::*;
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.next_index(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * rng.next_f64()
+    }
+
+    /// A valid paper triple `(n, d, s, m)` with `n=k`, `d = s + m`,
+    /// `1 <= d <= n`, `m >= 1`, `s >= 0`, bounded by `n_max`.
+    pub fn scheme_triple(rng: &mut Pcg64, n_min: usize, n_max: usize) -> (usize, usize, usize, usize) {
+        let n = usize_in(rng, n_min, n_max);
+        let d = usize_in(rng, 1, n);
+        let m = usize_in(rng, 1, d);
+        let s = d - m;
+        (n, d, s, m)
+    }
+
+    /// Random f32 gradient matrix (k × l) with entries in [-1, 1).
+    pub fn gradients(rng: &mut Pcg64, k: usize, l: usize) -> Vec<Vec<f32>> {
+        (0..k)
+            .map(|_| (0..l).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check_bool(
+            Config { cases: 32, seed: 1 },
+            "add-commutes",
+            |rng| (rng.next_f64(), rng.next_f64()),
+            |&(a, b)| a + b == b + a,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_context() {
+        check_bool(
+            Config { cases: 8, seed: 2 },
+            "always-fails",
+            |rng| rng.next_u64(),
+            |_| false,
+        );
+    }
+
+    #[test]
+    fn discards_do_not_count() {
+        let mut discards = 0;
+        check(
+            Config { cases: 10, seed: 3 },
+            "half-discarded",
+            |rng| rng.next_u64(),
+            |&x| {
+                if x % 2 == 0 {
+                    discards += 1;
+                    CaseResult::Discard
+                } else {
+                    CaseResult::Pass
+                }
+            },
+        );
+        assert!(discards > 0);
+    }
+
+    #[test]
+    fn scheme_triple_is_valid() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        for _ in 0..200 {
+            let (n, d, s, m) = gen::scheme_triple(&mut rng, 2, 16);
+            assert!(d >= 1 && d <= n);
+            assert!(m >= 1);
+            assert_eq!(d, s + m);
+        }
+    }
+}

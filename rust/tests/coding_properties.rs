@@ -1,0 +1,199 @@
+//! Property-based integration tests over the coding layer: the paper's
+//! invariants swept across randomized `(n, d, s, m)` space with the
+//! in-crate testkit harness.
+
+use gradcode::coding::{
+    is_achievable, reconstruction_error, verify_placement_bound, Decoder, Encoder,
+    GradientCode, PolynomialCode, RandomCode, SchemeConfig,
+};
+use gradcode::rngs::{Pcg64, Rng};
+use gradcode::testkit::{self, gen, CaseResult, Config};
+
+/// Any tight triple with n <= 12 must decode exactly under every random
+/// straggler pattern (Vandermonde is well-conditioned in this range).
+#[test]
+fn property_poly_roundtrip_over_random_triples() {
+    testkit::check(
+        Config { cases: 40, seed: 0xc0de01 },
+        "poly-roundtrip",
+        |rng| {
+            // f32-payload regime: n <= 10 and m <= 3 keep the Vandermonde
+            // coefficients small enough for 24-bit mantissas; the paper's
+            // full n <= 20 stability claim is verified in f64 by
+            // `stability::reconstruction_error_f64` (the paper's own
+            // precision) in the stability bench and unit tests.
+            let n = 2 + rng.next_index(9); // 2..=10
+            let d = 1 + rng.next_index(n);
+            let m = (1 + rng.next_index(d)).min(3);
+            let s = d - m;
+            let l = m * (1 + rng.next_index(8));
+            let seed = rng.next_u64();
+            (n, d, s, m, l, seed)
+        },
+        |&(n, _d, s, m, l, seed)| {
+            let code = match PolynomialCode::new(SchemeConfig::tight(n, s, m).unwrap()) {
+                Ok(c) => c,
+                Err(e) => return CaseResult::Fail(format!("construction: {e}")),
+            };
+            let err = reconstruction_error(&code, l, 3, seed);
+            // f32 payload precision: large (d·m) combines accumulate a few
+            // ulp per term; 5e-3 still catches any structural decode bug
+            // (those produce O(1) errors).
+            if err < 5e-3 {
+                CaseResult::Pass
+            } else {
+                CaseResult::Fail(format!("rel err {err}"))
+            }
+        },
+    );
+}
+
+/// Same sweep for the §IV random-matrix scheme (larger n allowed).
+#[test]
+fn property_random_scheme_roundtrip() {
+    testkit::check(
+        Config { cases: 30, seed: 0xc0de02 },
+        "random-roundtrip",
+        |rng| {
+            let (n, d, s, m) = gen::scheme_triple(rng, 2, 20);
+            let l = m * (1 + rng.next_index(8));
+            let seed = rng.next_u64();
+            (n, d, s, m, l, seed)
+        },
+        |&(n, _d, s, m, l, seed)| {
+            let code = match RandomCode::new(SchemeConfig::tight(n, s, m).unwrap(), seed) {
+                Ok(c) => c,
+                Err(e) => return CaseResult::Fail(format!("construction: {e}")),
+            };
+            let err = reconstruction_error(&code, l, 3, seed ^ 1);
+            if err < 1e-2 {
+                CaseResult::Pass
+            } else {
+                CaseResult::Fail(format!("rel err {err}"))
+            }
+        },
+    );
+}
+
+/// Claim 1 (converse): every generated placement covers each subset at
+/// least s+m times; and sub-threshold triples are never achievable.
+#[test]
+fn property_bounds_consistency() {
+    testkit::check_bool(
+        Config { cases: 200, seed: 0xc0de03 },
+        "bounds-consistency",
+        |rng| gen::scheme_triple(rng, 2, 30),
+        |&(n, d, s, m)| {
+            let code = PolynomialCode::new(SchemeConfig::tight(n, s, m).unwrap()).unwrap();
+            is_achievable(n, n, d, s, m)
+                && verify_placement_bound(code.placement(), s, m)
+        },
+    );
+}
+
+/// Encode linearity: f(αg + βh) = αf(g) + βf(h) — the structural property
+/// Definition 1 condition 3 demands.
+#[test]
+fn property_encode_linearity() {
+    testkit::check(
+        Config { cases: 40, seed: 0xc0de04 },
+        "encode-linearity",
+        |rng| {
+            let (n, _d, s, m) = gen::scheme_triple(rng, 2, 10);
+            let l = m * (1 + rng.next_index(6));
+            let w = rng.next_index(n);
+            let a = rng.next_f64() as f32 * 2.0 - 1.0;
+            let b = rng.next_f64() as f32 * 2.0 - 1.0;
+            let seed = rng.next_u64();
+            (n, s, m, l, w, a, b, seed)
+        },
+        |&(n, s, m, l, w, a, b, seed)| {
+            let code = PolynomialCode::new(SchemeConfig::tight(n, s, m).unwrap()).unwrap();
+            let d = code.config().d;
+            let enc = Encoder::new(&code, w).unwrap();
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let g = gen::gradients(&mut rng, d, l);
+            let h = gen::gradients(&mut rng, d, l);
+            let combo: Vec<Vec<f32>> = (0..d)
+                .map(|j| (0..l).map(|k| a * g[j][k] + b * h[j][k]).collect())
+                .collect();
+            let vg: Vec<&[f32]> = g.iter().map(|v| v.as_slice()).collect();
+            let vh: Vec<&[f32]> = h.iter().map(|v| v.as_slice()).collect();
+            let vc: Vec<&[f32]> = combo.iter().map(|v| v.as_slice()).collect();
+            let fg = enc.encode(&vg).unwrap();
+            let fh = enc.encode(&vh).unwrap();
+            let fc = enc.encode(&vc).unwrap();
+            for v in 0..fc.len() {
+                let want = a * fg[v] + b * fh[v];
+                if (fc[v] - want).abs() > 1e-3 {
+                    return CaseResult::Fail(format!(
+                        "v={v}: {} vs {want} (n={n},s={s},m={m})",
+                        fc[v]
+                    ));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+/// Decode is straggler-pattern independent: two disjoint responder sets
+/// of size n-s yield the same reconstruction.
+#[test]
+fn property_decode_pattern_independent() {
+    testkit::check(
+        Config { cases: 30, seed: 0xc0de05 },
+        "decode-pattern-independent",
+        |rng| {
+            let n = 4 + rng.next_index(8); // 4..=11
+            let s = 1 + rng.next_index(2.min(n - 2)); // 1..=2
+            let m = 1 + rng.next_index(3);
+            if s + m > n {
+                return (0, 0, 0, 0, 0); // discarded below
+            }
+            let l = m * (1 + rng.next_index(4));
+            (n, s, m, l, rng.next_u64() as usize)
+        },
+        |&(n, s, m, l, seed)| {
+            if n == 0 {
+                return CaseResult::Discard;
+            }
+            let code = PolynomialCode::new(SchemeConfig::tight(n, s, m).unwrap()).unwrap();
+            let mut rng = Pcg64::seed_from_u64(seed as u64);
+            let grads = gen::gradients(&mut rng, n, l);
+            let mut fs = Vec::new();
+            for w in 0..n {
+                let enc = Encoder::new(&code, w).unwrap();
+                let views: Vec<&[f32]> = code
+                    .placement()
+                    .assigned(w)
+                    .iter()
+                    .map(|&t| grads[t].as_slice())
+                    .collect();
+                fs.push(enc.encode(&views).unwrap());
+            }
+            let decode_with = |stragglers: &[usize]| {
+                let avail: Vec<usize> =
+                    (0..n).filter(|w| !stragglers.contains(w)).collect();
+                let dec = Decoder::new(&code, &avail).unwrap();
+                let views: Vec<&[f32]> =
+                    dec.used_workers().iter().map(|&w| fs[w].as_slice()).collect();
+                dec.decode(&views).unwrap()
+            };
+            let st_a = Pcg64::seed_from_u64(seed as u64 ^ 7).sample_indices(n, s);
+            let st_b = Pcg64::seed_from_u64(seed as u64 ^ 13).sample_indices(n, s);
+            let ga = decode_with(&st_a);
+            let gb = decode_with(&st_b);
+            let scale = ga.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+            for k in 0..ga.len() {
+                if (ga[k] - gb[k]).abs() / scale > 1e-2 {
+                    return CaseResult::Fail(format!(
+                        "coord {k}: {} vs {} (n={n},s={s},m={m},A={st_a:?},B={st_b:?})",
+                        ga[k], gb[k]
+                    ));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}

@@ -1,0 +1,244 @@
+//! Cross-module integration over the rust backend: training dynamics,
+//! straggler tolerance under the virtual cluster, scheme equivalence,
+//! failure injection, mini-batch SGD, and the communication accounting
+//! the paper's tradeoff is about.
+
+use std::sync::Arc;
+
+use gradcode::coordinator::{
+    train, ComputeBackend, ExecutionMode, OptChoice, RustBackend, SchemeSpec,
+    TrainConfig, Trainer,
+};
+use gradcode::data::{train_test_split, CategoricalConfig, SyntheticCategorical};
+use gradcode::simulator::DelayParams;
+
+fn dataset(rows: usize, seed: u64) -> (gradcode::data::DenseDataset, gradcode::data::DenseDataset) {
+    let gen = SyntheticCategorical::new(CategoricalConfig::default(), seed);
+    let ds = gen.generate(rows, seed + 1);
+    train_test_split(&ds, 0.25, seed + 2)
+}
+
+fn config(n: usize, scheme: SchemeSpec, iters: usize, lr: f32) -> TrainConfig {
+    TrainConfig {
+        n,
+        scheme,
+        iters,
+        opt: OptChoice::Nag { lr, momentum: 0.9 },
+        eval_every: 10,
+        delays: Some(DelayParams::table_vi1()),
+        mode: ExecutionMode::Virtual,
+        seed: 0xabcd,
+        minibatch: None,
+    }
+}
+
+#[test]
+fn all_three_schemes_reach_similar_auc() {
+    // The paper's Fig. 4 message: same generalization, different clock.
+    let (train_ds, test_ds) = dataset(1600, 201);
+    let lr = 6.0 / train_ds.rows as f32;
+    let mut aucs = Vec::new();
+    for scheme in [
+        SchemeSpec::Uncoded,
+        SchemeSpec::Poly { s: 2, m: 1 },
+        SchemeSpec::Poly { s: 1, m: 2 },
+    ] {
+        let (log, _) = train(config(10, scheme, 120, lr), &train_ds, Some(&test_ds)).unwrap();
+        aucs.push((scheme.label(), log.final_auc().unwrap()));
+    }
+    for (label, auc) in &aucs {
+        assert!(*auc > 0.65, "{label}: AUC {auc}");
+    }
+    let max = aucs.iter().map(|(_, a)| *a).fold(0.0f64, f64::max);
+    let min = aucs.iter().map(|(_, a)| *a).fold(1.0f64, f64::min);
+    assert!(max - min < 0.06, "scheme AUCs diverged: {aucs:?}");
+}
+
+#[test]
+fn coded_scheme_transmits_m_times_less() {
+    let (train_ds, _) = dataset(800, 211);
+    let lr = 4.0 / train_ds.rows as f32;
+    let (log_m1, _) = train(
+        config(5, SchemeSpec::Poly { s: 2, m: 1 }, 10, lr),
+        &train_ds,
+        None,
+    )
+    .unwrap();
+    let (log_m2, _) = train(
+        config(5, SchemeSpec::Poly { s: 1, m: 2 }, 10, lr),
+        &train_ds,
+        None,
+    )
+    .unwrap();
+    let f1 = log_m1.total_floats_transmitted() as f64;
+    let f2 = log_m2.total_floats_transmitted() as f64;
+    // Per-worker payload halves with m=2 (same padded l => exactly 2x).
+    let ratio = f1 / f2;
+    assert!((ratio - 2.0).abs() < 0.05, "comm ratio {ratio}");
+}
+
+#[test]
+fn straggler_patterns_vary_across_iterations() {
+    // The virtual cluster must actually rotate stragglers; a fixed
+    // responder set would make the decoder cache hide decode bugs.
+    let (train_ds, _) = dataset(600, 221);
+    let lr = 4.0 / train_ds.rows as f32;
+    let (log, _) = train(
+        config(8, SchemeSpec::Poly { s: 2, m: 2 }, 40, lr),
+        &train_ds,
+        None,
+    )
+    .unwrap();
+    let distinct: std::collections::HashSet<Vec<usize>> =
+        log.records.iter().map(|r| r.responders.clone()).collect();
+    assert!(
+        distinct.len() > 5,
+        "expected varied responder sets, got {}",
+        distinct.len()
+    );
+    assert!(log.records.iter().all(|r| r.responders.len() == 6));
+}
+
+#[test]
+fn identical_seeds_reproduce_identical_runs() {
+    let (train_ds, test_ds) = dataset(600, 231);
+    let lr = 4.0 / train_ds.rows as f32;
+    let cfg = config(6, SchemeSpec::Poly { s: 1, m: 2 }, 30, lr);
+    let (log_a, beta_a) = train(cfg.clone(), &train_ds, Some(&test_ds)).unwrap();
+    let (log_b, beta_b) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
+    assert_eq!(beta_a, beta_b, "parameters must be bit-identical");
+    assert_eq!(log_a.total_sim_time(), log_b.total_sim_time());
+    let resp_a: Vec<_> = log_a.records.iter().map(|r| r.responders.clone()).collect();
+    let resp_b: Vec<_> = log_b.records.iter().map(|r| r.responders.clone()).collect();
+    assert_eq!(resp_a, resp_b);
+}
+
+/// Backend wrapper that permanently fails a chosen set of workers —
+/// failure injection for the coordinator's straggler-tolerance path.
+struct FailingBackend {
+    inner: RustBackend,
+    dead: Vec<usize>,
+}
+
+impl ComputeBackend for FailingBackend {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn out_dim(&self) -> usize {
+        self.inner.out_dim()
+    }
+    fn encoded_gradient(
+        &self,
+        worker: usize,
+        iter: usize,
+        beta: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        if self.dead.contains(&worker) {
+            anyhow::bail!("injected failure on worker {worker}");
+        }
+        self.inner.encoded_gradient(worker, iter, beta, out)
+    }
+}
+
+#[test]
+fn training_survives_injected_worker_failure() {
+    // One permanently-failed worker with s = 1: training must proceed and
+    // the failed worker must never appear among the responders.
+    let (train_ds, _) = dataset(500, 301);
+    let scheme = SchemeSpec::Poly { s: 1, m: 2 };
+    let code = scheme.build(5).unwrap();
+    let padded = SyntheticCategorical::pad_to_multiple(&train_ds, 2);
+    let inner = RustBackend::new(code.as_ref(), &padded).unwrap();
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(FailingBackend { inner, dead: vec![3] });
+    let cfg = TrainConfig {
+        n: 5,
+        scheme,
+        iters: 15,
+        opt: OptChoice::Sgd { lr: 4.0 / padded.rows as f32 },
+        eval_every: 5,
+        delays: Some(DelayParams::table_vi1()),
+        mode: ExecutionMode::Virtual,
+        seed: 0xdead,
+        minibatch: None,
+    };
+    let mut tr = Trainer::with_backend(cfg, code, backend, &padded, None).unwrap();
+    let log = tr.run().unwrap();
+    assert_eq!(log.records.len(), 15);
+    for r in &log.records {
+        assert_eq!(r.responders.len(), 4);
+        assert!(!r.responders.contains(&3), "dead worker used: {:?}", r.responders);
+    }
+    let first = log.records[0].loss.unwrap();
+    let last = log.final_loss().unwrap();
+    assert!(last < first, "loss must still decrease: {first} -> {last}");
+}
+
+#[test]
+#[should_panic(expected = "healthy results")]
+fn too_many_failures_panic_cleanly() {
+    // Two failed workers with s = 1 exceeds the tolerance — the gather
+    // must fail loudly rather than decode garbage.
+    let (train_ds, _) = dataset(500, 311);
+    let scheme = SchemeSpec::Poly { s: 1, m: 2 };
+    let code = scheme.build(5).unwrap();
+    let padded = SyntheticCategorical::pad_to_multiple(&train_ds, 2);
+    let inner = RustBackend::new(code.as_ref(), &padded).unwrap();
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(FailingBackend { inner, dead: vec![1, 3] });
+    let cfg = TrainConfig {
+        n: 5,
+        scheme,
+        iters: 3,
+        opt: OptChoice::Sgd { lr: 0.01 },
+        eval_every: 3,
+        delays: None,
+        mode: ExecutionMode::Virtual,
+        seed: 0xdead,
+        minibatch: None,
+    };
+    let mut tr = Trainer::with_backend(cfg, code, backend, &padded, None).unwrap();
+    let _ = tr.run();
+}
+
+#[test]
+fn minibatch_sgd_trains_and_transmits_same() {
+    // §II: the scheme applies to mini-batch SGD unchanged — the coded
+    // payload size is independent of the batch size.
+    let (train_ds, test_ds) = dataset(1200, 321);
+    let mut cfg = config(6, SchemeSpec::Poly { s: 1, m: 2 }, 80, 8.0 / 900.0);
+    cfg.minibatch = Some(0.25);
+    let (log, _) = train(cfg.clone(), &train_ds, Some(&test_ds)).unwrap();
+    assert!(log.final_auc().unwrap() > 0.65, "minibatch AUC {:?}", log.final_auc());
+    // same floats/iter as full batch
+    cfg.minibatch = None;
+    let (log_full, _) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
+    assert_eq!(
+        log.total_floats_transmitted(),
+        log_full.total_floats_transmitted()
+    );
+}
+
+#[test]
+fn random_scheme_handles_extra_responders() {
+    // §IV decode uses ALL responders (pseudo-inverse), so even when
+    // every worker responds the decode must stay exact.
+    let (train_ds, test_ds) = dataset(800, 241);
+    let lr = 4.0 / train_ds.rows as f32;
+    let cfg = TrainConfig {
+        n: 8,
+        scheme: SchemeSpec::Random { s: 2, m: 2, seed: 5 },
+        iters: 60,
+        opt: OptChoice::Nag { lr, momentum: 0.9 },
+        eval_every: 15,
+        delays: None, // no stragglers: all 8 respond, decode from 8 > n-s
+        mode: ExecutionMode::Virtual,
+        seed: 0xbeef,
+        minibatch: None,
+    };
+    let (log, _) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
+    let first = log.records[0].loss.unwrap();
+    let last = log.final_loss().unwrap();
+    assert!(last < first * 0.9, "{first} -> {last}");
+}

@@ -1,0 +1,116 @@
+//! Integration: the AOT PJRT path vs the pure-rust reference backend.
+//!
+//! Requires `make artifacts` (shapes n=10, d=3, m∈{1,2}, rows=64, l=512
+//! plus predict r=256). Tests skip with a notice when artifacts are
+//! absent so `cargo test` stays green pre-`make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use gradcode::coding::{GradientCode, PolynomialCode, SchemeConfig};
+use gradcode::coordinator::{
+    ComputeBackend, ExecutionMode, OptChoice, RustBackend, SchemeSpec, TrainConfig,
+    Trainer,
+};
+use gradcode::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
+use gradcode::model::LogisticModel;
+use gradcode::runtime::{Manifest, PjrtBackend, PjrtEngine, PjrtPredictor};
+use gradcode::simulator::DelayParams;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Manifest::default_dir();
+    Manifest::load(&dir).ok().filter(|m| !m.is_empty()).map(|_| dir)
+}
+
+/// Synthetic data padded to the artifact shapes (n=10, rows/subset=64,
+/// l=512).
+fn dataset(m: usize) -> DenseDataset {
+    let cfg = CategoricalConfig {
+        columns: 10,
+        cardinality: (16, 48),
+        ..Default::default()
+    };
+    let gen = SyntheticCategorical::new(cfg, 101);
+    let ds = gen.generate(640, 102);
+    assert!(ds.cols <= 512, "schema too wide: {}", ds.cols);
+    let _ = m;
+    ds.pad_cols(512)
+}
+
+#[test]
+fn pjrt_worker_matches_rust_backend() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let code = PolynomialCode::new(SchemeConfig::tight(10, 1, 2).unwrap()).unwrap();
+    let ds = dataset(2);
+    let pjrt = PjrtBackend::new(&dir, &code, &ds).unwrap();
+    let rust = RustBackend::new(&code, &ds).unwrap();
+    assert_eq!(pjrt.dim(), rust.dim());
+    assert_eq!(pjrt.out_dim(), rust.out_dim());
+
+    let beta: Vec<f32> = (0..512).map(|i| ((i as f32) * 0.013).sin() * 0.05).collect();
+    let mut fa = Vec::new();
+    let mut fb = Vec::new();
+    for w in [0usize, 3, 9] {
+        pjrt.encoded_gradient(w, 0, &beta, &mut fa).unwrap();
+        rust.encoded_gradient(w, 0, &beta, &mut fb).unwrap();
+        assert_eq!(fa.len(), 256);
+        let scale = fb.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+        for j in 0..fa.len() {
+            assert!(
+                (fa[j] - fb[j]).abs() / scale < 1e-3,
+                "worker {w} coord {j}: pjrt {} vs rust {}",
+                fa[j],
+                fb[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_backend_trains_end_to_end() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let ds = dataset(2);
+    let code: Arc<dyn GradientCode> =
+        Arc::new(PolynomialCode::new(SchemeConfig::tight(10, 1, 2).unwrap()).unwrap());
+    let backend: Arc<dyn ComputeBackend> =
+        Arc::new(PjrtBackend::new(&dir, code.as_ref(), &ds).unwrap());
+    let cfg = TrainConfig {
+        n: 10,
+        scheme: SchemeSpec::Poly { s: 1, m: 2 },
+        iters: 20,
+        opt: OptChoice::Nag { lr: 6.0 / ds.rows as f32, momentum: 0.9 },
+        eval_every: 5,
+        delays: Some(DelayParams::table_vi1()),
+        mode: ExecutionMode::Virtual,
+        seed: 3,
+        minibatch: None,
+    };
+    let mut trainer = Trainer::with_backend(cfg, code, backend, &ds, None).unwrap();
+    let log = trainer.run().unwrap();
+    let first = log.records[0].loss.unwrap();
+    let last = log.final_loss().unwrap();
+    assert!(last < first, "loss must decrease: {first} -> {last}");
+}
+
+#[test]
+fn pjrt_predict_matches_rust_model() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let ds = dataset(2).select_rows(&(0..256).collect::<Vec<_>>());
+    let engine = PjrtEngine::cpu().unwrap();
+    let pred = PjrtPredictor::new(&engine, &dir, 256, 512).unwrap();
+    let beta: Vec<f32> = (0..512).map(|i| ((i as f32) * 0.07).cos() * 0.1).collect();
+    let got = pred.predict(&ds.x, &beta).unwrap();
+    let want = LogisticModel::predict(&ds, &beta);
+    for j in 0..256 {
+        assert!((got[j] - want[j]).abs() < 1e-4, "row {j}: {} vs {}", got[j], want[j]);
+    }
+}
