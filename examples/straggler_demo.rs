@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
             mode,
             seed: 5,
             minibatch: None,
+            quorum: None,
         };
         let t0 = Instant::now();
         let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;

@@ -13,21 +13,55 @@
 //!
 //!     cargo run --release --example train_e2e -- [--iters 300] [--backend auto|rust|pjrt]
 
-use std::sync::Arc;
-
 use gradcode::bench::Table;
 use gradcode::cli::Command;
 use gradcode::coordinator::{
     ExecutionMode, OptChoice, SchemeSpec, TrainConfig, Trainer,
 };
-use gradcode::data::{train_test_split, CategoricalConfig, SyntheticCategorical};
+use gradcode::data::{train_test_split, CategoricalConfig, DenseDataset, SyntheticCategorical};
 use gradcode::metrics::RunLog;
-use gradcode::runtime::{Manifest, PjrtBackend};
 use gradcode::simulator::DelayParams;
 
 const N: usize = 10;
 const ROWS_PER_SUBSET: usize = 64; // must match the artifact shape
 const DIM: usize = 512; // must match the artifact shape
+
+/// Whether PJRT artifacts are present (always false without the feature).
+#[cfg(feature = "pjrt")]
+fn pjrt_available() -> bool {
+    use gradcode::runtime::Manifest;
+    Manifest::load(&Manifest::default_dir()).map(|m| !m.is_empty()).unwrap_or(false)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_available() -> bool {
+    false
+}
+
+/// Build a PJRT-backed trainer; errors without the `pjrt` feature.
+#[cfg(feature = "pjrt")]
+fn pjrt_trainer(
+    cfg: TrainConfig,
+    scheme: SchemeSpec,
+    train_ds: &DenseDataset,
+    test_ds: &DenseDataset,
+) -> anyhow::Result<Trainer> {
+    use gradcode::runtime::{Manifest, PjrtBackend};
+    use std::sync::Arc;
+    let code = scheme.build(N)?;
+    let backend = Arc::new(PjrtBackend::new(&Manifest::default_dir(), code.as_ref(), train_ds)?);
+    Trainer::with_backend(cfg, code, backend, train_ds, Some(test_ds))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_trainer(
+    _cfg: TrainConfig,
+    _scheme: SchemeSpec,
+    _train_ds: &DenseDataset,
+    _test_ds: &DenseDataset,
+) -> anyhow::Result<Trainer> {
+    anyhow::bail!("--backend pjrt requires building with --features pjrt")
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Command::new("train_e2e", "end-to-end coded training driver")
@@ -55,7 +89,7 @@ fn main() -> anyhow::Result<()> {
     let want_pjrt = match args.get_str("backend") {
         "rust" => false,
         "pjrt" => true,
-        _ => Manifest::load(&Manifest::default_dir()).map(|m| !m.is_empty()).unwrap_or(false),
+        _ => pjrt_available(),
     };
 
     let lr = 6.0 / train_ds.rows as f32;
@@ -76,16 +110,11 @@ fn main() -> anyhow::Result<()> {
             mode: ExecutionMode::Virtual,
             seed,
             minibatch: None,
+            quorum: None,
         };
-        let code = scheme.build(N)?;
         let mut trainer = if want_pjrt {
-            let backend = Arc::new(PjrtBackend::new(
-                &Manifest::default_dir(),
-                code.as_ref(),
-                &train_ds,
-            )?);
             println!("[{}] backend: PJRT (AOT JAX/Pallas artifact)", scheme.label());
-            Trainer::with_backend(cfg, code, backend, &train_ds, Some(&test_ds))?
+            pjrt_trainer(cfg, scheme, &train_ds, &test_ds)?
         } else {
             println!("[{}] backend: rust reference", scheme.label());
             Trainer::new(cfg, &train_ds, Some(&test_ds))?

@@ -95,6 +95,7 @@ fn main() -> anyhow::Result<()> {
                 mode: ExecutionMode::Virtual,
                 seed: args.get_u64("seed"),
                 minibatch: None,
+                quorum: None,
             };
             let (log, _) = train(cfg, &ds, None)?;
             measured.push((label.clone(), choice, log.mean_iteration_sim_time()));

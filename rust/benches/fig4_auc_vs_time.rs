@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
                 mode: ExecutionMode::Virtual,
                 seed: args.get_u64("seed"),
                 minibatch: None,
+                quorum: None,
             };
             let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;
             logs.push((label.clone(), log));

@@ -16,7 +16,6 @@ use gradcode::coordinator::{ComputeBackend, RustBackend};
 use gradcode::data::{CategoricalConfig, SyntheticCategorical};
 use gradcode::model::LogisticModel;
 use gradcode::rngs::{Pcg64, Rng};
-use gradcode::runtime::{Manifest, PjrtBackend};
 
 fn main() -> anyhow::Result<()> {
     let args = Command::new("hotpath", "encode/decode/gradient microbenches")
@@ -120,22 +119,28 @@ fn main() -> anyhow::Result<()> {
         "—".into(),
     ]);
 
-    // --- full worker step via PJRT artifact ---
-    let dir = Manifest::default_dir();
-    if Manifest::load(&dir).map(|mf| !mf.is_empty()).unwrap_or(false) {
-        let pjrt = PjrtBackend::new(&dir, &code10, &train)?;
-        let st = b.run(|| {
-            pjrt.encoded_gradient(0, 0, black_box(&beta512), &mut f).unwrap();
-        });
-        table.row(&[
-            "worker step (PJRT artifact)".into(),
-            Stats::human(st.mean_ns),
-            Stats::human(st.p99_ns),
-            "—".into(),
-        ]);
-    } else {
-        println!("(skipping PJRT bench: run `make artifacts`)");
+    // --- full worker step via PJRT artifact (pjrt feature only) ---
+    #[cfg(feature = "pjrt")]
+    {
+        use gradcode::runtime::{Manifest, PjrtBackend};
+        let dir = Manifest::default_dir();
+        if Manifest::load(&dir).map(|mf| !mf.is_empty()).unwrap_or(false) {
+            let pjrt = PjrtBackend::new(&dir, &code10, &train)?;
+            let st = b.run(|| {
+                pjrt.encoded_gradient(0, 0, black_box(&beta512), &mut f).unwrap();
+            });
+            table.row(&[
+                "worker step (PJRT artifact)".into(),
+                Stats::human(st.mean_ns),
+                Stats::human(st.p99_ns),
+                "—".into(),
+            ]);
+        } else {
+            println!("(skipping PJRT bench: run `make artifacts`)");
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(skipping PJRT bench: build with --features pjrt)");
 
     table.print();
     println!(

@@ -9,19 +9,32 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Error raised while parsing arguments.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag `{0}` (try --help)")]
     UnknownFlag(String),
-    #[error("flag `--{0}` expects a value")]
     MissingValue(String),
-    #[error("invalid value `{value}` for `--{flag}`: {reason}")]
     InvalidValue { flag: String, value: String, reason: String },
-    #[error("unknown subcommand `{0}` (try --help)")]
     UnknownSubcommand(String),
-    #[error("help requested")]
     HelpRequested,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(flag) => write!(f, "unknown flag `{flag}` (try --help)"),
+            CliError::MissingValue(flag) => write!(f, "flag `--{flag}` expects a value"),
+            CliError::InvalidValue { flag, value, reason } => {
+                write!(f, "invalid value `{value}` for `--{flag}`: {reason}")
+            }
+            CliError::UnknownSubcommand(cmd) => {
+                write!(f, "unknown subcommand `{cmd}` (try --help)")
+            }
+            CliError::HelpRequested => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 #[derive(Debug, Clone)]
 struct FlagSpec {

@@ -1,0 +1,526 @@
+//! Approximate gradient coding with partial recovery.
+//!
+//! The exact schemes of §III/§IV guarantee perfect reconstruction of the
+//! sum gradient from *any* `n - s` responders, at the price of Theorem
+//! 1's load `d >= s + m`. The approximate regime studied by Wang, Liu &
+//! Shroff ("Fundamental Limits of Approximate Gradient Coding") and
+//! Sarmasarkar, Lalitha & Karamchandani ("On Gradient Coding with
+//! Partial Recovery") relaxes exactness: the master proceeds once a
+//! *quorum* of `r` responders (possibly `r < n - s_exact`) has arrived
+//! and accepts a bounded decoding error in exchange for a much shorter
+//! straggler tail.
+//!
+//! [`ApproxCode`] implements the fractional-repetition-style member of
+//! that family on the cyclic placement: worker `w` holds subsets
+//! `w, …, w+d-1 (mod n)` and transmits the *uniform average*
+//! `f_w = (1/d) Σ_{t ∈ assigned(w)} g_t` (so `m = 1` and every subset is
+//! replicated `d` times, like the FRC/BGC constructions). Decoding is a
+//! **least-squares partial decoder**: for a responder set `F` it solves
+//!
+//! ```text
+//!   min_a ‖ A_F^T a − 1 ‖₂        (A_F = responder rows of the n×n
+//!                                  encode matrix A, 1 = all-ones target)
+//! ```
+//!
+//! via the normal equations `A_F A_F^T a = A_F 1 = 1` and returns both
+//! the combining weights `a` and the *coefficient residual*
+//! `ε(F) = ‖A_F^T a − 1‖₂` — the quantity the approximate-GC literature
+//! calls the decoding error. The estimate `ĝ = Σ_i a_i f_i` then
+//! satisfies the computable bound
+//!
+//! ```text
+//!   ‖ĝ − g_sum‖₂  ≤  Σ_t |e_t| · ‖g_t‖₂   ≤   ε(F) · √(Σ_t ‖g_t‖₂²)
+//! ```
+//!
+//! with `e = A_F^T a − 1` (triangle inequality per subset, then
+//! Cauchy–Schwarz). Key properties, asserted in the tests below:
+//!
+//! - **exactness at full quorum**: with all `n` responders the all-ones
+//!   weights reproduce `g_sum` exactly (`ε = 0`), so the scheme degrades
+//!   to exact recovery when nobody straggles;
+//! - **monotone error bound**: removing responders can only grow the
+//!   least-squares residual, so the reported bound is monotone
+//!   non-increasing in the quorum size;
+//! - **validity**: the measured ℓ2 error of the f32 decode path stays
+//!   within the reported bound.
+//!
+//! The quorum policy that consumes this scheme lives in
+//! [`crate::coordinator`] (`TrainConfig::quorum`), and the §VI runtime
+//! model extension that predicts time *and* residual versus quorum lives
+//! in [`crate::simulator::approx`].
+
+use super::{CodingError, DecodeWeights, GradientCode, Placement, SchemeConfig};
+use crate::linalg::{dot_f64, Lu, Matrix};
+
+/// Fractional-repetition-style approximate gradient code (cyclic
+/// placement, uniform-average encode, least-squares partial decode).
+pub struct ApproxCode {
+    cfg: SchemeConfig,
+    placement: Placement,
+    /// `n × n` encode matrix `A`: `A[w][t] = 1/d` iff worker `w` holds
+    /// subset `t`.
+    a: Matrix,
+}
+
+impl ApproxCode {
+    /// Build for `n` workers with replication `d` and a target quorum of
+    /// `quorum` responders (the master proceeds once `quorum` results
+    /// have arrived; `quorum = n` degenerates to exact recovery).
+    ///
+    /// Note the deliberate difference from the exact schemes: the triple
+    /// is *not* constrained by Theorem 1 (`d >= s + m`) because recovery
+    /// below full coverage is approximate by design. `SchemeConfig.s` is
+    /// set to `n - quorum` so that [`SchemeConfig::wait_for`] returns the
+    /// quorum and the coordinator treats the scheme uniformly.
+    pub fn new(n: usize, d: usize, quorum: usize) -> Result<Self, CodingError> {
+        if n == 0 || d == 0 {
+            return Err(CodingError::InvalidConfig(format!(
+                "n and d must be positive (n={n}, d={d})"
+            )));
+        }
+        if d > n {
+            return Err(CodingError::InvalidConfig(format!("d={d} exceeds n={n}")));
+        }
+        if quorum == 0 || quorum > n {
+            return Err(CodingError::InvalidConfig(format!(
+                "quorum={quorum} must be in 1..={n}"
+            )));
+        }
+        let placement = Placement::cyclic(n, d);
+        let inv_d = 1.0 / d as f64;
+        let mut a = Matrix::zeros(n, n);
+        for w in 0..n {
+            for t in placement.assigned(w) {
+                a[(w, t)] = inv_d;
+            }
+        }
+        let cfg = SchemeConfig { n, d, s: n - quorum, m: 1 };
+        Ok(ApproxCode { cfg, placement, a })
+    }
+
+    /// Build from a quorum *fraction* `q ∈ (0, 1]`: the master waits for
+    /// `ceil(q·n)` responders.
+    pub fn with_quorum_fraction(n: usize, d: usize, q: f64) -> Result<Self, CodingError> {
+        if !(q > 0.0 && q <= 1.0) {
+            return Err(CodingError::InvalidConfig(format!(
+                "quorum fraction {q} must be in (0, 1]"
+            )));
+        }
+        Self::new(n, d, quorum_count(n, q))
+    }
+
+    /// Number of responders the master waits for.
+    pub fn quorum(&self) -> usize {
+        self.cfg.wait_for()
+    }
+
+    /// The `n × n` encode matrix `A` (row per worker, column per subset).
+    pub fn matrix_a(&self) -> &Matrix {
+        &self.a
+    }
+
+    /// Least-squares partial decode for an arbitrary responder set
+    /// (any non-empty subset of workers — fewer than the quorum is
+    /// accepted too, with a correspondingly larger residual).
+    pub fn partial_decode(&self, available: &[usize]) -> Result<PartialDecode, CodingError> {
+        let n = self.cfg.n;
+        if available.is_empty() {
+            return Err(CodingError::NotEnoughWorkers { need: 1, got: 0 });
+        }
+        let mut seen = vec![false; n];
+        for &w in available {
+            if w >= n {
+                return Err(CodingError::WorkerOutOfRange(w));
+            }
+            if seen[w] {
+                return Err(CodingError::InvalidConfig(format!(
+                    "duplicate worker {w} in responder set"
+                )));
+            }
+            seen[w] = true;
+        }
+        let r = available.len();
+        let weights = if r == n {
+            // Full quorum: Σ_w f_w = (1/d)·d·Σ_t g_t = g_sum — the
+            // all-ones weights are exact for any responder ordering, and
+            // skipping the solve avoids the (possibly singular) Gram.
+            vec![1.0; n]
+        } else {
+            // Normal equations  (A_F A_F^T) a = A_F·1 = 1  (the rhs is
+            // all-ones because every row of A sums to d·(1/d) = 1).
+            let mut gram = Matrix::from_fn(r, r, |i, j| {
+                dot_f64(self.a.row(available[i]), self.a.row(available[j]))
+            });
+            let rhs = vec![1.0; r];
+            match Lu::factor(&gram).and_then(|lu| lu.solve(&rhs)) {
+                Ok(a) => a,
+                Err(_) => {
+                    // Rank-deficient responder pattern (duplicated
+                    // coverage): Tikhonov fallback. The residual below is
+                    // computed from the weights actually used, so the
+                    // reported bound stays valid.
+                    let delta = 1e-9 * (0..r).map(|i| gram[(i, i)]).sum::<f64>().max(1.0)
+                        / r as f64;
+                    for i in 0..r {
+                        gram[(i, i)] += delta;
+                    }
+                    Lu::factor(&gram).and_then(|lu| lu.solve(&rhs)).map_err(|e| {
+                        CodingError::SingularDecode {
+                            available: available.to_vec(),
+                            source: e,
+                        }
+                    })?
+                }
+            }
+        };
+        // e_t = Σ_i a_i A[w_i, t] − 1: the per-subset coefficient error.
+        let mut subset_errors = vec![-1.0f64; n];
+        for (i, &w) in available.iter().enumerate() {
+            let ai = weights[i];
+            for t in self.placement.assigned(w) {
+                subset_errors[t] += ai * self.a[(w, t)];
+            }
+        }
+        let coeff_residual = subset_errors.iter().map(|e| e * e).sum::<f64>().sqrt();
+        Ok(PartialDecode {
+            weights: DecodeWeights { used: available.to_vec(), weights, m: 1 },
+            subset_errors,
+            coeff_residual,
+        })
+    }
+}
+
+/// Quorum count for a fraction `q` of `n` workers (`ceil`, clamped to
+/// `1..=n`; 0 for `n = 0`, which scheme construction then rejects).
+pub fn quorum_count(n: usize, q: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    ((q * n as f64).ceil() as usize).clamp(1, n)
+}
+
+/// Result of [`ApproxCode::partial_decode`]: combining weights plus the
+/// decoder's own error accounting.
+#[derive(Debug, Clone)]
+pub struct PartialDecode {
+    /// Weights for [`crate::coding::Decoder::from_weights`] (`m = 1`).
+    pub weights: DecodeWeights,
+    /// `e_t = (A_F^T a − 1)_t` — signed coefficient error per subset.
+    pub subset_errors: Vec<f64>,
+    /// `ε(F) = ‖e‖₂`, the scheme's decoding residual (0 ⇔ exact).
+    pub coeff_residual: f64,
+}
+
+impl PartialDecode {
+    /// Computable ℓ2 error bound given the per-subset gradient norms:
+    /// `‖ĝ − g_sum‖₂ ≤ Σ_t |e_t|·‖g_t‖₂`.
+    pub fn error_bound(&self, subset_norms: &[f64]) -> f64 {
+        assert_eq!(subset_norms.len(), self.subset_errors.len(), "one norm per subset");
+        self.subset_errors
+            .iter()
+            .zip(subset_norms)
+            .map(|(e, g)| e.abs() * g)
+            .sum()
+    }
+
+    /// Norm-free bound with a uniform cap `‖g_t‖₂ ≤ max_norm`:
+    /// `‖ĝ − g_sum‖₂ ≤ ‖e‖₁ · max_norm`.
+    pub fn uniform_error_bound(&self, max_norm: f64) -> f64 {
+        self.subset_errors.iter().map(|e| e.abs()).sum::<f64>() * max_norm
+    }
+
+    /// Whether this responder set recovers the sum exactly (up to `tol`
+    /// in coefficient space).
+    pub fn is_exact(&self, tol: f64) -> bool {
+        self.coeff_residual <= tol
+    }
+}
+
+impl GradientCode for ApproxCode {
+    fn config(&self) -> &SchemeConfig {
+        &self.cfg
+    }
+
+    fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    fn encode_coeffs(&self, worker: usize) -> Result<Vec<f64>, CodingError> {
+        if worker >= self.cfg.n {
+            return Err(CodingError::WorkerOutOfRange(worker));
+        }
+        Ok(vec![1.0 / self.cfg.d as f64; self.cfg.d])
+    }
+
+    /// Unlike the exact schemes, *any* non-empty responder set is
+    /// accepted; the weights are the least-squares solution and the
+    /// decode is approximate whenever [`ApproxCode::partial_decode`]
+    /// reports a nonzero residual.
+    fn decode_weights(&self, available: &[usize]) -> Result<DecodeWeights, CodingError> {
+        self.partial_decode(available).map(|p| p.weights)
+    }
+
+    fn decode_residual(&self, available: &[usize]) -> Option<f64> {
+        self.partial_decode(available).ok().map(|p| p.coeff_residual)
+    }
+
+    /// One least-squares solve serves both pieces (the default would
+    /// solve the same system twice).
+    fn decode_weights_with_residual(
+        &self,
+        available: &[usize],
+    ) -> Result<(DecodeWeights, Option<f64>), CodingError> {
+        let partial = self.partial_decode(available)?;
+        Ok((partial.weights, Some(partial.coeff_residual)))
+    }
+
+    /// For the approximate scheme the `B·V` factorization degenerates:
+    /// `B = A^T` (row per subset, column per worker) and `V = I`, so that
+    /// `B·V` keeps the invariant "entry `(t, w)` is the coefficient of
+    /// `g_t` in `f_w`" shared with the exact schemes.
+    fn matrix_b(&self) -> Matrix {
+        self.a.transpose()
+    }
+
+    fn matrix_v(&self) -> Matrix {
+        Matrix::identity(self.cfg.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::decode::sum_gradients;
+    use crate::coding::{Decoder, Encoder};
+    use crate::rngs::{Pcg64, Rng};
+
+    fn random_grads(n: usize, l: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        (0..n)
+            .map(|_| (0..l).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect())
+            .collect()
+    }
+
+    fn transmit_all(code: &ApproxCode, grads: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        (0..code.config().n)
+            .map(|w| {
+                let views: Vec<&[f32]> = code
+                    .placement()
+                    .assigned(w)
+                    .iter()
+                    .map(|&t| grads[t].as_slice())
+                    .collect();
+                Encoder::new(code, w).unwrap().encode(&views).unwrap()
+            })
+            .collect()
+    }
+
+    fn decode_estimate(
+        code: &ApproxCode,
+        transmitted: &[Vec<f32>],
+        available: &[usize],
+    ) -> (Vec<f32>, PartialDecode) {
+        let partial = code.partial_decode(available).unwrap();
+        let dec = Decoder::from_weights(&partial.weights);
+        let fs: Vec<&[f32]> =
+            dec.used_workers().iter().map(|&w| transmitted[w].as_slice()).collect();
+        (dec.decode(&fs).unwrap(), partial)
+    }
+
+    fn l2(v: &[f64]) -> f64 {
+        v.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    fn l2_diff(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| {
+                let d = x as f64 - y as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    #[test]
+    fn construction_validates_parameters() {
+        assert!(ApproxCode::new(0, 1, 1).is_err());
+        assert!(ApproxCode::new(5, 0, 3).is_err());
+        assert!(ApproxCode::new(5, 6, 3).is_err());
+        assert!(ApproxCode::new(5, 2, 0).is_err());
+        assert!(ApproxCode::new(5, 2, 6).is_err());
+        assert!(ApproxCode::with_quorum_fraction(5, 2, 0.0).is_err());
+        assert!(ApproxCode::with_quorum_fraction(5, 2, 1.2).is_err());
+        // n = 0 must error cleanly, not panic in quorum_count's clamp
+        assert!(ApproxCode::with_quorum_fraction(0, 1, 0.5).is_err());
+        let c = ApproxCode::new(6, 2, 4).unwrap();
+        assert_eq!(c.quorum(), 4);
+        assert_eq!(c.config().wait_for(), 4);
+        assert_eq!(c.config().m, 1);
+    }
+
+    #[test]
+    fn quorum_count_rounds_up() {
+        assert_eq!(quorum_count(10, 0.7), 7);
+        assert_eq!(quorum_count(10, 0.61), 7);
+        assert_eq!(quorum_count(10, 1.0), 10);
+        assert_eq!(quorum_count(10, 0.01), 1);
+        assert_eq!(quorum_count(3, 0.5), 2);
+    }
+
+    #[test]
+    fn encode_is_uniform_average() {
+        let c = ApproxCode::new(7, 3, 5).unwrap();
+        for w in 0..7 {
+            let coeffs = c.encode_coeffs(w).unwrap();
+            assert_eq!(coeffs.len(), 3);
+            for x in coeffs {
+                assert!((x - 1.0 / 3.0).abs() < 1e-15);
+            }
+        }
+        assert!(c.encode_coeffs(7).is_err());
+    }
+
+    #[test]
+    fn full_quorum_decodes_exactly() {
+        // n=6, d=2 is deliberately a rank-deficient full Gram (the
+        // alternating-sign row combination vanishes): the full-set
+        // shortcut must keep it exact anyway.
+        for (n, d, l, seed) in [(6usize, 2usize, 24usize, 1u64), (7, 3, 30, 2), (5, 5, 20, 3)] {
+            let code = ApproxCode::new(n, d, n).unwrap();
+            let grads = random_grads(n, l, seed);
+            let transmitted = transmit_all(&code, &grads);
+            let all: Vec<usize> = (0..n).collect();
+            let (got, partial) = decode_estimate(&code, &transmitted, &all);
+            assert!(partial.is_exact(1e-12), "residual {}", partial.coeff_residual);
+            let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            let want = sum_gradients(&views);
+            let scale = l2(&want.iter().map(|&x| x as f64).collect::<Vec<_>>()).max(1e-12);
+            assert!(
+                l2_diff(&got, &want) / scale < 1e-5,
+                "(n={n},d={d}): rel l2 err {}",
+                l2_diff(&got, &want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn full_replication_decodes_from_single_worker() {
+        // d = n: every worker holds everything, so one responder suffices
+        // and the LS solve must find the exact weight n·(1/1)… i.e. a = n
+        // with f_w = (1/n)·g_sum.
+        let n = 5;
+        let code = ApproxCode::new(n, n, 1).unwrap();
+        let grads = random_grads(n, 12, 9);
+        let transmitted = transmit_all(&code, &grads);
+        let (got, partial) = decode_estimate(&code, &transmitted, &[3]);
+        assert!(partial.is_exact(1e-9), "residual {}", partial.coeff_residual);
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let want = sum_gradients(&views);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn residual_grows_as_quorum_shrinks() {
+        // Least-squares residual over a subset of responders can only be
+        // larger: check along nested chains.
+        let n = 7;
+        let code = ApproxCode::new(n, 3, 4).unwrap();
+        let mut rng = Pcg64::seed_from_u64(11);
+        for _ in 0..20 {
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            let mut prev = -1.0f64;
+            // shrink from the full set down to a single responder
+            for keep in (1..=n).rev() {
+                let set: Vec<usize> = order[..keep].to_vec();
+                let res = code.partial_decode(&set).unwrap().coeff_residual;
+                assert!(
+                    res + 1e-7 >= prev,
+                    "residual not monotone: |F|={keep} gives {res} after {prev}"
+                );
+                prev = res;
+            }
+        }
+    }
+
+    #[test]
+    fn measured_error_within_reported_bound() {
+        let n = 9;
+        let l = 18;
+        let code = ApproxCode::new(n, 3, 6).unwrap();
+        let grads = random_grads(n, l, 21);
+        let transmitted = transmit_all(&code, &grads);
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let want = sum_gradients(&views);
+        let norms: Vec<f64> = grads
+            .iter()
+            .map(|g| l2(&g.iter().map(|&x| x as f64).collect::<Vec<_>>()))
+            .collect();
+        let max_norm = norms.iter().fold(0.0f64, |a, &b| a.max(b));
+        let mut rng = Pcg64::seed_from_u64(22);
+        for quorum in [3usize, 5, 7, 9] {
+            for _ in 0..10 {
+                let set = rng.sample_indices(n, quorum);
+                let (got, partial) = decode_estimate(&code, &transmitted, &set);
+                let measured = l2_diff(&got, &want);
+                let bound = partial.error_bound(&norms);
+                let slack = 1e-3 * max_norm * n as f64;
+                assert!(
+                    measured <= bound + slack,
+                    "quorum {quorum} set {set:?}: measured {measured} > bound {bound}"
+                );
+                // the uniform bound dominates the norm-aware one
+                assert!(partial.uniform_error_bound(max_norm) + 1e-12 >= bound);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_weights_trait_path_matches_partial() {
+        let code = ApproxCode::new(8, 3, 5).unwrap();
+        let set = [0usize, 2, 3, 6, 7];
+        let dw = code.decode_weights(&set).unwrap();
+        let partial = code.partial_decode(&set).unwrap();
+        assert_eq!(dw.used, partial.weights.used);
+        assert_eq!(dw.weights, partial.weights.weights);
+        assert_eq!(dw.m, 1);
+        assert_eq!(
+            code.decode_residual(&set),
+            Some(partial.coeff_residual),
+            "trait residual must match partial_decode"
+        );
+        let (dw2, res2) = code.decode_weights_with_residual(&set).unwrap();
+        assert_eq!(dw2.weights, partial.weights.weights);
+        assert_eq!(res2, Some(partial.coeff_residual));
+    }
+
+    #[test]
+    fn rejects_empty_and_out_of_range() {
+        let code = ApproxCode::new(5, 2, 3).unwrap();
+        assert!(matches!(
+            code.partial_decode(&[]),
+            Err(CodingError::NotEnoughWorkers { .. })
+        ));
+        assert!(matches!(
+            code.partial_decode(&[0, 5]),
+            Err(CodingError::WorkerOutOfRange(5))
+        ));
+    }
+
+    #[test]
+    fn matrix_bv_has_coefficient_semantics() {
+        // BV entry (t, w) = coefficient of g_t in f_w, matching the exact
+        // schemes' convention.
+        let code = ApproxCode::new(6, 2, 4).unwrap();
+        let bv = code.matrix_b().matmul(&code.matrix_v());
+        for t in 0..6 {
+            for w in 0..6 {
+                let want = if code.placement().is_assigned(w, t) { 0.5 } else { 0.0 };
+                assert!((bv[(t, w)] - want).abs() < 1e-15, "BV[{t},{w}]");
+            }
+        }
+    }
+}

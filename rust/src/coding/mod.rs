@@ -15,10 +15,83 @@
 //! *decode weights* turning any admissible set of returned vectors back
 //! into the sum gradient.
 //!
+//! Beyond the paper's exact constructions, [`ApproxCode`] implements the
+//! *approximate* regime (partial recovery): the master proceeds at a
+//! configurable quorum of responders and a least-squares partial decoder
+//! returns the minimum-ℓ2-error estimate of the gradient sum together
+//! with a computed error bound.
+//!
 //! Conventions: all indices are 0-based in code (the paper is 1-based);
 //! worker `w`'s transmitted vector has dimension `l/m`; gradients are
 //! `f32` payloads while coefficients stay `f64` until the final cast.
+//!
+//! # Example: exact recovery (§III scheme)
+//!
+//! ```
+//! use gradcode::coding::{Decoder, Encoder, GradientCode, PolynomialCode, SchemeConfig};
+//!
+//! // n = 5 workers, tolerate s = 1 straggler, transmit l/m with m = 2;
+//! // Theorem 1 forces d = s + m = 3 subsets per worker.
+//! let cfg = SchemeConfig::tight(5, 1, 2).unwrap();
+//! let code = PolynomialCode::new(cfg).unwrap();
+//!
+//! // Toy partial gradients g_0..g_4, each of dimension l = 4.
+//! let grads: Vec<Vec<f32>> = (0..5).map(|t| vec![t as f32; 4]).collect();
+//! let transmitted: Vec<Vec<f32>> = (0..5)
+//!     .map(|w| {
+//!         let views: Vec<&[f32]> = code
+//!             .placement()
+//!             .assigned(w)
+//!             .iter()
+//!             .map(|&t| grads[t].as_slice())
+//!             .collect();
+//!         Encoder::new(&code, w).unwrap().encode(&views).unwrap()
+//!     })
+//!     .collect();
+//! assert_eq!(transmitted[0].len(), 2); // l/m floats on the wire
+//!
+//! // Worker 2 straggles; any n - s = 4 responders reconstruct exactly.
+//! let dec = Decoder::new(&code, &[0, 1, 3, 4]).unwrap();
+//! let fs: Vec<&[f32]> = dec.used_workers().iter().map(|&w| transmitted[w].as_slice()).collect();
+//! let sum = dec.decode(&fs).unwrap();
+//! assert!((sum[0] - 10.0).abs() < 1e-4); // 0+1+2+3+4
+//! ```
+//!
+//! # Example: approximate recovery (partial decoder)
+//!
+//! ```
+//! use gradcode::coding::{ApproxCode, Decoder, Encoder, GradientCode};
+//!
+//! // n = 6 workers, replication d = 2, proceed at any 4 responders.
+//! let code = ApproxCode::new(6, 2, 4).unwrap();
+//! let grads: Vec<Vec<f32>> = (0..6).map(|t| vec![t as f32; 3]).collect();
+//! let transmitted: Vec<Vec<f32>> = (0..6)
+//!     .map(|w| {
+//!         let views: Vec<&[f32]> = code
+//!             .placement()
+//!             .assigned(w)
+//!             .iter()
+//!             .map(|&t| grads[t].as_slice())
+//!             .collect();
+//!         Encoder::new(&code, w).unwrap().encode(&views).unwrap()
+//!     })
+//!     .collect();
+//!
+//! // Workers 1 and 4 straggle: least-squares estimate from the rest,
+//! // with the decoder reporting its own coefficient residual.
+//! let partial = code.partial_decode(&[0, 2, 3, 5]).unwrap();
+//! let dec = Decoder::from_weights(&partial.weights);
+//! let fs: Vec<&[f32]> = dec.used_workers().iter().map(|&w| transmitted[w].as_slice()).collect();
+//! let estimate = dec.decode(&fs).unwrap();
+//! assert_eq!(estimate.len(), 3);
+//! assert!(partial.coeff_residual >= 0.0);
+//!
+//! // With everyone responding the same decoder is exact (residual 0).
+//! let full = code.partial_decode(&[0, 1, 2, 3, 4, 5]).unwrap();
+//! assert!(full.is_exact(1e-12));
+//! ```
 
+mod approx;
 mod bounds;
 mod decode;
 mod encode;
@@ -29,6 +102,7 @@ mod stability;
 mod uncoded;
 mod vandermonde;
 
+pub use approx::{quorum_count, ApproxCode, PartialDecode};
 pub use bounds::{is_achievable, verify_placement_bound};
 pub use decode::{sum_gradients, Decoder};
 pub use encode::Encoder;
@@ -99,24 +173,49 @@ impl SchemeConfig {
 }
 
 /// Errors from scheme construction, encoding, or decoding.
-#[derive(Debug, thiserror::Error)]
+///
+/// (`Display`/`Error` are hand-implemented — the offline build carries
+/// no `thiserror` derive.)
+#[derive(Debug)]
 pub enum CodingError {
-    #[error("invalid configuration: {0}")]
     InvalidConfig(String),
-    #[error("(d={d}, s={s}, m={m}) violates Theorem 1 for n={n}: need d >= s+m")]
     NotAchievable { n: usize, d: usize, s: usize, m: usize },
-    #[error("gradient dimension l={l} is not divisible by m={m} (pad with zeros)")]
     DimensionNotDivisible { l: usize, m: usize },
-    #[error("need at least {need} worker results, got {got}")]
     NotEnoughWorkers { need: usize, got: usize },
-    #[error("worker index {0} out of range")]
     WorkerOutOfRange(usize),
-    #[error("decode matrix is singular for worker set {available:?}: {source}")]
-    SingularDecode {
-        available: Vec<usize>,
-        #[source]
-        source: crate::linalg::LinalgError,
-    },
+    SingularDecode { available: Vec<usize>, source: crate::linalg::LinalgError },
+}
+
+impl std::fmt::Display for CodingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodingError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            CodingError::NotAchievable { n, d, s, m } => write!(
+                f,
+                "(d={d}, s={s}, m={m}) violates Theorem 1 for n={n}: need d >= s+m"
+            ),
+            CodingError::DimensionNotDivisible { l, m } => write!(
+                f,
+                "gradient dimension l={l} is not divisible by m={m} (pad with zeros)"
+            ),
+            CodingError::NotEnoughWorkers { need, got } => {
+                write!(f, "need at least {need} worker results, got {got}")
+            }
+            CodingError::WorkerOutOfRange(w) => write!(f, "worker index {w} out of range"),
+            CodingError::SingularDecode { available, source } => {
+                write!(f, "decode matrix is singular for worker set {available:?}: {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodingError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CodingError::SingularDecode { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 /// Common interface over the §III and §IV constructions.
@@ -132,12 +231,32 @@ pub trait GradientCode: Send + Sync {
     /// vector is `f_w[v] = Σ_{j,u} c[j·m+u] · g_{assigned[j]}(v·m+u)`.
     fn encode_coeffs(&self, worker: usize) -> Result<Vec<f64>, CodingError>;
 
-    /// Decode weights for a set of responding workers (must contain at
-    /// least `n - s` entries; implementations may use more for stability).
-    /// Returns a row-major `(used_workers.len() × m)` weight matrix `W`
-    /// and the subset of `available` actually used, such that
+    /// Decode weights for a set of responding workers (exact schemes
+    /// require at least `n - s` entries and may use more for stability;
+    /// [`ApproxCode`] accepts any non-empty set). Returns a row-major
+    /// `(used_workers.len() × m)` weight matrix `W` and the subset of
+    /// `available` actually used, such that
     /// `g_sum(v·m+u) = Σ_i W[i·m+u] · f_{used[i]}[v]`.
     fn decode_weights(&self, available: &[usize]) -> Result<DecodeWeights, CodingError>;
+
+    /// Coefficient-space decoding residual for this responder set:
+    /// `None` for exact schemes (decode is exact whenever
+    /// `decode_weights` succeeds), `Some(ε)` for approximate schemes
+    /// whose estimate satisfies `‖ĝ − g_sum‖₂ ≤ ε·√(Σ_t ‖g_t‖₂²)`.
+    fn decode_residual(&self, _available: &[usize]) -> Option<f64> {
+        None
+    }
+
+    /// Weights and residual in one call — the trainer's per-responder-set
+    /// entry point. The default covers exact schemes; [`ApproxCode`]
+    /// overrides it so the least-squares system is solved once, not once
+    /// per piece.
+    fn decode_weights_with_residual(
+        &self,
+        available: &[usize],
+    ) -> Result<(DecodeWeights, Option<f64>), CodingError> {
+        Ok((self.decode_weights(available)?, None))
+    }
 
     /// Full `(m·n) × (n-s)` encoding matrix `B` (diagnostics/tests).
     fn matrix_b(&self) -> Matrix;

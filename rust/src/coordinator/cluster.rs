@@ -40,6 +40,10 @@ pub struct GatherResult {
 pub struct Cluster {
     cfg: SchemeConfig,
     mode: ExecutionMode,
+    /// Responses gathered per iteration before the master proceeds.
+    /// Defaults to the scheme's `n - s`; the quorum policy of the
+    /// approximate regime overrides it (see [`Cluster::spawn_with_quorum`]).
+    wait_for: usize,
     task_txs: Vec<Sender<Task>>,
     results: Receiver<WorkerResult>,
     handles: Vec<JoinHandle<()>>,
@@ -56,6 +60,28 @@ impl Cluster {
         delays: Option<DelayParams>,
         seed: u64,
     ) -> Self {
+        let wait_for = cfg.wait_for();
+        Self::spawn_with_quorum(cfg, backend, mode, delays, seed, wait_for)
+    }
+
+    /// [`Cluster::spawn`] with an explicit quorum: the master proceeds
+    /// once `wait_for` responses for the current iteration have arrived
+    /// instead of the scheme's exact `n - s`. Used by the approximate
+    /// (partial-recovery) regime, where `wait_for` may be well below the
+    /// exact-decode threshold.
+    pub fn spawn_with_quorum(
+        cfg: SchemeConfig,
+        backend: Arc<dyn ComputeBackend>,
+        mode: ExecutionMode,
+        delays: Option<DelayParams>,
+        seed: u64,
+        wait_for: usize,
+    ) -> Self {
+        assert!(
+            wait_for >= 1 && wait_for <= cfg.n,
+            "quorum {wait_for} must be in 1..={}",
+            cfg.n
+        );
         let (result_tx, result_rx) = channel::<WorkerResult>();
         let mut task_txs = Vec::with_capacity(cfg.n);
         let mut handles = Vec::with_capacity(cfg.n);
@@ -89,20 +115,26 @@ impl Cluster {
                     .expect("spawn worker"),
             );
         }
-        Cluster { cfg, mode, task_txs, results: result_rx, handles }
+        Cluster { cfg, mode, wait_for, task_txs, results: result_rx, handles }
     }
 
     pub fn n(&self) -> usize {
         self.cfg.n
     }
 
+    /// Responses gathered before the master proceeds.
+    pub fn wait_for(&self) -> usize {
+        self.wait_for
+    }
+
     /// Broadcast an iteration and gather responses.
     ///
     /// Virtual mode: waits for all `n` results, sorts by virtual finish,
-    /// returns all (the trainer uses the first `n-s`).
-    /// Real-time mode: returns after the first `n-s` results for this
-    /// iteration arrive; stale results from previous iterations are
-    /// discarded.
+    /// returns all (the trainer uses the first `wait_for`).
+    /// Real-time mode: returns after the first `wait_for` results for
+    /// this iteration arrive; stale results from previous iterations are
+    /// discarded. `wait_for` is the scheme's `n - s` unless a quorum
+    /// override was given at spawn time.
     pub fn run_iteration(&mut self, iter: usize, beta: Arc<Vec<f32>>) -> GatherResult {
         let t0 = Instant::now();
         for tx in &self.task_txs {
@@ -110,7 +142,7 @@ impl Cluster {
             // send fails silently and the decode path handles the gap.
             let _ = tx.send(Task { iter, beta: Arc::clone(&beta) });
         }
-        let wait_for = self.cfg.wait_for();
+        let wait_for = self.wait_for;
         let mut results: Vec<WorkerResult> = Vec::with_capacity(self.cfg.n);
         match self.mode {
             ExecutionMode::Virtual => {
@@ -133,10 +165,10 @@ impl Cluster {
                 assert!(
                     results.len() >= wait_for,
                     "only {} healthy results of {} workers (need {wait_for}; \
-                     the scheme tolerates s = {} failures)",
+                     the gather tolerates {} failures)",
                     results.len(),
                     self.cfg.n,
-                    self.cfg.s
+                    self.cfg.n - wait_for
                 );
                 results.sort_by(|a, b| {
                     a.virtual_finish.partial_cmp(&b.virtual_finish).unwrap()
@@ -156,9 +188,9 @@ impl Cluster {
                             if r.failed {
                                 failures += 1;
                                 assert!(
-                                    failures <= self.cfg.s,
-                                    "{failures} worker failures exceed straggler tolerance s = {}",
-                                    self.cfg.s
+                                    failures <= self.cfg.n - wait_for,
+                                    "{failures} worker failures exceed gather tolerance {}",
+                                    self.cfg.n - wait_for
                                 );
                             } else {
                                 results.push(r);
@@ -248,6 +280,42 @@ mod tests {
             let g = cluster.run_iteration(iter, Arc::clone(&beta));
             assert!(g.results.len() >= 3, "quorum is n-s = 3");
             assert!(g.results.iter().all(|r| r.iter == iter));
+        }
+    }
+
+    #[test]
+    fn quorum_override_changes_the_cutoff() {
+        // Same scheme, quorum forced below the exact n - s: the virtual
+        // clock must advance only to the 3rd arrival.
+        let (code, backend, l) = setup(5, 1, 2);
+        let mut cluster = Cluster::spawn_with_quorum(
+            *code.config(),
+            backend,
+            ExecutionMode::Virtual,
+            Some(DelayParams::table_vi1()),
+            9,
+            3,
+        );
+        assert_eq!(cluster.wait_for(), 3);
+        let g = cluster.run_iteration(0, Arc::new(vec![0.0f32; l]));
+        assert_eq!(g.results.len(), 5, "virtual mode still collects everyone");
+        assert_eq!(g.iteration_time, g.results[2].virtual_finish);
+    }
+
+    #[test]
+    fn quorum_override_in_realtime_returns_at_quorum() {
+        let (code, backend, l) = setup(5, 1, 2);
+        let mut cluster = Cluster::spawn_with_quorum(
+            *code.config(),
+            backend,
+            ExecutionMode::RealTime { scale: 1e-4 },
+            Some(DelayParams::table_vi1()),
+            10,
+            3,
+        );
+        for iter in 0..2 {
+            let g = cluster.run_iteration(iter, Arc::new(vec![0.0f32; l]));
+            assert_eq!(g.results.len(), 3, "real-time gather stops at the quorum");
         }
     }
 

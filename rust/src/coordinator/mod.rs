@@ -18,7 +18,53 @@
 //!
 //! The gradient+encode compute itself always runs for real, through a
 //! [`ComputeBackend`] — either the pure-rust reference backend or the
-//! PJRT backend executing the AOT-compiled JAX/Pallas artifacts.
+//! PJRT backend executing the AOT-compiled JAX/Pallas artifacts (behind
+//! the `pjrt` feature).
+//!
+//! **Quorum policy (approximate regime).** By default the master waits
+//! for the scheme's exact `n - s`. With [`SchemeSpec::Approx`] — or an
+//! explicit `TrainConfig::quorum` fraction — it proceeds at
+//! `ceil(quorum·n)` responders and applies the least-squares partial
+//! decoder of [`crate::coding::ApproxCode`], recording the reported
+//! decode residual in each [`crate::metrics::IterationRecord`]. This
+//! trades a bounded gradient error for a much shorter straggler tail
+//! (see `rust/benches/approx_tradeoff.rs` for the measured curve).
+//!
+//! # Example: training on the in-process backend
+//!
+//! ```
+//! use gradcode::coordinator::{train, SchemeSpec, TrainConfig};
+//! use gradcode::data::{CategoricalConfig, SyntheticCategorical};
+//!
+//! // Synthetic one-hot categorical data (the paper's workload shape).
+//! let gen = SyntheticCategorical::new(CategoricalConfig::default(), 7);
+//! let ds = gen.generate(200, 8);
+//!
+//! // n = 4 workers, §III scheme with s = 1, m = 1; 3 iterations.
+//! let cfg = TrainConfig::quick(4, SchemeSpec::Poly { s: 1, m: 1 }, 3);
+//! let (log, beta) = train(cfg, &ds, None).unwrap();
+//! assert_eq!(log.records.len(), 3);
+//! assert_eq!(beta.len(), ds.cols);
+//! // s = 1 ⇒ every iteration used n - s = 3 responders
+//! assert!(log.records.iter().all(|r| r.responders.len() == 3));
+//! ```
+//!
+//! # Example: proceeding at a quorum (approximate recovery)
+//!
+//! ```
+//! use gradcode::coordinator::{train, SchemeSpec, TrainConfig};
+//! use gradcode::data::{CategoricalConfig, SyntheticCategorical};
+//!
+//! let gen = SyntheticCategorical::new(CategoricalConfig::default(), 9);
+//! let ds = gen.generate(200, 10);
+//!
+//! // Replication d = 2, master proceeds at 75% of workers.
+//! let cfg = TrainConfig::quick(4, SchemeSpec::Approx { d: 2, quorum: 0.75 }, 3);
+//! let (log, _beta) = train(cfg, &ds, None).unwrap();
+//! assert!(log.records.iter().all(|r| r.responders.len() == 3));
+//! // the partial decoder reports its residual every iteration
+//! assert!(log.records.iter().all(|r| r.decode_residual.is_some()));
+//! ```
 
 mod backend;
 mod cluster;

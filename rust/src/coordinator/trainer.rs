@@ -7,7 +7,8 @@ use std::time::Instant;
 use super::backend::{ComputeBackend, RustBackend};
 use super::cluster::{Cluster, ExecutionMode};
 use crate::coding::{
-    Decoder, GradientCode, PolynomialCode, RandomCode, SchemeConfig, UncodedScheme,
+    quorum_count, ApproxCode, Decoder, GradientCode, PolynomialCode, RandomCode,
+    SchemeConfig, UncodedScheme,
 };
 use crate::data::{auc, DenseDataset, SyntheticCategorical};
 use crate::metrics::{IterationRecord, RunLog};
@@ -24,6 +25,10 @@ pub enum SchemeSpec {
     Random { s: usize, m: usize, seed: u64 },
     /// Naive uncoded baseline (d=1, wait for all).
     Uncoded,
+    /// Approximate gradient coding with partial recovery: replication
+    /// `d`, master proceeds at `ceil(quorum·n)` responders and accepts
+    /// the least-squares decode (see [`ApproxCode`]).
+    Approx { d: usize, quorum: f64 },
 }
 
 impl SchemeSpec {
@@ -33,6 +38,7 @@ impl SchemeSpec {
             SchemeSpec::Poly { s, m } => format!("poly(s={s},m={m})"),
             SchemeSpec::Random { s, m, .. } => format!("random(s={s},m={m})"),
             SchemeSpec::Uncoded => "naive".to_string(),
+            SchemeSpec::Approx { d, quorum } => format!("approx(d={d},q={quorum})"),
         }
     }
 
@@ -46,6 +52,9 @@ impl SchemeSpec {
                 Arc::new(RandomCode::new(SchemeConfig::tight(n, s, m)?, seed)?)
             }
             SchemeSpec::Uncoded => Arc::new(UncodedScheme::new(n)),
+            SchemeSpec::Approx { d, quorum } => {
+                Arc::new(ApproxCode::with_quorum_fraction(n, d, quorum)?)
+            }
         })
     }
 }
@@ -86,6 +95,13 @@ pub struct TrainConfig {
     /// Mini-batch fraction in (0, 1] for the rust backend; `None` = full
     /// batch (§II: the scheme applies to both batch GD and mini-batch SGD).
     pub minibatch: Option<f64>,
+    /// Early-termination policy: proceed once this fraction of workers
+    /// has responded (`ceil(quorum·n)`, clamped to `1..=n`) instead of
+    /// the scheme's exact `n - s`. `None` keeps the scheme's own wait.
+    /// Below the exact threshold this only makes sense with
+    /// [`SchemeSpec::Approx`], whose partial decoder accepts any
+    /// responder count; exact schemes will fail to decode.
+    pub quorum: Option<f64>,
 }
 
 impl TrainConfig {
@@ -100,6 +116,7 @@ impl TrainConfig {
             mode: ExecutionMode::Virtual,
             seed: 0xfeed,
             minibatch: None,
+            quorum: None,
         }
     }
 }
@@ -110,8 +127,13 @@ pub struct Trainer {
     code: Arc<dyn GradientCode>,
     cluster: Cluster,
     out_dim: usize,
+    /// Responders the master proceeds at (scheme's `n - s`, or the
+    /// `cfg.quorum` override).
+    wait_for: usize,
     opt: Box<dyn Optimizer>,
-    decoder_cache: HashMap<u64, Decoder>,
+    /// Per-responder-set decoder plus the scheme's reported decode
+    /// residual (`None` for exact schemes).
+    decoder_cache: HashMap<u64, (Decoder, Option<f64>)>,
     /// Eval data (train loss / test AUC); train eval is subsampled.
     train_eval: DenseDataset,
     test: Option<DenseDataset>,
@@ -158,12 +180,23 @@ impl Trainer {
         } else {
             train_eval.clone()
         };
-        let cluster = Cluster::spawn(
+        let wait_for = match cfg.quorum {
+            Some(q) => {
+                anyhow::ensure!(
+                    q > 0.0 && q <= 1.0,
+                    "quorum fraction must be in (0, 1], got {q}"
+                );
+                quorum_count(cfg.n, q)
+            }
+            None => code.config().wait_for(),
+        };
+        let cluster = Cluster::spawn_with_quorum(
             *code.config(),
             backend,
             cfg.mode,
             cfg.delays,
             cfg.seed,
+            wait_for,
         );
         let opt = cfg.opt.build(vec![0.0f32; l]);
         let test = test.map(|t| {
@@ -184,11 +217,17 @@ impl Trainer {
             code,
             cluster,
             out_dim,
+            wait_for,
             opt,
             decoder_cache: HashMap::new(),
             train_eval,
             test,
         })
+    }
+
+    /// Responders the master proceeds at each iteration.
+    pub fn wait_for(&self) -> usize {
+        self.wait_for
     }
 
     /// Bitmask cache key for a sorted responder set (n <= 64).
@@ -200,15 +239,16 @@ impl Trainer {
     pub fn run(&mut self) -> anyhow::Result<RunLog> {
         let mut log = RunLog::new(self.cfg.scheme.label());
         let mut sim_clock = 0.0f64;
-        let wait_for = self.code.config().wait_for();
+        let wait_for = self.wait_for;
         let mut grad = Vec::with_capacity(self.out_dim * self.code.config().m);
         for iter in 0..self.cfg.iters {
             let beta = Arc::new(self.opt.eval_point().to_vec());
             let gather = self.cluster.run_iteration(iter, beta);
             let t0 = Instant::now();
 
-            // Responders: first n-s by arrival order, then sorted so the
-            // decoder cache key is order-insensitive.
+            // Responders: first `wait_for` by arrival order (the exact
+            // n-s, or the configured quorum), then sorted so the decoder
+            // cache key is order-insensitive.
             let mut responders: Vec<usize> = gather
                 .results
                 .iter()
@@ -218,10 +258,11 @@ impl Trainer {
             responders.sort_unstable();
             let key = Self::mask(&responders);
             if !self.decoder_cache.contains_key(&key) {
-                let dec = Decoder::new(self.code.as_ref(), &responders)?;
-                self.decoder_cache.insert(key, dec);
+                let (dw, residual) = self.code.decode_weights_with_residual(&responders)?;
+                self.decoder_cache.insert(key, (Decoder::from_weights(&dw), residual));
             }
-            let dec = &self.decoder_cache[&key];
+            let (dec, decode_residual) = &self.decoder_cache[&key];
+            let decode_residual = *decode_residual;
 
             // Map worker id -> returned vector.
             let mut by_worker: Vec<Option<&[f32]>> = vec![None; self.cfg.n];
@@ -257,6 +298,7 @@ impl Trainer {
                 worker_compute: gather.worker_compute,
                 responders,
                 floats_transmitted: gather.results.len() * self.out_dim,
+                decode_residual,
                 loss,
                 auc: auc_val,
             });
@@ -311,6 +353,7 @@ mod tests {
             mode: ExecutionMode::Virtual,
             seed: 7,
             minibatch: None,
+            quorum: None,
         };
         let (log, _beta) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
         assert_eq!(log.records.len(), 150);
@@ -337,6 +380,7 @@ mod tests {
             mode: ExecutionMode::Virtual,
             seed: 9,
             minibatch: None,
+            quorum: None,
         };
         let (_, beta_coded) =
             train(mk(SchemeSpec::Poly { s: 1, m: 1 }), &train_ds, None).unwrap();
@@ -366,9 +410,62 @@ mod tests {
             mode: ExecutionMode::Virtual,
             seed: 11,
             minibatch: None,
+            quorum: None,
         };
         let (log, _) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
         assert!(log.final_auc().unwrap() > 0.65);
+    }
+
+    #[test]
+    fn approx_scheme_trains_with_partial_quorum() {
+        let (train_ds, _) = dataset(600, 91);
+        let lr = 4.0 / train_ds.rows as f32;
+        let cfg = TrainConfig {
+            n: 8,
+            scheme: SchemeSpec::Approx { d: 3, quorum: 0.75 },
+            iters: 40,
+            opt: OptChoice::Nag { lr, momentum: 0.9 },
+            eval_every: 10,
+            delays: Some(DelayParams::table_vi1()),
+            mode: ExecutionMode::Virtual,
+            seed: 17,
+            minibatch: None,
+            quorum: None,
+        };
+        let (log, _) = train(cfg, &train_ds, None).unwrap();
+        assert_eq!(log.records.len(), 40);
+        // ceil(0.75 · 8) = 6 responders per iteration, residual reported
+        assert!(log.records.iter().all(|r| r.responders.len() == 6));
+        assert!(log.records.iter().all(|r| r.decode_residual.is_some()));
+        let first = log.records[0].loss.unwrap();
+        let last = log.final_loss().unwrap();
+        assert!(last < first, "approximate training must still learn: {first} -> {last}");
+    }
+
+    #[test]
+    fn quorum_override_applies_to_any_scheme() {
+        // An uncoded scheme normally waits for everyone; the quorum
+        // override can only be exercised by a scheme whose decoder
+        // accepts fewer responders, so use approx with q = 1.0 built in
+        // and a *tighter* runtime override.
+        let (train_ds, _) = dataset(400, 93);
+        let lr = 4.0 / train_ds.rows as f32;
+        let cfg = TrainConfig {
+            n: 6,
+            scheme: SchemeSpec::Approx { d: 2, quorum: 1.0 },
+            iters: 10,
+            opt: OptChoice::Sgd { lr },
+            eval_every: 5,
+            delays: Some(DelayParams::table_vi1()),
+            mode: ExecutionMode::Virtual,
+            seed: 19,
+            minibatch: None,
+            quorum: Some(2.0 / 3.0),
+        };
+        let mut tr = Trainer::new(cfg, &train_ds, None).unwrap();
+        assert_eq!(tr.wait_for(), 4, "override ceil(6·2/3) = 4 beats the scheme's 6");
+        let log = tr.run().unwrap();
+        assert!(log.records.iter().all(|r| r.responders.len() == 4));
     }
 
     #[test]
@@ -385,6 +482,7 @@ mod tests {
             mode: ExecutionMode::RealTime { scale: 1e-4 },
             seed: 13,
             minibatch: None,
+            quorum: None,
         };
         let (log, _) = train(cfg, &train_ds, None).unwrap();
         assert_eq!(log.records.len(), 8);

@@ -37,7 +37,12 @@ pub(super) struct WorkerLoop {
     /// no sleeping).
     pub sleep_scale: f64,
     /// In real-time mode, skip to the newest queued task (stale tasks
-    /// would only produce results the master already gave up on).
+    /// would only produce results the master already gave up on). This
+    /// matters even more under the approximate regime's quorum policy:
+    /// the master proceeds at `ceil(q·n)` arrivals, so with small
+    /// quorums a slow worker can fall several iterations behind — it
+    /// drains the queue and computes only the freshest parameters
+    /// instead of burning compute on results nobody will decode.
     pub skip_stale: bool,
 }
 

@@ -5,7 +5,11 @@
 //! gradient descent where workers both replicate data subsets (to tolerate
 //! `s` stragglers) and code across gradient-vector components (to cut
 //! per-worker communication by a factor `m`), achieving the optimal
-//! tradeoff `d >= s + m` (with `k = n` data subsets).
+//! tradeoff `d >= s + m` (with `k = n` data subsets). On top of the exact
+//! schemes, the crate implements the *approximate* operating regime
+//! (partial recovery): the master proceeds at a configurable responder
+//! quorum and a least-squares partial decoder returns the
+//! minimum-ℓ2-error gradient estimate with a computed error bound.
 //!
 //! The crate is the L3 (rust) layer of a three-layer stack:
 //! - L1: Pallas kernels (`python/compile/kernels/`) for the partial
@@ -15,17 +19,24 @@
 //!   PJRT runtime that executes the AOT artifacts on the request path
 //!   with no python anywhere.
 //!
-//! Module map (see DESIGN.md for the per-experiment index):
+//! Module map (see `rust/DESIGN.md` for the per-experiment index):
 //! - [`coding`] — the paper's constructions: §III polynomial scheme,
-//!   §IV random-matrix scheme, encode/decode, stability certification.
+//!   §IV random-matrix scheme, encode/decode, stability certification,
+//!   plus the approximate partial-recovery scheme.
 //! - [`simulator`] — §VI probabilistic runtime model and optimal-triple
-//!   search; also the virtual cluster used by the figure benches.
-//! - [`coordinator`] — master/worker threads, transport, training loop.
-//! - [`runtime`] — PJRT execution of AOT artifacts (`xla` crate).
+//!   search; the virtual cluster used by the figure benches; the quorum
+//!   extension predicting time and residual under partial recovery.
+//! - [`coordinator`] — master/worker threads, transport, training loop,
+//!   and the wait-for-quorum policy.
+//! - `runtime` — PJRT execution of AOT artifacts (`xla` crate); compiled
+//!   only with the `pjrt` cargo feature, since the `xla` dependency is
+//!   not available in the offline build environment.
 //! - [`data`], [`optim`], [`model`] — dataset/AUC, optimizers, pure-rust
 //!   logistic reference backend.
 //! - [`linalg`], [`rngs`], [`cli`], [`testkit`], `bench`, [`metrics`]
 //!   — substrates (no external crates available offline).
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod bench;
 pub mod checkpoint;
@@ -38,6 +49,7 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod rngs;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod simulator;
 pub mod testkit;

@@ -198,13 +198,24 @@ impl fmt::Debug for Matrix {
 }
 
 /// Errors from dense factorizations.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("matrix is singular (pivot {pivot:.3e} at step {step})")]
     Singular { step: usize, pivot: f64 },
-    #[error("dimension mismatch: {0}")]
     Dimension(String),
 }
+
+impl fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LinalgError::Singular { step, pivot } => {
+                write!(f, "matrix is singular (pivot {pivot:.3e} at step {step})")
+            }
+            LinalgError::Dimension(msg) => write!(f, "dimension mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 #[cfg(test)]
 mod tests {

@@ -1,25 +1,28 @@
 //! `gradcode` — the leader binary.
 //!
 //! Subcommands:
-//! - `info`       PJRT platform + artifact inventory
+//! - `info`       PJRT platform + artifact inventory (needs `--features pjrt`)
 //! - `train`      run coded distributed training on synthetic data
+//!                (`--scheme approx --quorum 0.7` selects the
+//!                approximate partial-recovery regime)
 //! - `plan`       §VI model: optimal (d, s, m) for given delay parameters
+//! - `quorum`     §VI model extended to partial recovery: expected time
+//!                and residual per quorum size
 //! - `stability`  condition-number / reconstruction-error sweep
 //!
 //! Examples live in `examples/`; the table/figure regenerators in
 //! `rust/benches/`.
 
-use std::sync::Arc;
-
 use gradcode::cli::{App, Command};
 use gradcode::coding::{
-    max_condition_number, reconstruction_error, PolynomialCode, RandomCode, SchemeConfig,
+    max_condition_number, reconstruction_error, ApproxCode, PolynomialCode, RandomCode,
+    SchemeConfig,
 };
 use gradcode::coordinator::{
-    train, ExecutionMode, OptChoice, SchemeSpec, TrainConfig, Trainer,
+    train, ExecutionMode, OptChoice, SchemeSpec, TrainConfig,
 };
-use gradcode::data::{train_test_split, CategoricalConfig, SyntheticCategorical};
-use gradcode::runtime::{Manifest, PjrtBackend};
+use gradcode::data::{train_test_split, CategoricalConfig, DenseDataset, SyntheticCategorical};
+use gradcode::metrics::RunLog;
 use gradcode::simulator::{optimal_triple, DelayParams};
 
 fn app() -> App {
@@ -30,20 +33,33 @@ fn app() -> App {
                 .flag("n", "10", "number of workers (= data subsets)")
                 .flag("s", "1", "straggler tolerance")
                 .flag("m", "2", "communication reduction factor")
-                .flag("scheme", "poly", "poly | random | naive")
+                .flag("scheme", "poly", "poly | random | naive | approx")
+                .flag("approx-d", "3", "replication d for --scheme approx")
+                .flag("quorum", "0.7", "responder fraction for --scheme approx")
                 .flag("iters", "200", "training iterations")
                 .flag("rows", "640", "training rows")
                 .flag("lr", "0.01", "learning rate")
                 .flag("momentum", "0.9", "NAG momentum")
                 .flag("seed", "7", "experiment seed")
                 .flag("eval-every", "10", "evaluation period")
-                .switch("pjrt", "use the AOT PJRT backend (needs artifacts)")
+                .switch("pjrt", "use the AOT PJRT backend (needs --features pjrt + artifacts)")
                 .switch("no-delays", "disable straggler injection")
                 .switch("csv", "dump per-iteration CSV to stdout"),
         )
         .command(
             Command::new("plan", "optimal (d,s,m) from the §VI runtime model")
                 .flag("n", "10", "number of workers")
+                .flag("lambda1", "0.6", "computation straggling rate")
+                .flag("t1", "1.5", "min per-subset computation time")
+                .flag("lambda2", "0.1", "communication straggling rate")
+                .flag("t2", "6", "min full-vector communication time"),
+        )
+        .command(
+            Command::new("quorum", "partial-recovery tradeoff: E[T] and E[residual] per quorum")
+                .flag("n", "10", "number of workers")
+                .flag("d", "3", "replication (subsets per worker)")
+                .flag("samples", "2000", "Monte-Carlo samples per quorum size")
+                .flag("seed", "1", "sampling seed")
                 .flag("lambda1", "0.6", "computation straggling rate")
                 .flag("t1", "1.5", "min per-subset computation time")
                 .flag("lambda2", "0.1", "communication straggling rate")
@@ -161,7 +177,9 @@ fn cmd_worker(a: gradcode::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_info() -> anyhow::Result<()> {
+    use gradcode::runtime::Manifest;
     println!("platform: {}", gradcode::runtime::platform_name()?);
     let dir = Manifest::default_dir();
     match Manifest::load(&dir) {
@@ -179,6 +197,51 @@ fn cmd_info() -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info() -> anyhow::Result<()> {
+    println!("platform: PJRT disabled (rebuild with `--features pjrt`)");
+    println!("artifacts: not inspected without the pjrt feature");
+    Ok(())
+}
+
+/// PJRT training path; compiled out (with a clear error) without the
+/// `pjrt` feature so the default offline build has no `xla` dependency.
+#[cfg(feature = "pjrt")]
+fn run_pjrt_train(
+    cfg: TrainConfig,
+    scheme: SchemeSpec,
+    train_ds: &DenseDataset,
+    test_ds: &DenseDataset,
+) -> anyhow::Result<RunLog> {
+    use gradcode::coordinator::Trainer;
+    use gradcode::runtime::{Manifest, PjrtBackend};
+    use std::sync::Arc;
+    let n = cfg.n;
+    let code = scheme.build(n)?;
+    // PJRT artifacts are fixed-shape: pad to the artifact dims.
+    let padded = train_ds.pad_cols(512);
+    anyhow::ensure!(
+        padded.rows / n == 64,
+        "PJRT mode needs rows such that rows/n = 64 (artifact shape); \
+         use --rows {}",
+        64 * n * 5 / 4
+    );
+    let backend =
+        Arc::new(PjrtBackend::new(&Manifest::default_dir(), code.as_ref(), &padded)?);
+    let mut tr = Trainer::with_backend(cfg, code, backend, &padded, Some(test_ds))?;
+    tr.run()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_pjrt_train(
+    _cfg: TrainConfig,
+    _scheme: SchemeSpec,
+    _train_ds: &DenseDataset,
+    _test_ds: &DenseDataset,
+) -> anyhow::Result<RunLog> {
+    anyhow::bail!("--pjrt requires rebuilding with `--features pjrt` (xla dependency)")
+}
+
 fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
     let n = a.get_usize("n");
     let s = a.get_usize("s");
@@ -187,6 +250,10 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
         "poly" => SchemeSpec::Poly { s, m },
         "random" => SchemeSpec::Random { s, m, seed: a.get_u64("seed") },
         "naive" => SchemeSpec::Uncoded,
+        "approx" => SchemeSpec::Approx {
+            d: a.get_usize("approx-d"),
+            quorum: a.get_f64("quorum"),
+        },
         other => anyhow::bail!("unknown scheme {other:?}"),
     };
     let gen = SyntheticCategorical::new(
@@ -205,21 +272,10 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
         mode: ExecutionMode::Virtual,
         seed: a.get_u64("seed"),
         minibatch: None,
+        quorum: None,
     };
     let log = if a.get_bool("pjrt") {
-        let code = scheme.build(n)?;
-        // PJRT artifacts are fixed-shape: pad to the artifact dims.
-        let padded = train_ds.pad_cols(512);
-        anyhow::ensure!(
-            padded.rows / n == 64,
-            "PJRT mode needs rows such that rows/n = 64 (artifact shape); \
-             use --rows {}",
-            64 * n * 5 / 4
-        );
-        let backend =
-            Arc::new(PjrtBackend::new(&Manifest::default_dir(), code.as_ref(), &padded)?);
-        let mut tr = Trainer::with_backend(cfg, code, backend, &padded, Some(&test_ds))?;
-        tr.run()?
+        run_pjrt_train(cfg, scheme, &train_ds, &test_ds)?
     } else {
         let (log, _beta) = train(cfg, &train_ds, Some(&test_ds))?;
         log
@@ -234,9 +290,43 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
         log.final_loss().unwrap_or(f64::NAN),
         log.final_auc().unwrap_or(f64::NAN),
     );
+    if let Some(res) = log.mean_decode_residual() {
+        println!("mean decode residual = {res:.5} (approximate recovery)");
+    }
     if a.get_bool("csv") {
         print!("{}", log.to_csv());
     }
+    Ok(())
+}
+
+fn cmd_quorum(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    use gradcode::simulator::approx::quorum_tradeoff;
+    let n = a.get_usize("n");
+    let d = a.get_usize("d");
+    let params = DelayParams {
+        lambda1: a.get_f64("lambda1"),
+        t1: a.get_f64("t1"),
+        lambda2: a.get_f64("lambda2"),
+        t2: a.get_f64("t2"),
+    };
+    let code = ApproxCode::new(n, d, n)?;
+    let curve = quorum_tradeoff(&params, &code, a.get_usize("samples"), a.get_u64("seed"));
+    let mut table = gradcode::bench::Table::new(
+        &format!("partial recovery tradeoff, n = {n}, d = {d}, {params:?}"),
+        &["quorum", "fraction", "E[T] (s)", "E[residual]"],
+    );
+    for pt in &curve {
+        table.row(&[
+            pt.quorum.to_string(),
+            format!("{:.2}", pt.fraction),
+            format!("{:.4}", pt.expected_time),
+            format!("{:.4}", pt.expected_residual),
+        ]);
+    }
+    table.print();
+    println!(
+        "exact recovery is the quorum = {n} row; every row above trades residual for time"
+    );
     Ok(())
 }
 
@@ -348,6 +438,7 @@ fn main() -> anyhow::Result<()> {
             "info" => cmd_info(),
             "train" => cmd_train(args),
             "plan" => cmd_plan(args),
+            "quorum" => cmd_quorum(args),
             "stability" => cmd_stability(args),
             "grid" => cmd_grid(args),
             "leader" => cmd_leader(args),

@@ -21,6 +21,9 @@ pub struct IterationRecord {
     pub responders: Vec<usize>,
     /// f32 values transmitted by all workers this iteration (comm cost).
     pub floats_transmitted: usize,
+    /// Coefficient-space decoding residual reported by the scheme
+    /// (`Some` only for approximate partial recovery; 0 = exact).
+    pub decode_residual: Option<f64>,
     /// Training loss at eval points (`None` when not evaluated).
     pub loss: Option<f64>,
     /// Test AUC at eval points.
@@ -74,15 +77,27 @@ impl RunLog {
             .collect()
     }
 
+    /// Mean reported decode residual over iterations that carry one
+    /// (`None` when the scheme never reported — i.e. exact recovery).
+    pub fn mean_decode_residual(&self) -> Option<f64> {
+        let vals: Vec<f64> =
+            self.records.iter().filter_map(|r| r.decode_residual).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
     /// CSV with one row per iteration.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,sim_time,sim_clock,master_compute,worker_compute,n_responders,floats,loss,auc\n",
+            "iter,sim_time,sim_clock,master_compute,worker_compute,n_responders,floats,decode_residual,loss,auc\n",
         );
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.6},{:.6},{:.6},{},{},{},{}",
+                "{},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{}",
                 r.iter,
                 r.sim_time,
                 r.sim_clock,
@@ -90,6 +105,7 @@ impl RunLog {
                 r.worker_compute,
                 r.responders.len(),
                 r.floats_transmitted,
+                r.decode_residual.map_or(String::new(), |v| format!("{v:.6}")),
                 r.loss.map_or(String::new(), |v| format!("{v:.6}")),
                 r.auc.map_or(String::new(), |v| format!("{v:.6}")),
             );
@@ -111,9 +127,24 @@ mod tests {
             worker_compute: 0.0,
             responders: vec![0, 1],
             floats_transmitted: 10,
+            decode_residual: None,
             loss: None,
             auc,
         }
+    }
+
+    #[test]
+    fn mean_decode_residual_skips_exact_runs() {
+        let mut log = RunLog::new("t");
+        log.push(rec(0, 1.0, 1.0, None));
+        assert_eq!(log.mean_decode_residual(), None);
+        let mut r = rec(1, 1.0, 2.0, None);
+        r.decode_residual = Some(0.5);
+        log.push(r);
+        let mut r = rec(2, 1.0, 3.0, None);
+        r.decode_residual = Some(1.5);
+        log.push(r);
+        assert_eq!(log.mean_decode_residual(), Some(1.0));
     }
 
     #[test]

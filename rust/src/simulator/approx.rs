@@ -1,0 +1,175 @@
+//! §VI runtime model extended to the approximate (partial-recovery)
+//! regime: expected iteration time *and* expected decoding residual as a
+//! function of the quorum size.
+//!
+//! In the exact regime the master waits for the `(n-s)`-th order
+//! statistic of the worker finish times (Eq. 28–29). With a quorum of
+//! `r` responders the wait is simply the `r`-th order statistic of the
+//! same i.i.d. distribution, so [`expected_runtime_at_quorum`] reuses
+//! the Eq. 29 quadrature with `s = n - r`. Shrinking `r` shortens the
+//! tail the master sits on — that is the whole point of approximate
+//! gradient coding — but leaves a residual decode error.
+//!
+//! The residual side has no closed form for arbitrary `(n, d, r)`, but
+//! under assumptions 1–3 the worker finish times are i.i.d., so the set
+//! of the `r` fastest workers is *uniform* over all `C(n, r)` subsets.
+//! [`expected_coeff_residual`] therefore estimates
+//! `E_F[ ε(F) ] = E_F[ min_a ‖A_F^T a − 1‖₂ ]` by seeded Monte-Carlo
+//! over uniform `r`-subsets, using the same least-squares decoder the
+//! live master runs ([`ApproxCode::partial_decode`]) — which is exactly
+//! why the prediction agrees with the measured residual on a virtual
+//! cluster (asserted in `rust/tests/approx_recovery.rs`).
+
+use super::model::DelayParams;
+use super::order_stats::expected_order_stat;
+use crate::coding::ApproxCode;
+use crate::rngs::{Pcg64, Rng};
+use crate::simulator::model::WorkerRuntime;
+
+/// Expected iteration time when the master proceeds at the `r`-th
+/// arrival (`1 <= r <= n`) under replication `d` (and `m = 1`, the
+/// approximate scheme's communication shape):
+/// `E[T] = d·t₁ + t₂ + E[T_(r)]`.
+pub fn expected_runtime_at_quorum(params: &DelayParams, n: usize, d: usize, r: usize) -> f64 {
+    assert!(r >= 1 && r <= n, "quorum r={r} must be in 1..={n}");
+    let w = WorkerRuntime::new(params, d, 1);
+    w.shift + expected_order_stat(&w, n, n - r)
+}
+
+/// Monte-Carlo estimate of the expected coefficient residual
+/// `E_F[ε(F)]` over uniform responder sets of size `r`. Deterministic
+/// given `seed`. `samples` in the low thousands is plenty for the small
+/// `n` of the paper's experiments (each sample is one `r × r` solve).
+pub fn expected_coeff_residual(
+    code: &ApproxCode,
+    r: usize,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    let n = code.config().n;
+    assert!(r >= 1 && r <= n, "quorum r={r} must be in 1..={n}");
+    if r == n {
+        return 0.0; // full quorum decodes exactly
+    }
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut acc = 0.0f64;
+    for _ in 0..samples {
+        let set = rng.sample_indices(n, r);
+        acc += code
+            .partial_decode(&set)
+            .expect("partial decode is defined for every non-empty responder set")
+            .coeff_residual;
+    }
+    acc / samples as f64
+}
+
+/// One row of the quorum tradeoff: what the master buys (time) and pays
+/// (residual) by proceeding at `quorum` responders.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuorumPoint {
+    /// Responders waited for.
+    pub quorum: usize,
+    /// Quorum as a fraction of `n`.
+    pub fraction: f64,
+    /// Predicted expected iteration time (Eq. 28–29 at the `r`-th order
+    /// statistic).
+    pub expected_time: f64,
+    /// Predicted expected coefficient residual `E_F[ε(F)]`.
+    pub expected_residual: f64,
+}
+
+/// Sweep the full tradeoff curve for a scheme: one [`QuorumPoint`] per
+/// quorum size in `1..=n`.
+pub fn quorum_tradeoff(
+    params: &DelayParams,
+    code: &ApproxCode,
+    samples: usize,
+    seed: u64,
+) -> Vec<QuorumPoint> {
+    let n = code.config().n;
+    let d = code.config().d;
+    (1..=n)
+        .map(|r| QuorumPoint {
+            quorum: r,
+            fraction: r as f64 / n as f64,
+            expected_time: expected_runtime_at_quorum(params, n, d, r),
+            expected_residual: expected_coeff_residual(code, r, samples, seed ^ r as u64),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::order_stats::expected_total_runtime;
+
+    #[test]
+    fn quorum_runtime_matches_exact_model_at_n_minus_s() {
+        // Waiting for r = n - s responders is the Eq. 28 expectation with
+        // m = 1 — the two entry points must agree exactly.
+        let p = DelayParams::table_vi1();
+        for (n, d, s) in [(8usize, 4usize, 1usize), (10, 3, 2), (6, 2, 0)] {
+            let via_quorum = expected_runtime_at_quorum(&p, n, d, n - s);
+            let via_exact = expected_total_runtime(&p, n, d, s, 1);
+            assert!(
+                (via_quorum - via_exact).abs() < 1e-9,
+                "(n={n},d={d},s={s}): {via_quorum} vs {via_exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn quorum_runtime_is_monotone_in_r() {
+        let p = DelayParams::table_vi1();
+        let mut prev = 0.0;
+        for r in 1..=10usize {
+            let t = expected_runtime_at_quorum(&p, 10, 3, r);
+            assert!(t > prev, "E[T] must grow with the quorum: r={r} gives {t}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn residual_zero_at_full_quorum_and_for_full_replication() {
+        let code = ApproxCode::new(8, 3, 6).unwrap();
+        assert_eq!(expected_coeff_residual(&code, 8, 100, 1), 0.0);
+        // d = n: any single responder decodes exactly.
+        let full = ApproxCode::new(6, 6, 1).unwrap();
+        assert!(expected_coeff_residual(&full, 1, 200, 2) < 1e-9);
+    }
+
+    #[test]
+    fn residual_shrinks_as_quorum_grows() {
+        let code = ApproxCode::new(9, 3, 6).unwrap();
+        let res: Vec<f64> =
+            (1..=9).map(|r| expected_coeff_residual(&code, r, 2000, 7)).collect();
+        for r in 1..res.len() {
+            // expectation is provably monotone; the slack covers the
+            // Monte-Carlo noise of independent sample sets per r
+            assert!(
+                res[r] <= res[r - 1] + 0.02,
+                "E[residual] must shrink with quorum: {:?}",
+                res
+            );
+        }
+        assert!(res[0] > 0.5, "tiny quorums must leave a large residual: {}", res[0]);
+        assert_eq!(res[8], 0.0);
+    }
+
+    #[test]
+    fn tradeoff_sweep_is_consistent() {
+        let p = DelayParams::table_vi1();
+        let code = ApproxCode::new(6, 2, 4).unwrap();
+        let curve = quorum_tradeoff(&p, &code, 300, 3);
+        assert_eq!(curve.len(), 6);
+        for (i, pt) in curve.iter().enumerate() {
+            assert_eq!(pt.quorum, i + 1);
+            assert!((pt.fraction - (i + 1) as f64 / 6.0).abs() < 1e-12);
+        }
+        // time up, residual down along the curve (MC slack on the latter)
+        for w in curve.windows(2) {
+            assert!(w[1].expected_time > w[0].expected_time);
+            assert!(w[1].expected_residual <= w[0].expected_residual + 0.02);
+        }
+    }
+}

@@ -13,13 +13,45 @@
 //! - [`optimize`]: optimal `(d, s, m)` search + Propositions 1–2.
 //! - [`virtual_cluster`]: Monte-Carlo event simulation used by the Fig. 3
 //!   and Fig. 4 benches (and by the coordinator's virtual-time mode).
+//! - [`approx`]: the model extended to partial recovery — expected
+//!   iteration time and expected decoding residual versus quorum size.
+//!
+//! # Example: planning a deployment
+//!
+//! ```
+//! use gradcode::simulator::order_stats::expected_total_runtime;
+//! use gradcode::simulator::{optimal_triple, DelayParams};
+//!
+//! // The §VI-A regime: n = 8, λ₁ = 0.8, λ₂ = 0.1, t₁ = 1.6, t₂ = 6.
+//! let p = DelayParams::table_vi1();
+//! let best = optimal_triple(&p, 8);
+//! assert_eq!((best.d, best.s, best.m), (4, 1, 3)); // the paper's optimum
+//! let naive = expected_total_runtime(&p, 8, 1, 0, 1);
+//! assert!(best.expected_runtime < naive); // coding beats uncoded
+//! ```
+//!
+//! # Example: the approximate-recovery tradeoff
+//!
+//! ```
+//! use gradcode::simulator::approx::expected_runtime_at_quorum;
+//! use gradcode::simulator::DelayParams;
+//!
+//! let p = DelayParams::table_vi1();
+//! // Proceeding at 6 of 10 responders is strictly faster than waiting
+//! // for all 10 — the price is a nonzero decoding residual.
+//! let at6 = expected_runtime_at_quorum(&p, 10, 3, 6);
+//! let at10 = expected_runtime_at_quorum(&p, 10, 3, 10);
+//! assert!(at6 < at10);
+//! ```
 
+pub mod approx;
 pub mod model;
 pub mod optimize;
 pub mod order_stats;
 pub mod quadrature;
 pub mod virtual_cluster;
 
+pub use approx::{expected_coeff_residual, expected_runtime_at_quorum, QuorumPoint};
 pub use model::{DelayParams, WorkerRuntime};
 pub use optimize::{optimal_alpha, optimal_triple, prop1_optimal_d, TripleChoice};
 pub use virtual_cluster::{ClusterSample, VirtualCluster};

@@ -1,0 +1,201 @@
+//! Integration: the approximate (partial-recovery) regime end-to-end —
+//! exactness at full quorum, trainer behavior under a partial quorum,
+//! and agreement between the §VI simulator's predictions (runtime and
+//! residual) and what a seeded virtual cluster actually measures.
+
+use gradcode::coding::ApproxCode;
+use gradcode::coordinator::{train, ExecutionMode, OptChoice, SchemeSpec, TrainConfig};
+use gradcode::data::{train_test_split, CategoricalConfig, SyntheticCategorical};
+use gradcode::simulator::approx::{expected_coeff_residual, expected_runtime_at_quorum};
+use gradcode::simulator::{DelayParams, VirtualCluster};
+
+fn dataset(rows: usize, seed: u64) -> (gradcode::data::DenseDataset, gradcode::data::DenseDataset) {
+    let gen = SyntheticCategorical::new(CategoricalConfig::default(), seed);
+    let ds = gen.generate(rows, seed + 1);
+    train_test_split(&ds, 0.25, seed + 2)
+}
+
+fn config(n: usize, scheme: SchemeSpec, iters: usize, lr: f32, seed: u64) -> TrainConfig {
+    TrainConfig {
+        n,
+        scheme,
+        iters,
+        opt: OptChoice::Nag { lr, momentum: 0.9 },
+        eval_every: 10,
+        delays: Some(DelayParams::table_vi1()),
+        mode: ExecutionMode::Virtual,
+        seed,
+        minibatch: None,
+        quorum: None,
+    }
+}
+
+#[test]
+fn full_quorum_approx_matches_uncoded_trajectory() {
+    // At quorum = 1.0 the partial decoder is exact, so approximate
+    // training must follow the uncoded trajectory (same gradients, same
+    // clockless optimizer path).
+    let (train_ds, _) = dataset(400, 401);
+    let lr = 4.0 / train_ds.rows as f32;
+    let mk = |scheme| {
+        let mut cfg = config(4, scheme, 25, lr, 9);
+        cfg.delays = None;
+        cfg
+    };
+    let (_, beta_approx) =
+        train(mk(SchemeSpec::Approx { d: 2, quorum: 1.0 }), &train_ds, None).unwrap();
+    let (_, beta_naive) = train(mk(SchemeSpec::Uncoded), &train_ds, None).unwrap();
+    let max_diff = beta_approx
+        .iter()
+        .zip(&beta_naive)
+        .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()));
+    let scale = beta_naive.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+    assert!(
+        max_diff / scale < 1e-2,
+        "trajectory divergence {max_diff} (scale {scale})"
+    );
+}
+
+#[test]
+fn partial_quorum_cuts_iteration_time_and_reports_residual() {
+    let (train_ds, test_ds) = dataset(1200, 411);
+    let lr = 6.0 / train_ds.rows as f32;
+    let (log_full, _) = train(
+        config(10, SchemeSpec::Approx { d: 3, quorum: 1.0 }, 60, lr, 13),
+        &train_ds,
+        Some(&test_ds),
+    )
+    .unwrap();
+    let (log_part, _) = train(
+        config(10, SchemeSpec::Approx { d: 3, quorum: 0.6 }, 60, lr, 13),
+        &train_ds,
+        Some(&test_ds),
+    )
+    .unwrap();
+    // the quorum is respected every iteration
+    assert!(log_full.records.iter().all(|r| r.responders.len() == 10));
+    assert!(log_part.records.iter().all(|r| r.responders.len() == 6));
+    // proceeding at 6 of 10 must be faster on the simulated clock
+    assert!(
+        log_part.mean_iteration_sim_time() < log_full.mean_iteration_sim_time(),
+        "partial {} vs full {}",
+        log_part.mean_iteration_sim_time(),
+        log_full.mean_iteration_sim_time()
+    );
+    // residual accounting: reported every iteration, ~0 at full quorum
+    assert!(log_part.records.iter().all(|r| r.decode_residual.is_some()));
+    assert!(log_full.mean_decode_residual().unwrap() < 1e-9);
+    assert!(log_part.mean_decode_residual().unwrap() >= 0.0);
+    // approximate training must still learn
+    let first = log_part.records[0].loss.unwrap();
+    let last = log_part.final_loss().unwrap();
+    assert!(last < first, "loss must decrease: {first} -> {last}");
+}
+
+#[test]
+fn exact_schemes_report_no_residual() {
+    let (train_ds, _) = dataset(500, 421);
+    let lr = 4.0 / train_ds.rows as f32;
+    let (log, _) = train(
+        config(5, SchemeSpec::Poly { s: 1, m: 2 }, 10, lr, 5),
+        &train_ds,
+        None,
+    )
+    .unwrap();
+    assert!(log.records.iter().all(|r| r.decode_residual.is_none()));
+    assert_eq!(log.mean_decode_residual(), None);
+}
+
+#[test]
+fn simulator_residual_matches_virtual_cluster_measurement() {
+    // Under assumptions 1-3 the r fastest workers are a uniform r-subset,
+    // so the simulator's Monte-Carlo expectation over uniform subsets
+    // must match the mean residual measured on the virtual cluster's
+    // actual responder sets.
+    let p = DelayParams::table_vi1();
+    let (n, d, r) = (8usize, 2usize, 5usize);
+    let code = ApproxCode::new(n, d, r).unwrap();
+    let mut vc = VirtualCluster::new(&p, n, d, n - r, 1, 77);
+    let iters = 3000;
+    let measured: f64 = (0..iters)
+        .map(|_| {
+            let sample = vc.sample_iteration();
+            let responders = sample.responders(r);
+            code.partial_decode(&responders).unwrap().coeff_residual
+        })
+        .sum::<f64>()
+        / iters as f64;
+    let predicted = expected_coeff_residual(&code, r, 4000, 78);
+    assert!(
+        predicted > 0.05,
+        "test needs a regime with a nontrivial residual, got {predicted}"
+    );
+    let rel = (measured - predicted).abs() / predicted;
+    assert!(
+        rel < 0.15,
+        "measured {measured:.4} vs predicted {predicted:.4} (rel {rel:.3})"
+    );
+}
+
+#[test]
+fn simulator_runtime_prediction_matches_virtual_cluster() {
+    // The r-th order-statistic quadrature must agree with Monte-Carlo
+    // simulation of the same delay model (the quorum analogue of the
+    // existing Eq. 28/29 cross-check).
+    let p = DelayParams::table_vi1();
+    for (n, d, r) in [(8usize, 3usize, 5usize), (10, 2, 4), (10, 3, 10)] {
+        let mut vc = VirtualCluster::new(&p, n, d, n - r, 1, 42);
+        let mc = vc.mean_iteration_time(60_000);
+        let exact = expected_runtime_at_quorum(&p, n, d, r);
+        let rel = (mc - exact).abs() / exact;
+        assert!(
+            rel < 0.02,
+            "(n={n},d={d},r={r}): MC {mc:.3} vs quadrature {exact:.3}"
+        );
+    }
+}
+
+#[test]
+fn smaller_quorum_never_slows_the_virtual_clock() {
+    // On identical seeds the r-th arrival is monotone in r per
+    // iteration, hence also on average.
+    let p = DelayParams::table_vi1();
+    let n = 10;
+    let mut prev = 0.0;
+    for r in [2usize, 5, 8, 10] {
+        let mut vc = VirtualCluster::new(&p, n, 3, n - r, 1, 11);
+        let t = vc.mean_iteration_time(10_000);
+        assert!(t > prev, "mean time must grow with the quorum: r={r} gives {t}");
+        prev = t;
+    }
+}
+
+#[test]
+fn trainer_residuals_match_direct_partial_decode() {
+    // The residual the trainer records per iteration must be exactly the
+    // scheme's partial_decode residual for that responder set.
+    let (train_ds, _) = dataset(600, 431);
+    let lr = 4.0 / train_ds.rows as f32;
+    let (log, _) = train(
+        config(8, SchemeSpec::Approx { d: 2, quorum: 0.5 }, 30, lr, 21),
+        &train_ds,
+        None,
+    )
+    .unwrap();
+    let code = ApproxCode::new(8, 2, 4).unwrap();
+    for rec in &log.records {
+        assert_eq!(rec.responders.len(), 4);
+        let want = code.partial_decode(&rec.responders).unwrap().coeff_residual;
+        let got = rec.decode_residual.unwrap();
+        assert!(
+            (got - want).abs() < 1e-12,
+            "iter {}: recorded {got} vs recomputed {want}",
+            rec.iter
+        );
+    }
+    // with half the workers missing some iterations must be inexact
+    assert!(
+        log.records.iter().any(|r| r.decode_residual.unwrap() > 1e-9),
+        "quorum 4 of 8 with d=2 should hit non-covering responder sets"
+    );
+}

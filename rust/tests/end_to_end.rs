@@ -29,6 +29,7 @@ fn config(n: usize, scheme: SchemeSpec, iters: usize, lr: f32) -> TrainConfig {
         mode: ExecutionMode::Virtual,
         seed: 0xabcd,
         minibatch: None,
+        quorum: None,
     }
 }
 
@@ -162,6 +163,7 @@ fn training_survives_injected_worker_failure() {
         mode: ExecutionMode::Virtual,
         seed: 0xdead,
         minibatch: None,
+        quorum: None,
     };
     let mut tr = Trainer::with_backend(cfg, code, backend, &padded, None).unwrap();
     let log = tr.run().unwrap();
@@ -197,6 +199,7 @@ fn too_many_failures_panic_cleanly() {
         mode: ExecutionMode::Virtual,
         seed: 0xdead,
         minibatch: None,
+        quorum: None,
     };
     let mut tr = Trainer::with_backend(cfg, code, backend, &padded, None).unwrap();
     let _ = tr.run();
@@ -236,6 +239,7 @@ fn random_scheme_handles_extra_responders() {
         mode: ExecutionMode::Virtual,
         seed: 0xbeef,
         minibatch: None,
+        quorum: None,
     };
     let (log, _) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
     let first = log.records[0].loss.unwrap();

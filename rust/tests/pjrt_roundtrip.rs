@@ -90,6 +90,7 @@ fn pjrt_backend_trains_end_to_end() {
         mode: ExecutionMode::Virtual,
         seed: 3,
         minibatch: None,
+        quorum: None,
     };
     let mut trainer = Trainer::with_backend(cfg, code, backend, &ds, None).unwrap();
     let log = trainer.run().unwrap();

@@ -1,0 +1,227 @@
+//! Offline stand-in for the `anyhow` crate (API subset).
+//!
+//! The build environment ships no crates.io registry, so this vendored
+//! micro-crate provides the pieces of anyhow 1.x the repository actually
+//! uses: [`Error`] (a type-erased error with a context chain),
+//! [`Result`], the [`Context`] extension trait, and the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros. Semantics match anyhow where it
+//! matters here:
+//!
+//! - any `E: std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?` (and [`Error`] itself deliberately does *not*
+//!   implement `std::error::Error`, which is what makes that blanket
+//!   `From` coherent — the same trick anyhow uses);
+//! - `Display` prints the outermost message; `Debug` prints the whole
+//!   `Caused by:` chain, which is what `fn main() -> anyhow::Result<()>`
+//!   shows on error exit.
+//!
+//! Not implemented (unused in this repository): downcasting, backtraces.
+
+use std::fmt;
+
+/// Type-erased error with a chain of context messages.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Error from a standard error value, preserving its source chain
+    /// (as rendered text; this shim does not store the value itself).
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut messages = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(s) = source {
+            messages.push(s.to_string());
+            source = s.source();
+        }
+        let mut chain: Option<Box<Error>> = None;
+        for msg in messages.into_iter().rev() {
+            chain = Some(Box::new(Error { msg, cause: chain }));
+        }
+        *chain.expect("at least one message")
+    }
+
+    /// Wrap with an outer context message (outermost wins `Display`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The messages from outermost to innermost.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        out
+    }
+
+    /// The innermost message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let chain = self.chain();
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in &chain[1..] {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Coherent because `Error` does not implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    /// Attach a context message to the error case.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily-evaluated context message to the error case.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_chains_and_display_is_outermost() {
+        let e: Result<()> = Err(io_err()).context("opening config");
+        let e = e.unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert!(format!("{e:?}").contains("Caused by"));
+        assert!(format!("{e:?}").contains("missing thing"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(12).unwrap_err().to_string().contains("12"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+        let e = anyhow!("custom {}", 7);
+        assert_eq!(e.to_string(), "custom 7");
+    }
+}
