@@ -2,15 +2,18 @@
 # Local CI gate for gradcode (documented in README.md).
 #
 #   ./ci.sh            # full gate
-#   ./ci.sh --quick    # skip the doc build
+#   ./ci.sh --quick    # skip the bench smoke + doc build
 #
 # Steps:
 #   1. cargo build --release --benches  (benches are autobenches=false /
 #                                        test=false, so nothing else
 #                                        compiles them)
 #   2. cargo test -q          (unit + integration + doc tests)
-#   3. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
-#   4. cargo fmt --check      (advisory: warns on drift, does not fail —
+#   3. hetero_speedup --smoke (tiny profile sweep; refreshes the
+#                              machine-readable BENCH_hetero.json at the
+#                              repo root so perf is tracked PR-over-PR)
+#   4. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
+#   5. cargo fmt --check      (advisory: warns on drift, does not fail —
 #                              rustfmt availability varies across the
 #                              offline build images)
 set -euo pipefail
@@ -27,6 +30,9 @@ echo "==> cargo test -q"
 cargo test -q
 
 if [ "$quick" -eq 0 ]; then
+    echo "==> bench smoke: hetero_speedup (writes BENCH_hetero.json)"
+    cargo bench --bench hetero_speedup -- --smoke
+
     echo "==> cargo doc --no-deps"
     cargo doc --no-deps
 fi

@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
             seed: 5,
             minibatch: None,
             quorum: None,
+            fleet: None,
         };
         let t0 = Instant::now();
         let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;

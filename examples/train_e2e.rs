@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
     for scheme in schemes {
         let cfg = TrainConfig {
             n: N,
-            scheme,
+            scheme: scheme.clone(),
             iters,
             opt: OptChoice::Nag { lr, momentum: 0.9 },
             eval_every: (iters / 20).max(1),
@@ -111,6 +111,7 @@ fn main() -> anyhow::Result<()> {
             seed,
             minibatch: None,
             quorum: None,
+            fleet: None,
         };
         let mut trainer = if want_pjrt {
             println!("[{}] backend: PJRT (AOT JAX/Pallas artifact)", scheme.label());

@@ -13,7 +13,7 @@
 //!
 //!     cargo bench --bench approx_tradeoff [-- --iters 150]
 
-use gradcode::bench::Table;
+use gradcode::bench::{json_array, JsonObject, Table};
 use gradcode::cli::Command;
 use gradcode::coding::{quorum_count, ApproxCode};
 use gradcode::coordinator::{train, ExecutionMode, OptChoice, SchemeSpec, TrainConfig};
@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         .flag("quorums", "0.4,0.5,0.6,0.7,0.8,0.9,1.0", "quorum fractions to sweep")
         .flag("samples", "2000", "Monte-Carlo samples for the predicted residual")
         .flag("seed", "6", "seed")
+        .flag("json", "BENCH_approx.json", "machine-readable output path (empty to skip)")
         .parse_env();
     let n = args.get_usize("n");
     let d = args.get_usize("d");
@@ -70,6 +71,7 @@ fn main() -> anyhow::Result<()> {
             seed,
             minibatch: None,
             quorum: None,
+            fleet: None,
         };
         let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;
         runs.push((q, quorum_count(n, q), log));
@@ -99,6 +101,7 @@ fn main() -> anyhow::Result<()> {
         &format!("quorum fraction vs time/error, n = {n}, d = {d} (ec2-fit delays)"),
         &header,
     );
+    let mut json_rows: Vec<String> = Vec::new();
     for (q, r, log) in &runs {
         let code = ApproxCode::new(n, d, *r)?;
         let predicted_t = expected_runtime_at_quorum(&p, n, d, *r);
@@ -113,8 +116,36 @@ fn main() -> anyhow::Result<()> {
             format!("{:.4}", log.final_auc().unwrap_or(f64::NAN)),
             time_to_auc(log, target).map_or("—".into(), |t| format!("{t:.0}")),
         ]);
+        json_rows.push(
+            JsonObject::new()
+                .field_num("quorum_fraction", *q)
+                .field_int("quorum", *r as i64)
+                .field_num("predicted_time", predicted_t)
+                .field_num("measured_mean_iter", log.mean_iteration_sim_time())
+                .field_num("predicted_residual", predicted_res)
+                .field_num("measured_residual", log.mean_decode_residual().unwrap_or(0.0))
+                .field_num("final_auc", log.final_auc().unwrap_or(f64::NAN))
+                .field_num(
+                    "time_to_target_auc",
+                    time_to_auc(log, target).unwrap_or(f64::NAN),
+                )
+                .build(),
+        );
     }
     table.print();
+
+    let json_path = args.get_str("json");
+    if !json_path.is_empty() {
+        let root = JsonObject::new()
+            .field_str("bench", "approx_tradeoff")
+            .field_int("n", n as i64)
+            .field_int("d", d as i64)
+            .field_int("iters", iters as i64)
+            .field_num("target_auc", target)
+            .field_raw("points", &json_array(json_rows));
+        std::fs::write(json_path, root.build() + "\n")?;
+        println!("wrote {json_path}");
+    }
 
     for (q, _, log) in &runs {
         let pts: Vec<String> = log

@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
         for (label, spec, choice) in &schemes {
             let cfg = TrainConfig {
                 n,
-                scheme: *spec,
+                scheme: spec.clone(),
                 iters,
                 opt: OptChoice::Nag { lr, momentum: 0.9 },
                 eval_every: iters, // metrics off the hot path
@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
                 seed: args.get_u64("seed"),
                 minibatch: None,
                 quorum: None,
+                fleet: None,
             };
             let (log, _) = train(cfg, &ds, None)?;
             measured.push((label.clone(), choice, log.mean_iteration_sim_time()));

@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
         for (label, spec) in &schemes {
             let cfg = TrainConfig {
                 n,
-                scheme: *spec,
+                scheme: spec.clone(),
                 iters,
                 opt: OptChoice::Nag { lr, momentum: 0.9 },
                 eval_every: (iters / 60).max(1),
@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
                 seed: args.get_u64("seed"),
                 minibatch: None,
                 quorum: None,
+                fleet: None,
             };
             let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;
             logs.push((label.clone(), log));

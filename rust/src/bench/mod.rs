@@ -189,9 +189,93 @@ impl Table {
     }
 }
 
+/// Minimal JSON object builder for the machine-readable bench artifacts
+/// (`BENCH_*.json`; no serde offline). Values are appended in insertion
+/// order; nested objects/arrays go through [`JsonObject::field_raw`] /
+/// [`json_array`].
+#[derive(Debug, Clone, Default)]
+pub struct JsonObject {
+    parts: Vec<String>,
+}
+
+impl JsonObject {
+    pub fn new() -> Self {
+        JsonObject { parts: Vec::new() }
+    }
+
+    pub fn field_str(mut self, key: &str, value: &str) -> Self {
+        self.parts.push(format!("{}: {}", json_string(key), json_string(value)));
+        self
+    }
+
+    pub fn field_int(mut self, key: &str, value: i64) -> Self {
+        self.parts.push(format!("{}: {value}", json_string(key)));
+        self
+    }
+
+    /// Non-finite floats serialize as `null` (JSON has no NaN/inf).
+    pub fn field_num(mut self, key: &str, value: f64) -> Self {
+        let v = if value.is_finite() { format!("{value}") } else { "null".into() };
+        self.parts.push(format!("{}: {v}", json_string(key)));
+        self
+    }
+
+    /// Pre-rendered JSON (an object from [`JsonObject::build`] or an
+    /// array from [`json_array`]).
+    pub fn field_raw(mut self, key: &str, raw: &str) -> Self {
+        self.parts.push(format!("{}: {raw}", json_string(key)));
+        self
+    }
+
+    pub fn build(&self) -> String {
+        format!("{{{}}}", self.parts.join(", "))
+    }
+}
+
+/// Render pre-serialized JSON values as an array.
+pub fn json_array<I: IntoIterator<Item = String>>(items: I) -> String {
+    format!("[{}]", items.into_iter().collect::<Vec<_>>().join(", "))
+}
+
+/// JSON string literal with the mandatory escapes.
+pub fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_builder_emits_valid_shapes() {
+        let obj = JsonObject::new()
+            .field_str("name", "hetero \"speedup\"")
+            .field_int("n", 10)
+            .field_num("time", 1.5)
+            .field_num("bad", f64::NAN)
+            .field_raw("list", &json_array([1.0, 2.0].iter().map(|x| x.to_string())))
+            .build();
+        assert_eq!(
+            obj,
+            "{\"name\": \"hetero \\\"speedup\\\"\", \"n\": 10, \"time\": 1.5, \
+             \"bad\": null, \"list\": [1, 2]}"
+        );
+        assert_eq!(json_string("a\nb"), "\"a\\nb\"");
+    }
 
     #[test]
     fn bencher_times_something() {

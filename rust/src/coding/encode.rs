@@ -18,13 +18,25 @@ pub struct Encoder {
 }
 
 impl Encoder {
-    /// Build for `worker` under `code`.
+    /// Build for `worker` under `code`. The gradient count is derived
+    /// from the coefficient vector (`len / m`), not from the scheme-wide
+    /// `d`, so heterogeneous schemes with per-worker loads `d_w` work
+    /// through the same path (uniform schemes: `len / m == d`).
     pub fn new(code: &dyn GradientCode, worker: usize) -> Result<Self, CodingError> {
         let c64 = code.encode_coeffs(worker)?;
+        let m = code.config().m;
+        if c64.len() % m != 0 {
+            // A silent floor of d = len/m would truncate coefficients and
+            // encode a wrong vector; fail loudly instead.
+            return Err(CodingError::InvalidConfig(format!(
+                "worker {worker}: {} encode coefficients are not a multiple of m={m}",
+                c64.len()
+            )));
+        }
         Ok(Encoder {
+            d: c64.len() / m,
             coeffs: c64.iter().map(|&x| x as f32).collect(),
-            d: code.config().d,
-            m: code.config().m,
+            m,
         })
     }
 

@@ -1,0 +1,865 @@
+//! Heterogeneous (group-based) exact gradient coding.
+//!
+//! The §III/§IV constructions assume `n` *identical* workers: every
+//! worker gets the same load `d` over equal-size subsets, and the master
+//! waits for any `n - s`. Real fleets are heterogeneous; "Optimal
+//! Communication-Computation Trade-Off in Heterogeneous Gradient Coding"
+//! (Jahani-Nezhad & Maddah-Ali) shows the optimal response is *unequal
+//! per-worker loads realized through group-based codes*. [`HeteroCode`]
+//! is that idea expressed through this crate's [`GradientCode`] seam:
+//!
+//! 1. **Groups.** Workers are partitioned into groups of similar speed.
+//!    Group `g` (size `n_g`) owns a contiguous slice of `n_g` data
+//!    subsets and runs its *own* §III polynomial code over them with a
+//!    group-local load `d_g >= s + m` (tight inner frontier
+//!    `s_g = d_g - m`). The total sum gradient is the sum of the per-group
+//!    slice sums, so the master simply concatenates the groups' decode
+//!    weights — decode stays **exact**.
+//! 2. **Straggler tolerance.** Each group independently tolerates
+//!    `s_g = d_g - m >= s` stragglers, so *any* global pattern of at most
+//!    `s` stragglers is admissible (each group sees at most `s <= s_g` of
+//!    them). Groups with slack (`d_g > s + m`) let the master stop the
+//!    gather before their slow tail — see
+//!    [`GradientCode::group_quorums`].
+//! 3. **Speed-proportional placement.** Subset *sizes* scale with the
+//!    owning group's speed ([`GradientCode::subset_weights`]): group `g`'s
+//!    subsets hold a `w_g` multiple of the baseline `rows/n` rows, chosen
+//!    so per-worker compute time `d_g·w_g/σ_g` is balanced across groups.
+//!    Fast workers therefore carry more data; slow workers carry less —
+//!    instead of being written off as permanent stragglers.
+//!
+//! The homogeneous schemes are the uniform-speed special case: a single
+//! group with `d = s + m` and weight 1 is exactly the §III code.
+//!
+//! Feasibility: every group needs `n_g >= d_g >= s + m` subsets/workers,
+//! so the total load satisfies `Σ_w d_w >= n·(s+m)` — the Theorem 1
+//! budget paid once per group instead of once globally.
+//!
+//! The matching runtime model (per-worker shifted exponentials scaled by
+//! speed and load, expected iteration time under the group quorum rule,
+//! and the `plan_loads` optimizer) lives in [`crate::simulator::hetero`].
+//!
+//! # Example
+//!
+//! ```
+//! use gradcode::coding::{Decoder, Encoder, GradientCode, HeteroCode};
+//!
+//! // 6 workers: three at baseline speed, three 4x faster; tolerate s = 1
+//! // straggler at m = 2 communication reduction.
+//! let speeds = [1.0, 1.0, 1.0, 4.0, 4.0, 4.0];
+//! let code = HeteroCode::from_speeds(6, 1, 2, &speeds).unwrap();
+//!
+//! // Fast workers carry more rows per subset than slow ones.
+//! let ws = code.subset_weights().unwrap();
+//! assert!(ws[5] > ws[0]);
+//!
+//! // Exact decode from any n - s = 5 responders.
+//! let grads: Vec<Vec<f32>> = (0..6).map(|t| vec![t as f32; 4]).collect();
+//! let transmitted: Vec<Vec<f32>> = (0..6)
+//!     .map(|w| {
+//!         let views: Vec<&[f32]> = code
+//!             .placement()
+//!             .assigned(w)
+//!             .iter()
+//!             .map(|&t| grads[t].as_slice())
+//!             .collect();
+//!         Encoder::new(&code, w).unwrap().encode(&views).unwrap()
+//!     })
+//!     .collect();
+//! let dec = Decoder::new(&code, &[0, 1, 3, 4, 5]).unwrap(); // worker 2 straggles
+//! let fs: Vec<&[f32]> = dec.used_workers().iter().map(|&w| transmitted[w].as_slice()).collect();
+//! let sum = dec.decode(&fs).unwrap();
+//! assert!((sum[0] - 15.0).abs() < 1e-3); // 0+1+2+3+4+5
+//! ```
+
+use super::{
+    CodingError, DecodeWeights, GradientCode, Placement, PolynomialCode, SchemeConfig,
+};
+use crate::linalg::Matrix;
+
+/// Per-subset bookkeeping overhead, in baseline-subset compute units per
+/// assigned subset. This is what keeps "replicate everything inside the
+/// group" from being a free lunch in the model: raising `d_g` buys
+/// straggler tolerance but costs `SUBSET_OVERHEAD·t₁` of deterministic
+/// compute per extra subset. Used identically by
+/// [`HeteroCode::compute_units`] (which drives the virtual cluster's
+/// delay injection) and by the [`crate::simulator::hetero`] predictions,
+/// so predicted and realized times stay comparable.
+pub const SUBSET_OVERHEAD: f64 = 0.05;
+
+/// Floor for subset-size multipliers: no subset shrinks below 10% of the
+/// baseline `rows/n` (keeps every shard trainable and the apportionment
+/// well-posed on small datasets).
+const MIN_WEIGHT: f64 = 0.1;
+
+/// Speed-tier cut: a new group starts when a worker is more than this
+/// factor faster than the slowest worker of the current group.
+const TIER_RATIO: f64 = 1.5;
+
+/// Compute-balancing subset weights for a candidate grouping: group `g`
+/// of `sizes[g]` workers at mean speed `mean_speed[g]` with load
+/// `ds[g]` gets the weight that equalizes per-worker compute time
+/// `d_g·(w_g + SUBSET_OVERHEAD)/σ̄_g` across groups, subject to the
+/// `MIN_WEIGHT` floor and `Σ_g n_g·w_g = n` (mean subset size
+/// preserved). Solving `u_g/σ̄_g = c` with the row budget gives
+/// `c = n·(1 + overhead)/Σ_g(n_g·σ̄_g/d_g)` and `w_g = c·σ̄_g/d_g −
+/// overhead`. Shared by [`HeteroCode::from_speeds`] and the
+/// [`crate::simulator::hetero`] planner so predicted and deployed
+/// weights cannot drift apart.
+pub fn balanced_group_weights(
+    mean_speed: &[f64],
+    sizes: &[usize],
+    ds: &[usize],
+) -> Vec<f64> {
+    assert_eq!(mean_speed.len(), sizes.len());
+    assert_eq!(ds.len(), sizes.len());
+    let k = sizes.len();
+    let n: usize = sizes.iter().sum();
+    let denom: f64 = sizes
+        .iter()
+        .zip(mean_speed)
+        .zip(ds)
+        .map(|((&ng, &sp), &d)| ng as f64 * sp / d as f64)
+        .sum();
+    let c = n as f64 * (1.0 + SUBSET_OVERHEAD) / denom;
+    // Unfloored balance targets (Σ n_g·raw_g = n by construction of c).
+    let raw: Vec<f64> = mean_speed
+        .iter()
+        .zip(ds)
+        .map(|(&sp, &d)| c * sp / d as f64 - SUBSET_OVERHEAD)
+        .collect();
+    // Water-filling against the floor: groups pinned at MIN_WEIGHT keep
+    // it exactly; the remaining row budget is split proportionally among
+    // the rest, re-pinning anyone the rescale pushes under the floor.
+    // Terminates: each pass pins at least one more group, and not all
+    // can pin (Σ n_g·MIN_WEIGHT < n).
+    let mut pinned = vec![false; k];
+    loop {
+        let fixed: f64 = sizes
+            .iter()
+            .zip(&pinned)
+            .filter(|(_, &p)| p)
+            .map(|(&ng, _)| ng as f64 * MIN_WEIGHT)
+            .sum();
+        let free_raw: f64 = sizes
+            .iter()
+            .zip(&raw)
+            .zip(&pinned)
+            .filter(|(_, &p)| !p)
+            .map(|((&ng, &r), _)| ng as f64 * r)
+            .sum();
+        let scale = (n as f64 - fixed) / free_raw;
+        let mut repinned = false;
+        for g in 0..k {
+            if !pinned[g] && raw[g] * scale < MIN_WEIGHT {
+                pinned[g] = true;
+                repinned = true;
+            }
+        }
+        if !repinned {
+            return raw
+                .iter()
+                .zip(&pinned)
+                .map(|(&r, &p)| if p { MIN_WEIGHT } else { r * scale })
+                .collect();
+        }
+    }
+}
+
+/// One group of a heterogeneous plan: which workers, their common load
+/// `d`, and the subset-size multiplier `weight` for the group's slice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupPlan {
+    /// Global worker ids (any order; a partition across the plan).
+    pub workers: Vec<usize>,
+    /// Subsets per worker within the group (`s + m <= d <= workers.len()`).
+    pub d: usize,
+    /// Relative subset size for the group's slice (baseline 1.0).
+    pub weight: f64,
+}
+
+/// A built group: plan + slice + inner code.
+struct Group {
+    workers: Vec<usize>,
+    /// Global subset ids of the group's slice (contiguous, `n_g` of them).
+    subsets: Vec<usize>,
+    d: usize,
+    weight: f64,
+    /// Inner §III code over the slice: `(n_g, d, d - m, m)`.
+    code: PolynomialCode,
+}
+
+/// Read-only view of one group (planning/debug surface).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupView<'a> {
+    pub workers: &'a [usize],
+    pub subsets: &'a [usize],
+    pub d: usize,
+    pub weight: f64,
+    /// Responders the master needs from this group (`n_g - (d - m)`).
+    pub need: usize,
+}
+
+/// Group-based heterogeneous gradient code (exact recovery).
+pub struct HeteroCode {
+    /// `d` is the *maximum* per-group load; `wait_for()` is the global
+    /// `n - s` (the per-group rule in [`GradientCode::group_quorums`] can
+    /// stop the gather earlier).
+    cfg: SchemeConfig,
+    placement: Placement,
+    speeds: Vec<f64>,
+    groups: Vec<Group>,
+    /// worker id → (group index, local index within the group).
+    worker_group: Vec<(usize, usize)>,
+    subset_weights: Vec<f64>,
+}
+
+impl HeteroCode {
+    /// Build from an explicit group plan. `speeds` is recorded for
+    /// planning/telemetry (it does not enter the code construction);
+    /// weights are renormalized so `Σ_g n_g·w_g = n` (mean subset size
+    /// preserved).
+    pub fn from_groups(
+        s: usize,
+        m: usize,
+        speeds: &[f64],
+        plan: &[GroupPlan],
+    ) -> Result<Self, CodingError> {
+        let n = speeds.len();
+        if n == 0 || m == 0 {
+            return Err(CodingError::InvalidConfig(format!(
+                "n and m must be positive (n={n}, m={m})"
+            )));
+        }
+        if speeds.iter().any(|&x| !(x.is_finite() && x > 0.0)) {
+            return Err(CodingError::InvalidConfig(
+                "speeds must be finite and positive".into(),
+            ));
+        }
+        if plan.is_empty() {
+            return Err(CodingError::InvalidConfig("empty group plan".into()));
+        }
+        // Workers must form a partition of 0..n.
+        let mut seen = vec![false; n];
+        for g in plan {
+            if g.workers.is_empty() {
+                return Err(CodingError::InvalidConfig("empty group".into()));
+            }
+            for &w in &g.workers {
+                if w >= n {
+                    return Err(CodingError::WorkerOutOfRange(w));
+                }
+                if seen[w] {
+                    return Err(CodingError::InvalidConfig(format!(
+                        "worker {w} appears in two groups"
+                    )));
+                }
+                seen[w] = true;
+            }
+            let ng = g.workers.len();
+            if g.d < s + m {
+                // The global guarantee "any s stragglers" needs every
+                // group to tolerate s on its own: d_g - m >= s.
+                return Err(CodingError::NotAchievable { n: ng, d: g.d, s, m });
+            }
+            if g.d > ng {
+                return Err(CodingError::InvalidConfig(format!(
+                    "group load d={} exceeds group size {ng}",
+                    g.d
+                )));
+            }
+            if !(g.weight.is_finite() && g.weight > 0.0) {
+                return Err(CodingError::InvalidConfig(format!(
+                    "group weight {} must be finite and positive",
+                    g.weight
+                )));
+            }
+        }
+        if seen.iter().any(|&x| !x) {
+            return Err(CodingError::InvalidConfig(
+                "group plan does not cover every worker".into(),
+            ));
+        }
+
+        // Normalize weights: Σ_g n_g·w_g = n keeps the mean subset at the
+        // baseline rows/n.
+        let raw_total: f64 =
+            plan.iter().map(|g| g.workers.len() as f64 * g.weight).sum();
+        let norm = n as f64 / raw_total;
+
+        let mut groups = Vec::with_capacity(plan.len());
+        let mut worker_group = vec![(0usize, 0usize); n];
+        let mut subset_weights = vec![0.0f64; n];
+        let mut next_subset = 0usize;
+        for (gi, g) in plan.iter().enumerate() {
+            let ng = g.workers.len();
+            let weight = g.weight * norm;
+            let subsets: Vec<usize> = (next_subset..next_subset + ng).collect();
+            next_subset += ng;
+            for (local, &w) in g.workers.iter().enumerate() {
+                worker_group[w] = (gi, local);
+            }
+            for &t in &subsets {
+                subset_weights[t] = weight;
+            }
+            // Inner §III code over the slice, tight at the group level:
+            // s_g = d_g - m.
+            let inner_cfg = SchemeConfig::new(ng, g.d, g.d - m, m)?;
+            let code = PolynomialCode::new(inner_cfg)?;
+            groups.push(Group {
+                workers: g.workers.clone(),
+                subsets,
+                d: g.d,
+                weight,
+                code,
+            });
+        }
+
+        // Global placement: worker w's subsets are its group's inner
+        // cyclic window translated to the slice's global ids.
+        let mut assigned = vec![Vec::new(); n];
+        for g in &groups {
+            for (local, &w) in g.workers.iter().enumerate() {
+                assigned[w] = g
+                    .code
+                    .placement()
+                    .assigned(local)
+                    .iter()
+                    .map(|&lt| g.subsets[lt])
+                    .collect();
+            }
+        }
+        let placement = Placement::explicit(assigned);
+        let d_max = groups.iter().map(|g| g.d).fold(0, usize::max);
+        if s >= n {
+            return Err(CodingError::InvalidConfig(format!("s={s} must be < n={n}")));
+        }
+        Ok(HeteroCode {
+            cfg: SchemeConfig { n, d: d_max, s, m },
+            placement,
+            speeds: speeds.to_vec(),
+            groups,
+            worker_group,
+            subset_weights,
+        })
+    }
+
+    /// Build with the default speed-proportional heuristic:
+    ///
+    /// 1. sort workers by speed and cut into tiers wherever the speed
+    ///    jumps by more than [`TIER_RATIO`]×, merging tiers below the
+    ///    minimum viable size `s + m`;
+    /// 2. give tier `g` the load `d_g = clamp(round((s+m)·σ̄_g/σ̄_min),
+    ///    s+m, n_g)` — fast groups buy extra straggler tolerance;
+    /// 3. choose subset weights that balance per-worker compute time
+    ///    `(d_g·w_g + SUBSET_OVERHEAD·d_g)/σ̄_g` across groups.
+    ///
+    /// Uniform speeds degenerate to a single group with `d = s + m`:
+    /// exactly the §III code. Deterministic — master and remote workers
+    /// rebuild identical schemes from the same speed vector.
+    pub fn from_speeds(
+        n: usize,
+        s: usize,
+        m: usize,
+        speeds: &[f64],
+    ) -> Result<Self, CodingError> {
+        if speeds.len() != n {
+            return Err(CodingError::InvalidConfig(format!(
+                "need {n} speeds, got {}",
+                speeds.len()
+            )));
+        }
+        if n == 0 || m == 0 {
+            return Err(CodingError::InvalidConfig(format!(
+                "n and m must be positive (n={n}, m={m})"
+            )));
+        }
+        if speeds.iter().any(|&x| !(x.is_finite() && x > 0.0)) {
+            return Err(CodingError::InvalidConfig(
+                "speeds must be finite and positive".into(),
+            ));
+        }
+        if s + m > n {
+            return Err(CodingError::NotAchievable { n, d: s + m, s, m });
+        }
+
+        // Speed-sorted worker order (stable on ties via the id).
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            speeds[a].partial_cmp(&speeds[b]).unwrap().then(a.cmp(&b))
+        });
+
+        // Tier by relative speed jumps.
+        let mut tiers: Vec<Vec<usize>> = Vec::new();
+        for &w in &order {
+            match tiers.last_mut() {
+                Some(tier)
+                    if speeds[w] <= speeds[tier[0]] * TIER_RATIO =>
+                {
+                    tier.push(w)
+                }
+                _ => tiers.push(vec![w]),
+            }
+        }
+        // Merge tiers below the minimum viable group size (need
+        // n_g >= s + m so that d_g = s + m fits).
+        let min_size = s + m;
+        let mut i = 0;
+        while tiers.len() > 1 && i < tiers.len() {
+            if tiers[i].len() < min_size {
+                // Merge into the adjacent tier with the closer mean speed
+                // (ends have only one neighbor).
+                let mean = |t: &[usize]| {
+                    t.iter().map(|&w| speeds[w]).sum::<f64>() / t.len() as f64
+                };
+                let into = if i == 0 {
+                    1
+                } else if i + 1 == tiers.len() {
+                    i - 1
+                } else if (mean(&tiers[i]) - mean(&tiers[i - 1])).abs()
+                    <= (mean(&tiers[i + 1]) - mean(&tiers[i])).abs()
+                {
+                    i - 1
+                } else {
+                    i + 1
+                };
+                let small = tiers.remove(i);
+                let into = if into > i { into - 1 } else { into };
+                tiers[into].extend(small);
+                tiers[into].sort_by(|&a, &b| {
+                    speeds[a].partial_cmp(&speeds[b]).unwrap().then(a.cmp(&b))
+                });
+                i = 0; // re-scan from the start after a merge
+            } else {
+                i += 1;
+            }
+        }
+
+        // Loads: proportional to mean group speed, floored at s + m.
+        let mean_speed: Vec<f64> = tiers
+            .iter()
+            .map(|t| t.iter().map(|&w| speeds[w]).sum::<f64>() / t.len() as f64)
+            .collect();
+        let slowest = mean_speed.iter().cloned().fold(f64::INFINITY, f64::min);
+        let ds: Vec<usize> = tiers
+            .iter()
+            .zip(&mean_speed)
+            .map(|(t, &sp)| {
+                let want = ((s + m) as f64 * sp / slowest).round() as usize;
+                want.clamp(s + m, t.len())
+            })
+            .collect();
+
+        let sizes: Vec<usize> = tiers.iter().map(|t| t.len()).collect();
+        let weights = balanced_group_weights(&mean_speed, &sizes, &ds);
+
+        let plan: Vec<GroupPlan> = tiers
+            .into_iter()
+            .zip(ds)
+            .zip(weights)
+            .map(|((workers, d), weight)| GroupPlan { workers, d, weight })
+            .collect();
+        Self::from_groups(s, m, speeds, &plan)
+    }
+
+    /// The per-worker speed vector the code was built for.
+    pub fn speeds(&self) -> &[f64] {
+        &self.speeds
+    }
+
+    /// Per-worker subset loads `d_w` (the Σd_w >= n(s+m) side).
+    pub fn loads(&self) -> Vec<usize> {
+        (0..self.cfg.n).map(|w| self.placement.load(w)).collect()
+    }
+
+    /// The group plan (for wire validation and planner round-trips).
+    pub fn plan(&self) -> Vec<GroupPlan> {
+        self.groups
+            .iter()
+            .map(|g| GroupPlan { workers: g.workers.clone(), d: g.d, weight: g.weight })
+            .collect()
+    }
+
+    /// Read-only group views (workers, slice, load, weight, quorum).
+    pub fn groups(&self) -> Vec<GroupView<'_>> {
+        self.groups
+            .iter()
+            .map(|g| GroupView {
+                workers: &g.workers,
+                subsets: &g.subsets,
+                d: g.d,
+                weight: g.weight,
+                need: g.workers.len() - (g.d - self.cfg.m),
+            })
+            .collect()
+    }
+}
+
+impl GradientCode for HeteroCode {
+    fn config(&self) -> &SchemeConfig {
+        &self.cfg
+    }
+
+    fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    fn encode_coeffs(&self, worker: usize) -> Result<Vec<f64>, CodingError> {
+        if worker >= self.cfg.n {
+            return Err(CodingError::WorkerOutOfRange(worker));
+        }
+        let (gi, local) = self.worker_group[worker];
+        self.groups[gi].code.encode_coeffs(local)
+    }
+
+    /// Per-group decode: split the responders by group, decode each
+    /// group's slice sum with its inner §III code, concatenate the
+    /// weights. Exact whenever every group has at least
+    /// `n_g - (d_g - m)` responders — guaranteed for any `n - s`
+    /// responders since every `d_g >= s + m`.
+    fn decode_weights(&self, available: &[usize]) -> Result<DecodeWeights, CodingError> {
+        let n = self.cfg.n;
+        let mut seen = vec![false; n];
+        for &w in available {
+            if w >= n {
+                return Err(CodingError::WorkerOutOfRange(w));
+            }
+            if seen[w] {
+                return Err(CodingError::InvalidConfig(format!(
+                    "duplicate worker {w} in responder set"
+                )));
+            }
+            seen[w] = true;
+        }
+        let mut used = Vec::new();
+        let mut weights = Vec::new();
+        for (gi, g) in self.groups.iter().enumerate() {
+            // This group's responders, in arrival order, as local ids.
+            let local: Vec<usize> = available
+                .iter()
+                .filter(|&&w| self.worker_group[w].0 == gi)
+                .map(|&w| self.worker_group[w].1)
+                .collect();
+            let dw = g.code.decode_weights(&local)?;
+            for &l in &dw.used {
+                used.push(g.workers[l]);
+            }
+            weights.extend_from_slice(&dw.weights);
+        }
+        Ok(DecodeWeights { used, weights, m: self.cfg.m })
+    }
+
+    /// Block-diagonal stack of the per-group `B` matrices: rows ordered
+    /// by global subset id (slices are contiguous), columns by group.
+    fn matrix_b(&self) -> Matrix {
+        let m = self.cfg.m;
+        let total_cols: usize =
+            self.groups.iter().map(|g| g.code.matrix_b().cols()).sum();
+        let mut b = Matrix::zeros(m * self.cfg.n, total_cols);
+        let mut col0 = 0;
+        for g in &self.groups {
+            let gb = g.code.matrix_b();
+            let row0 = m * g.subsets[0];
+            for r in 0..gb.rows() {
+                for c in 0..gb.cols() {
+                    b[(row0 + r, col0 + c)] = gb[(r, c)];
+                }
+            }
+            col0 += gb.cols();
+        }
+        b
+    }
+
+    /// Block-diagonal stack of the per-group evaluation matrices, with
+    /// columns scattered to the groups' global worker ids.
+    fn matrix_v(&self) -> Matrix {
+        let total_rows: usize =
+            self.groups.iter().map(|g| g.code.matrix_v().rows()).sum();
+        let mut v = Matrix::zeros(total_rows, self.cfg.n);
+        let mut row0 = 0;
+        for g in &self.groups {
+            let gv = g.code.matrix_v();
+            for r in 0..gv.rows() {
+                for (local, &w) in g.workers.iter().enumerate() {
+                    v[(row0 + r, w)] = gv[(r, local)];
+                }
+            }
+            row0 += gv.rows();
+        }
+        v
+    }
+
+    fn subset_weights(&self) -> Option<Vec<f64>> {
+        Some(self.subset_weights.clone())
+    }
+
+    /// Row-weighted load plus the per-subset overhead:
+    /// `d_g·w_g + SUBSET_OVERHEAD·d_g` baseline-subset units.
+    fn compute_units(&self, worker: usize) -> f64 {
+        let (gi, _) = self.worker_group[worker];
+        let g = &self.groups[gi];
+        g.d as f64 * (g.weight + SUBSET_OVERHEAD)
+    }
+
+    fn group_quorums(&self) -> Option<Vec<(Vec<usize>, usize)>> {
+        Some(
+            self.groups
+                .iter()
+                .map(|g| {
+                    (g.workers.clone(), g.workers.len() - (g.d - self.cfg.m))
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::decode::sum_gradients;
+    use crate::coding::{Decoder, Encoder};
+    use crate::rngs::{Pcg64, Rng};
+
+    fn random_grads(n: usize, l: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        (0..n)
+            .map(|_| (0..l).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect())
+            .collect()
+    }
+
+    fn transmit_all(code: &HeteroCode, grads: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        (0..code.config().n)
+            .map(|w| {
+                let views: Vec<&[f32]> = code
+                    .placement()
+                    .assigned(w)
+                    .iter()
+                    .map(|&t| grads[t].as_slice())
+                    .collect();
+                Encoder::new(code, w).unwrap().encode(&views).unwrap()
+            })
+            .collect()
+    }
+
+    fn roundtrip_err(code: &HeteroCode, available: &[usize], l: usize, seed: u64) -> f64 {
+        let n = code.config().n;
+        let grads = random_grads(n, l, seed);
+        let transmitted = transmit_all(code, &grads);
+        let dec = Decoder::new(code, available).unwrap();
+        let fs: Vec<&[f32]> =
+            dec.used_workers().iter().map(|&w| transmitted[w].as_slice()).collect();
+        let got = dec.decode(&fs).unwrap();
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let want = sum_gradients(&views);
+        let scale = want.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+        got.iter()
+            .zip(&want)
+            .fold(0.0f64, |a, (&x, &y)| a.max((x - y).abs() as f64))
+            / scale as f64
+    }
+
+    fn bimodal(n: usize, slow: usize, ratio: f64) -> Vec<f64> {
+        (0..n).map(|w| if w < slow { 1.0 } else { ratio }).collect()
+    }
+
+    #[test]
+    fn uniform_speeds_degenerate_to_single_tight_group() {
+        let code = HeteroCode::from_speeds(6, 1, 2, &[1.0; 6]).unwrap();
+        let groups = code.groups();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].d, 3, "single group is tight: d = s + m");
+        assert_eq!(groups[0].need, 5, "need n - s responders");
+        assert!((groups[0].weight - 1.0).abs() < 1e-12);
+        assert_eq!(code.config().d, 3);
+        assert_eq!(code.loads(), vec![3; 6]);
+        // exact under every single-straggler pattern
+        for straggler in 0..6 {
+            let avail: Vec<usize> = (0..6).filter(|&w| w != straggler).collect();
+            let err = roundtrip_err(&code, &avail, 8, 3 + straggler as u64);
+            assert!(err < 1e-4, "straggler {straggler}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn bimodal_splits_into_two_groups_with_skewed_weights() {
+        let speeds = bimodal(10, 5, 4.0);
+        let code = HeteroCode::from_speeds(10, 1, 2, &speeds).unwrap();
+        let groups = code.groups();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].workers, &[0, 1, 2, 3, 4], "slow tier first");
+        assert_eq!(groups[1].workers, &[5, 6, 7, 8, 9]);
+        assert_eq!(groups[0].d, 3, "slow group at the floor d = s + m");
+        assert!(groups[1].d > 3, "fast group buys extra tolerance");
+        assert!(groups[1].need < groups[0].need);
+        assert!(
+            groups[1].weight > groups[0].weight,
+            "fast subsets must be bigger: {} vs {}",
+            groups[1].weight,
+            groups[0].weight
+        );
+        // weights normalized: mean subset size = baseline
+        let ws = code.subset_weights().unwrap();
+        let total: f64 = ws.iter().sum();
+        assert!((total - 10.0).abs() < 1e-9, "Σ weights = n, got {total}");
+        // compute balanced: per-worker units / speed roughly equal
+        let per_speed: Vec<f64> =
+            (0..10).map(|w| code.compute_units(w) / speeds[w]).collect();
+        let (lo, hi) = per_speed
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &x| (lo.min(x), hi.max(x)));
+        assert!(hi / lo < 1.3, "compute imbalance {per_speed:?}");
+        // feasibility budget
+        assert!(code.placement().total_load() >= 10 * 3);
+    }
+
+    #[test]
+    fn decodes_exactly_under_every_s_straggler_pattern() {
+        let speeds = bimodal(8, 4, 4.0);
+        let code = HeteroCode::from_speeds(8, 1, 1, &speeds).unwrap();
+        for straggler in 0..8 {
+            let avail: Vec<usize> = (0..8).filter(|&w| w != straggler).collect();
+            let err = roundtrip_err(&code, &avail, 6, 11 + straggler as u64);
+            assert!(err < 1e-4, "straggler {straggler}: rel err {err}");
+        }
+        // s = 2 pattern sweep on a linear fleet
+        let speeds: Vec<f64> = (0..9).map(|w| 1.0 + 0.5 * w as f64).collect();
+        let code = HeteroCode::from_speeds(9, 2, 1, &speeds).unwrap();
+        for a in 0..9 {
+            for b in a + 1..9 {
+                let avail: Vec<usize> =
+                    (0..9).filter(|&w| w != a && w != b).collect();
+                let err = roundtrip_err(&code, &avail, 5, (a * 9 + b) as u64);
+                assert!(err < 1e-4, "stragglers ({a},{b}): rel err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_quorum_sets_decode_too() {
+        // The per-group rule admits sets smaller than n - s when a group
+        // has slack: drop d_g - m from each group simultaneously.
+        let speeds = bimodal(10, 5, 4.0);
+        let code = HeteroCode::from_speeds(10, 1, 2, &speeds).unwrap();
+        let quorums = code.group_quorums().unwrap();
+        let mut avail = Vec::new();
+        for (members, need) in &quorums {
+            avail.extend_from_slice(&members[..*need]);
+        }
+        assert!(
+            avail.len() < 9,
+            "per-group minimum {} should beat n - s = 9",
+            avail.len()
+        );
+        avail.sort_unstable();
+        let err = roundtrip_err(&code, &avail, 8, 77);
+        assert!(err < 1e-4, "rel err {err}");
+    }
+
+    #[test]
+    fn insufficient_group_responders_fail_cleanly() {
+        let speeds = bimodal(10, 5, 4.0);
+        let code = HeteroCode::from_speeds(10, 1, 2, &speeds).unwrap();
+        // All fast workers but only 3 of 5 slow ones (slow need is 4).
+        let avail = [0usize, 1, 2, 5, 6, 7, 8, 9];
+        assert!(matches!(
+            code.decode_weights(&avail),
+            Err(CodingError::NotEnoughWorkers { .. })
+        ));
+        assert!(matches!(
+            code.decode_weights(&[0, 0, 1]),
+            Err(CodingError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            code.decode_weights(&[0, 99]),
+            Err(CodingError::WorkerOutOfRange(99))
+        ));
+    }
+
+    #[test]
+    fn matrix_bv_has_coefficient_semantics() {
+        let speeds = bimodal(7, 4, 3.0);
+        let code = HeteroCode::from_speeds(7, 1, 1, &speeds).unwrap();
+        let bv = code.matrix_b().matmul(&code.matrix_v());
+        for t in 0..7 {
+            for w in 0..7 {
+                let val = bv[(t, w)];
+                if !code.placement().is_assigned(w, t) {
+                    assert!(val.abs() < 1e-7, "BV[{t},{w}] = {val} should vanish");
+                }
+            }
+        }
+        // Encode coeffs must match the BV columns restricted to the
+        // worker's assignment (same invariant as the exact schemes).
+        for w in 0..7 {
+            let coeffs = code.encode_coeffs(w).unwrap();
+            let assigned = code.placement().assigned(w);
+            for (j, &t) in assigned.iter().enumerate() {
+                let want = bv[(t, w)];
+                let got = coeffs[j];
+                assert!((got - want).abs() < 1e-8, "w={w} t={t}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_groups_validates() {
+        let sp = [1.0, 1.0, 2.0, 2.0];
+        let mk = |workers: Vec<Vec<usize>>, d: Vec<usize>| {
+            let plan: Vec<GroupPlan> = workers
+                .into_iter()
+                .zip(d)
+                .map(|(workers, d)| GroupPlan { workers, d, weight: 1.0 })
+                .collect();
+            HeteroCode::from_groups(1, 1, &sp, &plan)
+        };
+        assert!(mk(vec![vec![0, 1], vec![2, 3]], vec![2, 2]).is_ok());
+        // load below s + m
+        assert!(mk(vec![vec![0, 1], vec![2, 3]], vec![1, 2]).is_err());
+        // load above group size
+        assert!(mk(vec![vec![0, 1], vec![2, 3]], vec![3, 2]).is_err());
+        // non-partition
+        assert!(mk(vec![vec![0, 1], vec![1, 2, 3]], vec![2, 2]).is_err());
+        assert!(mk(vec![vec![0, 1]], vec![2]).is_err());
+        // infeasible from_speeds
+        assert!(HeteroCode::from_speeds(3, 2, 2, &[1.0, 1.0, 1.0]).is_err());
+        assert!(HeteroCode::from_speeds(4, 1, 1, &[1.0, -1.0, 1.0, 1.0]).is_err());
+        assert!(HeteroCode::from_speeds(4, 1, 1, &[1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn from_speeds_is_deterministic() {
+        let speeds = [1.0, 3.9, 1.1, 4.0, 1.05, 3.8];
+        let a = HeteroCode::from_speeds(6, 1, 1, &speeds).unwrap();
+        let b = HeteroCode::from_speeds(6, 1, 1, &speeds).unwrap();
+        assert_eq!(a.plan(), b.plan());
+        assert_eq!(a.loads(), b.loads());
+        // interleaved ids are grouped by speed, not position
+        assert_eq!(a.groups()[0].workers, &[0, 4, 2]);
+        assert_eq!(a.groups()[1].workers, &[5, 1, 3]);
+    }
+
+    #[test]
+    fn extreme_skew_respects_min_weight_floor() {
+        // One very slow worker on an otherwise-fast fleet: its subset is
+        // clamped to the 10% floor and the budget redistribution must not
+        // push it back under (the water-filling invariant).
+        let mut speeds = vec![100.0; 10];
+        speeds[0] = 1.0;
+        let code = HeteroCode::from_speeds(10, 0, 1, &speeds).unwrap();
+        let ws = code.subset_weights().unwrap();
+        assert!(
+            ws.iter().all(|&w| w >= 0.1 - 1e-9),
+            "weights must respect the floor: {ws:?}"
+        );
+        assert!((ws.iter().sum::<f64>() - 10.0).abs() < 1e-9, "row budget: {ws:?}");
+    }
+
+    #[test]
+    fn tiny_tiers_are_merged_to_viability() {
+        // One very fast worker cannot form its own group when s + m = 3.
+        let speeds = [1.0, 1.0, 1.0, 1.0, 10.0];
+        let code = HeteroCode::from_speeds(5, 1, 2, &speeds).unwrap();
+        assert_eq!(code.groups().len(), 1, "merged into a single viable group");
+        assert_eq!(code.loads(), vec![3; 5]);
+    }
+}

@@ -21,6 +21,14 @@
 //! returns the minimum-ℓ2-error estimate of the gradient sum together
 //! with a computed error bound.
 //!
+//! For non-identical fleets, [`hetero`] provides [`HeteroCode`]: workers
+//! are partitioned into speed groups, each group runs its own §III code
+//! over a contiguous slice of the subsets (with group-local load `d_g >=
+//! s + m` and subset sizes scaled to the group's speed), and the master
+//! sums the per-group exact decodes — still exact under any `s`
+//! stragglers, while fast workers carry more data. The homogeneous
+//! schemes are the uniform-speed special case (a single group).
+//!
 //! Conventions: all indices are 0-based in code (the paper is 1-based);
 //! worker `w`'s transmitted vector has dimension `l/m`; gradients are
 //! `f32` payloads while coefficients stay `f64` until the final cast.
@@ -95,6 +103,7 @@ mod approx;
 mod bounds;
 mod decode;
 mod encode;
+pub mod hetero;
 mod placement;
 mod poly;
 mod random_scheme;
@@ -106,6 +115,7 @@ pub use approx::{quorum_count, ApproxCode, PartialDecode};
 pub use bounds::{is_achievable, verify_placement_bound};
 pub use decode::{sum_gradients, Decoder};
 pub use encode::Encoder;
+pub use hetero::{GroupPlan, HeteroCode, SUBSET_OVERHEAD};
 pub use placement::Placement;
 pub use poly::PolynomialCode;
 pub use random_scheme::RandomCode;
@@ -259,10 +269,41 @@ pub trait GradientCode: Send + Sync {
     }
 
     /// Full `(m·n) × (n-s)` encoding matrix `B` (diagnostics/tests).
+    /// Heterogeneous schemes return the block-diagonal composition of
+    /// their per-group matrices (column count then differs from `n-s`);
+    /// the invariant preserved by every scheme is that `B·V`'s entry
+    /// `(t·m+u, w)` is the coefficient of `g_t`'s `u`-component in `f_w`.
     fn matrix_b(&self) -> Matrix;
 
     /// Evaluation matrix `V` (`(n-s) × n`; Vandermonde or Gaussian).
     fn matrix_v(&self) -> Matrix;
+
+    /// Relative data-subset sizes (mean 1.0): subset `t` holds a
+    /// `weights[t]/n`-fraction of the training rows. `None` means the
+    /// uniform equal-rows partition every homogeneous scheme uses;
+    /// [`HeteroCode`] returns `Some` so fast groups' subsets carry more
+    /// rows.
+    fn subset_weights(&self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Per-worker compute cost in "baseline subset" units (the unit the
+    /// §VI delay model's `t₁`/`λ₁` are expressed in). Homogeneous
+    /// schemes: the load `d`. Heterogeneous schemes: the row-weighted
+    /// load plus a small per-subset overhead (see
+    /// [`SUBSET_OVERHEAD`]).
+    fn compute_units(&self, worker: usize) -> f64 {
+        self.placement().load(worker) as f64
+    }
+
+    /// Group-quorum structure, if the scheme decodes per worker group:
+    /// `(members, need)` pairs meaning "the master needs `need`
+    /// responders out of `members`". `None` (the default) means the flat
+    /// rule "any `n - s` responders". The coordinator uses this to stop
+    /// the gather as soon as every group is decodable.
+    fn group_quorums(&self) -> Option<Vec<(Vec<usize>, usize)>> {
+        None
+    }
 }
 
 /// Result of [`GradientCode::decode_weights`].

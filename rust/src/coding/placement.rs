@@ -1,48 +1,107 @@
-//! Cyclic data placement.
+//! Data placement: which subsets each worker computes.
 //!
 //! §III assigns worker `W_i` the subsets `D_i, D_{i⊕1}, …, D_{i⊕(d-1)}`;
 //! §IV's orthogonality pattern corresponds to the rotation
-//! `D_{i⊕1}, …, D_{i⊕d}`. Both are cyclic windows; [`Placement`] captures
-//! a window of width `d` starting at `w + offset (mod n)`.
+//! `D_{i⊕1}, …, D_{i⊕d}`. Both are cyclic windows of a *uniform* width
+//! `d`. The heterogeneous subsystem ([`crate::coding::HeteroCode`])
+//! additionally needs *non-uniform* loads — worker `w` holds `d_w`
+//! subsets with `d_w` varying across workers — so [`Placement`] carries
+//! either a cyclic window or an explicit per-worker assignment list
+//! behind one interface. [`Placement::d`] reports the *maximum*
+//! per-worker load; [`Placement::load`] the per-worker one.
 
-/// Cyclic placement of `n` data subsets onto `n` workers, `d` per worker.
+/// Placement of `n` data subsets onto `n` workers.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
     n: usize,
-    d: usize,
-    offset: usize,
+    kind: Kind,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Kind {
+    /// Cyclic window of uniform width `d` starting at `w + offset`.
+    Cyclic { d: usize, offset: usize },
+    /// Arbitrary per-worker subset lists (heterogeneous loads).
+    Explicit { assigned: Vec<Vec<usize>>, max_load: usize },
 }
 
 impl Placement {
     /// §III placement: worker `w` gets subsets `w, w+1, …, w+d-1 (mod n)`.
     pub fn cyclic(n: usize, d: usize) -> Self {
-        Placement { n, d, offset: 0 }
+        Placement { n, kind: Kind::Cyclic { d, offset: 0 } }
     }
 
     /// §IV placement: worker `w` gets subsets `w+1, …, w+d (mod n)`.
     pub fn cyclic_shifted(n: usize, d: usize) -> Self {
-        Placement { n, d, offset: 1 }
+        Placement { n, kind: Kind::Cyclic { d, offset: 1 } }
+    }
+
+    /// Explicit placement: `assigned[w]` lists worker `w`'s subsets in
+    /// local order. There are `assigned.len()` workers over the same
+    /// number of subsets (`k = n` as everywhere in the crate); every
+    /// subset id must be in range and per-worker lists must be
+    /// duplicate-free and non-empty.
+    pub fn explicit(assigned: Vec<Vec<usize>>) -> Self {
+        let n = assigned.len();
+        let mut max_load = 0;
+        for (w, list) in assigned.iter().enumerate() {
+            assert!(!list.is_empty(), "worker {w} has an empty assignment");
+            let mut seen = vec![false; n];
+            for &t in list {
+                assert!(t < n, "worker {w}: subset {t} out of range (n={n})");
+                assert!(!seen[t], "worker {w}: duplicate subset {t}");
+                seen[t] = true;
+            }
+            max_load = max_load.max(list.len());
+        }
+        Placement { n, kind: Kind::Explicit { assigned, max_load } }
     }
 
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Maximum per-worker load (uniform placements: the common `d`).
     pub fn d(&self) -> usize {
-        self.d
+        match &self.kind {
+            Kind::Cyclic { d, .. } => *d,
+            Kind::Explicit { max_load, .. } => *max_load,
+        }
     }
 
-    /// Subsets assigned to worker `w`, in local order `0..d`.
+    /// Alias of [`Placement::d`] with the heterogeneous reading.
+    pub fn max_load(&self) -> usize {
+        self.d()
+    }
+
+    /// Number of subsets assigned to worker `w`.
+    pub fn load(&self, w: usize) -> usize {
+        assert!(w < self.n, "worker {w} out of range (n={})", self.n);
+        match &self.kind {
+            Kind::Cyclic { d, .. } => *d,
+            Kind::Explicit { assigned, .. } => assigned[w].len(),
+        }
+    }
+
+    /// Total load `Σ_w d_w` (the feasibility side of `Σd_w >= n(s+m)`).
+    pub fn total_load(&self) -> usize {
+        (0..self.n).map(|w| self.load(w)).sum()
+    }
+
+    /// Subsets assigned to worker `w`, in local order `0..load(w)`.
     pub fn assigned(&self, w: usize) -> Vec<usize> {
         assert!(w < self.n, "worker {w} out of range (n={})", self.n);
-        (0..self.d).map(|j| (w + self.offset + j) % self.n).collect()
+        match &self.kind {
+            Kind::Cyclic { d, offset } => {
+                (0..*d).map(|j| (w + offset + j) % self.n).collect()
+            }
+            Kind::Explicit { assigned, .. } => assigned[w].clone(),
+        }
     }
 
     /// Whether subset `t` is assigned to worker `w`.
     pub fn is_assigned(&self, w: usize, t: usize) -> bool {
-        // t ∈ {w+offset, …, w+offset+d-1} (mod n)
-        let rel = (t + self.n - (w + self.offset) % self.n) % self.n;
-        rel < self.d
+        self.local_index(w, t).is_some()
     }
 
     /// Workers holding subset `t` (inverse map), ascending.
@@ -52,8 +111,17 @@ impl Placement {
 
     /// Local index of subset `t` within worker `w`'s assignment, if any.
     pub fn local_index(&self, w: usize, t: usize) -> Option<usize> {
-        let rel = (t + self.n - (w + self.offset) % self.n) % self.n;
-        (rel < self.d).then_some(rel)
+        assert!(w < self.n, "worker {w} out of range (n={})", self.n);
+        match &self.kind {
+            Kind::Cyclic { d, offset } => {
+                // t ∈ {w+offset, …, w+offset+d-1} (mod n)
+                let rel = (t + self.n - (w + offset) % self.n) % self.n;
+                (rel < *d).then_some(rel)
+            }
+            Kind::Explicit { assigned, .. } => {
+                assigned[w].iter().position(|&x| x == t)
+            }
+        }
     }
 }
 
@@ -105,5 +173,56 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn explicit_placement_supports_uneven_loads() {
+        let p = Placement::explicit(vec![
+            vec![0, 1],       // worker 0: load 2
+            vec![1, 2, 3, 0], // worker 1: load 4
+            vec![2],          // worker 2: load 1
+            vec![3, 2],       // worker 3: load 2
+        ]);
+        assert_eq!(p.n(), 4);
+        assert_eq!(p.load(0), 2);
+        assert_eq!(p.load(1), 4);
+        assert_eq!(p.load(2), 1);
+        assert_eq!(p.d(), 4, "d() reports the max load");
+        assert_eq!(p.max_load(), 4);
+        assert_eq!(p.total_load(), 9);
+        assert_eq!(p.assigned(1), vec![1, 2, 3, 0]);
+        assert_eq!(p.local_index(1, 3), Some(2));
+        assert_eq!(p.local_index(0, 3), None);
+        assert_eq!(p.holders(2), vec![1, 2, 3]);
+        assert!(p.is_assigned(3, 2));
+        assert!(!p.is_assigned(0, 2));
+    }
+
+    #[test]
+    fn explicit_matches_cyclic_when_uniform() {
+        let cyc = Placement::cyclic(6, 3);
+        let exp = Placement::explicit((0..6).map(|w| cyc.assigned(w)).collect());
+        for w in 0..6 {
+            assert_eq!(cyc.assigned(w), exp.assigned(w));
+            assert_eq!(cyc.load(w), exp.load(w));
+            for t in 0..6 {
+                assert_eq!(cyc.local_index(w, t), exp.local_index(w, t));
+            }
+        }
+        for t in 0..6 {
+            assert_eq!(cyc.holders(t), exp.holders(t));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn explicit_rejects_out_of_range_subset() {
+        let _ = Placement::explicit(vec![vec![0], vec![2]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn explicit_rejects_duplicate_subset() {
+        let _ = Placement::explicit(vec![vec![0, 0], vec![1]]);
     }
 }

@@ -90,7 +90,17 @@ impl RustBackend {
     ) -> anyhow::Result<Self> {
         let cfg = *code.config();
         cfg.check_dim(train.cols)?;
-        let parts = crate::data::partition_rows(train.rows, cfg.n);
+        // Heterogeneous schemes size subsets proportionally to their
+        // group's speed; homogeneous schemes keep the equal §II split.
+        // Both paths use the same `rows - rows % n` prefix so every
+        // scheme optimizes the identical objective (partition_rows drops
+        // the remainder; the weighted split must match, or hetero-vs-poly
+        // comparisons would train on different data).
+        let usable = train.rows - train.rows % cfg.n;
+        let parts = match code.subset_weights() {
+            Some(ws) => crate::data::partition_rows_weighted(usable, &ws),
+            None => crate::data::partition_rows(train.rows, cfg.n),
+        };
         let subsets: Vec<Arc<DenseDataset>> =
             parts.iter().map(|idx| Arc::new(train.select_rows(idx))).collect();
         let mut assigned = Vec::with_capacity(cfg.n);
@@ -261,5 +271,47 @@ mod tests {
         let (code, ds) = setup(4, 1, 1);
         assert!(RustBackend::with_minibatch(&code, &ds, 0.0, 1).is_err());
         assert!(RustBackend::with_minibatch(&code, &ds, 1.5, 1).is_err());
+    }
+
+    #[test]
+    fn hetero_backend_reconstructs_weighted_full_gradient() {
+        use crate::coding::HeteroCode;
+        // Bimodal fleet: fast subsets carry more rows; the coded decode
+        // must still equal the sum over *all* rows.
+        let speeds = [1.0, 1.0, 1.0, 4.0, 4.0, 4.0];
+        let code = HeteroCode::from_speeds(6, 1, 1, &speeds).unwrap();
+        let gen = SyntheticCategorical::new(CategoricalConfig::default(), 31);
+        let ds = gen.generate(6 * 20, 33);
+        let backend = RustBackend::new(&code, &ds).unwrap();
+        // fast subsets got more rows than slow ones
+        assert!(backend.subsets[5].rows > backend.subsets[0].rows);
+        assert_eq!(
+            backend.subsets.iter().map(|s| s.rows).sum::<usize>(),
+            ds.rows - ds.rows % 6,
+            "weighted split covers the same row prefix as the uniform one"
+        );
+        let beta = vec![0.01f32; ds.cols];
+        let n = 6;
+        let mut fs = Vec::new();
+        for w in 0..n {
+            let mut f = Vec::new();
+            backend.encoded_gradient(w, 0, &beta, &mut f).unwrap();
+            fs.push(f);
+        }
+        let avail: Vec<usize> = (0..n).filter(|&w| w != 4).collect();
+        let dec = Decoder::new(&code, &avail).unwrap();
+        let views: Vec<&[f32]> =
+            dec.used_workers().iter().map(|&w| fs[w].as_slice()).collect();
+        let got = dec.decode(&views).unwrap();
+        let want = backend.full_gradient(0, &beta);
+        let scale = want.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-20);
+        for j in 0..got.len() {
+            assert!(
+                (got[j] - want[j]).abs() / scale < 1e-4,
+                "coord {j}: {} vs {}",
+                got[j],
+                want[j]
+            );
+        }
     }
 }

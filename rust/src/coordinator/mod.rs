@@ -30,6 +30,17 @@
 //! trades a bounded gradient error for a much shorter straggler tail
 //! (see `rust/benches/approx_tradeoff.rs` for the measured curve).
 //!
+//! **Heterogeneous fleets.** [`SchemeSpec::Hetero`] adapts the placement
+//! to a per-worker [`SpeedProfile`]: workers are partitioned into speed
+//! groups with group-local loads and speed-proportional subset sizes
+//! ([`crate::coding::HeteroCode`]), the delay injection scales each
+//! worker's shifted exponentials by its speed and compute load
+//! ([`FleetProfile`]), and the gather stops under the per-group
+//! [`WaitRule`] as soon as every group is decodable — usually before the
+//! flat `n - s`-th arrival. `TrainConfig::fleet` runs any scheme on a
+//! skewed fleet (the uniform-load baseline of
+//! `rust/benches/hetero_speedup.rs`).
+//!
 //! # Example: training on the in-process backend
 //!
 //! ```
@@ -75,7 +86,10 @@ pub mod wire;
 mod worker;
 
 pub use backend::{ComputeBackend, RustBackend};
-pub use cluster::{Cluster, ExecutionMode};
+pub use cluster::{Cluster, ExecutionMode, FleetProfile, WaitRule};
 pub use messages::{Task, WorkerResult};
 pub use remote::{run_worker, RemoteMaster};
 pub use trainer::{train, OptChoice, SchemeSpec, TrainConfig, Trainer};
+// The fleet-shape vocabulary lives in the simulator (it parameterizes the
+// §VI delay model) but is part of the coordinator's configuration surface.
+pub use crate::simulator::SpeedProfile;

@@ -22,24 +22,68 @@ use anyhow::{bail, Context, Result};
 
 use super::backend::{ComputeBackend, RustBackend};
 use super::trainer::SchemeSpec;
-use super::wire::{Message, Setup, MAGIC};
-use crate::coding::GradientCode;
+use super::wire::{
+    Message, Setup, MAGIC, SCHEME_APPROX, SCHEME_HETERO, SCHEME_POLY, SCHEME_RANDOM,
+    SCHEME_UNCODED,
+};
+use crate::coding::{ApproxCode, GradientCode, HeteroCode};
 use crate::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
 
 /// Rebuild the scheme from a Setup frame (both sides do this, so encode
 /// coefficients and decode weights agree without shipping matrices).
+///
+/// Kind 3 (approx) carries the replication in `d` and the responder
+/// quorum in `quorum`. Kind 4 (hetero) ships the per-worker speed vector
+/// (milli-units); both sides rebuild via the deterministic
+/// [`HeteroCode::from_speeds`] heuristic and the shipped `loads` vector
+/// cross-checks that master and worker agree on the placement.
 pub fn scheme_from_setup(setup: &Setup) -> Result<std::sync::Arc<dyn GradientCode>> {
+    let n = setup.n as usize;
     let spec = match setup.scheme_kind {
-        0 => SchemeSpec::Poly { s: setup.s as usize, m: setup.m as usize },
-        1 => SchemeSpec::Random {
+        SCHEME_POLY => SchemeSpec::Poly { s: setup.s as usize, m: setup.m as usize },
+        SCHEME_RANDOM => SchemeSpec::Random {
             s: setup.s as usize,
             m: setup.m as usize,
             seed: setup.scheme_seed,
         },
-        2 => SchemeSpec::Uncoded,
+        SCHEME_UNCODED => SchemeSpec::Uncoded,
+        SCHEME_APPROX => {
+            let quorum = setup.quorum as usize;
+            if quorum == 0 || quorum > n {
+                bail!("approx setup needs quorum in 1..={n}, got {quorum}");
+            }
+            let code = ApproxCode::new(n, setup.d as usize, quorum)?;
+            return Ok(std::sync::Arc::new(code));
+        }
+        SCHEME_HETERO => {
+            if setup.speeds_milli.len() != n {
+                bail!(
+                    "hetero setup needs {n} speeds, got {}",
+                    setup.speeds_milli.len()
+                );
+            }
+            let code = HeteroCode::from_speeds(
+                n,
+                setup.s as usize,
+                setup.m as usize,
+                &setup.speeds(),
+            )?;
+            if !setup.loads.is_empty() {
+                let got: Vec<u32> = code.loads().iter().map(|&d| d as u32).collect();
+                if got != setup.loads {
+                    bail!(
+                        "hetero load vector mismatch: setup says {:?}, rebuilt {:?} \
+                         (master and worker must run the same scheme heuristic)",
+                        setup.loads,
+                        got
+                    );
+                }
+            }
+            return Ok(std::sync::Arc::new(code));
+        }
         other => bail!("unknown scheme kind {other}"),
     };
-    spec.build(setup.n as usize)
+    spec.build(n)
 }
 
 /// Regenerate the deterministic training set both sides agree on.
@@ -55,7 +99,8 @@ pub fn dataset_from_setup(setup: &Setup) -> DenseDataset {
 /// One gathered remote iteration.
 #[derive(Debug)]
 pub struct RemoteGather {
-    /// (worker id, coded vector), in arrival order, length `n - s`.
+    /// (worker id, coded vector), in arrival order, length
+    /// [`Setup::wait_for`] (`n - s`, or the approx scheme's quorum).
     pub results: Vec<(usize, Vec<f32>)>,
     /// Wall-clock seconds from broadcast to quorum.
     pub elapsed: f64,
@@ -96,7 +141,7 @@ impl RemoteMaster {
                 bail!("duplicate worker id {worker_id}");
             }
             let mut writer = BufWriter::new(stream);
-            Message::Setup(setup).write_to(&mut writer)?;
+            Message::Setup(setup.clone()).write_to(&mut writer)?;
             writers[worker_id] = Some(writer);
             // Reader thread: pump results into the fan-in channel.
             let tx: Sender<(usize, Message)> = tx.clone();
@@ -122,7 +167,8 @@ impl RemoteMaster {
         &self.setup
     }
 
-    /// Broadcast an iteration and gather the first `n - s` results.
+    /// Broadcast an iteration and gather the first [`Setup::wait_for`]
+    /// results.
     pub fn run_iteration(&mut self, iter: u64, beta: &[f32]) -> Result<RemoteGather> {
         let t0 = Instant::now();
         let msg = Message::Task { iter, beta: beta.to_vec() };
@@ -130,9 +176,10 @@ impl RemoteMaster {
             // A dead connection = permanent straggler.
             let _ = msg.write_to(w);
         }
-        let quorum = (self.setup.n - self.setup.s) as usize;
+        let quorum = self.setup.wait_for();
+        let tolerance = self.setup.n as usize - quorum;
         let mut results = Vec::with_capacity(quorum);
-        let mut failures = 0u32;
+        let mut failures = 0usize;
         while results.len() < quorum {
             let (wid, msg) = self
                 .results
@@ -142,8 +189,8 @@ impl RemoteMaster {
                 Message::Result { iter: rit, failed, f, .. } if rit == iter => {
                     if failed {
                         failures += 1;
-                        if failures > self.setup.s {
-                            bail!("{failures} worker failures exceed s = {}", self.setup.s);
+                        if failures > tolerance {
+                            bail!("{failures} worker failures exceed tolerance {tolerance}");
                         }
                     } else {
                         results.push((wid, f));
@@ -228,17 +275,7 @@ mod tests {
     use super::*;
 
     fn test_setup(n: u32, s: u32, m: u32) -> Setup {
-        Setup {
-            n,
-            d: s + m,
-            s,
-            m,
-            scheme_kind: 0,
-            scheme_seed: 1,
-            data_seed: 777,
-            rows: n * 16,
-            dim: 512,
-        }
+        Setup::homogeneous(n, s + m, s, m, SCHEME_POLY, 1, 777, n * 16, 512)
     }
 
     /// Full multi-"process" deployment over loopback TCP: one master,
@@ -256,7 +293,7 @@ mod tests {
         let master_thread = {
             let setup = setup;
             std::thread::spawn(move || -> Result<Vec<f32>> {
-                let mut master = RemoteMaster::listen(listener_addr, setup)?;
+                let mut master = RemoteMaster::listen(listener_addr, setup.clone())?;
                 let code = scheme_from_setup(&setup)?;
                 let train = dataset_from_setup(&setup);
                 let backend = RustBackend::new(code.as_ref(), &train)?;
@@ -318,12 +355,108 @@ mod tests {
     fn scheme_from_setup_kinds() {
         let mut s = test_setup(4, 1, 1);
         assert_eq!(scheme_from_setup(&s).unwrap().config().d, 2);
-        s.scheme_kind = 1;
+        s.scheme_kind = SCHEME_RANDOM;
         assert!(scheme_from_setup(&s).is_ok());
-        s.scheme_kind = 2;
+        s.scheme_kind = SCHEME_UNCODED;
         assert_eq!(scheme_from_setup(&s).unwrap().config().d, 1);
         s.scheme_kind = 9;
         assert!(scheme_from_setup(&s).is_err());
+    }
+
+    #[test]
+    fn scheme_from_setup_approx_kind() {
+        let mut s = test_setup(8, 0, 1);
+        s.scheme_kind = SCHEME_APPROX;
+        s.d = 3;
+        s.quorum = 6;
+        let code = scheme_from_setup(&s).unwrap();
+        assert_eq!(code.config().wait_for(), 6);
+        assert_eq!(s.wait_for(), 6);
+        // any 6-responder set decodes (approximately)
+        assert!(code.decode_weights(&[0, 1, 2, 3, 4, 5]).is_ok());
+        s.quorum = 0;
+        assert!(scheme_from_setup(&s).is_err(), "approx needs an explicit quorum");
+        s.quorum = 9;
+        assert!(scheme_from_setup(&s).is_err());
+    }
+
+    #[test]
+    fn scheme_from_setup_hetero_kind_rebuilds_and_validates() {
+        let speeds = [1.0, 1.0, 1.0, 4.0, 4.0, 4.0];
+        let reference = HeteroCode::from_speeds(6, 1, 1, &speeds).unwrap();
+        let mut s = test_setup(6, 1, 1);
+        s.scheme_kind = SCHEME_HETERO;
+        s.d = reference.config().d as u32;
+        s.speeds_milli = speeds.iter().map(|&x| (x * 1000.0).round() as u32).collect();
+        s.loads = reference.loads().iter().map(|&d| d as u32).collect();
+        let code = scheme_from_setup(&s).unwrap();
+        // both sides agree on the placement
+        for w in 0..6 {
+            assert_eq!(code.placement().assigned(w), reference.placement().assigned(w));
+        }
+        assert_eq!(s.wait_for(), 5, "remote hetero waits the flat n - s");
+        // tampered loads are rejected (heuristic drift across versions)
+        s.loads[0] += 1;
+        assert!(scheme_from_setup(&s).is_err());
+        // missing speeds are rejected
+        s.loads.clear();
+        s.speeds_milli.clear();
+        assert!(scheme_from_setup(&s).is_err());
+    }
+
+    /// Full loopback deployment of the heterogeneous scheme: kind-4
+    /// Setup, weighted shards regenerated on both sides, exact decode
+    /// against the local oracle.
+    #[test]
+    fn tcp_hetero_cluster_decodes_over_loopback() {
+        let speeds = [1.0f64, 1.0, 1.0, 4.0, 4.0, 4.0];
+        let reference = HeteroCode::from_speeds(6, 1, 1, &speeds).unwrap();
+        let mut setup = test_setup(6, 1, 1);
+        setup.scheme_kind = SCHEME_HETERO;
+        setup.d = reference.config().d as u32;
+        setup.speeds_milli =
+            speeds.iter().map(|&x| (x * 1000.0).round() as u32).collect();
+        setup.loads = reference.loads().iter().map(|&d| d as u32).collect();
+        let listener_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = l.local_addr().unwrap();
+            drop(l);
+            addr
+        };
+        let master_thread = {
+            let setup = setup.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let mut master = RemoteMaster::listen(listener_addr, setup.clone())?;
+                let code = scheme_from_setup(&setup)?;
+                let train = dataset_from_setup(&setup);
+                let backend = RustBackend::new(code.as_ref(), &train)?;
+                let mut cache = HashMap::new();
+                let beta = vec![0.005f32; setup.dim as usize];
+                for iter in 0..3u64 {
+                    let gather = master.run_iteration(iter, &beta)?;
+                    assert_eq!(gather.results.len(), 5); // n - s
+                    let grad = decode_gather(code.as_ref(), &gather, &mut cache)?;
+                    let want = backend.full_gradient(iter as usize, &beta);
+                    let scale =
+                        want.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+                    for j in 0..grad.len() {
+                        assert!(
+                            (grad[j] - want[j]).abs() / scale < 1e-3,
+                            "iter {iter} coord {j}"
+                        );
+                    }
+                }
+                master.shutdown();
+                Ok(())
+            })
+        };
+        let worker_threads: Vec<_> = (0..6)
+            .map(|w| std::thread::spawn(move || run_worker(listener_addr, w)))
+            .collect();
+        master_thread.join().unwrap().unwrap();
+        for h in worker_threads {
+            h.join().unwrap().unwrap();
+        }
     }
 
     #[test]

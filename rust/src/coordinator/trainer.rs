@@ -5,19 +5,19 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::backend::{ComputeBackend, RustBackend};
-use super::cluster::{Cluster, ExecutionMode};
+use super::cluster::{Cluster, ExecutionMode, FleetProfile, WaitRule};
 use crate::coding::{
-    quorum_count, ApproxCode, Decoder, GradientCode, PolynomialCode, RandomCode,
-    SchemeConfig, UncodedScheme,
+    quorum_count, ApproxCode, Decoder, GradientCode, HeteroCode, PolynomialCode,
+    RandomCode, SchemeConfig, UncodedScheme,
 };
 use crate::data::{auc, DenseDataset, SyntheticCategorical};
 use crate::metrics::{IterationRecord, RunLog};
 use crate::model::LogisticModel;
 use crate::optim::{Momentum, Nag, Optimizer, Sgd};
-use crate::simulator::DelayParams;
+use crate::simulator::{DelayParams, SpeedProfile};
 
 /// Which coding scheme to deploy.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub enum SchemeSpec {
     /// §III recursive-polynomial scheme with the paper's θ grid.
     Poly { s: usize, m: usize },
@@ -29,6 +29,12 @@ pub enum SchemeSpec {
     /// `d`, master proceeds at `ceil(quorum·n)` responders and accepts
     /// the least-squares decode (see [`ApproxCode`]).
     Approx { d: usize, quorum: f64 },
+    /// Heterogeneous group-based exact coding: workers partitioned by
+    /// speed, per-group loads `d_g >= s + m`, subset sizes scaled to
+    /// group speed (see [`HeteroCode`]). The `profile` describes the
+    /// fleet the placement adapts to; unless [`TrainConfig::fleet`]
+    /// overrides it, the same profile also drives the delay injection.
+    Hetero { s: usize, m: usize, profile: SpeedProfile },
 }
 
 impl SchemeSpec {
@@ -39,21 +45,29 @@ impl SchemeSpec {
             SchemeSpec::Random { s, m, .. } => format!("random(s={s},m={m})"),
             SchemeSpec::Uncoded => "naive".to_string(),
             SchemeSpec::Approx { d, quorum } => format!("approx(d={d},q={quorum})"),
+            SchemeSpec::Hetero { s, m, profile } => {
+                format!("hetero(s={s},m={m},{})", profile.label())
+            }
         }
     }
 
     /// Instantiate the scheme for `n` workers.
     pub fn build(&self, n: usize) -> anyhow::Result<Arc<dyn GradientCode>> {
-        Ok(match *self {
+        Ok(match self {
             SchemeSpec::Poly { s, m } => {
-                Arc::new(PolynomialCode::new(SchemeConfig::tight(n, s, m)?)?)
+                Arc::new(PolynomialCode::new(SchemeConfig::tight(n, *s, *m)?)?)
             }
             SchemeSpec::Random { s, m, seed } => {
-                Arc::new(RandomCode::new(SchemeConfig::tight(n, s, m)?, seed)?)
+                Arc::new(RandomCode::new(SchemeConfig::tight(n, *s, *m)?, *seed)?)
             }
             SchemeSpec::Uncoded => Arc::new(UncodedScheme::new(n)),
             SchemeSpec::Approx { d, quorum } => {
-                Arc::new(ApproxCode::with_quorum_fraction(n, d, quorum)?)
+                Arc::new(ApproxCode::with_quorum_fraction(n, *d, *quorum)?)
+            }
+            SchemeSpec::Hetero { s, m, profile } => {
+                let speeds =
+                    profile.try_speeds(n).map_err(|e| anyhow::anyhow!(e))?;
+                Arc::new(HeteroCode::from_speeds(n, *s, *m, &speeds)?)
             }
         })
     }
@@ -97,11 +111,19 @@ pub struct TrainConfig {
     pub minibatch: Option<f64>,
     /// Early-termination policy: proceed once this fraction of workers
     /// has responded (`ceil(quorum·n)`, clamped to `1..=n`) instead of
-    /// the scheme's exact `n - s`. `None` keeps the scheme's own wait.
+    /// the scheme's own wait rule. `None` keeps the scheme's wait.
     /// Below the exact threshold this only makes sense with
     /// [`SchemeSpec::Approx`], whose partial decoder accepts any
-    /// responder count; exact schemes will fail to decode.
+    /// responder count; exact schemes will fail to decode. Rejected for
+    /// group-quorum schemes ([`SchemeSpec::Hetero`]) — a flat cutoff
+    /// cannot guarantee every group stays decodable, and their gather
+    /// already stops at the earliest decodable prefix.
     pub quorum: Option<f64>,
+    /// Speed profile of the *fleet* the delay injection simulates.
+    /// `None` = uniform speeds, except [`SchemeSpec::Hetero`] defaults
+    /// to its own profile. Setting this lets a homogeneous scheme run on
+    /// a skewed fleet (the baseline the hetero benches compare against).
+    pub fleet: Option<SpeedProfile>,
 }
 
 impl TrainConfig {
@@ -117,6 +139,7 @@ impl TrainConfig {
             seed: 0xfeed,
             minibatch: None,
             quorum: None,
+            fleet: None,
         }
     }
 }
@@ -127,13 +150,15 @@ pub struct Trainer {
     code: Arc<dyn GradientCode>,
     cluster: Cluster,
     out_dim: usize,
-    /// Responders the master proceeds at (scheme's `n - s`, or the
-    /// `cfg.quorum` override).
+    /// Fewest responders the master can proceed at (the flat rule's
+    /// count, or the per-group minimum for heterogeneous schemes).
     wait_for: usize,
     opt: Box<dyn Optimizer>,
     /// Per-responder-set decoder plus the scheme's reported decode
     /// residual (`None` for exact schemes).
     decoder_cache: HashMap<u64, (Decoder, Option<f64>)>,
+    decoder_cache_hits: usize,
+    decoder_cache_misses: usize,
     /// Eval data (train loss / test AUC); train eval is subsampled.
     train_eval: DenseDataset,
     test: Option<DenseDataset>,
@@ -180,23 +205,51 @@ impl Trainer {
         } else {
             train_eval.clone()
         };
-        let wait_for = match cfg.quorum {
+        // Gather stopping rule: quorum override > scheme group rule >
+        // scheme n - s.
+        let rule = match cfg.quorum {
             Some(q) => {
                 anyhow::ensure!(
                     q > 0.0 && q <= 1.0,
                     "quorum fraction must be in (0, 1], got {q}"
                 );
-                quorum_count(cfg.n, q)
+                // A flat arrival cutoff cannot guarantee each group its
+                // per-group minimum (the last arrivals cluster in the
+                // slow tier), so it would abort mid-run on the first
+                // unlucky prefix. The group rule already stops as early
+                // as decode allows — reject the combination instead.
+                anyhow::ensure!(
+                    code.group_quorums().is_none(),
+                    "TrainConfig::quorum cannot override a group-quorum \
+                     scheme (the hetero gather already stops at the \
+                     earliest decodable prefix)"
+                );
+                WaitRule::Count(quorum_count(cfg.n, q))
             }
-            None => code.config().wait_for(),
+            None => match code.group_quorums() {
+                Some(groups) => WaitRule::PerGroup(groups),
+                None => WaitRule::Count(code.config().wait_for()),
+            },
         };
-        let cluster = Cluster::spawn_with_quorum(
+        let wait_for = rule.min_responders();
+        // Fleet speeds: explicit override, else the hetero scheme's own
+        // profile, else uniform.
+        let speeds = match (&cfg.fleet, &cfg.scheme) {
+            (Some(p), _) => p.try_speeds(cfg.n).map_err(|e| anyhow::anyhow!(e))?,
+            (None, SchemeSpec::Hetero { profile, .. }) => {
+                profile.try_speeds(cfg.n).map_err(|e| anyhow::anyhow!(e))?
+            }
+            _ => vec![1.0; cfg.n],
+        };
+        let work: Vec<f64> = (0..cfg.n).map(|w| code.compute_units(w)).collect();
+        let cluster = Cluster::spawn_full(
             *code.config(),
             backend,
             cfg.mode,
             cfg.delays,
             cfg.seed,
-            wait_for,
+            rule,
+            Some(FleetProfile { speeds, work }),
         );
         let opt = cfg.opt.build(vec![0.0f32; l]);
         let test = test.map(|t| {
@@ -220,12 +273,14 @@ impl Trainer {
             wait_for,
             opt,
             decoder_cache: HashMap::new(),
+            decoder_cache_hits: 0,
+            decoder_cache_misses: 0,
             train_eval,
             test,
         })
     }
 
-    /// Responders the master proceeds at each iteration.
+    /// Fewest responders the master proceeds at each iteration.
     pub fn wait_for(&self) -> usize {
         self.wait_for
     }
@@ -239,25 +294,28 @@ impl Trainer {
     pub fn run(&mut self) -> anyhow::Result<RunLog> {
         let mut log = RunLog::new(self.cfg.scheme.label());
         let mut sim_clock = 0.0f64;
-        let wait_for = self.wait_for;
         let mut grad = Vec::with_capacity(self.out_dim * self.code.config().m);
         for iter in 0..self.cfg.iters {
             let beta = Arc::new(self.opt.eval_point().to_vec());
             let gather = self.cluster.run_iteration(iter, beta);
             let t0 = Instant::now();
 
-            // Responders: first `wait_for` by arrival order (the exact
-            // n-s, or the configured quorum), then sorted so the decoder
-            // cache key is order-insensitive.
+            // Responders: the arrival prefix that satisfied the wait rule
+            // (the exact n-s, a quorum override, or the heterogeneous
+            // per-group rule), then sorted so the decoder cache key is
+            // order-insensitive.
             let mut responders: Vec<usize> = gather
                 .results
                 .iter()
-                .take(wait_for)
+                .take(gather.quorum_len)
                 .map(|r| r.worker)
                 .collect();
             responders.sort_unstable();
             let key = Self::mask(&responders);
-            if !self.decoder_cache.contains_key(&key) {
+            if self.decoder_cache.contains_key(&key) {
+                self.decoder_cache_hits += 1;
+            } else {
+                self.decoder_cache_misses += 1;
                 let (dw, residual) = self.code.decode_weights_with_residual(&responders)?;
                 self.decoder_cache.insert(key, (Decoder::from_weights(&dw), residual));
             }
@@ -303,6 +361,8 @@ impl Trainer {
                 auc: auc_val,
             });
         }
+        log.decoder_cache_hits = self.decoder_cache_hits;
+        log.decoder_cache_misses = self.decoder_cache_misses;
         Ok(log)
     }
 
@@ -354,6 +414,7 @@ mod tests {
             seed: 7,
             minibatch: None,
             quorum: None,
+            fleet: None,
         };
         let (log, _beta) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
         assert_eq!(log.records.len(), 150);
@@ -362,6 +423,15 @@ mod tests {
         assert!(last_loss < first_loss * 0.9, "{first_loss} -> {last_loss}");
         assert!(log.final_auc().unwrap() > 0.7, "AUC {:?}", log.final_auc());
         assert!(log.total_sim_time() > 0.0);
+        // n = 5, s = 1: only C(5,4) = 5 distinct responder sets exist, so
+        // over 150 iterations the decode-weights cache must be hot.
+        assert_eq!(
+            log.decoder_cache_hits + log.decoder_cache_misses,
+            150,
+            "one lookup per iteration"
+        );
+        assert!(log.decoder_cache_misses <= 5);
+        assert!(log.decoder_cache_hit_rate().unwrap() > 0.9);
     }
 
     #[test]
@@ -381,6 +451,7 @@ mod tests {
             seed: 9,
             minibatch: None,
             quorum: None,
+            fleet: None,
         };
         let (_, beta_coded) =
             train(mk(SchemeSpec::Poly { s: 1, m: 1 }), &train_ds, None).unwrap();
@@ -411,6 +482,7 @@ mod tests {
             seed: 11,
             minibatch: None,
             quorum: None,
+            fleet: None,
         };
         let (log, _) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
         assert!(log.final_auc().unwrap() > 0.65);
@@ -431,6 +503,7 @@ mod tests {
             seed: 17,
             minibatch: None,
             quorum: None,
+            fleet: None,
         };
         let (log, _) = train(cfg, &train_ds, None).unwrap();
         assert_eq!(log.records.len(), 40);
@@ -461,6 +534,7 @@ mod tests {
             seed: 19,
             minibatch: None,
             quorum: Some(2.0 / 3.0),
+            fleet: None,
         };
         let mut tr = Trainer::new(cfg, &train_ds, None).unwrap();
         assert_eq!(tr.wait_for(), 4, "override ceil(6·2/3) = 4 beats the scheme's 6");
@@ -483,10 +557,131 @@ mod tests {
             seed: 13,
             minibatch: None,
             quorum: None,
+            fleet: None,
         };
         let (log, _) = train(cfg, &train_ds, None).unwrap();
         assert_eq!(log.records.len(), 8);
         // responders are a strict subset when s > 0
         assert!(log.records.iter().all(|r| r.responders.len() == 3));
+    }
+
+    #[test]
+    fn hetero_scheme_trains_and_uses_group_quorums() {
+        let (train_ds, test_ds) = dataset(1500, 101);
+        let lr = 5.0 / train_ds.rows as f32;
+        let profile = SpeedProfile::Bimodal { slow_frac: 0.5, ratio: 4.0 };
+        let cfg = TrainConfig {
+            n: 10,
+            scheme: SchemeSpec::Hetero { s: 1, m: 2, profile },
+            iters: 60,
+            opt: OptChoice::Nag { lr, momentum: 0.9 },
+            eval_every: 10,
+            delays: Some(DelayParams::ec2_fit()),
+            mode: ExecutionMode::Virtual,
+            seed: 23,
+            minibatch: None,
+            quorum: None,
+            fleet: None,
+        };
+        let mut tr = Trainer::new(cfg, &train_ds, Some(&test_ds)).unwrap();
+        assert!(
+            tr.wait_for() < 9,
+            "per-group rule should need fewer than n - s = 9 responders"
+        );
+        let log = tr.run().unwrap();
+        assert_eq!(log.records.len(), 60);
+        // exact recovery: no residual reported
+        assert!(log.records.iter().all(|r| r.decode_residual.is_none()));
+        // the per-group rule keeps responder sets below the flat n - s
+        assert!(log.records.iter().all(|r| r.responders.len() <= 9));
+        let first_loss = log.records[0].loss.unwrap();
+        let last_loss = log.final_loss().unwrap();
+        assert!(last_loss < first_loss, "{first_loss} -> {last_loss}");
+    }
+
+    #[test]
+    fn hetero_training_matches_uncoded_trajectory() {
+        // Exactness end-to-end: hetero decode (weighted subsets, group
+        // codes) must produce the same gradients as the naive sum.
+        let (train_ds, _) = dataset(600, 111);
+        let lr = 4.0 / train_ds.rows as f32;
+        let mk = |scheme| TrainConfig {
+            n: 6,
+            scheme,
+            iters: 20,
+            opt: OptChoice::Nag { lr, momentum: 0.9 },
+            eval_every: 20,
+            delays: None,
+            mode: ExecutionMode::Virtual,
+            seed: 29,
+            minibatch: None,
+            quorum: None,
+            fleet: None,
+        };
+        let profile = SpeedProfile::Custom(vec![1.0, 1.0, 1.0, 3.0, 3.0, 3.0]);
+        let (_, beta_het) = train(
+            mk(SchemeSpec::Hetero { s: 1, m: 1, profile }),
+            &train_ds,
+            None,
+        )
+        .unwrap();
+        let (_, beta_naive) = train(mk(SchemeSpec::Uncoded), &train_ds, None).unwrap();
+        let max_diff = beta_het
+            .iter()
+            .zip(&beta_naive)
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()));
+        let scale = beta_naive.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+        assert!(
+            max_diff / scale < 1e-2,
+            "trajectory divergence {max_diff} (scale {scale})"
+        );
+    }
+
+    #[test]
+    fn quorum_override_rejected_for_group_quorum_schemes() {
+        // A flat cutoff cannot guarantee per-group decodability on a
+        // hetero scheme; the combination must fail at construction, not
+        // abort mid-run on the first unlucky arrival prefix.
+        let (train_ds, _) = dataset(400, 131);
+        let profile = SpeedProfile::Bimodal { slow_frac: 0.5, ratio: 4.0 };
+        let mut cfg =
+            TrainConfig::quick(6, SchemeSpec::Hetero { s: 1, m: 1, profile }, 5);
+        cfg.quorum = Some(0.9);
+        assert!(Trainer::new(cfg, &train_ds, None).is_err());
+    }
+
+    #[test]
+    fn fleet_override_runs_homogeneous_scheme_on_skewed_fleet() {
+        // A poly scheme on a bimodal fleet: same math, skewed clock. The
+        // uniform-load baseline the hetero bench compares against.
+        let (train_ds, _) = dataset(500, 121);
+        let lr = 4.0 / train_ds.rows as f32;
+        let mk = |fleet| TrainConfig {
+            n: 6,
+            scheme: SchemeSpec::Poly { s: 1, m: 2 },
+            iters: 30,
+            opt: OptChoice::Sgd { lr },
+            eval_every: 15,
+            delays: Some(DelayParams::ec2_fit()),
+            mode: ExecutionMode::Virtual,
+            seed: 31,
+            minibatch: None,
+            quorum: None,
+            fleet,
+        };
+        let (log_uniform, _) = train(mk(None), &train_ds, None).unwrap();
+        let (log_fast, _) = train(
+            mk(Some(SpeedProfile::Custom(vec![4.0; 6]))),
+            &train_ds,
+            None,
+        )
+        .unwrap();
+        // an all-fast fleet must beat the baseline clock
+        assert!(
+            log_fast.mean_iteration_sim_time() < log_uniform.mean_iteration_sim_time(),
+            "{} vs {}",
+            log_fast.mean_iteration_sim_time(),
+            log_uniform.mean_iteration_sim_time()
+        );
     }
 }

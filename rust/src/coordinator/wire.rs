@@ -8,24 +8,36 @@
 //!
 //! Messages:
 //! - `Hello { worker_id }`                        worker → master
-//! - `Setup { n, d, s, m, scheme, seed, rows, dim, minibatch }`
-//!                                                master → worker
+//! - `Setup { n, d, s, m, scheme, seeds, rows, dim, quorum, loads[],
+//!            speeds_milli[] }`                   master → worker
 //! - `Task { iter, beta[f32; dim] }`              master → worker
 //! - `Result { worker, iter, failed, f[f32] }`    worker → master
 //! - `Shutdown`                                   master → worker
+//!
+//! Protocol v2 extends Setup with the partial-recovery quorum (scheme
+//! kind 3) and the per-worker load + speed vectors of the heterogeneous
+//! scheme (kind 4); the magic was bumped so v1 peers fail the handshake
+//! loudly instead of misparsing frames.
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
 /// Protocol magic, checked in the Hello frame.
-pub const MAGIC: u32 = 0x6743_0001; // "gC" v1
+pub const MAGIC: u32 = 0x6743_0002; // "gC" v2
 
 const TAG_HELLO: u8 = 1;
 const TAG_SETUP: u8 = 2;
 const TAG_TASK: u8 = 3;
 const TAG_RESULT: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+
+/// `Setup::scheme_kind` values.
+pub const SCHEME_POLY: u8 = 0;
+pub const SCHEME_RANDOM: u8 = 1;
+pub const SCHEME_UNCODED: u8 = 2;
+pub const SCHEME_APPROX: u8 = 3;
+pub const SCHEME_HETERO: u8 = 4;
 
 /// Maximum accepted payload (guards against corrupt frames).
 const MAX_PAYLOAD: usize = 1 << 30;
@@ -43,18 +55,79 @@ pub enum Message {
 /// Scheme + data configuration sent to each worker at handshake. Workers
 /// regenerate their shard deterministically from `data_seed` (the
 /// stand-in for "load your shard from shared storage").
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Setup {
     pub n: u32,
     pub d: u32,
     pub s: u32,
     pub m: u32,
-    /// 0 = poly, 1 = random, 2 = uncoded.
+    /// [`SCHEME_POLY`] | [`SCHEME_RANDOM`] | [`SCHEME_UNCODED`] |
+    /// [`SCHEME_APPROX`] | [`SCHEME_HETERO`].
     pub scheme_kind: u8,
     pub scheme_seed: u64,
     pub data_seed: u64,
     pub rows: u32,
     pub dim: u32,
+    /// Responders the master proceeds at ([`SCHEME_APPROX`] only; for
+    /// the approximate scheme `d` is the replication factor and `s` is
+    /// redundant). 0 everywhere else.
+    pub quorum: u32,
+    /// Per-worker subset loads `d_w` ([`SCHEME_HETERO`] only; workers
+    /// verify the scheme they rebuilt from the speeds matches). Empty
+    /// otherwise.
+    pub loads: Vec<u32>,
+    /// Per-worker relative speeds in milli-units (speed × 1000,
+    /// [`SCHEME_HETERO`] only). Integers keep the frame `Eq` and make
+    /// master/worker scheme reconstruction bit-identical. Empty
+    /// otherwise.
+    pub speeds_milli: Vec<u32>,
+}
+
+impl Setup {
+    /// A homogeneous-scheme Setup (kinds 0–2) with the v2 fields empty.
+    pub fn homogeneous(
+        n: u32,
+        d: u32,
+        s: u32,
+        m: u32,
+        scheme_kind: u8,
+        scheme_seed: u64,
+        data_seed: u64,
+        rows: u32,
+        dim: u32,
+    ) -> Self {
+        Setup {
+            n,
+            d,
+            s,
+            m,
+            scheme_kind,
+            scheme_seed,
+            data_seed,
+            rows,
+            dim,
+            quorum: 0,
+            loads: Vec::new(),
+            speeds_milli: Vec::new(),
+        }
+    }
+
+    /// Responders the master gathers before decoding: the approximate
+    /// scheme's quorum, or `n - s` for every exact scheme (the remote
+    /// master uses the flat rule — always decodable — rather than the
+    /// in-process per-group early stop).
+    pub fn wait_for(&self) -> usize {
+        if self.scheme_kind == SCHEME_APPROX && self.quorum > 0 {
+            self.quorum as usize
+        } else {
+            (self.n - self.s) as usize
+        }
+    }
+
+    /// Per-worker speeds decoded from the milli-unit wire form.
+    pub fn speeds(&self) -> Vec<f64> {
+        self.speeds_milli.iter().map(|&x| x as f64 / 1000.0).collect()
+    }
 }
 
 struct Cursor<'a> {
@@ -130,6 +203,13 @@ impl Message {
                 payload.extend_from_slice(&s.data_seed.to_le_bytes());
                 payload.extend_from_slice(&s.rows.to_le_bytes());
                 payload.extend_from_slice(&s.dim.to_le_bytes());
+                payload.extend_from_slice(&s.quorum.to_le_bytes());
+                for list in [&s.loads, &s.speeds_milli] {
+                    payload.extend_from_slice(&(list.len() as u32).to_le_bytes());
+                    for v in list {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
                 TAG_SETUP
             }
             Message::Task { iter, beta } => {
@@ -158,17 +238,41 @@ impl Message {
         let mut c = Cursor::new(payload);
         let msg = match tag {
             TAG_HELLO => Message::Hello { magic: c.u32()?, worker_id: c.u32()? },
-            TAG_SETUP => Message::Setup(Setup {
-                n: c.u32()?,
-                d: c.u32()?,
-                s: c.u32()?,
-                m: c.u32()?,
-                scheme_kind: c.u8()?,
-                scheme_seed: c.u64()?,
-                data_seed: c.u64()?,
-                rows: c.u32()?,
-                dim: c.u32()?,
-            }),
+            TAG_SETUP => {
+                let n = c.u32()?;
+                let d = c.u32()?;
+                let s = c.u32()?;
+                let m = c.u32()?;
+                let scheme_kind = c.u8()?;
+                let scheme_seed = c.u64()?;
+                let data_seed = c.u64()?;
+                let rows = c.u32()?;
+                let dim = c.u32()?;
+                let quorum = c.u32()?;
+                let mut lists = [Vec::new(), Vec::new()];
+                for list in &mut lists {
+                    let len = c.u32()? as usize;
+                    if len > n as usize {
+                        bail!("setup vector of {len} entries exceeds n = {n}");
+                    }
+                    *list = (0..len).map(|_| c.u32()).collect::<Result<_>>()?;
+                }
+                let [loads, speeds_milli] = lists;
+                Message::Setup(Setup {
+                    n,
+                    d,
+                    s,
+                    m,
+                    scheme_kind,
+                    scheme_seed,
+                    data_seed,
+                    rows,
+                    dim,
+                    quorum,
+                    loads,
+                    speeds_milli,
+                })
+            }
             TAG_TASK => {
                 let iter = c.u64()?;
                 let remaining = payload.len() - 8;
@@ -229,16 +333,16 @@ mod tests {
     #[test]
     fn all_messages_roundtrip() {
         roundtrip(Message::Hello { magic: MAGIC, worker_id: 3 });
+        roundtrip(Message::Setup(Setup::homogeneous(10, 3, 1, 2, 0, 7, 99, 640, 512)));
+        // v2 fields: approx quorum and hetero load/speed vectors
         roundtrip(Message::Setup(Setup {
-            n: 10,
-            d: 3,
-            s: 1,
-            m: 2,
-            scheme_kind: 0,
-            scheme_seed: 7,
-            data_seed: 99,
-            rows: 640,
-            dim: 512,
+            quorum: 6,
+            ..Setup::homogeneous(8, 3, 2, 1, SCHEME_APPROX, 7, 99, 640, 512)
+        }));
+        roundtrip(Message::Setup(Setup {
+            loads: vec![3, 3, 3, 5, 5],
+            speeds_milli: vec![1000, 1000, 1000, 4000, 4000],
+            ..Setup::homogeneous(5, 5, 1, 2, SCHEME_HETERO, 7, 99, 640, 512)
         }));
         roundtrip(Message::Task { iter: 42, beta: vec![1.5, -2.25, 0.0] });
         roundtrip(Message::Result {
@@ -249,6 +353,39 @@ mod tests {
         });
         roundtrip(Message::Result { worker: 1, iter: 0, failed: true, f: vec![] });
         roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn setup_wait_for_covers_all_kinds() {
+        let exact = Setup::homogeneous(10, 3, 2, 1, SCHEME_POLY, 1, 2, 64, 32);
+        assert_eq!(exact.wait_for(), 8);
+        let approx = Setup {
+            quorum: 6,
+            ..Setup::homogeneous(10, 3, 0, 1, SCHEME_APPROX, 1, 2, 64, 32)
+        };
+        assert_eq!(approx.wait_for(), 6);
+        let hetero = Setup {
+            loads: vec![2; 10],
+            speeds_milli: vec![1000; 10],
+            ..Setup::homogeneous(10, 2, 1, 1, SCHEME_HETERO, 1, 2, 64, 32)
+        };
+        assert_eq!(hetero.wait_for(), 9, "remote hetero keeps the flat n - s rule");
+        assert_eq!(hetero.speeds(), vec![1.0; 10]);
+    }
+
+    #[test]
+    fn oversized_setup_vector_rejected() {
+        let msg = Message::Setup(Setup {
+            loads: vec![1; 4],
+            ..Setup::homogeneous(4, 1, 0, 1, SCHEME_HETERO, 1, 2, 64, 32)
+        });
+        let mut frame = msg.encode();
+        // Corrupt the loads length (offset: 4 hdr + 1 tag + 16 + 1 + 16 +
+        // 8 + 4 = payload offset 45 → frame offset 50) to exceed n.
+        let len_off = 5 + 4 * 4 + 1 + 8 + 8 + 4 + 4 + 4;
+        frame[len_off] = 200;
+        let mut cursor = std::io::Cursor::new(frame);
+        assert!(Message::read_from(&mut cursor).is_err());
     }
 
     #[test]

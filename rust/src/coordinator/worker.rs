@@ -8,6 +8,7 @@ use std::time::Instant;
 use super::backend::ComputeBackend;
 use super::messages::{Task, WorkerResult};
 use crate::rngs::{Pcg64, ShiftedExponential};
+use crate::simulator::DelayParams;
 
 /// Per-worker delay injector (the §VI model's two components).
 pub struct DelayInjector {
@@ -19,6 +20,21 @@ pub struct DelayInjector {
 impl DelayInjector {
     pub fn new(comp: ShiftedExponential, comm: ShiftedExponential, rng: Pcg64) -> Self {
         DelayInjector { comp, comm, rng }
+    }
+
+    /// Injector for one worker of a (possibly heterogeneous) fleet:
+    /// `work` baseline-subset compute units at relative speed `speed`,
+    /// messages of `l/m` floats. Computation scales with both (`work·t₁/
+    /// speed` shift, `speed·λ₁/work` rate); communication is governed by
+    /// the message size only. `work = d, speed = 1` reproduces the
+    /// paper's homogeneous assumptions 1–2 exactly.
+    pub fn scaled(params: &DelayParams, work: f64, speed: f64, m: usize, rng: Pcg64) -> Self {
+        assert!(work > 0.0 && speed > 0.0 && m >= 1);
+        DelayInjector::new(
+            ShiftedExponential::new(work * params.t1 / speed, speed * params.lambda1 / work),
+            ShiftedExponential::new(params.t2 / m as f64, m as f64 * params.lambda2),
+            rng,
+        )
     }
 
     /// Sample a total virtual finish time (computation + communication).

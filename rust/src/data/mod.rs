@@ -16,7 +16,7 @@ pub mod split;
 
 pub use auc::auc;
 pub use categorical::{CategoricalConfig, SyntheticCategorical};
-pub use split::{partition_rows, train_test_split};
+pub use split::{partition_rows, partition_rows_weighted, train_test_split};
 
 /// Dense row-major f32 design matrix + labels.
 #[derive(Debug, Clone)]

@@ -28,6 +28,50 @@ pub fn partition_rows(rows: usize, k: usize) -> Vec<Vec<usize>> {
     (0..k).map(|i| (i * per..(i + 1) * per).collect()).collect()
 }
 
+/// Partition rows into `k` contiguous subsets sized proportionally to
+/// `weights` (largest-remainder apportionment, at least one row each).
+/// This is the heterogeneous-placement analogue of [`partition_rows`]:
+/// subset `t` receives a `weights[t]/Σweights` share of the rows, so
+/// faster groups' subsets carry more data. All `rows` are used.
+pub fn partition_rows_weighted(rows: usize, weights: &[f64]) -> Vec<Vec<usize>> {
+    let k = weights.len();
+    assert!(k > 0);
+    assert!(rows >= k, "not enough rows ({rows}) for k={k} subsets");
+    assert!(
+        weights.iter().all(|&w| w.is_finite() && w > 0.0),
+        "weights must be finite and positive"
+    );
+    let total: f64 = weights.iter().sum();
+    // Largest-remainder with a one-row floor: start from floor(share),
+    // clamp up to 1, then distribute the remaining rows by remainder.
+    let spare = rows - k;
+    let mut sizes: Vec<usize> = Vec::with_capacity(k);
+    let mut rems: Vec<(f64, usize)> = Vec::with_capacity(k);
+    let mut assigned = 0usize;
+    for (t, &w) in weights.iter().enumerate() {
+        let share = spare as f64 * w / total;
+        let base = share.floor() as usize;
+        sizes.push(1 + base);
+        assigned += base;
+        rems.push((share - base as f64, t));
+    }
+    // The remainders sum to exactly `spare - assigned < k`; hand the
+    // leftover rows to the largest remainders (ties by subset id).
+    let left = spare - assigned;
+    rems.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    for &(_, t) in rems.iter().take(left) {
+        sizes[t] += 1;
+    }
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for &sz in &sizes {
+        out.push((start..start + sz).collect());
+        start += sz;
+    }
+    debug_assert_eq!(start, rows);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +121,40 @@ mod tests {
     #[should_panic(expected = "not enough rows")]
     fn partition_rejects_tiny_datasets() {
         partition_rows(3, 10);
+    }
+
+    #[test]
+    fn weighted_partition_apportions_proportionally() {
+        let parts = partition_rows_weighted(100, &[1.0, 1.0, 2.0, 4.0]);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 100, "every row used");
+        assert!(sizes[3] > sizes[2] && sizes[2] > sizes[0]);
+        // shares within one row of the ideal apportionment of the spare
+        for (sz, w) in sizes.iter().zip([1.0, 1.0, 2.0, 4.0]) {
+            let ideal = 1.0 + 96.0 * w / 8.0;
+            assert!((*sz as f64 - ideal).abs() <= 1.0, "{sz} vs {ideal}");
+        }
+        // contiguous and disjoint
+        let all: Vec<usize> = parts.concat();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_partition_uniform_matches_equal_shares() {
+        let parts = partition_rows_weighted(40, &[1.0; 8]);
+        assert!(parts.iter().all(|p| p.len() == 5));
+    }
+
+    #[test]
+    fn weighted_partition_never_empties_a_subset() {
+        let parts = partition_rows_weighted(7, &[0.2, 10.0, 0.2, 10.0, 0.2]);
+        assert!(parts.iter().all(|p| !p.is_empty()));
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough rows")]
+    fn weighted_partition_rejects_tiny_datasets() {
+        partition_rows_weighted(2, &[1.0, 1.0, 1.0]);
     }
 }

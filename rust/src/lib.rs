@@ -22,12 +22,16 @@
 //! Module map (see `rust/DESIGN.md` for the per-experiment index):
 //! - [`coding`] — the paper's constructions: §III polynomial scheme,
 //!   §IV random-matrix scheme, encode/decode, stability certification,
-//!   plus the approximate partial-recovery scheme.
+//!   plus the approximate partial-recovery scheme and the heterogeneous
+//!   group-based scheme (speed-proportional placement).
 //! - [`simulator`] — §VI probabilistic runtime model and optimal-triple
 //!   search; the virtual cluster used by the figure benches; the quorum
-//!   extension predicting time and residual under partial recovery.
+//!   extension predicting time and residual under partial recovery; the
+//!   heterogeneous-fleet extension (speed profiles, group order
+//!   statistics, load planner).
 //! - [`coordinator`] — master/worker threads, transport, training loop,
-//!   and the wait-for-quorum policy.
+//!   the wait-for-quorum policy, and per-worker fleet profiles with the
+//!   group-quorum gather rule.
 //! - `runtime` — PJRT execution of AOT artifacts (`xla` crate); compiled
 //!   only with the `pjrt` cargo feature, since the `xla` dependency is
 //!   not available in the offline build environment.

@@ -1,25 +1,28 @@
 //! `gradcode` — the leader binary.
 //!
 //! Subcommands:
-//! - `info`       PJRT platform + artifact inventory (needs `--features pjrt`)
-//! - `train`      run coded distributed training on synthetic data
-//!                (`--scheme approx --quorum 0.7` selects the
-//!                approximate partial-recovery regime)
-//! - `plan`       §VI model: optimal (d, s, m) for given delay parameters
-//! - `quorum`     §VI model extended to partial recovery: expected time
-//!                and residual per quorum size
-//! - `stability`  condition-number / reconstruction-error sweep
+//! - `info`         PJRT platform + artifact inventory (needs `--features pjrt`)
+//! - `train`        run coded distributed training on synthetic data
+//!                  (`--scheme approx --quorum 0.7` selects the
+//!                  approximate partial-recovery regime; `--scheme hetero
+//!                  --profile bimodal:0.5:4` the heterogeneous one)
+//! - `plan`         §VI model: optimal (d, s, m) for given delay parameters
+//! - `plan-hetero`  heterogeneous load planner: optimized per-worker load
+//!                  vector and predicted speedup over uniform placement
+//! - `quorum`       §VI model extended to partial recovery: expected time
+//!                  and residual per quorum size
+//! - `stability`    condition-number / reconstruction-error sweep
 //!
 //! Examples live in `examples/`; the table/figure regenerators in
 //! `rust/benches/`.
 
 use gradcode::cli::{App, Command};
 use gradcode::coding::{
-    max_condition_number, reconstruction_error, ApproxCode, PolynomialCode, RandomCode,
-    SchemeConfig,
+    max_condition_number, reconstruction_error, ApproxCode, GradientCode, HeteroCode,
+    PolynomialCode, RandomCode, SchemeConfig,
 };
 use gradcode::coordinator::{
-    train, ExecutionMode, OptChoice, SchemeSpec, TrainConfig,
+    train, ExecutionMode, OptChoice, SchemeSpec, SpeedProfile, TrainConfig,
 };
 use gradcode::data::{train_test_split, CategoricalConfig, DenseDataset, SyntheticCategorical};
 use gradcode::metrics::RunLog;
@@ -33,9 +36,14 @@ fn app() -> App {
                 .flag("n", "10", "number of workers (= data subsets)")
                 .flag("s", "1", "straggler tolerance")
                 .flag("m", "2", "communication reduction factor")
-                .flag("scheme", "poly", "poly | random | naive | approx")
+                .flag("scheme", "poly", "poly | random | naive | approx | hetero")
                 .flag("approx-d", "3", "replication d for --scheme approx")
                 .flag("quorum", "0.7", "responder fraction for --scheme approx")
+                .flag(
+                    "profile",
+                    "uniform",
+                    "fleet speed profile: uniform | linear[:R] | bimodal[:F[:R]] | custom:v1,v2,…",
+                )
                 .flag("iters", "200", "training iterations")
                 .flag("rows", "640", "training rows")
                 .flag("lr", "0.01", "learning rate")
@@ -53,6 +61,25 @@ fn app() -> App {
                 .flag("t1", "1.5", "min per-subset computation time")
                 .flag("lambda2", "0.1", "communication straggling rate")
                 .flag("t2", "6", "min full-vector communication time"),
+        )
+        .command(
+            Command::new(
+                "plan-hetero",
+                "heterogeneous load planner: optimized load vector + predicted speedup",
+            )
+            .flag("n", "10", "number of workers")
+            .flag("s", "1", "straggler tolerance")
+            .flag("m", "2", "communication reduction factor")
+            .flag(
+                "profile",
+                "bimodal:0.5:4",
+                "fleet speed profile: uniform | linear[:R] | bimodal[:F[:R]] | custom:v1,v2,…",
+            )
+            .flag("max-groups", "3", "maximum speed groups the planner may form")
+            .flag("lambda1", "1.2", "computation straggling rate")
+            .flag("t1", "1", "min per-subset computation time")
+            .flag("lambda2", "0.2", "communication straggling rate")
+            .flag("t2", "6", "min full-vector communication time"),
         )
         .command(
             Command::new("quorum", "partial-recovery tradeoff: E[T] and E[residual] per quorum")
@@ -89,7 +116,14 @@ fn app() -> App {
                 .flag("n", "4", "number of workers")
                 .flag("s", "1", "straggler tolerance")
                 .flag("m", "2", "communication reduction factor")
-                .flag("scheme", "poly", "poly | random | naive")
+                .flag("scheme", "poly", "poly | random | naive | approx | hetero")
+                .flag("approx-d", "3", "replication d for --scheme approx")
+                .flag("quorum", "0.7", "responder fraction for --scheme approx")
+                .flag(
+                    "profile",
+                    "uniform",
+                    "fleet speed profile for --scheme hetero (uniform | linear[:R] | bimodal[:F[:R]] | custom:…)",
+                )
                 .flag("iters", "100", "training iterations")
                 .flag("rows", "256", "training rows (shared-seed data)")
                 .flag("dim", "512", "gradient dimension")
@@ -110,25 +144,73 @@ fn cmd_leader(a: gradcode::cli::Args) -> anyhow::Result<()> {
         dataset_from_setup, decode_gather, scheme_from_setup, RemoteMaster,
     };
     use gradcode::coordinator::wire::Setup;
-    let scheme_kind = match a.get_str("scheme") {
-        "poly" => 0u8,
-        "random" => 1,
-        "naive" => 2,
+    use gradcode::coding::quorum_count;
+    use gradcode::coordinator::wire::{
+        SCHEME_APPROX, SCHEME_HETERO, SCHEME_POLY, SCHEME_RANDOM, SCHEME_UNCODED,
+    };
+    let n = a.get_usize("n");
+    let (s_flag, m_flag) = (a.get_usize("s"), a.get_usize("m"));
+    let base = |kind: u8, d: u32, s: u32, m: u32| {
+        Setup::homogeneous(
+            n as u32,
+            d,
+            s,
+            m,
+            kind,
+            a.get_u64("data-seed") ^ 0x5c,
+            a.get_u64("data-seed"),
+            a.get_usize("rows") as u32,
+            a.get_usize("dim") as u32,
+        )
+    };
+    let setup = match a.get_str("scheme") {
+        "poly" => base(SCHEME_POLY, (s_flag + m_flag) as u32, s_flag as u32, m_flag as u32),
+        "random" => {
+            base(SCHEME_RANDOM, (s_flag + m_flag) as u32, s_flag as u32, m_flag as u32)
+        }
+        "naive" => base(SCHEME_UNCODED, 1, 0, 1),
+        "approx" => {
+            let q = a.get_f64("quorum");
+            anyhow::ensure!(q > 0.0 && q <= 1.0, "quorum fraction must be in (0,1]");
+            let quorum = quorum_count(n, q) as u32;
+            let d = a.get_usize("approx-d") as u32;
+            Setup {
+                quorum,
+                ..base(SCHEME_APPROX, d, n as u32 - quorum, 1)
+            }
+        }
+        "hetero" => {
+            let profile = SpeedProfile::parse(a.get_str("profile"))
+                .map_err(|e| anyhow::anyhow!(e))?;
+            // Round to the milli-unit wire precision FIRST and build the
+            // reference from the rounded speeds: the workers only ever
+            // see `speeds_milli`, so the shipped load vector must come
+            // from exactly those values or the handshake cross-check
+            // would reject a valid deployment.
+            let speeds_milli: Vec<u32> = profile
+                .try_speeds(n)
+                .map_err(|e| anyhow::anyhow!(e))?
+                .iter()
+                .map(|&x| (x * 1000.0).round().max(1.0) as u32)
+                .collect();
+            let speeds: Vec<f64> =
+                speeds_milli.iter().map(|&x| x as f64 / 1000.0).collect();
+            let reference = HeteroCode::from_speeds(n, s_flag, m_flag, &speeds)?;
+            Setup {
+                loads: reference.loads().iter().map(|&d| d as u32).collect(),
+                speeds_milli,
+                ..base(
+                    SCHEME_HETERO,
+                    reference.config().d as u32,
+                    s_flag as u32,
+                    m_flag as u32,
+                )
+            }
+        }
         other => anyhow::bail!("unknown scheme {other:?}"),
     };
-    let setup = Setup {
-        n: a.get_usize("n") as u32,
-        d: if scheme_kind == 2 { 1 } else { (a.get_usize("s") + a.get_usize("m")) as u32 },
-        s: if scheme_kind == 2 { 0 } else { a.get_usize("s") as u32 },
-        m: if scheme_kind == 2 { 1 } else { a.get_usize("m") as u32 },
-        scheme_kind,
-        scheme_seed: a.get_u64("data-seed") ^ 0x5c,
-        data_seed: a.get_u64("data-seed"),
-        rows: a.get_usize("rows") as u32,
-        dim: a.get_usize("dim") as u32,
-    };
     println!("leader: waiting for {} workers on {}", setup.n, a.get_str("listen"));
-    let mut master = RemoteMaster::listen(a.get_str("listen"), setup)?;
+    let mut master = RemoteMaster::listen(a.get_str("listen"), setup.clone())?;
     println!("leader: all workers connected");
     let code = scheme_from_setup(&setup)?;
     let train_ds = dataset_from_setup(&setup);
@@ -246,6 +328,10 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
     let n = a.get_usize("n");
     let s = a.get_usize("s");
     let m = a.get_usize("m");
+    let profile =
+        SpeedProfile::parse(a.get_str("profile")).map_err(|e| anyhow::anyhow!(e))?;
+    // Fail here (not mid-run) when e.g. a custom profile doesn't match n.
+    profile.try_speeds(n).map_err(|e| anyhow::anyhow!(e))?;
     let scheme = match a.get_str("scheme") {
         "poly" => SchemeSpec::Poly { s, m },
         "random" => SchemeSpec::Random { s, m, seed: a.get_u64("seed") },
@@ -254,6 +340,7 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
             d: a.get_usize("approx-d"),
             quorum: a.get_f64("quorum"),
         },
+        "hetero" => SchemeSpec::Hetero { s, m, profile: profile.clone() },
         other => anyhow::bail!("unknown scheme {other:?}"),
     };
     let gen = SyntheticCategorical::new(
@@ -264,7 +351,7 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
     let (train_ds, test_ds) = train_test_split(&ds, 0.2, a.get_u64("seed") + 2);
     let cfg = TrainConfig {
         n,
-        scheme,
+        scheme: scheme.clone(),
         iters: a.get_usize("iters"),
         opt: OptChoice::Nag { lr: a.get_f64("lr") as f32, momentum: a.get_f64("momentum") as f32 },
         eval_every: a.get_usize("eval-every"),
@@ -273,8 +360,19 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
         seed: a.get_u64("seed"),
         minibatch: None,
         quorum: None,
+        // --profile describes the fleet; the hetero scheme also adapts
+        // its placement to it.
+        fleet: Some(profile),
     };
     let log = if a.get_bool("pjrt") {
+        // The AOT artifacts are fixed-shape per (n, d, m) with uniform
+        // equal shards; the hetero scheme's per-worker loads and
+        // weighted subsets don't fit that contract.
+        anyhow::ensure!(
+            !matches!(scheme, SchemeSpec::Hetero { .. }),
+            "--pjrt does not support --scheme hetero (per-worker loads \
+             don't match the fixed-shape artifacts); use the rust backend"
+        );
         run_pjrt_train(cfg, scheme, &train_ds, &test_ds)?
     } else {
         let (log, _beta) = train(cfg, &train_ds, Some(&test_ds))?;
@@ -293,9 +391,82 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
     if let Some(res) = log.mean_decode_residual() {
         println!("mean decode residual = {res:.5} (approximate recovery)");
     }
+    if let Some(rate) = log.decoder_cache_hit_rate() {
+        println!(
+            "decoder cache: {:.1}% hits ({} hits / {} misses)",
+            rate * 100.0,
+            log.decoder_cache_hits,
+            log.decoder_cache_misses
+        );
+    }
     if a.get_bool("csv") {
         print!("{}", log.to_csv());
     }
+    Ok(())
+}
+
+fn cmd_plan_hetero(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    use gradcode::simulator::hetero::{
+        expected_fleet_time, expected_hetero_time, plan_loads_opts, PlanOpts,
+    };
+    let n = a.get_usize("n");
+    let s = a.get_usize("s");
+    let m = a.get_usize("m");
+    anyhow::ensure!(s + m <= n, "infeasible: need s + m <= n (got {s} + {m} > {n})");
+    let params = DelayParams {
+        lambda1: a.get_f64("lambda1"),
+        t1: a.get_f64("t1"),
+        lambda2: a.get_f64("lambda2"),
+        t2: a.get_f64("t2"),
+    };
+    let profile =
+        SpeedProfile::parse(a.get_str("profile")).map_err(|e| anyhow::anyhow!(e))?;
+    let speeds = profile.try_speeds(n).map_err(|e| anyhow::anyhow!(e))?;
+    let opts = PlanOpts { max_groups: a.get_usize("max-groups"), ..PlanOpts::default() };
+    let plan = plan_loads_opts(&params, &speeds, s, m, opts);
+
+    println!("fleet: n = {n}, profile = {}, params = {params:?}", profile.label());
+    println!(
+        "speeds: [{}]",
+        speeds.iter().map(|x| format!("{x:.2}")).collect::<Vec<_>>().join(", ")
+    );
+    let mut table = gradcode::bench::Table::new(
+        &format!("optimized plan, s = {s}, m = {m}"),
+        &["group", "workers", "d", "need", "subset weight"],
+    );
+    for (gi, g) in plan.groups.iter().enumerate() {
+        table.row(&[
+            gi.to_string(),
+            format!("{:?}", g.workers),
+            g.d.to_string(),
+            (g.workers.len() - (g.d - m)).to_string(),
+            format!("{:.3}", g.weight),
+        ]);
+    }
+    table.print();
+    println!("load vector d_w: {:?}", plan.loads);
+    println!(
+        "Σ d_w = {} (Theorem-1 floor n(s+m) = {})",
+        plan.loads.iter().sum::<usize>(),
+        n * (s + m)
+    );
+    let heuristic = HeteroCode::from_speeds(n, s, m, &speeds)?;
+    let heuristic_time = expected_hetero_time(&params, &heuristic);
+    let naive = expected_fleet_time(&params, &speeds, 1, 0, 1);
+    println!();
+    println!("E[T] optimized plan        = {:.4} s", plan.expected_time);
+    println!("E[T] from_speeds heuristic = {heuristic_time:.4} s (what `--scheme hetero` deploys)");
+    println!("E[T] uniform poly (d=s+m)  = {:.4} s", plan.uniform_time);
+    println!("E[T] naive uncoded         = {naive:.4} s");
+    println!(
+        "predicted speedup over uniform placement: {:.2}x{}",
+        plan.speedup,
+        if plan.speedup <= 1.0 {
+            "  (uniform fleet: stick with the homogeneous scheme)"
+        } else {
+            ""
+        }
+    );
     Ok(())
 }
 
@@ -438,6 +609,7 @@ fn main() -> anyhow::Result<()> {
             "info" => cmd_info(),
             "train" => cmd_train(args),
             "plan" => cmd_plan(args),
+            "plan-hetero" => cmd_plan_hetero(args),
             "quorum" => cmd_quorum(args),
             "stability" => cmd_stability(args),
             "grid" => cmd_grid(args),

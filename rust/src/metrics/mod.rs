@@ -35,11 +35,28 @@ pub struct IterationRecord {
 pub struct RunLog {
     pub records: Vec<IterationRecord>,
     pub scheme: String,
+    /// Responder-set → decode-weights cache hits across the run (the
+    /// trainer reuses a solved decode whenever a responder set repeats).
+    pub decoder_cache_hits: usize,
+    /// Cache misses (each one paid a fresh weight solve).
+    pub decoder_cache_misses: usize,
 }
 
 impl RunLog {
     pub fn new(scheme: impl Into<String>) -> Self {
-        RunLog { records: Vec::new(), scheme: scheme.into() }
+        RunLog {
+            records: Vec::new(),
+            scheme: scheme.into(),
+            decoder_cache_hits: 0,
+            decoder_cache_misses: 0,
+        }
+    }
+
+    /// Fraction of iterations served from the decoder cache (`None`
+    /// before any decode happened).
+    pub fn decoder_cache_hit_rate(&self) -> Option<f64> {
+        let total = self.decoder_cache_hits + self.decoder_cache_misses;
+        (total > 0).then(|| self.decoder_cache_hits as f64 / total as f64)
     }
 
     pub fn push(&mut self, r: IterationRecord) {
@@ -145,6 +162,15 @@ mod tests {
         r.decode_residual = Some(1.5);
         log.push(r);
         assert_eq!(log.mean_decode_residual(), Some(1.0));
+    }
+
+    #[test]
+    fn decoder_cache_hit_rate_counts() {
+        let mut log = RunLog::new("t");
+        assert_eq!(log.decoder_cache_hit_rate(), None);
+        log.decoder_cache_misses = 2;
+        log.decoder_cache_hits = 6;
+        assert_eq!(log.decoder_cache_hit_rate(), Some(0.75));
     }
 
     #[test]

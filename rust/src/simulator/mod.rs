@@ -15,6 +15,9 @@
 //!   and Fig. 4 benches (and by the coordinator's virtual-time mode).
 //! - [`approx`]: the model extended to partial recovery — expected
 //!   iteration time and expected decoding residual versus quorum size.
+//! - [`hetero`]: the model extended to heterogeneous fleets — per-worker
+//!   delay params scaled by speed and load, Poisson–binomial group
+//!   quorums, and the [`plan_loads`] load-vector optimizer.
 //!
 //! # Example: planning a deployment
 //!
@@ -45,6 +48,7 @@
 //! ```
 
 pub mod approx;
+pub mod hetero;
 pub mod model;
 pub mod optimize;
 pub mod order_stats;
@@ -52,6 +56,10 @@ pub mod quadrature;
 pub mod virtual_cluster;
 
 pub use approx::{expected_coeff_residual, expected_runtime_at_quorum, QuorumPoint};
+pub use hetero::{
+    expected_fleet_time, expected_hetero_time, plan_loads, plan_loads_opts, LoadPlan,
+    PlanOpts, SpeedProfile,
+};
 pub use model::{DelayParams, WorkerRuntime};
 pub use optimize::{optimal_alpha, optimal_triple, prop1_optimal_d, TripleChoice};
 pub use virtual_cluster::{ClusterSample, VirtualCluster};

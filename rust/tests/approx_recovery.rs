@@ -27,6 +27,7 @@ fn config(n: usize, scheme: SchemeSpec, iters: usize, lr: f32, seed: u64) -> Tra
         seed,
         minibatch: None,
         quorum: None,
+        fleet: None,
     }
 }
 

@@ -30,6 +30,7 @@ fn config(n: usize, scheme: SchemeSpec, iters: usize, lr: f32) -> TrainConfig {
         seed: 0xabcd,
         minibatch: None,
         quorum: None,
+        fleet: None,
     }
 }
 
@@ -44,8 +45,9 @@ fn all_three_schemes_reach_similar_auc() {
         SchemeSpec::Poly { s: 2, m: 1 },
         SchemeSpec::Poly { s: 1, m: 2 },
     ] {
+        let label = scheme.label();
         let (log, _) = train(config(10, scheme, 120, lr), &train_ds, Some(&test_ds)).unwrap();
-        aucs.push((scheme.label(), log.final_auc().unwrap()));
+        aucs.push((label, log.final_auc().unwrap()));
     }
     for (label, auc) in &aucs {
         assert!(*auc > 0.65, "{label}: AUC {auc}");
@@ -164,6 +166,7 @@ fn training_survives_injected_worker_failure() {
         seed: 0xdead,
         minibatch: None,
         quorum: None,
+        fleet: None,
     };
     let mut tr = Trainer::with_backend(cfg, code, backend, &padded, None).unwrap();
     let log = tr.run().unwrap();
@@ -200,6 +203,7 @@ fn too_many_failures_panic_cleanly() {
         seed: 0xdead,
         minibatch: None,
         quorum: None,
+        fleet: None,
     };
     let mut tr = Trainer::with_backend(cfg, code, backend, &padded, None).unwrap();
     let _ = tr.run();
@@ -224,6 +228,81 @@ fn minibatch_sgd_trains_and_transmits_same() {
 }
 
 #[test]
+fn hetero_beats_uniform_poly_on_bimodal_fleet_predicted_and_realized() {
+    // The heterogeneous subsystem's acceptance check: on a bimodal fleet
+    // the group-based scheme must (a) be *predicted* faster than
+    // uniform-load tight poly by the simulator, (b) *realize* a faster
+    // mean iteration on the virtual cluster, and (c) realize what the
+    // simulator predicted (the two share the delay scaling and the
+    // stopping rule, so they must agree up to Monte-Carlo noise).
+    use gradcode::coding::HeteroCode;
+    use gradcode::simulator::hetero::{expected_fleet_time, expected_hetero_time};
+    use gradcode::simulator::SpeedProfile;
+
+    let (train_ds, _) = dataset(1500, 401);
+    let lr = 5.0 / train_ds.rows as f32;
+    let (n, s, m) = (10usize, 1usize, 2usize);
+    let p = DelayParams::ec2_fit();
+    let profile = SpeedProfile::Bimodal { slow_frac: 0.5, ratio: 4.0 };
+    let speeds = profile.speeds(n);
+    let iters = 150;
+
+    // (a) model-side comparison
+    let code = HeteroCode::from_speeds(n, s, m, &speeds).unwrap();
+    let predicted_hetero = expected_hetero_time(&p, &code);
+    let predicted_uniform = expected_fleet_time(&p, &speeds, s + m, s, m);
+    assert!(
+        predicted_hetero < predicted_uniform,
+        "model must favor hetero: {predicted_hetero} vs {predicted_uniform}"
+    );
+
+    // (b) realized comparison on the virtual cluster
+    let mk = |scheme, fleet| TrainConfig {
+        n,
+        scheme,
+        iters,
+        opt: OptChoice::Nag { lr, momentum: 0.9 },
+        eval_every: iters,
+        delays: Some(p),
+        mode: ExecutionMode::Virtual,
+        seed: 0x4e7,
+        minibatch: None,
+        quorum: None,
+        fleet,
+    };
+    let (log_hetero, _) = train(
+        mk(SchemeSpec::Hetero { s, m, profile: profile.clone() }, None),
+        &train_ds,
+        None,
+    )
+    .unwrap();
+    let (log_poly, _) = train(
+        mk(SchemeSpec::Poly { s, m }, Some(profile)),
+        &train_ds,
+        None,
+    )
+    .unwrap();
+    let realized_hetero = log_hetero.mean_iteration_sim_time();
+    let realized_poly = log_poly.mean_iteration_sim_time();
+    assert!(
+        realized_hetero < realized_poly,
+        "virtual cluster must favor hetero: {realized_hetero} vs {realized_poly}"
+    );
+
+    // (c) prediction ↔ realization agreement (150 iterations of MC noise)
+    let rel_h = (realized_hetero - predicted_hetero).abs() / predicted_hetero;
+    assert!(
+        rel_h < 0.15,
+        "hetero: realized {realized_hetero} vs predicted {predicted_hetero} ({rel_h:.3})"
+    );
+    let rel_u = (realized_poly - predicted_uniform).abs() / predicted_uniform;
+    assert!(
+        rel_u < 0.15,
+        "uniform: realized {realized_poly} vs predicted {predicted_uniform} ({rel_u:.3})"
+    );
+}
+
+#[test]
 fn random_scheme_handles_extra_responders() {
     // §IV decode uses ALL responders (pseudo-inverse), so even when
     // every worker responds the decode must stay exact.
@@ -240,6 +319,7 @@ fn random_scheme_handles_extra_responders() {
         seed: 0xbeef,
         minibatch: None,
         quorum: None,
+        fleet: None,
     };
     let (log, _) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
     let first = log.records[0].loss.unwrap();

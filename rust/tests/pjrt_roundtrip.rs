@@ -91,6 +91,7 @@ fn pjrt_backend_trains_end_to_end() {
         seed: 3,
         minibatch: None,
         quorum: None,
+        fleet: None,
     };
     let mut trainer = Trainer::with_backend(cfg, code, backend, &ds, None).unwrap();
     let log = trainer.run().unwrap();

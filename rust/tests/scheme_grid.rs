@@ -1,0 +1,253 @@
+//! Property-style grid test over every scheme and every feasible
+//! `(n <= 8, s, m)` triple: exact decode must hold for **all** admissible
+//! responder sets, not just the sampled ones the per-module unit tests
+//! cover.
+//!
+//! Two layers of assertion:
+//!
+//! 1. **Coefficient-space exactness (f64, every admissible set).** With
+//!    `BV[(t,u), w]` the coefficient of `g_t`'s `u`-component in `f_w`
+//!    (the invariant every [`GradientCode`] documents for
+//!    `matrix_b()·matrix_v()`), decode weights `W` are exact iff
+//!    `Σ_i W[i,u] · BV[(t,u'), used_i] = δ_{u,u'}` for every subset `t` —
+//!    the payload-free statement of "the decode reproduces the plain
+//!    gradient sum". This runs over the *full* C(n, n-s) straggler
+//!    enumeration.
+//! 2. **f32 payload round trip (sampled sets).** The real encode →
+//!    drop-stragglers → decode pipeline against the `sum_gradients`
+//!    oracle, for a handful of responder sets per cell. Restricted to
+//!    `m <= 3` like the seed's own property tests (larger `m` pushes the
+//!    Vandermonde coefficients past 24-bit mantissas; the f64 layer
+//!    above still covers those cells).
+//!
+//! Schemes: §III poly, §IV random, uncoded, and the heterogeneous group
+//! scheme over three fleet profiles (uniform / linear / bimodal). For
+//! hetero the grid additionally checks the *per-group minimal* responder
+//! sets (smaller than `n - s` whenever a group has slack).
+
+use std::sync::Arc;
+
+use gradcode::coding::{
+    sum_gradients, Decoder, Encoder, GradientCode, HeteroCode, PolynomialCode, RandomCode,
+    SchemeConfig, UncodedScheme,
+};
+use gradcode::rngs::{Pcg64, Rng};
+use gradcode::simulator::SpeedProfile;
+
+/// All subsets of `{0..n}` with exactly `k` elements (ascending ids).
+fn subsets_of_size(n: usize, k: usize) -> Vec<Vec<usize>> {
+    (0u32..1 << n)
+        .filter(|mask| mask.count_ones() as usize == k)
+        .map(|mask| (0..n).filter(|&w| mask & (1 << w) != 0).collect())
+        .collect()
+}
+
+/// Layer 1: coefficient-space exactness of `decode_weights(set)`.
+fn assert_coefficient_exact(code: &dyn GradientCode, bv: &gradcode::linalg::Matrix, set: &[usize], ctx: &str) {
+    let n = code.config().n;
+    let m = code.config().m;
+    let dw = code
+        .decode_weights(set)
+        .unwrap_or_else(|e| panic!("{ctx}: decode_weights({set:?}) failed: {e}"));
+    let wmax = dw.weights.iter().fold(0.0f64, |a, &x| a.max(x.abs())).max(1.0);
+    let tol = 1e-6 * wmax;
+    for t in 0..n {
+        for u in 0..m {
+            for uprime in 0..m {
+                let got: f64 = dw
+                    .used
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &w)| dw.weight(i, u) * bv[(t * m + uprime, w)])
+                    .sum();
+                let want = if u == uprime { 1.0 } else { 0.0 };
+                assert!(
+                    (got - want).abs() < tol,
+                    "{ctx}: set {set:?}, subset {t}, (u={u}, u'={uprime}): \
+                     Σ W·BV = {got}, want {want} (tol {tol:.1e})"
+                );
+            }
+        }
+    }
+}
+
+/// Layer 2: full f32 pipeline against the plain gradient sum.
+fn assert_payload_roundtrip(code: &dyn GradientCode, set: &[usize], seed: u64, ctx: &str) {
+    let cfg = *code.config();
+    let l = cfg.m * 2;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let grads: Vec<Vec<f32>> = (0..cfg.n)
+        .map(|_| (0..l).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect())
+        .collect();
+    let mut transmitted = Vec::new();
+    for w in 0..cfg.n {
+        let enc = Encoder::new(code, w).unwrap();
+        let views: Vec<&[f32]> = code
+            .placement()
+            .assigned(w)
+            .iter()
+            .map(|&t| grads[t].as_slice())
+            .collect();
+        transmitted.push(enc.encode(&views).unwrap());
+    }
+    let dec = Decoder::new(code, set)
+        .unwrap_or_else(|e| panic!("{ctx}: Decoder::new({set:?}) failed: {e}"));
+    let fs: Vec<&[f32]> =
+        dec.used_workers().iter().map(|&w| transmitted[w].as_slice()).collect();
+    let got = dec.decode(&fs).unwrap();
+    let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let want = sum_gradients(&views);
+    let scale = want.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-6);
+    for v in 0..want.len() {
+        assert!(
+            (got[v] - want[v]).abs() / scale < 5e-3,
+            "{ctx}: set {set:?} coord {v}: {} vs {}",
+            got[v],
+            want[v]
+        );
+    }
+}
+
+/// Run both layers for one scheme instance.
+fn check_scheme(code: &dyn GradientCode, ctx: &str, payload_sets: usize, seed: u64) {
+    let cfg = *code.config();
+    let bv = code.matrix_b().matmul(&code.matrix_v());
+    let all_sets = subsets_of_size(cfg.n, cfg.n - cfg.s);
+    for set in &all_sets {
+        assert_coefficient_exact(code, &bv, set, ctx);
+    }
+    // f32 payload layer on a deterministic sample of the sets.
+    if cfg.m <= 3 {
+        let stride = (all_sets.len() / payload_sets.max(1)).max(1);
+        for (i, set) in all_sets.iter().step_by(stride).enumerate() {
+            assert_payload_roundtrip(code, set, seed ^ (i as u64) << 8, ctx);
+        }
+    }
+}
+
+fn hetero_profiles() -> Vec<SpeedProfile> {
+    vec![
+        SpeedProfile::Uniform,
+        SpeedProfile::Linear { ratio: 3.0 },
+        SpeedProfile::Bimodal { slow_frac: 0.4, ratio: 4.0 },
+    ]
+}
+
+/// Every feasible tight triple on n <= 8 workers.
+fn feasible_triples(n_max: usize) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::new();
+    for n in 2..=n_max {
+        for s in 0..n {
+            for m in 1..=(n - s) {
+                out.push((n, s, m));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn grid_poly_exact_on_every_admissible_set() {
+    for (n, s, m) in feasible_triples(8) {
+        let code = PolynomialCode::new(SchemeConfig::tight(n, s, m).unwrap()).unwrap();
+        check_scheme(&code, &format!("poly(n={n},s={s},m={m})"), 3, 0xA0 + n as u64);
+    }
+}
+
+#[test]
+fn grid_random_exact_on_every_admissible_set() {
+    for (n, s, m) in feasible_triples(8) {
+        let code = RandomCode::new(
+            SchemeConfig::tight(n, s, m).unwrap(),
+            0x5eed ^ (n * 100 + s * 10 + m) as u64,
+        )
+        .unwrap();
+        check_scheme(&code, &format!("random(n={n},s={s},m={m})"), 2, 0xB0 + n as u64);
+    }
+}
+
+#[test]
+fn grid_uncoded_exact_with_full_attendance() {
+    for n in 2..=8 {
+        let code = UncodedScheme::new(n);
+        check_scheme(&code, &format!("uncoded(n={n})"), 1, 0xC0 + n as u64);
+    }
+}
+
+#[test]
+fn grid_hetero_exact_on_every_admissible_set_and_profile() {
+    for profile in hetero_profiles() {
+        for (n, s, m) in feasible_triples(8) {
+            let speeds = profile.speeds(n);
+            let code = HeteroCode::from_speeds(n, s, m, &speeds)
+                .unwrap_or_else(|e| panic!("hetero(n={n},s={s},m={m}): {e}"));
+            let ctx = format!("hetero(n={n},s={s},m={m},{})", profile.label());
+            check_scheme(&code, &ctx, 2, 0xD0 + n as u64);
+
+            // Per-group minimal responder sets: the smallest sets the
+            // coordinator's group rule can stop at. Check both the
+            // "first need" and "last need" members of every group.
+            let bv = code.matrix_b().matmul(&code.matrix_v());
+            let quorums = code.group_quorums().unwrap();
+            let firsts: Vec<usize> = quorums
+                .iter()
+                .flat_map(|(members, need)| members[..*need].to_vec())
+                .collect();
+            let lasts: Vec<usize> = quorums
+                .iter()
+                .flat_map(|(members, need)| members[members.len() - need..].to_vec())
+                .collect();
+            for mut set in [firsts, lasts] {
+                set.sort_unstable();
+                assert_coefficient_exact(&code, &bv, &set, &format!("{ctx} minimal"));
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_sub_threshold_sets_are_rejected() {
+    // One below the admissible size must fail cleanly for the exact
+    // schemes (never silently return wrong weights).
+    for (n, s, m) in feasible_triples(6) {
+        if n - s <= 1 {
+            continue;
+        }
+        let short: Vec<usize> = (0..n - s - 1).collect();
+        let poly = PolynomialCode::new(SchemeConfig::tight(n, s, m).unwrap()).unwrap();
+        assert!(poly.decode_weights(&short).is_err(), "poly(n={n},s={s},m={m})");
+        let speeds = SpeedProfile::Bimodal { slow_frac: 0.5, ratio: 4.0 }.speeds(n);
+        let hetero = HeteroCode::from_speeds(n, s, m, &speeds).unwrap();
+        // Removing s+1 workers from one group must break that group.
+        let groups = hetero.group_quorums().unwrap();
+        let (members, need) = &groups[0];
+        if members.len() >= *need && *need >= 1 {
+            let survivors: Vec<usize> = (0..n)
+                .filter(|w| !members[..members.len() - need + 1].contains(w))
+                .collect();
+            assert!(
+                hetero.decode_weights(&survivors).is_err(),
+                "hetero(n={n},s={s},m={m}): group stripped below quorum must fail"
+            );
+        }
+    }
+}
+
+#[test]
+fn grid_trait_objects_compose() {
+    // The grid exercises every scheme through &dyn GradientCode — make
+    // sure the Arc<dyn> path the trainer uses agrees on a spot check.
+    let code: Arc<dyn GradientCode> = Arc::new(
+        HeteroCode::from_speeds(
+            6,
+            1,
+            1,
+            &SpeedProfile::Bimodal { slow_frac: 0.5, ratio: 4.0 }.speeds(6),
+        )
+        .unwrap(),
+    );
+    let bv = code.matrix_b().matmul(&code.matrix_v());
+    for set in subsets_of_size(6, 5) {
+        assert_coefficient_exact(code.as_ref(), &bv, &set, "arc-hetero");
+    }
+}
