@@ -9,11 +9,16 @@
 #                                        test=false, so nothing else
 #                                        compiles them)
 #   2. cargo test -q          (unit + integration + doc tests)
-#   3. hetero_speedup --smoke (tiny profile sweep; refreshes the
+#   3. chaos stage            (property/fuzz suites pinned to a fixed
+#                              TESTKIT_SEED, under a hard wall-clock
+#                              limit — a deadlocked gather must fail the
+#                              gate, not hang it — plus a 30-iteration
+#                              --chaos smoke train through the CLI)
+#   4. hetero_speedup --smoke (tiny profile sweep; refreshes the
 #                              machine-readable BENCH_hetero.json at the
 #                              repo root so perf is tracked PR-over-PR)
-#   4. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
-#   5. cargo fmt --check      (advisory: warns on drift, does not fail —
+#   5. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
+#   6. cargo fmt --check      (advisory: warns on drift, does not fail —
 #                              rustfmt availability varies across the
 #                              offline build images)
 set -euo pipefail
@@ -28,6 +33,29 @@ cargo build --release --benches
 
 echo "==> cargo test -q"
 cargo test -q
+
+echo "==> chaos stage (fixed seed, hard wall-clock limit)"
+# The chaos/fuzz suites assert "never hangs"; enforce that from the
+# outside too so a deadlock fails the gate instead of stalling it.
+# The seed is pinned for reproducibility — override by exporting
+# TESTKIT_SEED before running ci.sh.
+chaos_timeout=600
+run_limited() {
+    if command -v timeout >/dev/null 2>&1; then
+        timeout --signal=KILL "$chaos_timeout" "$@"
+    else
+        "$@"
+    fi
+}
+TESTKIT_SEED="${TESTKIT_SEED:-0x5eedc0de}" run_limited \
+    cargo test -q --test chaos_recovery --test wire_fuzz
+
+echo "==> chaos smoke train (30 iters through the CLI)"
+run_limited ./target/release/gradcode train \
+    --n 6 --s 2 --m 1 --iters 30 --rows 240 \
+    --chaos crash=0.02,drop=0.1,corrupt=0.05,dup=0.02,seed=0xc4a05
+run_limited ./target/release/gradcode chaos-report \
+    --n 6 --s 2 --iters 30 --rows 240 --chaos drop=0.2,seed=3
 
 if [ "$quick" -eq 0 ]; then
     echo "==> bench smoke: hetero_speedup (writes BENCH_hetero.json)"

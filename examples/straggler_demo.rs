@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let t0 = Instant::now();
         let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;

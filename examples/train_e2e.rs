@@ -112,6 +112,7 @@ fn main() -> anyhow::Result<()> {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let mut trainer = if want_pjrt {
             println!("[{}] backend: PJRT (AOT JAX/Pallas artifact)", scheme.label());

@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;
         runs.push((q, quorum_count(n, q), log));

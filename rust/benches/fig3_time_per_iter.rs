@@ -97,6 +97,7 @@ fn main() -> anyhow::Result<()> {
                 minibatch: None,
                 quorum: None,
                 fleet: None,
+                chaos: None,
             };
             let (log, _) = train(cfg, &ds, None)?;
             measured.push((label.clone(), choice, log.mean_iteration_sim_time()));

@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
                 minibatch: None,
                 quorum: None,
                 fleet: None,
+                chaos: None,
             };
             let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;
             logs.push((label.clone(), log));

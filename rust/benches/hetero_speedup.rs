@@ -104,6 +104,7 @@ fn main() -> anyhow::Result<()> {
             minibatch: None,
             quorum: None,
             fleet,
+            chaos: None,
         };
         let (log, _) = train(cfg, &train_ds, Some(&test_ds))?;
         Ok(log.mean_iteration_sim_time())

@@ -1,0 +1,58 @@
+//! The graceful-degradation policy the trainer walks when responders run
+//! short: exact decode → least-squares partial decode → stale gradient.
+
+use std::fmt;
+
+/// Which rung of the degradation ladder an iteration decoded on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LadderRung {
+    /// The scheme's own decode succeeded (for [`crate::coding::ApproxCode`]
+    /// this includes its bounded-residual quorum decode — "exact" means
+    /// "the configured recovery guarantee held").
+    Exact,
+    /// Too few responders for the scheme: the generic least-squares
+    /// partial decode ([`crate::coding::ls_partial_decode`]) produced a
+    /// bounded-residual estimate from whoever responded.
+    Degraded,
+    /// Nothing decodable at all: the iteration reused the previous
+    /// gradient (a no-op step when no gradient exists yet).
+    Stale,
+}
+
+impl LadderRung {
+    /// Stable label used in CSV and logs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LadderRung::Exact => "exact",
+            LadderRung::Degraded => "degraded",
+            LadderRung::Stale => "stale",
+        }
+    }
+}
+
+impl Default for LadderRung {
+    fn default() -> Self {
+        LadderRung::Exact
+    }
+}
+
+impl fmt::Display for LadderRung {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Policy knobs for the degradation ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegradeLadder {
+    /// Consecutive [`LadderRung::Stale`] iterations tolerated before the
+    /// run aborts (a cluster that stopped responding entirely should fail
+    /// the run, not spin on stale gradients forever).
+    pub max_stale: usize,
+}
+
+impl Default for DegradeLadder {
+    fn default() -> Self {
+        DegradeLadder { max_stale: 5 }
+    }
+}

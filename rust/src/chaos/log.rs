@@ -1,0 +1,177 @@
+//! The fault log: every injected fault and every recovery decision,
+//! recorded per iteration and surfaced through `RunLog`/CSV and the
+//! `chaos-report` CLI subcommand.
+
+use std::fmt::Write as _;
+
+use super::ladder::LadderRung;
+use super::plan::FaultKind;
+
+/// One observable fault or recovery event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// A planned fault fired (recomputed master-side from the
+    /// deterministic [`super::FaultPlan`]).
+    Injected(FaultKind),
+    /// A result failed its CRC32 check; the sender was treated as a
+    /// straggler for this iteration.
+    ChecksumReject,
+    /// Duplicated result frames discarded by the master's dedupe.
+    DuplicatesDiscarded { count: usize },
+    /// The gather deadline expired before the wait rule was satisfied.
+    DeadlineExpired { responders: usize, needed: usize },
+    /// A worker connection closed mid-run (TCP path).
+    ConnectionClosed,
+    /// The recovery decision for the iteration.
+    Rung { rung: LadderRung, residual: Option<f64> },
+}
+
+impl FaultEvent {
+    /// Stable label used in the CSV export.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultEvent::Injected(k) => k.label(),
+            FaultEvent::ChecksumReject => "checksum_reject",
+            FaultEvent::DuplicatesDiscarded { .. } => "dup_discarded",
+            FaultEvent::DeadlineExpired { .. } => "deadline",
+            FaultEvent::ConnectionClosed => "conn_closed",
+            FaultEvent::Rung { .. } => "rung",
+        }
+    }
+
+    /// Free-form detail column for the CSV export.
+    fn detail(&self) -> String {
+        match self {
+            FaultEvent::Injected(FaultKind::Crash { restart_after }) => match restart_after {
+                Some(k) => format!("restart_after={k}"),
+                None => "permanent".to_string(),
+            },
+            FaultEvent::Injected(FaultKind::Delay(secs)) => format!("secs={secs}"),
+            FaultEvent::Injected(_) => String::new(),
+            FaultEvent::ChecksumReject | FaultEvent::ConnectionClosed => String::new(),
+            FaultEvent::DuplicatesDiscarded { count } => format!("count={count}"),
+            FaultEvent::DeadlineExpired { responders, needed } => {
+                format!("responders={responders}/{needed}")
+            }
+            FaultEvent::Rung { rung, residual } => match residual {
+                Some(r) => format!("{rung} residual={r:.6}"),
+                None => rung.as_str().to_string(),
+            },
+        }
+    }
+}
+
+/// One log line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultLogEntry {
+    pub iter: u64,
+    /// Worker involved; `None` for iteration-level events.
+    pub worker: Option<usize>,
+    pub event: FaultEvent,
+}
+
+/// Ordered record of everything that went wrong — and what the
+/// coordinator did about it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultLog {
+    pub entries: Vec<FaultLogEntry>,
+}
+
+impl FaultLog {
+    pub fn new() -> Self {
+        FaultLog::default()
+    }
+
+    pub fn record(&mut self, iter: u64, worker: Option<usize>, event: FaultEvent) {
+        self.entries.push(FaultLogEntry { iter, worker, event });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Number of injected-fault entries.
+    pub fn injected(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| matches!(e.event, FaultEvent::Injected(_)))
+            .count()
+    }
+
+    /// Number of checksum rejections.
+    pub fn checksum_rejects(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| matches!(e.event, FaultEvent::ChecksumReject))
+            .count()
+    }
+
+    /// `(exact, degraded, stale)` iteration counts among recorded rungs.
+    pub fn rung_counts(&self) -> (usize, usize, usize) {
+        let mut counts = (0usize, 0usize, 0usize);
+        for e in &self.entries {
+            if let FaultEvent::Rung { rung, .. } = e.event {
+                match rung {
+                    LadderRung::Exact => counts.0 += 1,
+                    LadderRung::Degraded => counts.1 += 1,
+                    LadderRung::Stale => counts.2 += 1,
+                }
+            }
+        }
+        counts
+    }
+
+    /// The recovery rung recorded for `iter`, if any.
+    pub fn rung_of(&self, iter: u64) -> Option<LadderRung> {
+        self.entries.iter().rev().find_map(|e| match e.event {
+            FaultEvent::Rung { rung, .. } if e.iter == iter => Some(rung),
+            _ => None,
+        })
+    }
+
+    /// CSV export: `iter,worker,event,detail`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("iter,worker,event,detail\n");
+        for e in &self.entries {
+            let _ = writeln!(
+                s,
+                "{},{},{},{}",
+                e.iter,
+                e.worker.map_or(String::new(), |w| w.to_string()),
+                e.event.label(),
+                e.event.detail(),
+            );
+        }
+        s
+    }
+
+    /// Human-readable summary (the `chaos-report` body).
+    pub fn summary(&self) -> String {
+        let (exact, degraded, stale) = self.rung_counts();
+        let mut by_kind: Vec<(&'static str, usize)> = Vec::new();
+        for e in &self.entries {
+            if let FaultEvent::Injected(k) = e.event {
+                match by_kind.iter_mut().find(|(l, _)| *l == k.label()) {
+                    Some((_, c)) => *c += 1,
+                    None => by_kind.push((k.label(), 1)),
+                }
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "fault log: {} entries", self.len());
+        let _ = writeln!(s, "  injected faults: {}", self.injected());
+        for (label, count) in &by_kind {
+            let _ = writeln!(s, "    {label:<10} {count}");
+        }
+        let _ = writeln!(s, "  checksum rejects: {}", self.checksum_rejects());
+        let _ = writeln!(
+            s,
+            "  recovery rungs:   exact={exact} degraded={degraded} stale={stale}"
+        );
+        s
+    }
+}

@@ -1,0 +1,232 @@
+//! Deterministic fault injection ("chaos engine") for the coordinator.
+//!
+//! The paper's schemes tolerate *slow* workers by construction; this
+//! module exercises everything else that goes wrong in a real
+//! deployment — crashes, dropped results, corrupted payloads, duplicate
+//! deliveries, late arrivals, and connection resets — and the matching
+//! robustness machinery the coordinator grew for them:
+//!
+//! - [`FaultPlan`] / [`ChaosSpec`]: a pure, seeded schedule of
+//!   [`FaultKind`]s per `(worker, iteration)` cell, threaded through
+//!   both the in-process cluster and the TCP worker body. Determinism is
+//!   the point: a failed chaos run replays bit-identically from its seed.
+//! - [`GatherPolicy`]: per-iteration gather deadline and per-worker
+//!   retry/backoff used by `Cluster` (real-time mode) and `RemoteMaster`.
+//! - [`DegradeLadder`] / [`LadderRung`]: the graceful-degradation policy
+//!   the trainer walks when responders run short — exact decode at
+//!   `>= n - s` responders, least-squares partial decode below that
+//!   (via [`crate::coding::ls_partial_decode`]), and a stale-gradient
+//!   no-op step as the last resort.
+//! - [`FaultLog`]: every injected fault and recovery decision, surfaced
+//!   through `RunLog`/CSV and the `chaos-report` CLI subcommand.
+
+mod ladder;
+mod log;
+mod plan;
+
+pub use ladder::{DegradeLadder, LadderRung};
+pub use log::{FaultEvent, FaultLog, FaultLogEntry};
+pub use plan::{ChaosSpec, Effect, FaultKind, FaultPlan};
+
+pub(crate) use plan::parse_u64;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Gather robustness policy: how long the master waits for an iteration
+/// and how aggressively it re-prods missing workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatherPolicy {
+    /// Total per-iteration gather deadline; when it expires the master
+    /// proceeds with whatever arrived (the degrade ladder takes over).
+    pub deadline: Duration,
+    /// Task re-broadcasts to silent workers before giving up. The
+    /// deadline is split into `retries + 1` equal waits, one per attempt.
+    pub retries: u32,
+    /// Pause before each re-broadcast (results keep queueing meanwhile).
+    pub backoff: Duration,
+}
+
+impl Default for GatherPolicy {
+    fn default() -> Self {
+        GatherPolicy {
+            deadline: Duration::from_secs(10),
+            retries: 2,
+            backoff: Duration::from_millis(10),
+        }
+    }
+}
+
+impl GatherPolicy {
+    /// The wait budget for one attempt (`deadline / (retries + 1)`).
+    pub fn slice(&self) -> Duration {
+        self.deadline / (self.retries + 1).max(1)
+    }
+}
+
+/// Everything the trainer needs to run under injected faults: the plan,
+/// the gather policy, and the degradation policy.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    pub plan: Arc<FaultPlan>,
+    pub policy: GatherPolicy,
+    pub ladder: DegradeLadder,
+}
+
+impl ChaosConfig {
+    /// Wrap an explicit plan with default policies.
+    pub fn new(plan: FaultPlan) -> Self {
+        ChaosConfig {
+            plan: Arc::new(plan),
+            policy: GatherPolicy::default(),
+            ladder: DegradeLadder::default(),
+        }
+    }
+
+    /// Sample a random plan for an `n`-worker, `iters`-iteration run.
+    pub fn from_spec(n: usize, iters: u64, spec: &ChaosSpec) -> Self {
+        Self::new(FaultPlan::random(n, iters, spec))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_and_effect() {
+        let mut plan = FaultPlan::new(4);
+        plan.schedule(1, 3, FaultKind::Drop);
+        plan.schedule(2, 5, FaultKind::Corrupt);
+        assert_eq!(plan.effect(1, 3), Effect::Fault(FaultKind::Drop));
+        assert_eq!(plan.effect(1, 2), Effect::None);
+        assert_eq!(plan.effect(1, 4), Effect::None);
+        assert_eq!(plan.effect(2, 5), Effect::Fault(FaultKind::Corrupt));
+        assert_eq!(plan.effect(0, 3), Effect::None);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.events_at(3), vec![(1, FaultKind::Drop)]);
+    }
+
+    #[test]
+    fn crash_windows() {
+        let mut plan = FaultPlan::new(3);
+        plan.schedule(0, 2, FaultKind::Crash { restart_after: Some(3) });
+        plan.schedule(1, 4, FaultKind::Crash { restart_after: None });
+        // restartable: dead for iters 2, 3, 4; back at 5
+        assert_eq!(plan.effect(0, 1), Effect::None);
+        for it in 2..5 {
+            assert_eq!(plan.effect(0, it), Effect::Dead, "iter {it}");
+        }
+        assert_eq!(plan.effect(0, 5), Effect::None);
+        // permanent: dead from 4 on
+        assert_eq!(plan.effect(1, 3), Effect::None);
+        assert_eq!(plan.effect(1, 4), Effect::Dead);
+        assert_eq!(plan.effect(1, 1000), Effect::Dead);
+        assert_eq!(plan.silent_at(4), vec![0, 1]);
+    }
+
+    #[test]
+    fn reset_kills_the_connection_afterwards() {
+        let mut plan = FaultPlan::new(2);
+        plan.schedule(0, 1, FaultKind::Reset);
+        assert_eq!(plan.effect(0, 0), Effect::None);
+        assert_eq!(plan.effect(0, 1), Effect::Fault(FaultKind::Reset));
+        assert_eq!(plan.effect(0, 2), Effect::Dead);
+        assert!(plan.effect(0, 1).is_silent());
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_and_seed_sensitive() {
+        let spec = ChaosSpec {
+            crash: 0.02,
+            drop: 0.05,
+            corrupt: 0.03,
+            duplicate: 0.02,
+            delay: 0.04,
+            reset: 0.01,
+            seed: 42,
+            ..ChaosSpec::default()
+        };
+        let a = FaultPlan::random(6, 100, &spec);
+        let b = FaultPlan::random(6, 100, &spec);
+        assert_eq!(a, b, "same spec must give the same plan");
+        assert!(!a.is_empty(), "these rates over 600 cells should fire");
+        let other = FaultPlan::random(6, 100, &ChaosSpec { seed: 43, ..spec });
+        assert_ne!(a, other, "different seeds should differ");
+    }
+
+    #[test]
+    fn random_respects_crash_windows() {
+        // With only crash probability set, every sampled event is a crash
+        // and no event lands inside another crash's window.
+        let spec = ChaosSpec { crash: 0.2, restart_after: Some(4), ..ChaosSpec::default() };
+        let plan = FaultPlan::random(4, 200, &spec);
+        for w in 0..4 {
+            let mut crashes: Vec<u64> = (0..200)
+                .filter(|&it| {
+                    matches!(plan.effect(w, it), Effect::Fault(FaultKind::Crash { .. }))
+                })
+                .collect();
+            crashes.sort_unstable();
+            for pair in crashes.windows(2) {
+                assert!(pair[1] >= pair[0] + 5, "crash inside a crash window");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parses_and_validates() {
+        let spec =
+            ChaosSpec::parse("crash=0.02, drop=0.05,corrupt=0.01,dup=0.02,delay=0.1,delay_secs=2.5,reset=0.01,restart=7,seed=0xbeef")
+                .unwrap();
+        assert_eq!(spec.crash, 0.02);
+        assert_eq!(spec.drop, 0.05);
+        assert_eq!(spec.duplicate, 0.02);
+        assert_eq!(spec.delay_secs, 2.5);
+        assert_eq!(spec.restart_after, Some(7));
+        assert_eq!(spec.seed, 0xbeef);
+        assert_eq!(ChaosSpec::parse("restart=0").unwrap().restart_after, None);
+        assert!(ChaosSpec::parse("crash=1.5").is_err());
+        assert!(ChaosSpec::parse("unknown=1").is_err());
+        assert!(ChaosSpec::parse("crash").is_err());
+        assert!(ChaosSpec::parse("crash=0.6,drop=0.6").is_err(), "probs sum > 1");
+        assert!(ChaosSpec::parse("").is_ok(), "empty spec = no faults");
+    }
+
+    #[test]
+    fn fault_log_counts_and_csv() {
+        let mut log = FaultLog::new();
+        log.record(0, Some(2), FaultEvent::Injected(FaultKind::Drop));
+        log.record(0, None, FaultEvent::Rung { rung: LadderRung::Exact, residual: None });
+        log.record(1, Some(3), FaultEvent::ChecksumReject);
+        log.record(
+            1,
+            None,
+            FaultEvent::Rung { rung: LadderRung::Degraded, residual: Some(0.25) },
+        );
+        log.record(2, None, FaultEvent::Rung { rung: LadderRung::Stale, residual: None });
+        assert_eq!(log.injected(), 1);
+        assert_eq!(log.checksum_rejects(), 1);
+        assert_eq!(log.rung_counts(), (1, 1, 1));
+        assert_eq!(log.rung_of(1), Some(LadderRung::Degraded));
+        assert_eq!(log.rung_of(7), None);
+        let csv = log.to_csv();
+        assert!(csv.starts_with("iter,worker,event,detail\n"));
+        assert!(csv.contains("1,3,checksum_reject,"));
+        assert!(csv.contains("degraded residual=0.250000"));
+        let summary = log.summary();
+        assert!(summary.contains("exact=1 degraded=1 stale=1"), "{summary}");
+    }
+
+    #[test]
+    fn gather_policy_slices_the_deadline() {
+        let p = GatherPolicy {
+            deadline: Duration::from_secs(9),
+            retries: 2,
+            backoff: Duration::ZERO,
+        };
+        assert_eq!(p.slice(), Duration::from_secs(3));
+        let p0 = GatherPolicy { retries: 0, ..p };
+        assert_eq!(p0.slice(), p.deadline);
+    }
+}

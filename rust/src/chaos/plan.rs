@@ -1,0 +1,305 @@
+//! Deterministic fault plans: *what* goes wrong, *where*, and *when*.
+//!
+//! A [`FaultPlan`] is a pure schedule over `(worker, iteration)` cells.
+//! It has no interior mutability and no clocks: both the injection sites
+//! (worker loops, TCP worker body) and the master-side logger query the
+//! same plan and therefore agree on every injected fault without any
+//! cross-thread bookkeeping. Plans are built explicitly
+//! ([`FaultPlan::schedule`]) or sampled from a [`ChaosSpec`] with a
+//! seeded [`Pcg64`] ([`FaultPlan::random`]), so a failing chaos run
+//! replays bit-identically from its seed.
+
+use std::collections::BTreeMap;
+
+use crate::rngs::{Pcg64, Rng};
+
+/// One injectable fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Worker stops responding at the scheduled iteration.
+    /// `restart_after = Some(k)` brings it back `k` iterations later;
+    /// `None` is a permanent crash.
+    Crash { restart_after: Option<u32> },
+    /// The result for this iteration is silently not delivered.
+    Drop,
+    /// One bit of the result payload flips in flight. The frame CRC32
+    /// catches it on the TCP path; the in-process path ships the
+    /// pre-corruption checksum so the master rejects it identically.
+    Corrupt,
+    /// The result frame is delivered twice (master must dedupe).
+    Duplicate,
+    /// The result is late by this many seconds (virtual seconds in
+    /// virtual mode, sleep-scaled real seconds otherwise).
+    Delay(f64),
+    /// Connection reset: the TCP worker hard-closes its socket; the
+    /// in-process analogue is a permanent crash from this iteration on.
+    Reset,
+}
+
+impl FaultKind {
+    /// Short stable label used in logs and CSV.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Crash { .. } => "crash",
+            FaultKind::Drop => "drop",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Duplicate => "duplicate",
+            FaultKind::Delay(_) => "delay",
+            FaultKind::Reset => "reset",
+        }
+    }
+}
+
+/// The plan's verdict for one `(worker, iteration)` cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Effect {
+    /// Behave normally.
+    None,
+    /// Apply the fault scheduled exactly at this iteration.
+    Fault(FaultKind),
+    /// Inside a crash window (or past a permanent crash/reset): stay
+    /// silent.
+    Dead,
+}
+
+impl Effect {
+    /// Whether the worker produces no usable result this iteration
+    /// (dead, crashing, dropping, or resetting).
+    pub fn is_silent(&self) -> bool {
+        matches!(
+            self,
+            Effect::Dead
+                | Effect::Fault(FaultKind::Crash { .. })
+                | Effect::Fault(FaultKind::Drop)
+                | Effect::Fault(FaultKind::Reset)
+        )
+    }
+}
+
+/// A deterministic per-`(worker, iteration)` fault schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    n: usize,
+    events: BTreeMap<(usize, u64), FaultKind>,
+}
+
+impl FaultPlan {
+    /// An empty plan for `n` workers (injects nothing).
+    pub fn new(n: usize) -> Self {
+        FaultPlan { n, events: BTreeMap::new() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of scheduled fault events (crash windows count once).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Schedule `kind` for `worker` at `iter` (replaces any previous
+    /// event in that cell).
+    pub fn schedule(&mut self, worker: usize, iter: u64, kind: FaultKind) -> &mut Self {
+        assert!(worker < self.n, "worker {worker} out of range (n={})", self.n);
+        self.events.insert((worker, iter), kind);
+        self
+    }
+
+    /// What `worker` should do at `iter`. Crash windows dominate: a crash
+    /// scheduled at `i0` silences the worker for `iter ∈ [i0, i0+k)`
+    /// (forever when permanent), and a reset silences it for every
+    /// iteration after the reset itself.
+    pub fn effect(&self, worker: usize, iter: u64) -> Effect {
+        if worker >= self.n {
+            return Effect::None;
+        }
+        for (&(_, i0), kind) in self.events.range((worker, 0)..=(worker, iter)) {
+            match kind {
+                FaultKind::Crash { restart_after } => {
+                    let dead = match restart_after {
+                        None => true,
+                        Some(k) => iter < i0 + *k as u64,
+                    };
+                    if dead {
+                        return Effect::Dead;
+                    }
+                }
+                FaultKind::Reset if i0 < iter => return Effect::Dead,
+                _ => {}
+            }
+        }
+        match self.events.get(&(worker, iter)) {
+            Some(&k) => Effect::Fault(k),
+            None => Effect::None,
+        }
+    }
+
+    /// All events scheduled exactly at `iter` (master-side logging).
+    pub fn events_at(&self, iter: u64) -> Vec<(usize, FaultKind)> {
+        self.events
+            .iter()
+            .filter(|&(&(_, i), _)| i == iter)
+            .map(|(&(w, _), &k)| (w, k))
+            .collect()
+    }
+
+    /// Workers silent at `iter` (scheduled-silent or inside a window).
+    pub fn silent_at(&self, iter: u64) -> Vec<usize> {
+        (0..self.n).filter(|&w| self.effect(w, iter).is_silent()).collect()
+    }
+
+    /// Sample a plan from per-iteration fault probabilities. Seeded by
+    /// `spec.seed`; per-worker streams are forked so the plan for worker
+    /// `w` does not depend on `n`. At most one fault per cell; a crash
+    /// suppresses further sampling until the worker restarts (or forever).
+    pub fn random(n: usize, iters: u64, spec: &ChaosSpec) -> FaultPlan {
+        let mut plan = FaultPlan::new(n);
+        let mut root = Pcg64::seed_from_u64(spec.seed);
+        for w in 0..n {
+            let mut rng = root.fork(w as u64 + 1);
+            let mut it = 0u64;
+            while it < iters {
+                let u = rng.next_f64();
+                let mut edge = spec.crash;
+                if u < edge {
+                    plan.schedule(w, it, FaultKind::Crash { restart_after: spec.restart_after });
+                    match spec.restart_after {
+                        None => break, // permanently dead: nothing left to sample
+                        Some(k) => {
+                            it += k as u64 + 1;
+                            continue;
+                        }
+                    }
+                }
+                edge += spec.drop;
+                if u < edge {
+                    plan.schedule(w, it, FaultKind::Drop);
+                } else {
+                    edge += spec.corrupt;
+                    if u < edge {
+                        plan.schedule(w, it, FaultKind::Corrupt);
+                    } else {
+                        edge += spec.duplicate;
+                        if u < edge {
+                            plan.schedule(w, it, FaultKind::Duplicate);
+                        } else {
+                            edge += spec.delay;
+                            if u < edge {
+                                plan.schedule(w, it, FaultKind::Delay(spec.delay_secs));
+                            } else if u < edge + spec.reset {
+                                plan.schedule(w, it, FaultKind::Reset);
+                                break; // connection gone for good
+                            }
+                        }
+                    }
+                }
+                it += 1;
+            }
+        }
+        plan
+    }
+}
+
+/// Per-iteration fault probabilities for [`FaultPlan::random`], plus the
+/// CLI `--chaos` syntax: comma-separated `key=value` pairs, e.g.
+/// `"crash=0.02,drop=0.05,corrupt=0.02,restart=3,seed=99"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSpec {
+    pub crash: f64,
+    pub drop: f64,
+    pub corrupt: f64,
+    pub duplicate: f64,
+    pub delay: f64,
+    /// Lateness injected by a sampled `delay` fault, seconds.
+    pub delay_secs: f64,
+    pub reset: f64,
+    /// Crash-restart window (`restart=0` on the CLI means permanent).
+    pub restart_after: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            crash: 0.0,
+            drop: 0.0,
+            corrupt: 0.0,
+            duplicate: 0.0,
+            delay: 0.0,
+            delay_secs: 0.5,
+            reset: 0.0,
+            restart_after: Some(3),
+            seed: 0xc4a0_5,
+        }
+    }
+}
+
+impl ChaosSpec {
+    /// Parse the CLI spec. Unknown keys and out-of-range probabilities
+    /// are errors (a typoed chaos run should fail loudly, not silently
+    /// inject nothing).
+    pub fn parse(spec: &str) -> Result<ChaosSpec, String> {
+        let mut out = ChaosSpec::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("chaos spec entry `{part}` is not key=value"))?;
+            let prob = |v: &str| -> Result<f64, String> {
+                let p: f64 =
+                    v.parse().map_err(|_| format!("chaos spec: bad number `{v}`"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("chaos spec: probability {p} not in [0, 1]"));
+                }
+                Ok(p)
+            };
+            match key {
+                "crash" => out.crash = prob(value)?,
+                "drop" => out.drop = prob(value)?,
+                "corrupt" => out.corrupt = prob(value)?,
+                "dup" | "duplicate" => out.duplicate = prob(value)?,
+                "delay" => out.delay = prob(value)?,
+                "reset" => out.reset = prob(value)?,
+                "delay_secs" => {
+                    out.delay_secs = value
+                        .parse()
+                        .map_err(|_| format!("chaos spec: bad delay_secs `{value}`"))?;
+                    if !(out.delay_secs >= 0.0) {
+                        return Err(format!("chaos spec: delay_secs {value} must be >= 0"));
+                    }
+                }
+                "restart" => {
+                    let k: u32 = value
+                        .parse()
+                        .map_err(|_| format!("chaos spec: bad restart `{value}`"))?;
+                    out.restart_after = if k == 0 { None } else { Some(k) };
+                }
+                "seed" => {
+                    out.seed = parse_u64(value)
+                        .ok_or_else(|| format!("chaos spec: bad seed `{value}`"))?;
+                }
+                other => return Err(format!("chaos spec: unknown key `{other}`")),
+            }
+        }
+        let total = out.crash + out.drop + out.corrupt + out.duplicate + out.delay + out.reset;
+        if total > 1.0 {
+            return Err(format!(
+                "chaos spec: fault probabilities sum to {total:.3} > 1"
+            ));
+        }
+        Ok(out)
+    }
+}
+
+/// Parse a u64 that may be written `0x…` hex or decimal.
+pub(crate) fn parse_u64(v: &str) -> Option<u64> {
+    if let Some(hex) = v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        v.parse().ok()
+    }
+}

@@ -236,6 +236,122 @@ impl PartialDecode {
     }
 }
 
+/// Result of [`ls_partial_decode`]: combining weights plus the
+/// coefficient-space residual of the least-squares fit.
+#[derive(Debug, Clone)]
+pub struct LsDecode {
+    /// Weights for [`crate::coding::Decoder::from_weights`].
+    pub weights: DecodeWeights,
+    /// `ε(F) = ‖C·W − Y‖_F` over all `m` components: 0 ⇔ the responder
+    /// set recovers the sum exactly; otherwise the estimate satisfies
+    /// `‖ĝ − g_sum‖₂ ≤ ε·√(Σ_t ‖g_t‖₂²)` (Cauchy–Schwarz per component).
+    pub coeff_residual: f64,
+}
+
+/// Generic least-squares partial decode for **any** [`GradientCode`] —
+/// the degradation-ladder fallback when fewer than `n - s` workers
+/// respond and the scheme's own exact decode is impossible.
+///
+/// Works directly from the scheme's `B·V` coefficient matrix, whose
+/// entry `(t·m+u, w)` is the coefficient of `g_t`'s `u`-component in
+/// `f_w` (the invariant every scheme upholds). For each output component
+/// `u ∈ 0..m` it solves
+///
+/// ```text
+///   min_w ‖ C w − y_u ‖₂     C[row, i] = (B·V)[row, available_i]
+///                            y_u[t·m+u'] = 1 iff u' = u
+/// ```
+///
+/// via one normal-equation factorization shared across the `m`
+/// right-hand sides, and returns the stacked weights in
+/// [`DecodeWeights`] layout plus the total residual. Properties:
+///
+/// - for an exact scheme with at least `n - s` responders the residual
+///   is ~0 and the decode is exact (a zero-residual solution exists);
+/// - for [`ApproxCode`] this reduces to [`ApproxCode::partial_decode`]
+///   (identical normal equations);
+/// - for [`crate::coding::UncodedScheme`] with `r` of `n` responders the
+///   weights are all ones and the residual is `√(n−r)` (the missing
+///   subsets are simply gone).
+pub fn ls_partial_decode(
+    code: &dyn GradientCode,
+    available: &[usize],
+) -> Result<LsDecode, CodingError> {
+    let cfg = *code.config();
+    let (n, m) = (cfg.n, cfg.m);
+    if available.is_empty() {
+        return Err(CodingError::NotEnoughWorkers { need: 1, got: 0 });
+    }
+    let mut seen = vec![false; n];
+    for &w in available {
+        if w >= n {
+            return Err(CodingError::WorkerOutOfRange(w));
+        }
+        if seen[w] {
+            return Err(CodingError::InvalidConfig(format!(
+                "duplicate worker {w} in responder set"
+            )));
+        }
+        seen[w] = true;
+    }
+    let bv = code.matrix_b().matmul(&code.matrix_v());
+    debug_assert_eq!(bv.rows(), m * n, "BV must have one row per (subset, component)");
+    debug_assert_eq!(bv.cols(), n, "BV must have one column per worker");
+    let r = available.len();
+    let rows = m * n;
+    let mut gram = Matrix::from_fn(r, r, |i, j| {
+        (0..rows)
+            .map(|row| bv[(row, available[i])] * bv[(row, available[j])])
+            .sum()
+    });
+    let singular = |e: crate::linalg::LinalgError| CodingError::SingularDecode {
+        available: available.to_vec(),
+        source: e,
+    };
+    let lu = match Lu::factor(&gram) {
+        Ok(lu) => lu,
+        Err(_) => {
+            // Rank-deficient responder pattern: Tikhonov fallback, same
+            // recipe as `ApproxCode::partial_decode`. The residual below
+            // is computed from the weights actually used, so the reported
+            // bound stays valid.
+            let delta =
+                1e-9 * (0..r).map(|i| gram[(i, i)]).sum::<f64>().max(1.0) / r as f64;
+            for i in 0..r {
+                gram[(i, i)] += delta;
+            }
+            Lu::factor(&gram).map_err(singular)?
+        }
+    };
+    let mut weights = vec![0.0f64; r * m];
+    let mut residual_sq = 0.0f64;
+    for u in 0..m {
+        // y_u has a 1 in row t·m+u for every subset t, so (Cᵀ y_u)_i is
+        // the sum of worker available_i's u-rows.
+        let rhs: Vec<f64> = (0..r)
+            .map(|i| (0..n).map(|t| bv[(t * m + u, available[i])]).sum())
+            .collect();
+        let w_u = lu.solve(&rhs).map_err(singular)?;
+        for t in 0..n {
+            for up in 0..m {
+                let row = t * m + up;
+                let pred: f64 =
+                    (0..r).map(|i| w_u[i] * bv[(row, available[i])]).sum();
+                let target = if up == u { 1.0 } else { 0.0 };
+                let e = pred - target;
+                residual_sq += e * e;
+            }
+        }
+        for i in 0..r {
+            weights[i * m + u] = w_u[i];
+        }
+    }
+    Ok(LsDecode {
+        weights: DecodeWeights { used: available.to_vec(), weights, m },
+        coeff_residual: residual_sq.sqrt(),
+    })
+}
+
 impl GradientCode for ApproxCode {
     fn config(&self) -> &SchemeConfig {
         &self.cfg
@@ -508,6 +624,118 @@ mod tests {
             code.partial_decode(&[0, 5]),
             Err(CodingError::WorkerOutOfRange(5))
         ));
+    }
+
+    #[test]
+    fn ls_decode_matches_approx_partial_decode() {
+        // For ApproxCode (m = 1, BV = Aᵀ) the generic solver's normal
+        // equations are literally the same system.
+        let code = ApproxCode::new(8, 3, 5).unwrap();
+        for set in [vec![0usize, 2, 3, 6, 7], vec![1, 4], (0..8).collect()] {
+            let ls = ls_partial_decode(&code, &set).unwrap();
+            let partial = code.partial_decode(&set).unwrap();
+            assert!(
+                (ls.coeff_residual - partial.coeff_residual).abs() < 1e-9,
+                "set {set:?}: {} vs {}",
+                ls.coeff_residual,
+                partial.coeff_residual
+            );
+            // full-set shortcut aside, the weights agree too
+            if set.len() < 8 {
+                for (a, b) in ls.weights.weights.iter().zip(&partial.weights.weights) {
+                    assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ls_decode_is_exact_for_poly_at_n_minus_s() {
+        use crate::coding::PolynomialCode;
+        for (n, s, m) in [(6usize, 2usize, 1usize), (6, 1, 2)] {
+            let code =
+                PolynomialCode::new(crate::coding::SchemeConfig::tight(n, s, m).unwrap())
+                    .unwrap();
+            let l = 4 * m;
+            let grads = random_grads(n, l, 31 + n as u64);
+            let transmitted: Vec<Vec<f32>> = (0..n)
+                .map(|w| {
+                    let views: Vec<&[f32]> = code
+                        .placement()
+                        .assigned(w)
+                        .iter()
+                        .map(|&t| grads[t].as_slice())
+                        .collect();
+                    Encoder::new(&code, w).unwrap().encode(&views).unwrap()
+                })
+                .collect();
+            let avail: Vec<usize> = (0..n - s).collect();
+            let ls = ls_partial_decode(&code, &avail).unwrap();
+            assert!(
+                ls.coeff_residual < 1e-5,
+                "(n={n},s={s},m={m}): exact-capable set has residual {}",
+                ls.coeff_residual
+            );
+            let dec = Decoder::from_weights(&ls.weights);
+            let fs: Vec<&[f32]> = dec
+                .used_workers()
+                .iter()
+                .map(|&w| transmitted[w].as_slice())
+                .collect();
+            let got = dec.decode(&fs).unwrap();
+            let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            let want = sum_gradients(&views);
+            let scale =
+                l2(&want.iter().map(|&x| x as f64).collect::<Vec<_>>()).max(1e-12);
+            assert!(
+                l2_diff(&got, &want) / scale < 1e-3,
+                "(n={n},s={s},m={m}): rel err {}",
+                l2_diff(&got, &want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn ls_decode_below_quorum_is_finite_with_positive_residual() {
+        use crate::coding::PolynomialCode;
+        let code =
+            PolynomialCode::new(crate::coding::SchemeConfig::tight(6, 1, 1).unwrap())
+                .unwrap();
+        // 3 responders where exact decode needs 5: approximate territory.
+        let ls = ls_partial_decode(&code, &[0, 2, 4]).unwrap();
+        assert!(ls.coeff_residual > 1e-3, "short set cannot be exact");
+        assert!(ls.coeff_residual.is_finite());
+        assert!(ls.weights.weights.iter().all(|w| w.is_finite()));
+        assert_eq!(ls.weights.used, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn ls_decode_uncoded_gives_unit_weights_and_sqrt_residual() {
+        use crate::coding::UncodedScheme;
+        let code = UncodedScheme::new(5);
+        let ls = ls_partial_decode(&code, &[0, 1, 3]).unwrap();
+        for w in &ls.weights.weights {
+            assert!((w - 1.0).abs() < 1e-9, "uncoded weight {w}");
+        }
+        assert!(
+            (ls.coeff_residual - (2.0f64).sqrt()).abs() < 1e-9,
+            "two missing subsets -> residual sqrt(2), got {}",
+            ls.coeff_residual
+        );
+    }
+
+    #[test]
+    fn ls_decode_validates_input() {
+        let code = ApproxCode::new(5, 2, 3).unwrap();
+        assert!(matches!(
+            ls_partial_decode(&code, &[]),
+            Err(CodingError::NotEnoughWorkers { .. })
+        ));
+        assert!(matches!(
+            ls_partial_decode(&code, &[0, 5]),
+            Err(CodingError::WorkerOutOfRange(5))
+        ));
+        assert!(ls_partial_decode(&code, &[1, 1]).is_err());
     }
 
     #[test]

@@ -111,7 +111,7 @@ mod stability;
 mod uncoded;
 mod vandermonde;
 
-pub use approx::{quorum_count, ApproxCode, PartialDecode};
+pub use approx::{ls_partial_decode, quorum_count, ApproxCode, LsDecode, PartialDecode};
 pub use bounds::{is_achievable, verify_placement_bound};
 pub use decode::{sum_gradients, Decoder};
 pub use encode::Encoder;

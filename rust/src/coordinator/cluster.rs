@@ -1,14 +1,25 @@
 //! The in-process cluster: spawns worker threads, owns the channels, and
 //! gathers per-iteration responses for the master.
+//!
+//! Gathers are fault-aware: duplicated deliveries are deduped, payloads
+//! failing their CRC32 check are rejected (the sender is treated as a
+//! straggler), and an unsatisfiable wait rule returns a partial
+//! [`GatherResult`] with `satisfied = false` instead of panicking — the
+//! trainer's degradation ladder decides what to do with it. Real-time
+//! gathers run against a [`GatherPolicy`] deadline with task
+//! re-broadcasts, so a silently dead worker can no longer hang an
+//! iteration.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::backend::ComputeBackend;
 use super::messages::{Task, WorkerResult};
+use super::wire::crc32_f32s;
 use super::worker::{DelayInjector, WorkerLoop};
+use crate::chaos::{FaultPlan, GatherPolicy};
 use crate::coding::SchemeConfig;
 use crate::rngs::Pcg64;
 use crate::simulator::DelayParams;
@@ -34,6 +45,12 @@ pub enum WaitRule {
     /// from [`crate::coding::GradientCode::group_quorums`]. Lets the
     /// heterogeneous schemes stop before slack groups' slow tails.
     PerGroup(Vec<(Vec<usize>, usize)>),
+    /// [`WaitRule::Count`] with an explicit per-iteration gather
+    /// deadline: proceed at `count` healthy arrivals, or with whatever
+    /// arrived when `timeout` expires (after the policy's re-broadcast
+    /// retries). Virtual mode treats it exactly like `Count` — virtual
+    /// gathers count every worker once and cannot hang.
+    Deadline { count: usize, timeout: Duration },
 }
 
 impl WaitRule {
@@ -42,12 +59,13 @@ impl WaitRule {
         match self {
             WaitRule::Count(c) => *c,
             WaitRule::PerGroup(gs) => gs.iter().map(|(_, need)| need).sum(),
+            WaitRule::Deadline { count, .. } => *count,
         }
     }
 
     fn validate(&self, n: usize) {
         match self {
-            WaitRule::Count(c) => {
+            WaitRule::Count(c) | WaitRule::Deadline { count: c, .. } => {
                 assert!(*c >= 1 && *c <= n, "quorum {c} must be in 1..={n}")
             }
             WaitRule::PerGroup(gs) => {
@@ -90,7 +108,7 @@ struct QuorumTracker {
 impl QuorumTracker {
     fn new(rule: &WaitRule, n: usize) -> Self {
         match rule {
-            WaitRule::Count(c) => QuorumTracker {
+            WaitRule::Count(c) | WaitRule::Deadline { count: c, .. } => QuorumTracker {
                 group_of: vec![0; n],
                 have: vec![0],
                 need: vec![*c],
@@ -159,16 +177,26 @@ pub struct FleetProfile {
 pub struct GatherResult {
     /// Results ordered by (virtual or wall-clock) arrival. Virtual mode
     /// collects all healthy workers; real-time mode only those gathered
-    /// before the rule was met.
+    /// before the rule was met (or the deadline expired).
     pub results: Vec<WorkerResult>,
     /// Leading results that satisfy the wait rule — the responder set
-    /// the master decodes from (`results[..quorum_len]`).
+    /// the master decodes from (`results[..quorum_len]`). When the rule
+    /// went unsatisfied this is simply `results.len()`.
     pub quorum_len: usize,
     /// Iteration runtime on the relevant clock (seconds): virtual finish
     /// of the arrival that satisfied the rule, or measured wall time.
     pub iteration_time: f64,
     /// Max measured worker compute among used responders.
     pub worker_compute: f64,
+    /// Whether the wait rule was actually satisfied. When false the
+    /// results are a best-effort partial set and the caller must degrade
+    /// (partial decode / stale gradient) or abort.
+    pub satisfied: bool,
+    /// Workers whose results failed the CRC32 payload check this
+    /// iteration (treated as stragglers, excluded from `results`).
+    pub rejected: Vec<usize>,
+    /// Duplicate deliveries discarded by the dedupe.
+    pub duplicates: usize,
 }
 
 /// In-process master handle over `n` worker threads.
@@ -179,6 +207,8 @@ pub struct Cluster {
     /// ([`WaitRule::Count`]); quorum overrides and the heterogeneous
     /// per-group rule arrive via [`Cluster::spawn_full`].
     rule: WaitRule,
+    policy: GatherPolicy,
+    chaos: Option<Arc<FaultPlan>>,
     task_txs: Vec<Sender<Task>>,
     results: Receiver<WorkerResult>,
     handles: Vec<JoinHandle<()>>,
@@ -228,10 +258,41 @@ impl Cluster {
         rule: WaitRule,
         profile: Option<FleetProfile>,
     ) -> Self {
+        Self::spawn_chaos(
+            cfg,
+            backend,
+            mode,
+            delays,
+            seed,
+            rule,
+            profile,
+            None,
+            GatherPolicy::default(),
+        )
+    }
+
+    /// [`Cluster::spawn_full`] plus fault injection: every worker thread
+    /// consults `chaos` per task, and real-time gathers run against
+    /// `policy`'s deadline/retry schedule.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_chaos(
+        cfg: SchemeConfig,
+        backend: Arc<dyn ComputeBackend>,
+        mode: ExecutionMode,
+        delays: Option<DelayParams>,
+        seed: u64,
+        rule: WaitRule,
+        profile: Option<FleetProfile>,
+        chaos: Option<Arc<FaultPlan>>,
+        policy: GatherPolicy,
+    ) -> Self {
         rule.validate(cfg.n);
         if let Some(p) = &profile {
             assert_eq!(p.speeds.len(), cfg.n, "one speed per worker");
             assert_eq!(p.work.len(), cfg.n, "one load per worker");
+        }
+        if let Some(plan) = &chaos {
+            assert_eq!(plan.n(), cfg.n, "fault plan sized for a different fleet");
         }
         let (result_tx, result_rx) = channel::<WorkerResult>();
         let mut task_txs = Vec::with_capacity(cfg.n);
@@ -258,6 +319,8 @@ impl Cluster {
                     ExecutionMode::RealTime { scale } => scale,
                 },
                 skip_stale: matches!(mode, ExecutionMode::RealTime { .. }),
+                chaos: chaos.as_ref().map(Arc::clone),
+                tombstone_faults: matches!(mode, ExecutionMode::Virtual),
             };
             handles.push(
                 std::thread::Builder::new()
@@ -266,7 +329,7 @@ impl Cluster {
                     .expect("spawn worker"),
             );
         }
-        Cluster { cfg, mode, rule, task_txs, results: result_rx, handles }
+        Cluster { cfg, mode, rule, policy, chaos, task_txs, results: result_rx, handles }
     }
 
     pub fn n(&self) -> usize {
@@ -284,13 +347,29 @@ impl Cluster {
         &self.rule
     }
 
+    /// The fault plan threaded through the workers, if any.
+    pub fn chaos(&self) -> Option<&Arc<FaultPlan>> {
+        self.chaos.as_ref()
+    }
+
+    fn crc_ok(r: &WorkerResult) -> bool {
+        match r.crc {
+            Some(c) => crc32_f32s(&r.f) == c,
+            None => true,
+        }
+    }
+
     /// Broadcast an iteration and gather responses.
     ///
-    /// Virtual mode: waits for all `n` results, sorts by virtual finish,
-    /// returns all; `quorum_len` marks the shortest arrival prefix that
-    /// satisfies the wait rule (the trainer decodes from that prefix).
-    /// Real-time mode: returns once the rule is satisfied by the arrived
-    /// results; stale results from previous iterations are discarded.
+    /// Virtual mode: waits for one report from every worker (silent
+    /// faults tombstone, so this cannot hang), sorts by virtual finish,
+    /// returns all healthy ones; `quorum_len` marks the shortest arrival
+    /// prefix that satisfies the wait rule (the trainer decodes from that
+    /// prefix). Real-time mode: returns once the rule is satisfied by the
+    /// arrived results, or when the gather deadline expires after the
+    /// policy's re-broadcast retries; stale results from previous
+    /// iterations are discarded. Either way, too few healthy responders
+    /// yields `satisfied = false` rather than a panic.
     pub fn run_iteration(&mut self, iter: usize, beta: Arc<Vec<f32>>) -> GatherResult {
         let t0 = Instant::now();
         for tx in &self.task_txs {
@@ -298,20 +377,35 @@ impl Cluster {
             // send fails silently and the decode path handles the gap.
             let _ = tx.send(Task { iter, beta: Arc::clone(&beta) });
         }
-        let mut results: Vec<WorkerResult> = Vec::with_capacity(self.cfg.n);
+        let n = self.cfg.n;
+        let mut results: Vec<WorkerResult> = Vec::with_capacity(n);
+        let mut seen = vec![false; n];
+        let mut duplicates = 0usize;
+        let mut rejected: Vec<usize> = Vec::new();
         match self.mode {
             ExecutionMode::Virtual => {
-                // Every worker reports exactly once per iteration, failures
-                // included (a backend failure is a permanent straggler and
-                // reports `failed = true` rather than going silent).
+                // Every worker reports exactly once per iteration: backend
+                // failures and injected silent faults report `failed = true`
+                // tombstones rather than going silent, and duplicate faults
+                // are deduped before counting.
                 let mut received = 0usize;
-                while received < self.cfg.n {
+                while received < n {
                     match self.results.recv() {
                         Ok(r) if r.iter == iter => {
-                            received += 1;
-                            if !r.failed {
-                                results.push(r);
+                            if seen[r.worker] {
+                                duplicates += 1;
+                                continue;
                             }
+                            seen[r.worker] = true;
+                            received += 1;
+                            if r.failed {
+                                continue;
+                            }
+                            if !Self::crc_ok(&r) {
+                                rejected.push(r.worker);
+                                continue;
+                            }
+                            results.push(r);
                         }
                         Ok(_) => continue, // stale (shouldn't happen here)
                         Err(_) => break,   // all workers died
@@ -321,56 +415,98 @@ impl Cluster {
                     a.virtual_finish.partial_cmp(&b.virtual_finish).unwrap()
                 });
                 // Shortest arrival prefix satisfying the rule.
-                let mut tracker = QuorumTracker::new(&self.rule, self.cfg.n);
-                let mut quorum_len = None;
+                let mut tracker = QuorumTracker::new(&self.rule, n);
+                let mut prefix = None;
                 for (i, r) in results.iter().enumerate() {
                     if tracker.arrive(r.worker) {
-                        quorum_len = Some(i + 1);
+                        prefix = Some(i + 1);
                         break;
                     }
                 }
-                let quorum_len = quorum_len.unwrap_or_else(|| {
-                    panic!(
-                        "only {} healthy results of {} workers cannot satisfy {:?}",
-                        results.len(),
-                        self.cfg.n,
-                        self.rule
-                    )
-                });
-                let iteration_time = results[quorum_len - 1].virtual_finish;
+                let satisfied = prefix.is_some();
+                let quorum_len = prefix.unwrap_or(results.len());
+                let iteration_time = if quorum_len > 0 {
+                    results[quorum_len - 1].virtual_finish
+                } else {
+                    0.0
+                };
                 let worker_compute = results[..quorum_len]
                     .iter()
                     .map(|r| r.compute_secs)
                     .fold(0.0, f64::max);
-                GatherResult { results, quorum_len, iteration_time, worker_compute }
+                GatherResult {
+                    results,
+                    quorum_len,
+                    iteration_time,
+                    worker_compute,
+                    satisfied,
+                    rejected,
+                    duplicates,
+                }
             }
             ExecutionMode::RealTime { .. } => {
-                let mut tracker = QuorumTracker::new(&self.rule, self.cfg.n);
+                let deadline = match &self.rule {
+                    WaitRule::Deadline { timeout, .. } => *timeout,
+                    _ => self.policy.deadline,
+                };
+                let slice = deadline / (self.policy.retries + 1).max(1);
+                let mut retries_left = self.policy.retries;
+                let mut tracker = QuorumTracker::new(&self.rule, n);
                 let mut satisfied = false;
-                while !satisfied {
-                    match self.results.recv() {
+                let mut received = 0usize;
+                while !satisfied && received < n {
+                    match self.results.recv_timeout(slice) {
                         Ok(r) if r.iter == iter => {
-                            if r.failed {
-                                assert!(
-                                    tracker.fail(r.worker),
-                                    "worker {} failure makes {:?} unsatisfiable",
-                                    r.worker,
-                                    self.rule
-                                );
+                            if seen[r.worker] {
+                                duplicates += 1;
+                                continue;
+                            }
+                            seen[r.worker] = true;
+                            received += 1;
+                            if r.failed || !Self::crc_ok(&r) {
+                                if !Self::crc_ok(&r) {
+                                    rejected.push(r.worker);
+                                }
+                                // An unsatisfiable rule is not fatal any
+                                // more: keep gathering — later arrivals
+                                // still feed the degraded decode.
+                                let _ = tracker.fail(r.worker);
                             } else {
                                 satisfied = tracker.arrive(r.worker);
                                 results.push(r);
                             }
                         }
                         Ok(_) => continue, // stale from a previous iteration
-                        Err(_) => panic!("all workers exited mid-iteration"),
+                        Err(RecvTimeoutError::Timeout) => {
+                            if retries_left == 0 {
+                                break; // deadline spent: degrade with what we have
+                            }
+                            retries_left -= 1;
+                            std::thread::sleep(self.policy.backoff);
+                            // Re-prod only the workers we haven't heard from.
+                            for (w, tx) in self.task_txs.iter().enumerate() {
+                                if !seen[w] {
+                                    let _ =
+                                        tx.send(Task { iter, beta: Arc::clone(&beta) });
+                                }
+                            }
+                        }
+                        Err(RecvTimeoutError::Disconnected) => break, // all workers gone
                     }
                 }
                 let iteration_time = t0.elapsed().as_secs_f64();
                 let worker_compute =
                     results.iter().map(|r| r.compute_secs).fold(0.0, f64::max);
                 let quorum_len = results.len();
-                GatherResult { results, quorum_len, iteration_time, worker_compute }
+                GatherResult {
+                    results,
+                    quorum_len,
+                    iteration_time,
+                    worker_compute,
+                    satisfied,
+                    rejected,
+                    duplicates,
+                }
             }
         }
     }
@@ -388,6 +524,7 @@ impl Drop for Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chaos::FaultKind;
     use crate::coding::{GradientCode, HeteroCode, PolynomialCode};
     use crate::coordinator::backend::RustBackend;
     use crate::data::{CategoricalConfig, SyntheticCategorical};
@@ -407,6 +544,31 @@ mod tests {
         (code, backend, l)
     }
 
+    fn spawn_with_plan(
+        n: usize,
+        s: usize,
+        m: usize,
+        mode: ExecutionMode,
+        plan: FaultPlan,
+        policy: GatherPolicy,
+    ) -> (Cluster, usize) {
+        let (code, backend, l) = setup(n, s, m);
+        let cfg = *code.config();
+        let rule = WaitRule::Count(cfg.wait_for());
+        let cluster = Cluster::spawn_chaos(
+            cfg,
+            backend,
+            mode,
+            Some(DelayParams::table_vi1()),
+            11,
+            rule,
+            None,
+            Some(Arc::new(plan)),
+            policy,
+        );
+        (cluster, l)
+    }
+
     #[test]
     fn virtual_mode_gathers_all_and_orders() {
         let (code, backend, l) = setup(5, 1, 2);
@@ -422,6 +584,9 @@ mod tests {
             let g = cluster.run_iteration(iter, Arc::clone(&beta));
             assert_eq!(g.results.len(), 5);
             assert_eq!(g.quorum_len, 4);
+            assert!(g.satisfied);
+            assert!(g.rejected.is_empty());
+            assert_eq!(g.duplicates, 0);
             for w in g.results.windows(2) {
                 assert!(w[0].virtual_finish <= w[1].virtual_finish);
             }
@@ -429,6 +594,7 @@ mod tests {
             for r in &g.results {
                 assert_eq!(r.f.len(), l / 2);
                 assert_eq!(r.iter, iter);
+                assert!(r.crc.is_none(), "no chaos, no checksum");
             }
         }
     }
@@ -449,6 +615,7 @@ mod tests {
             let g = cluster.run_iteration(iter, Arc::clone(&beta));
             assert!(g.results.len() >= 3, "quorum is n-s = 3");
             assert_eq!(g.quorum_len, g.results.len());
+            assert!(g.satisfied);
             assert!(g.results.iter().all(|r| r.iter == iter));
         }
     }
@@ -581,6 +748,8 @@ mod tests {
     #[test]
     fn wait_rule_helpers() {
         assert_eq!(WaitRule::Count(4).min_responders(), 4);
+        let dl = WaitRule::Deadline { count: 3, timeout: Duration::from_secs(1) };
+        assert_eq!(dl.min_responders(), 3);
         let rule = WaitRule::PerGroup(vec![(vec![0, 1, 2], 2), (vec![3, 4], 1)]);
         assert_eq!(rule.min_responders(), 3);
         let mut t = QuorumTracker::new(&rule, 5);
@@ -590,5 +759,90 @@ mod tests {
         let mut t = QuorumTracker::new(&rule, 5);
         assert!(t.fail(0), "slow group absorbs one failure");
         assert!(!t.fail(1), "second slow failure breaks the quorum");
+    }
+
+    #[test]
+    fn chaos_crash_excludes_worker_in_virtual_mode() {
+        // n=5, s=1: one permanent crash is within tolerance.
+        let mut plan = FaultPlan::new(5);
+        plan.schedule(2, 1, FaultKind::Crash { restart_after: None });
+        let (mut cluster, l) =
+            spawn_with_plan(5, 1, 2, ExecutionMode::Virtual, plan, GatherPolicy::default());
+        let beta = Arc::new(vec![0.0f32; l]);
+        let g0 = cluster.run_iteration(0, Arc::clone(&beta));
+        assert_eq!(g0.results.len(), 5, "no fault before the crash iteration");
+        for iter in 1..4 {
+            let g = cluster.run_iteration(iter, Arc::clone(&beta));
+            assert_eq!(g.results.len(), 4, "crashed worker tombstones");
+            assert!(g.satisfied, "n - s = 4 responders still satisfy the rule");
+            assert!(g.results.iter().all(|r| r.worker != 2));
+        }
+    }
+
+    #[test]
+    fn chaos_corrupt_payload_is_rejected_by_crc() {
+        let mut plan = FaultPlan::new(5);
+        plan.schedule(0, 0, FaultKind::Corrupt);
+        let (mut cluster, l) =
+            spawn_with_plan(5, 1, 2, ExecutionMode::Virtual, plan, GatherPolicy::default());
+        let g = cluster.run_iteration(0, Arc::new(vec![0.0f32; l]));
+        assert_eq!(g.rejected, vec![0], "flipped bit must fail the checksum");
+        assert_eq!(g.results.len(), 4);
+        assert!(g.satisfied);
+        assert!(g.results.iter().all(|r| r.worker != 0));
+        // after the one-shot fault the worker is healthy again
+        let g = cluster.run_iteration(1, Arc::new(vec![0.0f32; l]));
+        assert!(g.rejected.is_empty());
+        assert_eq!(g.results.len(), 5);
+    }
+
+    #[test]
+    fn chaos_duplicate_results_are_deduped() {
+        let mut plan = FaultPlan::new(5);
+        plan.schedule(3, 0, FaultKind::Duplicate);
+        let (mut cluster, l) =
+            spawn_with_plan(5, 1, 2, ExecutionMode::Virtual, plan, GatherPolicy::default());
+        let g = cluster.run_iteration(0, Arc::new(vec![0.0f32; l]));
+        assert_eq!(g.duplicates, 1);
+        assert_eq!(g.results.len(), 5, "the duplicate is discarded, not double-counted");
+        assert!(g.satisfied);
+    }
+
+    #[test]
+    fn too_many_crashes_degrade_instead_of_panicking() {
+        // n=5, s=1 but two permanent crashes: the old gather panicked;
+        // now it returns everything it has with satisfied = false.
+        let mut plan = FaultPlan::new(5);
+        plan.schedule(1, 0, FaultKind::Crash { restart_after: None });
+        plan.schedule(4, 0, FaultKind::Crash { restart_after: None });
+        let (mut cluster, l) =
+            spawn_with_plan(5, 1, 2, ExecutionMode::Virtual, plan, GatherPolicy::default());
+        let g = cluster.run_iteration(0, Arc::new(vec![0.0f32; l]));
+        assert!(!g.satisfied);
+        assert_eq!(g.results.len(), 3);
+        assert_eq!(g.quorum_len, 3, "unsatisfied gather exposes all survivors");
+    }
+
+    #[test]
+    fn realtime_gather_deadline_breaks_the_silent_worker_hang() {
+        // A genuinely silent worker in real-time mode used to block the
+        // gather forever; the deadline now returns a partial result.
+        let mut plan = FaultPlan::new(4);
+        plan.schedule(1, 0, FaultKind::Crash { restart_after: None });
+        let policy = GatherPolicy {
+            deadline: Duration::from_millis(300),
+            retries: 1,
+            backoff: Duration::from_millis(1),
+        };
+        let (mut cluster, l) =
+            spawn_with_plan(4, 0, 1, ExecutionMode::RealTime { scale: 1e-4 }, plan, policy);
+        let t0 = Instant::now();
+        let g = cluster.run_iteration(0, Arc::new(vec![0.0f32; l]));
+        assert!(!g.satisfied, "rule needs all 4, only 3 can answer");
+        assert_eq!(g.results.len(), 3);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "gather must end at the deadline, not hang"
+        );
     }
 }

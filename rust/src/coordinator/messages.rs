@@ -25,4 +25,9 @@ pub struct WorkerResult {
     /// Backend failure: the worker behaves as a permanent straggler; the
     /// scheme tolerates up to `s` of these.
     pub failed: bool,
+    /// CRC32 of `f` (its little-endian wire form), attached when fault
+    /// injection is active so the master can detect payload corruption on
+    /// the in-process path with exactly the check TCP frames get. `None`
+    /// when chaos is off (no verification cost on the happy path).
+    pub crc: Option<u32>,
 }

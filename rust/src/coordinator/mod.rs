@@ -30,6 +30,16 @@
 //! trades a bounded gradient error for a much shorter straggler tail
 //! (see `rust/benches/approx_tradeoff.rs` for the measured curve).
 //!
+//! **Fault tolerance (chaos).** `TrainConfig::chaos` threads a
+//! deterministic [`crate::chaos::FaultPlan`] through every worker and
+//! arms the robustness machinery: per-result CRC32 checksums (rejected
+//! payloads count as stragglers), gather dedupe, a per-iteration gather
+//! deadline with task re-broadcasts ([`crate::chaos::GatherPolicy`]),
+//! and the degradation ladder ([`crate::chaos::DegradeLadder`]) — exact
+//! decode while the wait rule holds, least-squares partial decode below
+//! it, stale gradient as the last resort. Everything injected and every
+//! recovery decision lands in the run's [`crate::chaos::FaultLog`].
+//!
 //! **Heterogeneous fleets.** [`SchemeSpec::Hetero`] adapts the placement
 //! to a per-worker [`SpeedProfile`]: workers are partitioned into speed
 //! groups with group-local loads and speed-proportional subset sizes
@@ -88,7 +98,7 @@ mod worker;
 pub use backend::{ComputeBackend, RustBackend};
 pub use cluster::{Cluster, ExecutionMode, FleetProfile, WaitRule};
 pub use messages::{Task, WorkerResult};
-pub use remote::{run_worker, RemoteMaster};
+pub use remote::{run_worker, run_worker_chaos, RemoteGather, RemoteMaster};
 pub use trainer::{train, OptChoice, SchemeSpec, TrainConfig, Trainer};
 // The fleet-shape vocabulary lives in the simulator (it parameterizes the
 // §VI delay model) but is part of the coordinator's configuration surface.

@@ -6,16 +6,26 @@
 //!   the first `n - s` responders (arrival order — real network racing).
 //! - [`run_worker`] is the worker process body: connect, receive Setup,
 //!   rebuild scheme + data shard deterministically from the seeds, then
-//!   serve the task loop until Shutdown.
+//!   serve the task loop until Shutdown. [`run_worker_chaos`] is the same
+//!   body with a [`FaultPlan`] threaded through it.
 //!
 //! The data "distribution" step is seed-based regeneration (every worker
 //! derives its shard from `data_seed`), standing in for the shared
 //! filesystem / S3 load of the real deployment.
+//!
+//! Gathers are robust: per-connection reader threads classify wire
+//! errors ([`WireError::Corrupt`] = frame-aligned, keep reading;
+//! [`WireError::Io`] = connection gone), the gather loop runs against a
+//! [`GatherPolicy`] deadline with bounded task re-sends, duplicate
+//! deliveries are deduped, and a quorum that cannot be met returns a
+//! partial [`RemoteGather`] with `complete = false` instead of blocking
+//! on `recv()` forever (the pre-v3 master hung exactly there when a
+//! worker disconnected mid-gather).
 
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -23,9 +33,10 @@ use anyhow::{bail, Context, Result};
 use super::backend::{ComputeBackend, RustBackend};
 use super::trainer::SchemeSpec;
 use super::wire::{
-    Message, Setup, MAGIC, SCHEME_APPROX, SCHEME_HETERO, SCHEME_POLY, SCHEME_RANDOM,
-    SCHEME_UNCODED,
+    Message, Setup, WireError, MAGIC, SCHEME_APPROX, SCHEME_HETERO, SCHEME_POLY,
+    SCHEME_RANDOM, SCHEME_UNCODED,
 };
+use crate::chaos::{Effect, FaultKind, FaultPlan, GatherPolicy};
 use crate::coding::{ApproxCode, GradientCode, HeteroCode};
 use crate::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
 
@@ -99,19 +110,40 @@ pub fn dataset_from_setup(setup: &Setup) -> DenseDataset {
 /// One gathered remote iteration.
 #[derive(Debug)]
 pub struct RemoteGather {
-    /// (worker id, coded vector), in arrival order, length
-    /// [`Setup::wait_for`] (`n - s`, or the approx scheme's quorum).
+    /// (worker id, coded vector), in arrival order. When `complete`, the
+    /// length is [`Setup::wait_for`] (`n - s`, or the approx scheme's
+    /// quorum); otherwise it is whatever arrived before the deadline.
     pub results: Vec<(usize, Vec<f32>)>,
-    /// Wall-clock seconds from broadcast to quorum.
+    /// Wall-clock seconds from broadcast to quorum (or deadline).
     pub elapsed: f64,
+    /// Whether the quorum was reached. When false the caller must
+    /// degrade (partial decode / stale gradient) or abort.
+    pub complete: bool,
+    /// Workers whose result frames failed the CRC32 check this iteration
+    /// (one entry per rejected frame; the sender was treated as a
+    /// straggler and re-prodded at most [`GatherPolicy::retries`] times).
+    pub rejected: Vec<usize>,
+}
+
+/// What a per-connection reader thread observed.
+enum ReaderEvent {
+    Msg(Message),
+    /// A frame failed validation; the stream is still aligned and the
+    /// reader keeps going.
+    Corrupt,
+    /// The connection is gone; the reader exits after sending this.
+    Closed,
 }
 
 /// Master side of the TCP deployment.
 pub struct RemoteMaster {
     setup: Setup,
+    policy: GatherPolicy,
     writers: Vec<BufWriter<TcpStream>>,
     /// Fan-in channel fed by per-connection reader threads.
-    results: Receiver<(usize, Message)>,
+    results: Receiver<(usize, ReaderEvent)>,
+    /// Connections observed closed (persists across iterations).
+    dead: Vec<bool>,
     _reader_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -143,32 +175,56 @@ impl RemoteMaster {
             let mut writer = BufWriter::new(stream);
             Message::Setup(setup.clone()).write_to(&mut writer)?;
             writers[worker_id] = Some(writer);
-            // Reader thread: pump results into the fan-in channel.
-            let tx: Sender<(usize, Message)> = tx.clone();
-            handles.push(std::thread::spawn(move || {
-                loop {
-                    match Message::read_from(&mut reader) {
-                        Ok(msg) => {
-                            if tx.send((worker_id, msg)).is_err() {
-                                return;
-                            }
-                        }
-                        Err(_) => return, // connection closed
+            // Reader thread: pump events into the fan-in channel. Corrupt
+            // frames are reported and skipped (the stream stays aligned);
+            // an I/O error means the connection is gone.
+            let tx: Sender<(usize, ReaderEvent)> = tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let event = match Message::read_from(&mut reader) {
+                    Ok(msg) => ReaderEvent::Msg(msg),
+                    Err(WireError::Corrupt(_)) => ReaderEvent::Corrupt,
+                    Err(WireError::Io(_)) => {
+                        let _ = tx.send((worker_id, ReaderEvent::Closed));
+                        return;
                     }
+                };
+                if tx.send((worker_id, event)).is_err() {
+                    return;
                 }
             }));
         }
+        let n = setup.n as usize;
         let writers: Vec<BufWriter<TcpStream>> =
             writers.into_iter().map(|w| w.expect("all ids seen")).collect();
-        Ok(RemoteMaster { setup, writers, results: rx, _reader_handles: handles })
+        Ok(RemoteMaster {
+            setup,
+            policy: GatherPolicy::default(),
+            writers,
+            results: rx,
+            dead: vec![false; n],
+            _reader_handles: handles,
+        })
     }
 
     pub fn setup(&self) -> &Setup {
         &self.setup
     }
 
+    /// Override the gather deadline / retry policy.
+    pub fn set_gather_policy(&mut self, policy: GatherPolicy) {
+        self.policy = policy;
+    }
+
     /// Broadcast an iteration and gather the first [`Setup::wait_for`]
     /// results.
+    ///
+    /// Runs against the [`GatherPolicy`]: the deadline is split into
+    /// `retries + 1` waits; on each expiry the task is re-sent to every
+    /// worker not yet heard from. A worker disconnecting mid-gather (the
+    /// pre-v3 hang) or staying silent costs at most the deadline; the
+    /// gather then returns partial results with `complete = false`.
+    /// Corrupt result frames are rejected by checksum and the sender is
+    /// re-prodded at most `retries` times, then counted as a straggler.
     pub fn run_iteration(&mut self, iter: u64, beta: &[f32]) -> Result<RemoteGather> {
         let t0 = Instant::now();
         let msg = Message::Task { iter, beta: beta.to_vec() };
@@ -176,31 +232,76 @@ impl RemoteMaster {
             // A dead connection = permanent straggler.
             let _ = msg.write_to(w);
         }
+        let n = self.setup.n as usize;
         let quorum = self.setup.wait_for();
-        let tolerance = self.setup.n as usize - quorum;
-        let mut results = Vec::with_capacity(quorum);
-        let mut failures = 0usize;
+        let slice = self.policy.slice();
+        let mut retries_left = self.policy.retries;
+        let mut results: Vec<(usize, Vec<f32>)> = Vec::with_capacity(quorum);
+        let mut rejected: Vec<usize> = Vec::new();
+        let mut seen = vec![false; n];
+        let mut resends = vec![0u32; n];
         while results.len() < quorum {
-            let (wid, msg) = self
-                .results
-                .recv()
-                .context("all worker connections closed before quorum")?;
-            match msg {
-                Message::Result { iter: rit, failed, f, .. } if rit == iter => {
-                    if failed {
-                        failures += 1;
-                        if failures > tolerance {
-                            bail!("{failures} worker failures exceed tolerance {tolerance}");
+            match self.results.recv_timeout(slice) {
+                Ok((wid, ReaderEvent::Msg(m))) => match m {
+                    Message::Result { iter: rit, failed, f, .. } if rit == iter => {
+                        if seen[wid] {
+                            continue; // duplicate delivery
                         }
-                    } else {
-                        results.push((wid, f));
+                        seen[wid] = true;
+                        if !failed {
+                            results.push((wid, f));
+                        }
+                    }
+                    Message::Result { .. } => continue, // stale iteration
+                    other => bail!("unexpected message from worker {wid}: {other:?}"),
+                },
+                Ok((wid, ReaderEvent::Corrupt)) => {
+                    rejected.push(wid);
+                    // Bounded re-prod: a deterministic corrupter would
+                    // otherwise ping-pong forever.
+                    if !seen[wid] && !self.dead[wid] && resends[wid] < self.policy.retries
+                    {
+                        resends[wid] += 1;
+                        let _ = msg.write_to(&mut self.writers[wid]);
                     }
                 }
-                Message::Result { .. } => continue, // stale iteration
-                other => bail!("unexpected message from worker {wid}: {other:?}"),
+                Ok((wid, ReaderEvent::Closed)) => {
+                    self.dead[wid] = true;
+                    if self.dead.iter().all(|&d| d) {
+                        bail!("all worker connections closed before quorum");
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if retries_left == 0 {
+                        break; // deadline spent: degrade with what we have
+                    }
+                    retries_left -= 1;
+                    std::thread::sleep(self.policy.backoff);
+                    for w in 0..n {
+                        if !seen[w] && !self.dead[w] {
+                            let _ = msg.write_to(&mut self.writers[w]);
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("all reader threads exited")
+                }
+            }
+            // Everyone accounted for and still short: no point waiting out
+            // the deadline (covers > s backend failures / closed peers).
+            if results.len() < quorum
+                && (0..n).all(|w| seen[w] || self.dead[w])
+            {
+                break;
             }
         }
-        Ok(RemoteGather { results, elapsed: t0.elapsed().as_secs_f64() })
+        let complete = results.len() >= quorum;
+        Ok(RemoteGather {
+            results,
+            elapsed: t0.elapsed().as_secs_f64(),
+            complete,
+            rejected,
+        })
     }
 
     /// Send Shutdown to everyone.
@@ -211,11 +312,37 @@ impl RemoteMaster {
     }
 }
 
+/// Read the next valid frame, logging and skipping corrupt ones (the
+/// stream is still aligned after a checksum failure).
+fn read_skip_corrupt(r: &mut impl Read) -> Result<Message, WireError> {
+    loop {
+        match Message::read_from(r) {
+            Err(WireError::Corrupt(why)) => {
+                eprintln!("skipping corrupt frame: {why}");
+            }
+            other => return other,
+        }
+    }
+}
+
 /// Worker process body: connect to the master and serve until Shutdown.
 /// Returns the number of tasks served.
 pub fn run_worker(addr: impl ToSocketAddrs, worker_id: usize) -> Result<usize> {
+    run_worker_chaos(addr, worker_id, None)
+}
+
+/// [`run_worker`] with a fault plan: before answering each task the
+/// worker consults `plan.effect(worker_id, iter)` and crashes, drops,
+/// corrupts (one payload byte of the encoded frame — the master's CRC32
+/// catches it), duplicates, delays, or hard-resets accordingly.
+pub fn run_worker_chaos(
+    addr: impl ToSocketAddrs,
+    worker_id: usize,
+    chaos: Option<FaultPlan>,
+) -> Result<usize> {
     let stream = TcpStream::connect(addr).context("connecting to master")?;
     stream.set_nodelay(true).ok();
+    let raw = stream.try_clone()?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     Message::Hello { magic: MAGIC, worker_id: worker_id as u32 }.write_to(&mut writer)?;
@@ -230,17 +357,48 @@ pub fn run_worker(addr: impl ToSocketAddrs, worker_id: usize) -> Result<usize> {
     let mut served = 0usize;
     let mut out = Vec::new();
     loop {
-        match Message::read_from(&mut reader)? {
+        match read_skip_corrupt(&mut reader)? {
             Message::Task { iter, beta } => {
+                let effect =
+                    chaos.as_ref().map_or(Effect::None, |p| p.effect(worker_id, iter));
+                match effect {
+                    Effect::Fault(FaultKind::Reset) => {
+                        // Hard reset: slam the socket, no goodbye.
+                        let _ = raw.shutdown(std::net::Shutdown::Both);
+                        return Ok(served);
+                    }
+                    e if e.is_silent() => continue, // crash window / drop
+                    _ => {}
+                }
+                if let Effect::Fault(FaultKind::Delay(secs)) = effect {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+                }
                 let failed =
                     backend.encoded_gradient(worker_id, iter as usize, &beta, &mut out).is_err();
-                Message::Result {
+                let msg = Message::Result {
                     worker: worker_id as u32,
                     iter,
                     failed,
                     f: if failed { Vec::new() } else { out.clone() },
+                };
+                match effect {
+                    Effect::Fault(FaultKind::Corrupt) => {
+                        // Flip one payload byte after framing; the CRC in
+                        // the trailer still covers the original bytes, so
+                        // the master must reject this frame.
+                        let mut frame = msg.encode();
+                        let plen =
+                            u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+                        frame[5 + plen / 2] ^= 0x04;
+                        writer.write_all(&frame)?;
+                        writer.flush()?;
+                    }
+                    Effect::Fault(FaultKind::Duplicate) => {
+                        msg.write_to(&mut writer)?;
+                        msg.write_to(&mut writer)?;
+                    }
+                    _ => msg.write_to(&mut writer)?,
                 }
-                .write_to(&mut writer)?;
                 served += 1;
             }
             Message::Shutdown => return Ok(served),
@@ -273,9 +431,17 @@ pub fn decode_gather(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     fn test_setup(n: u32, s: u32, m: u32) -> Setup {
         Setup::homogeneous(n, s + m, s, m, SCHEME_POLY, 1, 777, n * 16, 512)
+    }
+
+    fn free_addr() -> std::net::SocketAddr {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        drop(l);
+        addr
     }
 
     /// Full multi-"process" deployment over loopback TCP: one master,
@@ -283,13 +449,7 @@ mod tests {
     #[test]
     fn tcp_cluster_trains_over_loopback() {
         let setup = test_setup(5, 1, 2);
-        let listener_addr = {
-            // reserve a free port
-            let l = TcpListener::bind("127.0.0.1:0").unwrap();
-            let addr = l.local_addr().unwrap();
-            drop(l);
-            addr
-        };
+        let listener_addr = free_addr();
         let master_thread = {
             let setup = setup;
             std::thread::spawn(move || -> Result<Vec<f32>> {
@@ -302,6 +462,8 @@ mod tests {
                 let lr = 4.0 / train.rows as f32;
                 for iter in 0..5u64 {
                     let gather = master.run_iteration(iter, &beta)?;
+                    assert!(gather.complete);
+                    assert!(gather.rejected.is_empty());
                     assert_eq!(gather.results.len(), 4); // n - s
                     let grad = decode_gather(code.as_ref(), &gather, &mut cache)?;
                     // cross-check against the local oracle
@@ -335,12 +497,55 @@ mod tests {
         }
     }
 
+    /// The pre-v3 master blocked forever on `recv()` when a worker
+    /// disconnected mid-gather; the deadline now returns a partial
+    /// gather with `complete = false` in bounded time.
+    #[test]
+    fn gather_returns_partial_when_a_worker_disconnects_mid_gather() {
+        let setup = test_setup(2, 0, 1); // quorum = n = 2: the ghost is needed
+        let listener_addr = free_addr();
+        let master_thread = {
+            let setup = setup.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let mut master = RemoteMaster::listen(listener_addr, setup.clone())?;
+                master.set_gather_policy(GatherPolicy {
+                    deadline: Duration::from_millis(400),
+                    retries: 1,
+                    backoff: Duration::from_millis(1),
+                });
+                let beta = vec![0.0f32; setup.dim as usize];
+                let t0 = Instant::now();
+                let g = master.run_iteration(0, &beta)?;
+                assert!(!g.complete, "quorum 2 is unreachable with a ghost worker");
+                assert_eq!(g.results.len(), 1);
+                assert!(
+                    t0.elapsed() < Duration::from_secs(5),
+                    "gather must end at the deadline, not hang"
+                );
+                master.shutdown();
+                Ok(())
+            })
+        };
+        let real = std::thread::spawn(move || run_worker(listener_addr, 0));
+        let ghost = std::thread::spawn(move || {
+            let stream = TcpStream::connect(listener_addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = BufWriter::new(stream);
+            Message::Hello { magic: MAGIC, worker_id: 1 }.write_to(&mut writer).unwrap();
+            let setup = Message::read_from(&mut reader).unwrap();
+            assert!(matches!(setup, Message::Setup(_)));
+            // vanish without a word — the old gather blocked forever here
+        });
+        master_thread.join().unwrap().unwrap();
+        ghost.join().unwrap();
+        let served = real.join().unwrap().unwrap();
+        assert!(served <= 2, "at most the original task and one re-send");
+    }
+
     #[test]
     fn duplicate_worker_id_rejected() {
         let setup = test_setup(2, 0, 1);
-        let l = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = l.local_addr().unwrap();
-        drop(l);
+        let addr = free_addr();
         let master = std::thread::spawn(move || RemoteMaster::listen(addr, setup));
         // two workers claim id 0
         let w1 = std::thread::spawn(move || run_worker(addr, 0));
@@ -417,12 +622,7 @@ mod tests {
         setup.speeds_milli =
             speeds.iter().map(|&x| (x * 1000.0).round() as u32).collect();
         setup.loads = reference.loads().iter().map(|&d| d as u32).collect();
-        let listener_addr = {
-            let l = TcpListener::bind("127.0.0.1:0").unwrap();
-            let addr = l.local_addr().unwrap();
-            drop(l);
-            addr
-        };
+        let listener_addr = free_addr();
         let master_thread = {
             let setup = setup.clone();
             std::thread::spawn(move || -> Result<()> {

@@ -5,10 +5,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::backend::{ComputeBackend, RustBackend};
-use super::cluster::{Cluster, ExecutionMode, FleetProfile, WaitRule};
+use super::cluster::{Cluster, ExecutionMode, FleetProfile, GatherResult, WaitRule};
+use crate::chaos::{ChaosConfig, FaultEvent, FaultLog, GatherPolicy, LadderRung};
 use crate::coding::{
-    quorum_count, ApproxCode, Decoder, GradientCode, HeteroCode, PolynomialCode,
-    RandomCode, SchemeConfig, UncodedScheme,
+    ls_partial_decode, quorum_count, ApproxCode, Decoder, GradientCode, HeteroCode,
+    PolynomialCode, RandomCode, SchemeConfig, UncodedScheme,
 };
 use crate::data::{auc, DenseDataset, SyntheticCategorical};
 use crate::metrics::{IterationRecord, RunLog};
@@ -124,6 +125,11 @@ pub struct TrainConfig {
     /// to its own profile. Setting this lets a homogeneous scheme run on
     /// a skewed fleet (the baseline the hetero benches compare against).
     pub fleet: Option<SpeedProfile>,
+    /// Fault injection: a deterministic [`crate::chaos::FaultPlan`] plus
+    /// the gather and degradation policies. `None` disables chaos
+    /// entirely (no per-result CRCs, no fault log) *and* makes an
+    /// unsatisfied gather a hard error instead of a degraded iteration.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl TrainConfig {
@@ -140,6 +146,7 @@ impl TrainConfig {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         }
     }
 }
@@ -242,7 +249,21 @@ impl Trainer {
             _ => vec![1.0; cfg.n],
         };
         let work: Vec<f64> = (0..cfg.n).map(|w| code.compute_units(w)).collect();
-        let cluster = Cluster::spawn_full(
+        let (plan, policy) = match &cfg.chaos {
+            Some(c) => (Some(Arc::clone(&c.plan)), c.policy),
+            None => (None, GatherPolicy::default()),
+        };
+        // Under chaos in real-time mode a flat count can become
+        // unsatisfiable (crashed workers never answer), so the gather
+        // gets an explicit deadline; per-group rules keep their own
+        // stopping logic, and virtual gathers cannot hang.
+        let rule = match (&cfg.chaos, cfg.mode, rule) {
+            (Some(c), ExecutionMode::RealTime { .. }, WaitRule::Count(count)) => {
+                WaitRule::Deadline { count, timeout: c.policy.deadline }
+            }
+            (_, _, r) => r,
+        };
+        let cluster = Cluster::spawn_chaos(
             *code.config(),
             backend,
             cfg.mode,
@@ -250,6 +271,8 @@ impl Trainer {
             cfg.seed,
             rule,
             Some(FleetProfile { speeds, work }),
+            plan,
+            policy,
         );
         let opt = cfg.opt.build(vec![0.0f32; l]);
         let test = test.map(|t| {
@@ -294,16 +317,50 @@ impl Trainer {
     pub fn run(&mut self) -> anyhow::Result<RunLog> {
         let mut log = RunLog::new(self.cfg.scheme.label());
         let mut sim_clock = 0.0f64;
-        let mut grad = Vec::with_capacity(self.out_dim * self.code.config().m);
+        let full_dim = self.out_dim * self.code.config().m;
+        let mut grad = Vec::with_capacity(full_dim);
+        let chaos = self.cfg.chaos.clone();
+        let ladder = chaos.as_ref().map(|c| c.ladder).unwrap_or_default();
+        let mut faults = FaultLog::new();
+        let mut consecutive_stale = 0usize;
         for iter in 0..self.cfg.iters {
             let beta = Arc::new(self.opt.eval_point().to_vec());
             let gather = self.cluster.run_iteration(iter, beta);
             let t0 = Instant::now();
 
+            // Master-side replay of the deterministic plan, so the log
+            // shows what was injected even when the fault was silent.
+            if let Some(c) = &chaos {
+                for (w, kind) in c.plan.events_at(iter as u64) {
+                    faults.record(iter as u64, Some(w), FaultEvent::Injected(kind));
+                }
+            }
+            for &w in &gather.rejected {
+                faults.record(iter as u64, Some(w), FaultEvent::ChecksumReject);
+            }
+            if gather.duplicates > 0 {
+                faults.record(
+                    iter as u64,
+                    None,
+                    FaultEvent::DuplicatesDiscarded { count: gather.duplicates },
+                );
+            }
+            if !gather.satisfied {
+                faults.record(
+                    iter as u64,
+                    None,
+                    FaultEvent::DeadlineExpired {
+                        responders: gather.results.len(),
+                        needed: self.wait_for,
+                    },
+                );
+            }
+
             // Responders: the arrival prefix that satisfied the wait rule
             // (the exact n-s, a quorum override, or the heterogeneous
             // per-group rule), then sorted so the decoder cache key is
-            // order-insensitive.
+            // order-insensitive. When the rule went unsatisfied this is
+            // every healthy responder the gather managed to collect.
             let mut responders: Vec<usize> = gather
                 .results
                 .iter()
@@ -311,28 +368,69 @@ impl Trainer {
                 .map(|r| r.worker)
                 .collect();
             responders.sort_unstable();
-            let key = Self::mask(&responders);
-            if self.decoder_cache.contains_key(&key) {
-                self.decoder_cache_hits += 1;
-            } else {
-                self.decoder_cache_misses += 1;
-                let (dw, residual) = self.code.decode_weights_with_residual(&responders)?;
-                self.decoder_cache.insert(key, (Decoder::from_weights(&dw), residual));
-            }
-            let (dec, decode_residual) = &self.decoder_cache[&key];
-            let decode_residual = *decode_residual;
 
-            // Map worker id -> returned vector.
-            let mut by_worker: Vec<Option<&[f32]>> = vec![None; self.cfg.n];
-            for r in &gather.results {
-                by_worker[r.worker] = Some(&r.f);
+            // Degradation ladder: exact decode while the wait rule holds,
+            // least-squares partial decode from whoever answered below
+            // that, stale gradient when nothing is decodable at all.
+            let (rung, decode_residual) = if gather.satisfied {
+                let key = Self::mask(&responders);
+                if self.decoder_cache.contains_key(&key) {
+                    self.decoder_cache_hits += 1;
+                } else {
+                    self.decoder_cache_misses += 1;
+                    let (dw, residual) =
+                        self.code.decode_weights_with_residual(&responders)?;
+                    self.decoder_cache
+                        .insert(key, (Decoder::from_weights(&dw), residual));
+                }
+                let (dec, residual) = &self.decoder_cache[&key];
+                apply_decoder(dec, &gather, self.cfg.n, &mut grad)?;
+                (LadderRung::Exact, *residual)
+            } else if chaos.is_none() {
+                anyhow::bail!(
+                    "iteration {iter}: wait rule unsatisfied ({} of {} responders \
+                     healthy) and no chaos config to authorize degradation",
+                    gather.results.len(),
+                    self.wait_for,
+                );
+            } else {
+                match ls_partial_decode(self.code.as_ref(), &responders) {
+                    Ok(ls) => {
+                        // Uncached: degraded responder sets are transient,
+                        // caching them would only pollute the exact-path
+                        // cache and its hit-rate accounting.
+                        let dec = Decoder::from_weights(&ls.weights);
+                        apply_decoder(&dec, &gather, self.cfg.n, &mut grad)?;
+                        (LadderRung::Degraded, Some(ls.coeff_residual))
+                    }
+                    Err(_) => {
+                        // Last rung: repeat the previous gradient (a zero
+                        // step when none exists yet).
+                        if grad.is_empty() {
+                            grad.resize(full_dim, 0.0);
+                        }
+                        (LadderRung::Stale, None)
+                    }
+                }
+            };
+            if rung == LadderRung::Stale {
+                consecutive_stale += 1;
+                anyhow::ensure!(
+                    consecutive_stale <= ladder.max_stale,
+                    "aborting after {consecutive_stale} consecutive stale \
+                     iterations (max_stale = {})",
+                    ladder.max_stale
+                );
+            } else {
+                consecutive_stale = 0;
             }
-            let fs: Vec<&[f32]> = dec
-                .used_workers()
-                .iter()
-                .map(|&w| by_worker[w].expect("responder result present"))
-                .collect();
-            dec.decode_into(&fs, &mut grad)?;
+            if chaos.is_some() || rung != LadderRung::Exact {
+                faults.record(
+                    iter as u64,
+                    None,
+                    FaultEvent::Rung { rung, residual: decode_residual },
+                );
+            }
             self.opt.step(&grad);
             let master_compute = t0.elapsed().as_secs_f64();
 
@@ -359,10 +457,12 @@ impl Trainer {
                 decode_residual,
                 loss,
                 auc: auc_val,
+                rung,
             });
         }
         log.decoder_cache_hits = self.decoder_cache_hits;
         log.decoder_cache_misses = self.decoder_cache_misses;
+        log.faults = faults;
         Ok(log)
     }
 
@@ -374,6 +474,27 @@ impl Trainer {
     pub fn scheme(&self) -> &dyn GradientCode {
         self.code.as_ref()
     }
+}
+
+/// Decode `gather`'s results through `dec` into `grad`.
+fn apply_decoder(
+    dec: &Decoder,
+    gather: &GatherResult,
+    n: usize,
+    grad: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    // Map worker id -> returned vector.
+    let mut by_worker: Vec<Option<&[f32]>> = vec![None; n];
+    for r in &gather.results {
+        by_worker[r.worker] = Some(&r.f);
+    }
+    let fs: Vec<&[f32]> = dec
+        .used_workers()
+        .iter()
+        .map(|&w| by_worker[w].expect("responder result present"))
+        .collect();
+    dec.decode_into(&fs, grad)?;
+    Ok(())
 }
 
 /// One-call convenience: train and return (log, final parameters).
@@ -415,6 +536,7 @@ mod tests {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let (log, _beta) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
         assert_eq!(log.records.len(), 150);
@@ -452,6 +574,7 @@ mod tests {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let (_, beta_coded) =
             train(mk(SchemeSpec::Poly { s: 1, m: 1 }), &train_ds, None).unwrap();
@@ -483,6 +606,7 @@ mod tests {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let (log, _) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
         assert!(log.final_auc().unwrap() > 0.65);
@@ -504,6 +628,7 @@ mod tests {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let (log, _) = train(cfg, &train_ds, None).unwrap();
         assert_eq!(log.records.len(), 40);
@@ -535,6 +660,7 @@ mod tests {
             minibatch: None,
             quorum: Some(2.0 / 3.0),
             fleet: None,
+            chaos: None,
         };
         let mut tr = Trainer::new(cfg, &train_ds, None).unwrap();
         assert_eq!(tr.wait_for(), 4, "override ceil(6·2/3) = 4 beats the scheme's 6");
@@ -558,6 +684,7 @@ mod tests {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let (log, _) = train(cfg, &train_ds, None).unwrap();
         assert_eq!(log.records.len(), 8);
@@ -582,6 +709,7 @@ mod tests {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let mut tr = Trainer::new(cfg, &train_ds, Some(&test_ds)).unwrap();
         assert!(
@@ -617,6 +745,7 @@ mod tests {
             minibatch: None,
             quorum: None,
             fleet: None,
+            chaos: None,
         };
         let profile = SpeedProfile::Custom(vec![1.0, 1.0, 1.0, 3.0, 3.0, 3.0]);
         let (_, beta_het) = train(
@@ -668,6 +797,7 @@ mod tests {
             minibatch: None,
             quorum: None,
             fleet,
+            chaos: None,
         };
         let (log_uniform, _) = train(mk(None), &train_ds, None).unwrap();
         let (log_fast, _) = train(

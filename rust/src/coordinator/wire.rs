@@ -4,7 +4,7 @@
 //! this module is the equivalent seam: a small length-prefixed binary
 //! protocol (no serde available offline). All integers are little-endian.
 //!
-//! Frame:  `u32 payload_len | u8 tag | payload`
+//! Frame:  `u32 payload_len | u8 tag | payload | u32 crc32(tag ++ payload)`
 //!
 //! Messages:
 //! - `Hello { worker_id }`                        worker → master
@@ -14,17 +14,24 @@
 //! - `Result { worker, iter, failed, f[f32] }`    worker → master
 //! - `Shutdown`                                   master → worker
 //!
-//! Protocol v2 extends Setup with the partial-recovery quorum (scheme
+//! Protocol v2 extended Setup with the partial-recovery quorum (scheme
 //! kind 3) and the per-worker load + speed vectors of the heterogeneous
-//! scheme (kind 4); the magic was bumped so v1 peers fail the handshake
-//! loudly instead of misparsing frames.
+//! scheme (kind 4). Protocol v3 appends an IEEE CRC32 over `tag ++
+//! payload` to every frame so in-flight corruption is detected instead
+//! of decoded into garbage; the magic was bumped again so v2 peers fail
+//! the handshake loudly instead of misparsing frames.
+//!
+//! Errors are the typed [`WireError`]: [`WireError::Corrupt`] means the
+//! frame arrived whole but failed validation (bad checksum, bad tag,
+//! malformed payload) and — crucially — the stream is still
+//! frame-aligned, so a reader may log the corruption and keep reading;
+//! [`WireError::Io`] means the transport itself failed (peer closed,
+//! reset, truncated stream) and the connection is gone.
 
 use std::io::{Read, Write};
 
-use anyhow::{bail, Context, Result};
-
 /// Protocol magic, checked in the Hello frame.
-pub const MAGIC: u32 = 0x6743_0002; // "gC" v2
+pub const MAGIC: u32 = 0x6743_0003; // "gC" v3 (v2 + frame CRC32)
 
 const TAG_HELLO: u8 = 1;
 const TAG_SETUP: u8 = 2;
@@ -39,8 +46,107 @@ pub const SCHEME_UNCODED: u8 = 2;
 pub const SCHEME_APPROX: u8 = 3;
 pub const SCHEME_HETERO: u8 = 4;
 
-/// Maximum accepted payload (guards against corrupt frames).
-const MAX_PAYLOAD: usize = 1 << 30;
+/// Maximum accepted payload. Deliberately far below the old 1 GiB guard:
+/// a corrupted length prefix must not be able to request a giant
+/// allocation (the payload read is additionally bounded by
+/// `Read::take`, so even `MAX_PAYLOAD` is a cap on bytes read, not a
+/// pre-allocation).
+const MAX_PAYLOAD: usize = 1 << 26;
+
+/// Transport-layer error, split so callers can tell a corrupt frame
+/// (stream still aligned — skip and continue) from a dead connection.
+#[derive(Debug)]
+pub enum WireError {
+    /// The frame was read in full but failed validation.
+    Corrupt(String),
+    /// The underlying stream failed (closed, reset, truncated).
+    Io(std::io::Error),
+}
+
+impl WireError {
+    fn corrupt(msg: impl Into<String>) -> WireError {
+        WireError::Corrupt(msg.into())
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Corrupt(msg) => write!(f, "corrupt frame: {msg}"),
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Corrupt(_) => None,
+            WireError::Io(e) => Some(e),
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+const fn make_crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// IEEE (reflected, poly 0xEDB88320) CRC32 lookup table.
+static CRC32_TABLE: [u32; 256] = make_crc32_table();
+
+#[inline]
+fn crc32_step(state: u32, byte: u8) -> u32 {
+    CRC32_TABLE[((state ^ byte as u32) & 0xff) as usize] ^ (state >> 8)
+}
+
+/// IEEE CRC32 of a byte slice (the checksum appended to every frame).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = crc32_step(c, b);
+    }
+    c ^ 0xffff_ffff
+}
+
+/// CRC32 of an f32 slice in its little-endian wire representation.
+/// Used by the in-process path to detect injected payload corruption
+/// with exactly the same check the TCP frames get.
+pub fn crc32_f32s(xs: &[f32]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            c = crc32_step(c, b);
+        }
+    }
+    c ^ 0xffff_ffff
+}
+
+/// Frame checksum: CRC32 over the tag byte followed by the payload.
+fn frame_crc(tag: u8, payload: &[u8]) -> u32 {
+    let mut c = crc32_step(0xffff_ffff, tag);
+    for &b in payload {
+        c = crc32_step(c, b);
+    }
+    c ^ 0xffff_ffff
+}
 
 /// A decoded protocol message.
 #[derive(Debug, Clone, PartialEq)]
@@ -140,28 +246,31 @@ impl<'a> Cursor<'a> {
         Cursor { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         if self.pos + n > self.buf.len() {
-            bail!("truncated frame: need {n} at {}", self.pos);
+            return Err(WireError::corrupt(format!(
+                "truncated frame: need {n} at {}",
+                self.pos
+            )));
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>, WireError> {
         let raw = self.take(count * 4)?;
         Ok(raw
             .chunks_exact(4)
@@ -169,9 +278,12 @@ impl<'a> Cursor<'a> {
             .collect())
     }
 
-    fn done(&self) -> Result<()> {
+    fn done(&self) -> Result<(), WireError> {
         if self.pos != self.buf.len() {
-            bail!("{} trailing bytes in frame", self.buf.len() - self.pos);
+            return Err(WireError::corrupt(format!(
+                "{} trailing bytes in frame",
+                self.buf.len() - self.pos
+            )));
         }
         Ok(())
     }
@@ -185,7 +297,7 @@ fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
 }
 
 impl Message {
-    /// Encode as a full frame (header + payload).
+    /// Encode as a full frame (header + payload + checksum).
     pub fn encode(&self) -> Vec<u8> {
         let mut payload = Vec::new();
         let tag = match self {
@@ -226,15 +338,17 @@ impl Message {
             }
             Message::Shutdown => TAG_SHUTDOWN,
         };
-        let mut frame = Vec::with_capacity(payload.len() + 5);
+        let crc = frame_crc(tag, &payload);
+        let mut frame = Vec::with_capacity(payload.len() + 9);
         frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         frame.push(tag);
         frame.extend_from_slice(&payload);
+        frame.extend_from_slice(&crc.to_le_bytes());
         frame
     }
 
     /// Decode one message from tag + payload.
-    fn decode(tag: u8, payload: &[u8]) -> Result<Message> {
+    fn decode(tag: u8, payload: &[u8]) -> Result<Message, WireError> {
         let mut c = Cursor::new(payload);
         let msg = match tag {
             TAG_HELLO => Message::Hello { magic: c.u32()?, worker_id: c.u32()? },
@@ -253,9 +367,11 @@ impl Message {
                 for list in &mut lists {
                     let len = c.u32()? as usize;
                     if len > n as usize {
-                        bail!("setup vector of {len} entries exceeds n = {n}");
+                        return Err(WireError::corrupt(format!(
+                            "setup vector of {len} entries exceeds n = {n}"
+                        )));
                     }
-                    *list = (0..len).map(|_| c.u32()).collect::<Result<_>>()?;
+                    *list = (0..len).map(|_| c.u32()).collect::<Result<_, _>>()?;
                 }
                 let [loads, speeds_milli] = lists;
                 Message::Setup(Setup {
@@ -275,9 +391,9 @@ impl Message {
             }
             TAG_TASK => {
                 let iter = c.u64()?;
-                let remaining = payload.len() - 8;
+                let remaining = payload.len().saturating_sub(8);
                 if remaining % 4 != 0 {
-                    bail!("task payload not f32-aligned");
+                    return Err(WireError::corrupt("task payload not f32-aligned"));
                 }
                 Message::Task { iter, beta: c.f32s(remaining / 4)? }
             }
@@ -285,36 +401,58 @@ impl Message {
                 let worker = c.u32()?;
                 let iter = c.u64()?;
                 let failed = c.u8()? != 0;
-                let remaining = payload.len() - 13;
+                let remaining = payload.len().saturating_sub(13);
                 if remaining % 4 != 0 {
-                    bail!("result payload not f32-aligned");
+                    return Err(WireError::corrupt("result payload not f32-aligned"));
                 }
                 Message::Result { worker, iter, failed, f: c.f32s(remaining / 4)? }
             }
             TAG_SHUTDOWN => Message::Shutdown,
-            other => bail!("unknown message tag {other}"),
+            other => return Err(WireError::corrupt(format!("unknown message tag {other}"))),
         };
         c.done()?;
         Ok(msg)
     }
 
     /// Write a full frame to a stream.
-    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
-        w.write_all(&self.encode()).context("writing frame")?;
-        w.flush().context("flushing frame")
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(&self.encode())?;
+        w.flush()
     }
 
     /// Read one full frame from a stream.
-    pub fn read_from(r: &mut impl Read) -> Result<Message> {
+    ///
+    /// On [`WireError::Corrupt`] the whole frame (header, payload, and
+    /// checksum) has been consumed, so the stream is still aligned and
+    /// the caller may keep reading subsequent frames.
+    pub fn read_from(r: &mut impl Read) -> Result<Message, WireError> {
         let mut header = [0u8; 5];
-        r.read_exact(&mut header).context("reading frame header")?;
+        r.read_exact(&mut header)?;
         let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
         let tag = header[4];
         if len > MAX_PAYLOAD {
-            bail!("frame too large: {len}");
+            return Err(WireError::corrupt(format!("frame too large: {len}")));
         }
-        let mut payload = vec![0u8; len];
-        r.read_exact(&mut payload).context("reading frame payload")?;
+        // Bounded read: `take` caps the bytes a lying length prefix can
+        // pull, and the initial capacity is small so a huge `len` cannot
+        // force a giant allocation before any byte arrives.
+        let mut payload = Vec::with_capacity(len.min(64 * 1024));
+        let got = r.take(len as u64).read_to_end(&mut payload)?;
+        if got < len {
+            return Err(WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                format!("frame payload truncated: got {got} of {len} bytes"),
+            )));
+        }
+        let mut crc_bytes = [0u8; 4];
+        r.read_exact(&mut crc_bytes)?;
+        let want = u32::from_le_bytes(crc_bytes);
+        let got_crc = frame_crc(tag, &payload);
+        if got_crc != want {
+            return Err(WireError::corrupt(format!(
+                "checksum mismatch: frame says {want:#010x}, computed {got_crc:#010x}"
+            )));
+        }
         Message::decode(tag, &payload)
     }
 }
@@ -328,6 +466,28 @@ mod tests {
         let mut cursor = std::io::Cursor::new(frame);
         let back = Message::read_from(&mut cursor).unwrap();
         assert_eq!(back, msg);
+    }
+
+    /// Recompute the trailing checksum after a deliberate payload edit,
+    /// so a test can exercise decode-level validation past the CRC.
+    fn reseal(frame: &mut [u8]) {
+        let len = u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+        let crc = frame_crc(frame[4], &frame[5..5 + len]);
+        frame[5 + len..5 + len + 4].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // The canonical IEEE CRC32 check value.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+        // f32 helper matches the byte-wise CRC of the LE representation
+        let xs = [1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let mut bytes = Vec::new();
+        for x in xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(crc32_f32s(&xs), crc32(&bytes));
     }
 
     #[test]
@@ -381,11 +541,16 @@ mod tests {
         });
         let mut frame = msg.encode();
         // Corrupt the loads length (offset: 4 hdr + 1 tag + 16 + 1 + 16 +
-        // 8 + 4 = payload offset 45 → frame offset 50) to exceed n.
+        // 8 + 4 = payload offset 45 → frame offset 50) to exceed n, then
+        // reseal the checksum so the length check itself is exercised.
         let len_off = 5 + 4 * 4 + 1 + 8 + 8 + 4 + 4 + 4;
         frame[len_off] = 200;
+        reseal(&mut frame);
         let mut cursor = std::io::Cursor::new(frame);
-        assert!(Message::read_from(&mut cursor).is_err());
+        match Message::read_from(&mut cursor) {
+            Err(WireError::Corrupt(msg)) => assert!(msg.contains("exceeds n"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
     }
 
     #[test]
@@ -401,31 +566,89 @@ mod tests {
 
     #[test]
     fn truncated_frame_errors() {
-        let frame = Message::Shutdown.encode();
-        let cursor = std::io::Cursor::new(&frame[..frame.len() - 1]);
-        // shutdown has empty payload; truncate the header instead
-        let mut short = std::io::Cursor::new(&frame[..3]);
-        assert!(Message::read_from(&mut short).is_err());
-        let _ = cursor; // (full shutdown frame is 5 bytes header only)
+        let frame = Message::Task { iter: 1, beta: vec![1.0, 2.0] }.encode();
+        // every strict prefix must fail with an Io error, never panic
+        for cut in 0..frame.len() {
+            let mut short = std::io::Cursor::new(&frame[..cut]);
+            match Message::read_from(&mut short) {
+                Err(WireError::Io(_)) => {}
+                other => panic!("cut at {cut}: expected Io error, got {other:?}"),
+            }
+        }
     }
 
     #[test]
     fn unknown_tag_errors() {
         let mut frame = Message::Shutdown.encode();
         frame[4] = 250;
+        reseal(&mut frame);
         let mut cursor = std::io::Cursor::new(frame);
-        assert!(Message::read_from(&mut cursor).is_err());
+        match Message::read_from(&mut cursor) {
+            Err(WireError::Corrupt(msg)) => assert!(msg.contains("unknown"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
     }
 
     #[test]
     fn misaligned_task_errors() {
-        // 5-byte payload after iter: not a multiple of 4
+        // 3-byte payload after iter: not a multiple of 4
         let mut payload = 7u64.to_le_bytes().to_vec();
         payload.extend_from_slice(&[1, 2, 3]);
         let mut frame = (payload.len() as u32).to_le_bytes().to_vec();
         frame.push(3); // TAG_TASK
         frame.extend_from_slice(&payload);
+        frame.extend_from_slice(&frame_crc(3, &payload).to_le_bytes());
         let mut cursor = std::io::Cursor::new(frame);
+        match Message::read_from(&mut cursor) {
+            Err(WireError::Corrupt(msg)) => assert!(msg.contains("f32"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bit_flip_is_caught_and_stream_stays_aligned() {
+        let bad = Message::Result { worker: 2, iter: 5, failed: false, f: vec![0.5; 8] };
+        let good = Message::Task { iter: 6, beta: vec![1.0; 4] };
+        let mut stream = bad.encode();
+        stream[5 + 13 + 3] ^= 0x10; // flip one payload bit, leave the CRC
+        stream.extend_from_slice(&good.encode());
+        let mut cursor = std::io::Cursor::new(stream);
+        match Message::read_from(&mut cursor) {
+            Err(WireError::Corrupt(msg)) => assert!(msg.contains("checksum"), "{msg}"),
+            other => panic!("expected checksum mismatch, got {other:?}"),
+        }
+        // the corrupt frame was fully consumed: the next one parses fine
+        assert_eq!(Message::read_from(&mut cursor).unwrap(), good);
+    }
+
+    #[test]
+    fn oversize_length_prefix_rejected_without_allocation() {
+        // len = u32::MAX: must be rejected by the MAX_PAYLOAD bound
+        let mut frame = u32::MAX.to_le_bytes().to_vec();
+        frame.push(TAG_TASK);
+        let mut cursor = std::io::Cursor::new(frame);
+        match Message::read_from(&mut cursor) {
+            Err(WireError::Corrupt(msg)) => assert!(msg.contains("too large"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // len = MAX_PAYLOAD exactly with a near-empty stream: the take()
+        // bound means we fail fast on EOF instead of allocating 64 MiB.
+        let mut frame = (MAX_PAYLOAD as u32).to_le_bytes().to_vec();
+        frame.push(TAG_TASK);
+        frame.extend_from_slice(&[0u8; 16]);
+        let mut cursor = std::io::Cursor::new(frame);
+        assert!(matches!(Message::read_from(&mut cursor), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn v2_frame_without_checksum_is_rejected() {
+        // A v2 peer sends `len | tag | payload` with no trailing CRC. For
+        // a lone frame the missing 4 bytes read as EOF; in a stream the
+        // next frame's header bytes would be consumed as a bogus CRC and
+        // fail the checksum. Either way the frame never decodes.
+        let mut v2 = 0u32.to_le_bytes().to_vec();
+        v2.push(TAG_SHUTDOWN);
+        let mut cursor = std::io::Cursor::new(v2);
         assert!(Message::read_from(&mut cursor).is_err());
     }
 }

@@ -1,5 +1,6 @@
 //! Worker thread: receive a task, compute the coded gradient through the
-//! backend, optionally sleep an injected delay (real-time mode), report.
+//! backend, optionally sleep an injected delay (real-time mode), apply
+//! any scheduled fault from the chaos plan, report.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -7,6 +8,8 @@ use std::time::Instant;
 
 use super::backend::ComputeBackend;
 use super::messages::{Task, WorkerResult};
+use super::wire::crc32_f32s;
+use crate::chaos::{Effect, FaultKind, FaultPlan};
 use crate::rngs::{Pcg64, ShiftedExponential};
 use crate::simulator::DelayParams;
 
@@ -60,6 +63,13 @@ pub(super) struct WorkerLoop {
     /// drains the queue and computes only the freshest parameters
     /// instead of burning compute on results nobody will decode.
     pub skip_stale: bool,
+    /// Deterministic fault schedule, queried per task.
+    pub chaos: Option<Arc<FaultPlan>>,
+    /// Virtual mode sends a `failed = true` tombstone for silent faults
+    /// (the virtual gather counts every worker exactly once, so it needs
+    /// no timeout and stays deterministic); real-time mode keeps them
+    /// genuinely silent so the master's gather deadline is exercised.
+    pub tombstone_faults: bool,
 }
 
 impl WorkerLoop {
@@ -71,7 +81,33 @@ impl WorkerLoop {
                     task = newer;
                 }
             }
-            let virtual_finish = self.delays.as_mut().map_or(0.0, |d| d.sample());
+            // Sample the delay before consulting the plan so the delay RNG
+            // stream stays aligned with a fault-free run of the same seed.
+            let mut virtual_finish = self.delays.as_mut().map_or(0.0, |d| d.sample());
+            let effect = self
+                .chaos
+                .as_ref()
+                .map_or(Effect::None, |p| p.effect(self.id, task.iter as u64));
+            if effect.is_silent() {
+                if self.tombstone_faults {
+                    let msg = WorkerResult {
+                        worker: self.id,
+                        iter: task.iter,
+                        f: Vec::new(),
+                        virtual_finish,
+                        compute_secs: 0.0,
+                        failed: true,
+                        crc: None,
+                    };
+                    if self.results.send(msg).is_err() {
+                        return;
+                    }
+                }
+                continue;
+            }
+            if let Effect::Fault(FaultKind::Delay(secs)) = effect {
+                virtual_finish += secs;
+            }
             if self.sleep_scale > 0.0 && virtual_finish > 0.0 {
                 std::thread::sleep(std::time::Duration::from_secs_f64(
                     virtual_finish * self.sleep_scale,
@@ -93,6 +129,14 @@ impl WorkerLoop {
                 }
             };
             let compute_secs = t0.elapsed().as_secs_f64();
+            // Checksum the TRUE payload, then corrupt: the master's CRC
+            // check must flag the flipped bit exactly like the TCP frame
+            // checksum would.
+            let crc = self.chaos.as_ref().map(|_| crc32_f32s(&out));
+            if matches!(effect, Effect::Fault(FaultKind::Corrupt)) && !out.is_empty() {
+                let idx = (task.iter * 31 + self.id) % out.len();
+                out[idx] = f32::from_bits(out[idx].to_bits() ^ 1);
+            }
             let msg = WorkerResult {
                 worker: self.id,
                 iter: task.iter,
@@ -100,9 +144,14 @@ impl WorkerLoop {
                 virtual_finish,
                 compute_secs,
                 failed,
+                crc,
             };
-            if self.results.send(msg).is_err() {
-                return; // master gone
+            let copies =
+                if matches!(effect, Effect::Fault(FaultKind::Duplicate)) { 2 } else { 1 };
+            for _ in 0..copies {
+                if self.results.send(msg.clone()).is_err() {
+                    return; // master gone
+                }
             }
         }
     }

@@ -32,6 +32,10 @@
 //! - [`coordinator`] — master/worker threads, transport, training loop,
 //!   the wait-for-quorum policy, and per-worker fleet profiles with the
 //!   group-quorum gather rule.
+//! - [`chaos`] — deterministic fault injection (crash/drop/corrupt/
+//!   duplicate/delay/reset plans), the gather deadline policy, the
+//!   degradation ladder the trainer walks when responders run short, and
+//!   the fault log surfaced through metrics and the CLI.
 //! - `runtime` — PJRT execution of AOT artifacts (`xla` crate); compiled
 //!   only with the `pjrt` cargo feature, since the `xla` dependency is
 //!   not available in the offline build environment.
@@ -43,6 +47,7 @@
 #![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod bench;
+pub mod chaos;
 pub mod checkpoint;
 pub mod cli;
 pub mod coding;

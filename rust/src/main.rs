@@ -5,7 +5,11 @@
 //! - `train`        run coded distributed training on synthetic data
 //!                  (`--scheme approx --quorum 0.7` selects the
 //!                  approximate partial-recovery regime; `--scheme hetero
-//!                  --profile bimodal:0.5:4` the heterogeneous one)
+//!                  --profile bimodal:0.5:4` the heterogeneous one;
+//!                  `--chaos crash=0.02,drop=0.05` arms fault injection)
+//! - `chaos-report` train under an injected fault plan and dump the
+//!                  fault log, rung tally, and the simulator's binomial
+//!                  prediction of the degraded fraction
 //! - `plan`         §VI model: optimal (d, s, m) for given delay parameters
 //! - `plan-hetero`  heterogeneous load planner: optimized per-worker load
 //!                  vector and predicted speedup over uniform placement
@@ -16,6 +20,7 @@
 //! Examples live in `examples/`; the table/figure regenerators in
 //! `rust/benches/`.
 
+use gradcode::chaos::{ChaosConfig, ChaosSpec};
 use gradcode::cli::{App, Command};
 use gradcode::coding::{
     max_condition_number, reconstruction_error, ApproxCode, GradientCode, HeteroCode,
@@ -50,9 +55,33 @@ fn app() -> App {
                 .flag("momentum", "0.9", "NAG momentum")
                 .flag("seed", "7", "experiment seed")
                 .flag("eval-every", "10", "evaluation period")
+                .flag(
+                    "chaos",
+                    "",
+                    "fault-injection spec: crash=P,drop=P,corrupt=P,dup=P,delay=P,reset=P[,delay_secs=S][,restart=K][,seed=N]; empty = off",
+                )
                 .switch("pjrt", "use the AOT PJRT backend (needs --features pjrt + artifacts)")
                 .switch("no-delays", "disable straggler injection")
                 .switch("csv", "dump per-iteration CSV to stdout"),
+        )
+        .command(
+            Command::new(
+                "chaos-report",
+                "train under injected faults and dump the fault log + rung tally",
+            )
+            .flag("n", "6", "number of workers (= data subsets)")
+            .flag("s", "2", "straggler tolerance")
+            .flag("m", "1", "communication reduction factor")
+            .flag("iters", "100", "training iterations")
+            .flag("rows", "480", "training rows")
+            .flag("lr", "0.02", "learning rate")
+            .flag("seed", "7", "experiment seed")
+            .flag(
+                "chaos",
+                "drop=0.1,crash=0.01,corrupt=0.02",
+                "fault-injection spec (same grammar as train --chaos)",
+            )
+            .switch("csv", "dump the fault-log CSV to stdout"),
         )
         .command(
             Command::new("plan", "optimal (d,s,m) from the §VI runtime model")
@@ -134,7 +163,14 @@ fn app() -> App {
         .command(
             Command::new("worker", "TCP worker: serve coded gradients")
                 .flag("connect", "127.0.0.1:7070", "master address")
-                .flag("id", "0", "worker id (0-based)"),
+                .flag("id", "0", "worker id (0-based)")
+                .flag("n", "4", "total workers (all workers must agree so the shared --chaos plan lines up)")
+                .flag("chaos-iters", "100", "iterations the --chaos plan covers")
+                .flag(
+                    "chaos",
+                    "",
+                    "fault-injection spec for this fleet (same grammar and seed on every worker); empty = off",
+                ),
         )
 }
 
@@ -232,6 +268,22 @@ fn cmd_leader(a: gradcode::cli::Args) -> anyhow::Result<()> {
     let iters = a.get_usize("iters") as u64;
     for iter in start_iter..iters {
         let gather = master.run_iteration(iter, opt.eval_point())?;
+        if !gather.complete {
+            // Deadline expired below quorum (workers crashed or reset):
+            // skip the update rather than dying — a stale-gradient step
+            // of the kind the in-process trainer's ladder takes.
+            println!(
+                "iter {iter:>4}: gather incomplete ({} of {} responders{}), skipping update",
+                gather.results.len(),
+                setup.wait_for(),
+                if gather.rejected.is_empty() {
+                    String::new()
+                } else {
+                    format!(", {} checksum-rejected", gather.rejected.len())
+                }
+            );
+            continue;
+        }
         let grad = decode_gather(code.as_ref(), &gather, &mut cache)?;
         opt.step(&grad);
         if iter % 10 == 0 || iter + 1 == iters {
@@ -253,8 +305,30 @@ fn cmd_leader(a: gradcode::cli::Args) -> anyhow::Result<()> {
 
 fn cmd_worker(a: gradcode::cli::Args) -> anyhow::Result<()> {
     let id = a.get_usize("id");
+    // The fault plan is a fleet-wide schedule: every worker builds the
+    // same plan from the shared spec (same seed, same n) and consults
+    // only its own row, exactly like the in-process cluster does.
+    let plan = match a.get_str("chaos") {
+        "" => None,
+        spec => {
+            let spec = ChaosSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+            let n = a.get_usize("n");
+            anyhow::ensure!(id < n, "--id {id} out of range for --n {n}");
+            let plan = gradcode::chaos::FaultPlan::random(
+                n,
+                a.get_usize("chaos-iters") as u64,
+                &spec,
+            );
+            println!(
+                "worker {id}: chaos armed ({} scheduled faults fleet-wide, seed {:#x})",
+                plan.len(),
+                spec.seed
+            );
+            Some(plan)
+        }
+    };
     println!("worker {id}: connecting to {}", a.get_str("connect"));
-    let served = gradcode::coordinator::run_worker(a.get_str("connect"), id)?;
+    let served = gradcode::coordinator::run_worker_chaos(a.get_str("connect"), id, plan)?;
     println!("worker {id}: served {served} tasks, shutting down");
     Ok(())
 }
@@ -363,6 +437,7 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
         // --profile describes the fleet; the hetero scheme also adapts
         // its placement to it.
         fleet: Some(profile),
+        chaos: parse_chaos_flag(&a, n)?,
     };
     let log = if a.get_bool("pjrt") {
         // The AOT artifacts are fixed-shape per (n, d, m) with uniform
@@ -399,8 +474,79 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
             log.decoder_cache_misses
         );
     }
+    if !log.faults.is_empty() {
+        println!("chaos: {}", log.faults.summary());
+    }
     if a.get_bool("csv") {
         print!("{}", log.to_csv());
+    }
+    Ok(())
+}
+
+/// `--chaos <spec>` → a [`ChaosConfig`] for an `n`-worker run (empty
+/// spec = chaos off, which also forbids degraded iterations).
+fn parse_chaos_flag(a: &gradcode::cli::Args, n: usize) -> anyhow::Result<Option<ChaosConfig>> {
+    match a.get_str("chaos") {
+        "" => Ok(None),
+        spec => {
+            let spec = ChaosSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+            Ok(Some(ChaosConfig::from_spec(n, a.get_usize("iters") as u64, &spec)))
+        }
+    }
+}
+
+fn cmd_chaos_report(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    use gradcode::simulator::degraded_fraction;
+    let n = a.get_usize("n");
+    let s = a.get_usize("s");
+    let iters = a.get_usize("iters");
+    let spec = ChaosSpec::parse(a.get_str("chaos")).map_err(|e| anyhow::anyhow!(e))?;
+    let gen = SyntheticCategorical::new(
+        CategoricalConfig { columns: 10, cardinality: (16, 48), ..Default::default() },
+        a.get_u64("seed"),
+    );
+    let ds = gen.generate(a.get_usize("rows"), a.get_u64("seed") + 1);
+    let cfg = TrainConfig {
+        n,
+        scheme: SchemeSpec::Poly { s, m: a.get_usize("m") },
+        iters,
+        opt: OptChoice::Nag { lr: a.get_f64("lr") as f32, momentum: 0.9 },
+        eval_every: iters.max(1),
+        delays: Some(DelayParams::table_vi1()),
+        mode: ExecutionMode::Virtual,
+        seed: a.get_u64("seed"),
+        minibatch: None,
+        quorum: None,
+        fleet: None,
+        chaos: Some(ChaosConfig::from_spec(n, iters as u64, &spec)),
+    };
+    let (log, _beta) = train(cfg, &ds, None)?;
+    let (exact, degraded, stale) = log.rung_counts();
+    println!("chaos spec: {spec:?}");
+    println!(
+        "run: n={n} s={s} iters={iters}  injected={} checksum_rejects={}",
+        log.faults.injected(),
+        log.faults.checksum_rejects()
+    );
+    println!("rungs: {}", log.faults.summary());
+    println!(
+        "degraded fraction: observed {:.3} ({} of {iters})",
+        (degraded + stale) as f64 / iters as f64,
+        degraded + stale
+    );
+    // The binomial tail models i.i.d. per-iteration silence; persistent
+    // crash/reset windows violate that, so only predict when they're off.
+    if spec.crash == 0.0 && spec.reset == 0.0 {
+        println!(
+            "degraded fraction: binomial prediction {:.3} (P[Bin({n}, {}) > {s}])",
+            degraded_fraction(n, s, spec.drop),
+            spec.drop
+        );
+    }
+    println!("final loss: {:.5}", log.final_loss().unwrap_or(f64::NAN));
+    println!("exact/degraded/stale = {exact}/{degraded}/{stale}");
+    if a.get_bool("csv") {
+        print!("{}", log.faults.to_csv());
     }
     Ok(())
 }
@@ -608,6 +754,7 @@ fn main() -> anyhow::Result<()> {
         Ok((name, args)) => match name.as_str() {
             "info" => cmd_info(),
             "train" => cmd_train(args),
+            "chaos-report" => cmd_chaos_report(args),
             "plan" => cmd_plan(args),
             "plan-hetero" => cmd_plan_hetero(args),
             "quorum" => cmd_quorum(args),

@@ -3,6 +3,8 @@
 
 use std::fmt::Write as _;
 
+use crate::chaos::{FaultLog, LadderRung};
+
 /// One training iteration as observed by the master.
 #[derive(Debug, Clone)]
 pub struct IterationRecord {
@@ -28,6 +30,9 @@ pub struct IterationRecord {
     pub loss: Option<f64>,
     /// Test AUC at eval points.
     pub auc: Option<f64>,
+    /// Which rung of the degradation ladder served this iteration
+    /// (`Exact` on every iteration of a fault-free run).
+    pub rung: LadderRung,
 }
 
 /// Full log of a training run.
@@ -40,6 +45,9 @@ pub struct RunLog {
     pub decoder_cache_hits: usize,
     /// Cache misses (each one paid a fresh weight solve).
     pub decoder_cache_misses: usize,
+    /// Injected faults and recovery actions observed during the run
+    /// (empty unless chaos injection was enabled).
+    pub faults: FaultLog,
 }
 
 impl RunLog {
@@ -49,7 +57,22 @@ impl RunLog {
             scheme: scheme.into(),
             decoder_cache_hits: 0,
             decoder_cache_misses: 0,
+            faults: FaultLog::new(),
         }
+    }
+
+    /// Count of iterations served at each ladder rung:
+    /// `(exact, degraded, stale)`.
+    pub fn rung_counts(&self) -> (usize, usize, usize) {
+        let mut counts = (0, 0, 0);
+        for r in &self.records {
+            match r.rung {
+                LadderRung::Exact => counts.0 += 1,
+                LadderRung::Degraded => counts.1 += 1,
+                LadderRung::Stale => counts.2 += 1,
+            }
+        }
+        counts
     }
 
     /// Fraction of iterations served from the decoder cache (`None`
@@ -109,12 +132,12 @@ impl RunLog {
     /// CSV with one row per iteration.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,sim_time,sim_clock,master_compute,worker_compute,n_responders,floats,decode_residual,loss,auc\n",
+            "iter,sim_time,sim_clock,master_compute,worker_compute,n_responders,floats,decode_residual,loss,auc,rung\n",
         );
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{}",
+                "{},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{},{}",
                 r.iter,
                 r.sim_time,
                 r.sim_clock,
@@ -125,6 +148,7 @@ impl RunLog {
                 r.decode_residual.map_or(String::new(), |v| format!("{v:.6}")),
                 r.loss.map_or(String::new(), |v| format!("{v:.6}")),
                 r.auc.map_or(String::new(), |v| format!("{v:.6}")),
+                r.rung.as_str(),
             );
         }
         s
@@ -147,6 +171,7 @@ mod tests {
             decode_residual: None,
             loss: None,
             auc,
+            rung: LadderRung::Exact,
         }
     }
 
@@ -191,7 +216,23 @@ mod tests {
         log.push(rec(0, 1.0, 1.0, Some(0.8)));
         let csv = log.to_csv();
         assert!(csv.starts_with("iter,"));
+        assert!(csv.lines().next().unwrap().ends_with(",rung"));
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.contains("0.800000"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",exact"));
+    }
+
+    #[test]
+    fn rung_counts_tally_by_variant() {
+        let mut log = RunLog::new("t");
+        log.push(rec(0, 1.0, 1.0, None));
+        let mut r = rec(1, 1.0, 2.0, None);
+        r.rung = LadderRung::Degraded;
+        log.push(r);
+        let mut r = rec(2, 1.0, 3.0, None);
+        r.rung = LadderRung::Stale;
+        log.push(r);
+        assert_eq!(log.rung_counts(), (1, 1, 1));
+        assert!(log.faults.is_empty());
     }
 }

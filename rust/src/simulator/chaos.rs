@@ -1,0 +1,152 @@
+//! §VI model extended with worker *silence*: each worker independently
+//! fails to answer an iteration with probability `p_silent` (crashes,
+//! drops, resets — anything the chaos engine makes silent). Predicts how
+//! often a run decodes exactly versus falling off the wait rule onto the
+//! degradation ladder, and the expected iteration time under both.
+//!
+//! The exact-decode fraction is a binomial tail: the iteration stays
+//! exact iff at most `s` of the `n` workers are silent, so
+//! `P[degraded] = P[Bin(n, p_silent) > s]` ([`degraded_fraction`]).
+//! Iteration time comes from Monte-Carlo over the assumption-1–2 delay
+//! model: an exact iteration ends at the `(n-s)`-th order statistic of
+//! the alive finish times, a degraded one waits for every survivor
+//! (the virtual gather collects all of them before decoding).
+
+use crate::rngs::{Pcg64, Rng, ShiftedExponential};
+use crate::simulator::DelayParams;
+
+/// Exact probability that more than `s` of `n` independent workers are
+/// silent at `p_silent` each — the fraction of iterations the trainer
+/// must serve from the degradation ladder instead of an exact decode.
+pub fn degraded_fraction(n: usize, s: usize, p_silent: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p_silent), "p_silent must be in [0, 1]");
+    assert!(s <= n);
+    // 1 - P[Bin(n, p) <= s], with the binomial coefficient built
+    // multiplicatively (n is a worker count, overflow is not a concern).
+    let mut below = 0.0f64;
+    for k in 0..=s.min(n) {
+        let mut coeff = 1.0f64;
+        for i in 1..=k {
+            coeff *= (n - k + i) as f64 / i as f64;
+        }
+        below += coeff * p_silent.powi(k as i32) * (1.0 - p_silent).powi((n - k) as i32);
+    }
+    (1.0 - below).clamp(0.0, 1.0)
+}
+
+/// Monte-Carlo forecast of a chaos run (see [`forecast`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosForecast {
+    /// Mean iteration time over exact and degraded iterations, seconds.
+    pub mean_iteration_time: f64,
+    /// Fraction of iterations decodable exactly (`>= n - s` alive).
+    pub exact_fraction: f64,
+    /// Fraction served from the degradation ladder.
+    pub degraded_fraction: f64,
+}
+
+/// Simulate `iters` iterations of an `(n, d, s, m)` deployment under the
+/// assumption-1–2 delay model with each worker silent independently with
+/// probability `p_silent`. Deterministic in `seed`.
+pub fn forecast(
+    params: &DelayParams,
+    n: usize,
+    d: usize,
+    s: usize,
+    m: usize,
+    p_silent: f64,
+    iters: usize,
+    seed: u64,
+) -> ChaosForecast {
+    assert!(n >= 1 && d >= 1 && m >= 1 && s < n && iters >= 1);
+    assert!((0.0..=1.0).contains(&p_silent));
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let comp = ShiftedExponential::new(d as f64 * params.t1, params.lambda1 / d as f64);
+    let comm = ShiftedExponential::new(params.t2 / m as f64, m as f64 * params.lambda2);
+    let mut total = 0.0f64;
+    let mut exact = 0usize;
+    let mut finishes = Vec::with_capacity(n);
+    for _ in 0..iters {
+        finishes.clear();
+        for _ in 0..n {
+            let silent = rng.next_f64() < p_silent;
+            // Sample the finish time unconditionally so the delay stream
+            // matches a silence-free run of the same seed (the same
+            // convention the worker loop uses).
+            let t = comp.sample(&mut rng) + comm.sample(&mut rng);
+            if !silent {
+                finishes.push(t);
+            }
+        }
+        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if finishes.len() >= n - s {
+            exact += 1;
+            total += finishes[n - s - 1];
+        } else if let Some(&last) = finishes.last() {
+            total += last;
+        }
+        // zero survivors: the gather returns immediately (time 0)
+    }
+    ChaosForecast {
+        mean_iteration_time: total / iters as f64,
+        exact_fraction: exact as f64 / iters as f64,
+        degraded_fraction: 1.0 - exact as f64 / iters as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degraded_fraction_matches_hand_computation() {
+        // n = 6, s = 2, p = 0.25: tail = 1 - sum_{k<=2} C(6,k) p^k q^(6-k)
+        let got = degraded_fraction(6, 2, 0.25);
+        assert!((got - 0.16943359375).abs() < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn degraded_fraction_edges_and_monotonicity() {
+        assert_eq!(degraded_fraction(5, 1, 0.0), 0.0);
+        assert!((degraded_fraction(5, 1, 1.0) - 1.0).abs() < 1e-12);
+        assert_eq!(degraded_fraction(4, 4, 0.9), 0.0, "s = n can never degrade");
+        let mut prev = 0.0;
+        for i in 0..=10 {
+            let f = degraded_fraction(8, 2, i as f64 / 10.0);
+            assert!(f >= prev - 1e-12, "tail must grow with p");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn forecast_agrees_with_the_binomial_tail() {
+        let p = DelayParams::table_vi1();
+        let f = forecast(&p, 6, 4, 2, 2, 0.25, 4000, 7);
+        let want = degraded_fraction(6, 2, 0.25);
+        assert!(
+            (f.degraded_fraction - want).abs() < 0.02,
+            "MC {} vs exact {want}",
+            f.degraded_fraction
+        );
+        assert!((f.exact_fraction + f.degraded_fraction - 1.0).abs() < 1e-12);
+        assert!(f.mean_iteration_time > 0.0);
+    }
+
+    #[test]
+    fn forecast_is_deterministic_in_seed() {
+        let p = DelayParams::table_vi1();
+        let a = forecast(&p, 5, 3, 1, 2, 0.1, 500, 11);
+        let b = forecast(&p, 5, 3, 1, 2, 0.1, 500, 11);
+        assert_eq!(a, b);
+        let c = forecast(&p, 5, 3, 1, 2, 0.1, 500, 12);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn silence_free_forecast_is_all_exact() {
+        let p = DelayParams::table_vi1();
+        let f = forecast(&p, 6, 3, 1, 2, 0.0, 200, 3);
+        assert_eq!(f.exact_fraction, 1.0);
+        assert_eq!(f.degraded_fraction, 0.0);
+    }
+}

@@ -18,6 +18,9 @@
 //! - [`hetero`]: the model extended to heterogeneous fleets — per-worker
 //!   delay params scaled by speed and load, Poisson–binomial group
 //!   quorums, and the [`plan_loads`] load-vector optimizer.
+//! - [`chaos`]: the model extended to faulty workers — the exact binomial
+//!   fraction of degraded iterations under i.i.d. worker silence and a
+//!   Monte-Carlo forecast of expected iteration time on the ladder.
 //!
 //! # Example: planning a deployment
 //!
@@ -48,6 +51,7 @@
 //! ```
 
 pub mod approx;
+pub mod chaos;
 pub mod hetero;
 pub mod model;
 pub mod optimize;
@@ -56,6 +60,7 @@ pub mod quadrature;
 pub mod virtual_cluster;
 
 pub use approx::{expected_coeff_residual, expected_runtime_at_quorum, QuorumPoint};
+pub use chaos::{degraded_fraction, forecast as forecast_chaos, ChaosForecast};
 pub use hetero::{
     expected_fleet_time, expected_hetero_time, plan_loads, plan_loads_opts, LoadPlan,
     PlanOpts, SpeedProfile,

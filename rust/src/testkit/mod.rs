@@ -1,10 +1,16 @@
 //! Property-testing substrate (no `proptest` offline).
 //!
 //! A small seeded harness: generate `cases` random inputs from closures
-//! over a [`Pcg64`], check an invariant, and on failure report the exact
-//! case index + root seed so the failure replays deterministically. Used
-//! to sweep coding-scheme invariants (any-(n-s)-workers decodability,
-//! placement counts, bound tightness) across randomized parameter space.
+//! over a [`Pcg64`], check an invariant, and on failure print a
+//! copy-pasteable reproducer (root seed + failing attempt + the failing
+//! input) so the failure replays deterministically. `TESTKIT_SEED`
+//! (decimal or `0x…` hex) overrides every property's root seed for
+//! ad-hoc replay and for pinning CI runs. Used to sweep coding-scheme
+//! invariants (any-(n-s)-workers decodability, placement counts, bound
+//! tightness) and the chaos engine's recovery invariants across
+//! randomized parameter space.
+
+use std::time::Duration;
 
 use crate::rngs::{Pcg64, Rng};
 
@@ -30,15 +36,29 @@ pub enum CaseResult {
     Discard,
 }
 
-/// Run `prop` over `cfg.cases` generated inputs; panics with replay info
-/// on the first failure. `gen` draws an input from the RNG.
+/// The root seed a property run actually uses: the `TESTKIT_SEED`
+/// environment variable (decimal or `0x…` hex) when set, else the
+/// configured seed. A malformed override panics rather than silently
+/// running the default seed.
+pub fn root_seed(cfg: &Config) -> u64 {
+    match std::env::var("TESTKIT_SEED") {
+        Ok(v) => crate::chaos::parse_u64(&v)
+            .unwrap_or_else(|| panic!("TESTKIT_SEED `{v}` is not a u64 (decimal or 0x-hex)")),
+        Err(_) => cfg.seed,
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with a
+/// copy-pasteable reproducer on the first failure. `gen` draws an input
+/// from the RNG.
 pub fn check<T: std::fmt::Debug>(
     cfg: Config,
     name: &str,
     mut gen: impl FnMut(&mut Pcg64) -> T,
     mut prop: impl FnMut(&T) -> CaseResult,
 ) {
-    let mut rng = Pcg64::seed_from_u64(cfg.seed);
+    let seed = root_seed(&cfg);
+    let mut rng = Pcg64::seed_from_u64(seed);
     let mut passed = 0usize;
     let mut discarded = 0usize;
     let max_attempts = cfg.cases * 20;
@@ -52,9 +72,9 @@ pub fn check<T: std::fmt::Debug>(
             CaseResult::Pass => passed += 1,
             CaseResult::Discard => discarded += 1,
             CaseResult::Fail(why) => panic!(
-                "property `{name}` failed at attempt {attempts} \
-                 (seed={:#x}): {why}\ninput: {input:?}",
-                cfg.seed
+                "property `{name}` failed at attempt {attempts} (seed={seed:#x}): \
+                 {why}\nfailing input: {input:?}\n\
+                 reproduce with: TESTKIT_SEED={seed:#x} cargo test {name}"
             ),
         }
     }
@@ -62,6 +82,41 @@ pub fn check<T: std::fmt::Debug>(
         passed >= cfg.cases,
         "property `{name}`: too many discards ({discarded} discards, {passed} passes)"
     );
+}
+
+/// Run `f` under a wall-clock watchdog: panics with `name` if it has not
+/// finished within `limit`, and re-raises `f`'s own panic unchanged.
+/// Chaos properties assert "never deadlocks" with this — a hung gather
+/// fails the test instead of hanging the whole suite.
+///
+/// The worker thread is detached on timeout (it cannot be killed), so a
+/// tripped watchdog should be treated as a failure to fix, not retried.
+pub fn with_watchdog<R: Send + 'static>(
+    limit: Duration,
+    name: &str,
+    f: impl FnOnce() -> R + Send + 'static,
+) -> R {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::Builder::new()
+        .name(format!("watchdog-{name}"))
+        .spawn(move || {
+            let _ = tx.send(f());
+        })
+        .expect("spawn watchdog thread");
+    match rx.recv_timeout(limit) {
+        Ok(r) => {
+            let _ = handle.join();
+            r
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog `{name}`: no result within {limit:?} (deadlock or hang)")
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => match handle.join() {
+            // The closure panicked: surface the original panic payload.
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(_) => unreachable!("sender dropped without a send or a panic"),
+        },
+    }
 }
 
 /// Convenience: boolean property.
@@ -83,6 +138,7 @@ pub fn check_bool<T: std::fmt::Debug>(
 /// Generator helpers for common parameter shapes.
 pub mod gen {
     use super::*;
+    use crate::chaos::{FaultKind, FaultPlan};
 
     /// Uniform usize in `[lo, hi]` inclusive.
     pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
@@ -109,6 +165,39 @@ pub mod gen {
         (0..k)
             .map(|_| (0..l).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect())
             .collect()
+    }
+
+    /// A random [`FaultPlan`] for an `n`-worker, `iters`-iteration run
+    /// with up to `max_faults` scheduled events drawn uniformly over
+    /// cells and [`FaultKind`]s (restartable and permanent crashes,
+    /// drops, corruptions, duplicates, delays, resets).
+    pub fn fault_plan(rng: &mut Pcg64, n: usize, iters: u64, max_faults: usize) -> FaultPlan {
+        let mut plan = FaultPlan::new(n);
+        for _ in 0..usize_in(rng, 0, max_faults) {
+            let worker = rng.next_index(n);
+            let iter = rng.next_bounded(iters.max(1));
+            let kind = match rng.next_index(7) {
+                0 => FaultKind::Crash { restart_after: None },
+                1 => FaultKind::Crash {
+                    restart_after: Some(usize_in(rng, 1, 4) as u32),
+                },
+                2 => FaultKind::Drop,
+                3 => FaultKind::Corrupt,
+                4 => FaultKind::Duplicate,
+                5 => FaultKind::Delay(f64_in(rng, 0.01, 2.0)),
+                _ => FaultKind::Reset,
+            };
+            plan.schedule(worker, iter, kind);
+        }
+        plan
+    }
+
+    /// A sorted responder subset of `0..n` with at least `min_size`
+    /// members (at most all of them).
+    pub fn responder_subset(rng: &mut Pcg64, n: usize, min_size: usize) -> Vec<usize> {
+        assert!(min_size >= 1 && min_size <= n);
+        let size = usize_in(rng, min_size, n);
+        rng.sample_indices(n, size)
     }
 }
 
@@ -165,5 +254,70 @@ mod tests {
             assert!(m >= 1);
             assert_eq!(d, s + m);
         }
+    }
+
+    #[test]
+    fn failure_message_contains_reproducer() {
+        let caught = std::panic::catch_unwind(|| {
+            check_bool(
+                Config { cases: 4, seed: 0xabc },
+                "repro-check",
+                |rng| rng.next_u64(),
+                |_| false,
+            );
+        })
+        .unwrap_err();
+        let msg = caught.downcast_ref::<String>().expect("panic carries a String");
+        assert!(msg.contains("TESTKIT_SEED=0xabc cargo test repro-check"), "{msg}");
+        assert!(msg.contains("failing input:"), "{msg}");
+    }
+
+    #[test]
+    fn fault_plan_generator_stays_in_bounds() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        for _ in 0..100 {
+            let plan = gen::fault_plan(&mut rng, 6, 20, 10);
+            assert_eq!(plan.n(), 6);
+            assert!(plan.len() <= 10);
+            for it in 0..20 {
+                for (w, _) in plan.events_at(it) {
+                    assert!(w < 6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn responder_subset_is_sorted_distinct_and_big_enough() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        for _ in 0..200 {
+            let s = gen::responder_subset(&mut rng, 9, 3);
+            assert!(s.len() >= 3 && s.len() <= 9);
+            for pair in s.windows(2) {
+                assert!(pair[0] < pair[1], "sorted and distinct: {s:?}");
+            }
+            assert!(s.iter().all(|&w| w < 9));
+        }
+    }
+
+    #[test]
+    fn watchdog_passes_results_and_trips_on_hangs() {
+        assert_eq!(with_watchdog(Duration::from_secs(5), "quick", || 41 + 1), 42);
+        let caught = std::panic::catch_unwind(|| {
+            with_watchdog(Duration::from_millis(50), "hang", || {
+                std::thread::sleep(Duration::from_secs(30));
+            })
+        });
+        assert!(caught.is_err(), "watchdog must trip");
+    }
+
+    #[test]
+    fn watchdog_reraises_inner_panics() {
+        let caught = std::panic::catch_unwind(|| {
+            with_watchdog(Duration::from_secs(5), "inner", || panic!("boom-inner"));
+        })
+        .unwrap_err();
+        let msg = caught.downcast_ref::<&str>().expect("payload is the inner &str");
+        assert!(msg.contains("boom-inner"));
     }
 }

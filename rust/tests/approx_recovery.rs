@@ -28,6 +28,7 @@ fn config(n: usize, scheme: SchemeSpec, iters: usize, lr: f32, seed: u64) -> Tra
         minibatch: None,
         quorum: None,
         fleet: None,
+        chaos: None,
     }
 }
 

@@ -1,0 +1,388 @@
+//! Integration: the chaos engine end to end — fault injection through
+//! the in-process cluster and the TCP path, the degradation ladder, and
+//! the recovery guarantees the coordinator makes:
+//!
+//! - at most `s` silent workers per iteration → every iteration decodes
+//!   exactly (rung `Exact`) and the trained parameters match a fault-free
+//!   run of the same configuration;
+//! - more than `s` silent workers → the trainer degrades to the
+//!   least-squares partial decode (rung `Degraded`, residual recorded)
+//!   instead of erroring, and to a stale-gradient step when nothing is
+//!   decodable at all;
+//! - arbitrary random fault plans never panic and never hang (bounded by
+//!   a wall-clock watchdog);
+//! - the whole machine is deterministic in the chaos seed;
+//! - the TCP master survives mid-gather disconnects (the pre-v3 hang)
+//!   and checksum-rejects corrupted frames in bounded time.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use gradcode::chaos::{ChaosConfig, ChaosSpec, DegradeLadder, FaultKind, FaultPlan, GatherPolicy, LadderRung};
+use gradcode::coordinator::wire::{Message, Setup, MAGIC, SCHEME_POLY};
+use gradcode::coordinator::{
+    remote, train, ExecutionMode, OptChoice, RemoteMaster, SchemeSpec, TrainConfig,
+};
+use gradcode::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
+use gradcode::simulator::{degraded_fraction, DelayParams};
+use gradcode::testkit::{self, check, CaseResult, Config};
+
+fn dataset(rows: usize, seed: u64) -> DenseDataset {
+    let gen = SyntheticCategorical::new(CategoricalConfig::default(), seed);
+    gen.generate(rows, seed + 1)
+}
+
+/// Virtual-mode config (deterministic arrival order from the sampled
+/// §VI delays) used by all in-process chaos tests.
+fn base_cfg(n: usize, scheme: SchemeSpec, iters: usize) -> TrainConfig {
+    TrainConfig {
+        n,
+        scheme,
+        iters,
+        opt: OptChoice::Nag { lr: 0.05, momentum: 0.9 },
+        eval_every: iters,
+        delays: Some(DelayParams::table_vi1()),
+        mode: ExecutionMode::Virtual,
+        seed: 0x0dd5,
+        minibatch: None,
+        quorum: None,
+        fleet: None,
+        chaos: None,
+    }
+}
+
+/// Acceptance: with at most `s` silent workers per iteration every
+/// iteration stays on the `Exact` rung and training lands on the same
+/// parameters as the identical fault-free run — the decode is exact from
+/// *any* `n - s` responders, so which workers were killed cannot matter.
+#[test]
+fn at_most_s_failures_decode_exactly_and_match_fault_free_run() {
+    let ds = dataset(240, 11);
+    let (n, s) = (6, 2);
+    let iters = 12;
+    let scheme = SchemeSpec::Poly { s, m: 1 };
+
+    let mut plan = FaultPlan::new(n);
+    // Silent faults, never more than s = 2 per iteration: worker 1 is
+    // gone for good from iter 2; worker 4 drops one result at iter 5.
+    plan.schedule(1, 2, FaultKind::Crash { restart_after: None });
+    plan.schedule(4, 5, FaultKind::Drop);
+    // Non-silent faults the robustness layer must absorb without leaving
+    // the Exact rung: a duplicate delivery, a late arrival, and a
+    // corrupted payload (caught by CRC, sender becomes a straggler —
+    // iter 8 then has exactly n - s = 4 healthy responders).
+    plan.schedule(3, 6, FaultKind::Duplicate);
+    plan.schedule(2, 7, FaultKind::Delay(1.5));
+    plan.schedule(5, 8, FaultKind::Corrupt);
+
+    let mut chaos_cfg = base_cfg(n, scheme.clone(), iters);
+    chaos_cfg.chaos = Some(ChaosConfig::new(plan));
+    let (chaos_log, chaos_beta) = train(chaos_cfg, &ds, None).unwrap();
+
+    let (_, clean_beta) = train(base_cfg(n, scheme, iters), &ds, None).unwrap();
+
+    assert_eq!(
+        chaos_log.rung_counts(),
+        (iters, 0, 0),
+        "≤ s silent workers must never leave the Exact rung: {}",
+        chaos_log.faults.summary()
+    );
+    assert!(chaos_log.faults.injected() >= 5, "all scheduled faults logged");
+    assert!(
+        chaos_log.faults.checksum_rejects() >= 1,
+        "the corrupt frame must be caught by checksum"
+    );
+    assert_eq!(chaos_beta.len(), clean_beta.len());
+    let scale = clean_beta.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+    for j in 0..clean_beta.len() {
+        assert!(
+            (chaos_beta[j] - clean_beta[j]).abs() / scale < 1e-3,
+            "coord {j}: chaos {} vs fault-free {}",
+            chaos_beta[j],
+            clean_beta[j]
+        );
+    }
+}
+
+/// Acceptance: more than `s` concurrent failures used to be fatal; with
+/// a chaos config the trainer drops to the least-squares partial decode,
+/// records the rung and its residual, and finishes the run.
+#[test]
+fn more_than_s_failures_engage_the_degrade_ladder() {
+    let ds = dataset(240, 13);
+    let (n, s) = (6, 1);
+    let iters = 10;
+
+    let mut plan = FaultPlan::new(n);
+    // Two permanent crashes from iter 3 on: 2 > s = 1, so from then on
+    // only 4 of the required n - s = 5 responders exist.
+    plan.schedule(0, 3, FaultKind::Crash { restart_after: None });
+    plan.schedule(1, 3, FaultKind::Crash { restart_after: None });
+
+    let mut cfg = base_cfg(n, SchemeSpec::Poly { s, m: 1 }, iters);
+    cfg.chaos = Some(ChaosConfig::new(plan));
+    let (log, _beta) = train(cfg, &ds, None).unwrap();
+
+    let (exact, degraded, stale) = log.rung_counts();
+    assert_eq!(exact, 3, "iters 0..3 are fault-free");
+    assert_eq!(degraded, iters - 3, "every later iteration partially decodes");
+    assert_eq!(stale, 0);
+    for r in &log.records {
+        if r.rung == LadderRung::Degraded {
+            assert_eq!(r.responders.len(), 4, "iter {}", r.iter);
+            assert!(
+                r.decode_residual.is_some(),
+                "degraded iterations must report the LS residual (iter {})",
+                r.iter
+            );
+        }
+    }
+    assert!(log.final_loss().unwrap().is_finite());
+}
+
+/// The last rung: when nothing is decodable the trainer repeats the
+/// previous gradient, and aborts only after `max_stale` consecutive
+/// stale iterations.
+#[test]
+fn total_blackout_goes_stale_then_aborts_at_the_ladder_limit() {
+    let ds = dataset(160, 17);
+    let n = 4;
+
+    let mut blackout = FaultPlan::new(n);
+    for w in 0..n {
+        blackout.schedule(w, 2, FaultKind::Crash { restart_after: None });
+    }
+
+    // Short blackout within the allowance: the run completes on stale
+    // gradients.
+    let mut cfg = base_cfg(n, SchemeSpec::Poly { s: 1, m: 1 }, 5);
+    cfg.chaos = Some(ChaosConfig {
+        ladder: DegradeLadder { max_stale: 5 },
+        ..ChaosConfig::new(blackout.clone())
+    });
+    let (log, _) = train(cfg, &ds, None).unwrap();
+    let (exact, _degraded, stale) = log.rung_counts();
+    assert_eq!(exact, 2);
+    assert_eq!(stale, 3, "iters 2..5 have zero responders");
+
+    // Longer blackout than the allowance: a clean error, not a hang.
+    let mut cfg = base_cfg(n, SchemeSpec::Poly { s: 1, m: 1 }, 12);
+    cfg.chaos = Some(ChaosConfig {
+        ladder: DegradeLadder { max_stale: 3 },
+        ..ChaosConfig::new(blackout)
+    });
+    let err = train(cfg, &ds, None).unwrap_err();
+    assert!(
+        err.to_string().contains("consecutive stale"),
+        "unexpected error: {err}"
+    );
+}
+
+/// Property: training under an *arbitrary* generated fault plan either
+/// completes or fails with a clean error — it never panics and never
+/// exceeds the watchdog. Covers every fault kind, including restartable
+/// crashes and resets, over random small schemes.
+#[test]
+fn arbitrary_fault_plans_never_panic_or_hang() {
+    let cfg = Config { cases: 12, ..Config::default() };
+    check(
+        cfg,
+        "arbitrary_fault_plans_never_panic_or_hang",
+        |rng| {
+            let (n, s, m) = loop {
+                let (n, _d, s, m) = testkit::gen::scheme_triple(rng, 3, 6);
+                // keep at least one worker's worth of slack so the
+                // fault-free iterations are plausible training steps
+                if s + m < n {
+                    break (n, s, m);
+                }
+            };
+            let plan = testkit::gen::fault_plan(rng, n, 8, 6);
+            (n, s, m, plan)
+        },
+        |&(n, s, m, ref plan)| {
+            let plan = plan.clone();
+            let outcome = testkit::with_watchdog(
+                Duration::from_secs(120),
+                "chaos-train",
+                move || {
+                    let ds = dataset(120, 7);
+                    let mut cfg = base_cfg(n, SchemeSpec::Poly { s, m }, 8);
+                    cfg.chaos = Some(ChaosConfig::new(plan));
+                    train(cfg, &ds, None).map(|_| ())
+                },
+            );
+            match outcome {
+                Ok(()) => CaseResult::Pass,
+                // A clean abort (e.g. the stale ladder limit) is a valid
+                // recovery outcome; only panics/hangs fail the property.
+                Err(_) => CaseResult::Pass,
+            }
+        },
+    );
+}
+
+/// Determinism is the chaos engine's core contract: the same plan and
+/// seed must replay bit-identically — parameters and the fault log.
+#[test]
+fn chaos_runs_are_bit_identical_across_replays() {
+    let ds = dataset(200, 19);
+    let spec = ChaosSpec::parse("crash=0.05,drop=0.1,corrupt=0.05,dup=0.05,seed=0xc0de")
+        .unwrap();
+    let run = || {
+        let mut cfg = base_cfg(6, SchemeSpec::Poly { s: 2, m: 1 }, 15);
+        cfg.chaos = Some(ChaosConfig::from_spec(6, 15, &spec));
+        train(cfg, &ds, None).unwrap()
+    };
+    let (log_a, beta_a) = run();
+    let (log_b, beta_b) = run();
+    assert_eq!(beta_a, beta_b, "same seed must give bit-identical parameters");
+    assert_eq!(log_a.faults.to_csv(), log_b.faults.to_csv());
+    assert_eq!(log_a.rung_counts(), log_b.rung_counts());
+}
+
+/// The simulator's binomial prediction matches the engine: under i.i.d.
+/// per-iteration drops at rate p, the observed degraded fraction tracks
+/// `P[Bin(n, p) > s]`.
+#[test]
+fn observed_degraded_fraction_tracks_the_binomial_prediction() {
+    let ds = dataset(160, 23);
+    let (n, s, p) = (6, 2, 0.25);
+    let iters = 200;
+    let spec = ChaosSpec::parse("drop=0.25,seed=99").unwrap();
+    let mut cfg = base_cfg(n, SchemeSpec::Poly { s, m: 1 }, iters);
+    cfg.eval_every = iters; // keep the long run cheap
+    cfg.chaos = Some(ChaosConfig::from_spec(n, iters as u64, &spec));
+    let (log, _) = train(cfg, &ds, None).unwrap();
+    let (_exact, degraded, stale) = log.rung_counts();
+    let observed = (degraded + stale) as f64 / iters as f64;
+    let predicted = degraded_fraction(n, s, p);
+    assert!(
+        (observed - predicted).abs() < 0.09,
+        "observed {observed:.3} vs binomial prediction {predicted:.3} \
+         over {iters} iterations"
+    );
+}
+
+fn free_addr() -> std::net::SocketAddr {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap();
+    drop(l);
+    addr
+}
+
+fn tcp_setup(n: u32, s: u32, m: u32) -> Setup {
+    Setup::homogeneous(n, s + m, s, m, SCHEME_POLY, 1, 777, n * 16, 512)
+}
+
+/// Acceptance (regression): the pre-v3 `RemoteMaster` blocked forever on
+/// `recv()` when a worker disconnected mid-gather. The gather must now
+/// return a partial result within the policy deadline — enforced here by
+/// a watchdog an order of magnitude above the deadline.
+#[test]
+fn tcp_master_survives_mid_gather_disconnect_in_bounded_time() {
+    testkit::with_watchdog(Duration::from_secs(30), "tcp-ghost-gather", || {
+        let setup = tcp_setup(2, 0, 1); // quorum = n = 2: the ghost is needed
+        let addr = free_addr();
+        let master = {
+            let setup = setup.clone();
+            std::thread::spawn(move || -> anyhow::Result<(bool, usize, f64)> {
+                let mut master = RemoteMaster::listen(addr, setup.clone())?;
+                master.set_gather_policy(GatherPolicy {
+                    deadline: Duration::from_millis(500),
+                    retries: 1,
+                    backoff: Duration::from_millis(1),
+                });
+                let beta = vec![0.0f32; setup.dim as usize];
+                let t0 = Instant::now();
+                let g = master.run_iteration(0, &beta)?;
+                let elapsed = t0.elapsed().as_secs_f64();
+                master.shutdown();
+                Ok((g.complete, g.results.len(), elapsed))
+            })
+        };
+        let real = std::thread::spawn(move || remote::run_worker(addr, 0));
+        let ghost = std::thread::spawn(move || {
+            use std::io::BufWriter;
+            let stream = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+            let mut writer = BufWriter::new(stream);
+            Message::Hello { magic: MAGIC, worker_id: 1 }.write_to(&mut writer).unwrap();
+            assert!(matches!(
+                Message::read_from(&mut reader).unwrap(),
+                Message::Setup(_)
+            ));
+            // vanish mid-gather — the pre-v3 master hung right here
+        });
+        let (complete, got, elapsed) = master.join().unwrap().unwrap();
+        ghost.join().unwrap();
+        real.join().unwrap().unwrap();
+        assert!(!complete, "quorum 2 is unreachable with a ghost worker");
+        assert_eq!(got, 1, "the healthy worker's result is kept");
+        assert!(elapsed < 10.0, "gather took {elapsed}s, deadline is 0.5s");
+    });
+}
+
+/// A deterministic corrupter on the TCP path: every frame it sends fails
+/// the CRC32 check, the master rejects it (bounded re-prods, no
+/// ping-pong) and completes the gather from the clean workers.
+#[test]
+fn tcp_corrupt_frames_are_rejected_and_training_continues() {
+    testkit::with_watchdog(Duration::from_secs(60), "tcp-corrupt-gather", || {
+        let (n, s, m) = (4u32, 1u32, 1u32);
+        let setup = tcp_setup(n, s, m);
+        let addr = free_addr();
+        let iters = 3u64;
+        let master = {
+            let setup = setup.clone();
+            std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
+                let mut master = RemoteMaster::listen(addr, setup.clone())?;
+                master.set_gather_policy(GatherPolicy {
+                    deadline: Duration::from_secs(2),
+                    retries: 1,
+                    backoff: Duration::from_millis(1),
+                });
+                let code = remote::scheme_from_setup(&setup)?;
+                let mut cache = HashMap::new();
+                let beta = vec![0.0f32; setup.dim as usize];
+                let mut rejects = 0usize;
+                let mut decoded = 0usize;
+                for iter in 0..iters {
+                    let gather = master.run_iteration(iter, &beta)?;
+                    rejects += gather.rejected.len();
+                    assert!(
+                        gather.complete,
+                        "iter {iter}: 3 clean workers satisfy quorum {}",
+                        setup.wait_for()
+                    );
+                    let grad = remote::decode_gather(code.as_ref(), &gather, &mut cache)?;
+                    assert!(grad.iter().all(|g| g.is_finite()));
+                    decoded += 1;
+                }
+                master.shutdown();
+                Ok((rejects, decoded))
+            })
+        };
+        // Worker 3 corrupts every result frame it ever sends.
+        let mut corrupter = FaultPlan::new(n as usize);
+        for iter in 0..iters + 8 {
+            corrupter.schedule(3, iter, FaultKind::Corrupt);
+        }
+        let workers: Vec<_> = (0..n as usize)
+            .map(|w| {
+                let plan = (w == 3).then(|| corrupter.clone());
+                std::thread::spawn(move || remote::run_worker_chaos(addr, w, plan))
+            })
+            .collect();
+        let (rejects, decoded) = master.join().unwrap().unwrap();
+        for h in workers {
+            h.join().unwrap().unwrap();
+        }
+        assert_eq!(decoded, iters as usize, "every iteration decoded");
+        // The corrupter answers every task, so at least one of its frames
+        // is drained and checksum-rejected during the run (frames landing
+        // after a quorum closes are processed by the next gather, so the
+        // exact count is timing-dependent).
+        assert!(rejects >= 1, "corrupted frames must be checksum-rejected");
+    });
+}

@@ -31,6 +31,7 @@ fn config(n: usize, scheme: SchemeSpec, iters: usize, lr: f32) -> TrainConfig {
         minibatch: None,
         quorum: None,
         fleet: None,
+        chaos: None,
     }
 }
 
@@ -167,6 +168,7 @@ fn training_survives_injected_worker_failure() {
         minibatch: None,
         quorum: None,
         fleet: None,
+        chaos: None,
     };
     let mut tr = Trainer::with_backend(cfg, code, backend, &padded, None).unwrap();
     let log = tr.run().unwrap();
@@ -181,10 +183,10 @@ fn training_survives_injected_worker_failure() {
 }
 
 #[test]
-#[should_panic(expected = "healthy results")]
-fn too_many_failures_panic_cleanly() {
-    // Two failed workers with s = 1 exceeds the tolerance — the gather
-    // must fail loudly rather than decode garbage.
+fn too_many_failures_error_cleanly() {
+    // Two failed workers with s = 1 exceeds the tolerance — without a
+    // chaos config authorizing degradation the trainer must fail loudly
+    // rather than decode garbage.
     let (train_ds, _) = dataset(500, 311);
     let scheme = SchemeSpec::Poly { s: 1, m: 2 };
     let code = scheme.build(5).unwrap();
@@ -204,9 +206,14 @@ fn too_many_failures_panic_cleanly() {
         minibatch: None,
         quorum: None,
         fleet: None,
+        chaos: None,
     };
     let mut tr = Trainer::with_backend(cfg, code, backend, &padded, None).unwrap();
-    let _ = tr.run();
+    let err = tr.run().unwrap_err();
+    assert!(
+        err.to_string().contains("wait rule unsatisfied"),
+        "unexpected error: {err}"
+    );
 }
 
 #[test]
@@ -269,6 +276,7 @@ fn hetero_beats_uniform_poly_on_bimodal_fleet_predicted_and_realized() {
         minibatch: None,
         quorum: None,
         fleet,
+        chaos: None,
     };
     let (log_hetero, _) = train(
         mk(SchemeSpec::Hetero { s, m, profile: profile.clone() }, None),
@@ -320,6 +328,7 @@ fn random_scheme_handles_extra_responders() {
         minibatch: None,
         quorum: None,
         fleet: None,
+        chaos: None,
     };
     let (log, _) = train(cfg, &train_ds, Some(&test_ds)).unwrap();
     let first = log.records[0].loss.unwrap();

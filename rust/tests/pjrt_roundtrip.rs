@@ -92,6 +92,7 @@ fn pjrt_backend_trains_end_to_end() {
         minibatch: None,
         quorum: None,
         fleet: None,
+        chaos: None,
     };
     let mut trainer = Trainer::with_backend(cfg, code, backend, &ds, None).unwrap();
     let log = trainer.run().unwrap();
