@@ -14,11 +14,17 @@
 #                              limit — a deadlocked gather must fail the
 #                              gate, not hang it — plus a 30-iteration
 #                              --chaos smoke train through the CLI)
-#   4. hetero_speedup --smoke (tiny profile sweep; refreshes the
+#   4. obs stage              (30-iteration traced train smoke writing a
+#                              telemetry JSONL, trace-report over it, and
+#                              obs_overhead --smoke refreshing the
+#                              machine-readable BENCH_obs.json — per-phase
+#                              means + the traced-vs-untraced overhead
+#                              delta)
+#   5. hetero_speedup --smoke (tiny profile sweep; refreshes the
 #                              machine-readable BENCH_hetero.json at the
 #                              repo root so perf is tracked PR-over-PR)
-#   5. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
-#   6. cargo fmt --check      (advisory: warns on drift, does not fail —
+#   6. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
+#   7. cargo fmt --check      (advisory: warns on drift, does not fail —
 #                              rustfmt availability varies across the
 #                              offline build images)
 set -euo pipefail
@@ -57,7 +63,18 @@ run_limited ./target/release/gradcode train \
 run_limited ./target/release/gradcode chaos-report \
     --n 6 --s 2 --iters 30 --rows 240 --chaos drop=0.2,seed=3
 
+echo "==> obs smoke: traced train + trace-report"
+obs_trace="target/ci_trace.jsonl"
+run_limited ./target/release/gradcode train \
+    --n 6 --s 1 --m 2 --iters 30 --rows 240 --trace "$obs_trace"
+[ -s "$obs_trace" ] || { echo "FAIL: traced train wrote no telemetry"; exit 1; }
+run_limited ./target/release/gradcode trace-report "$obs_trace" --csv \
+    --chrome target/ci_trace.chrome.json
+
 if [ "$quick" -eq 0 ]; then
+    echo "==> bench smoke: obs_overhead (writes BENCH_obs.json)"
+    cargo bench --bench obs_overhead -- --smoke
+
     echo "==> bench smoke: hetero_speedup (writes BENCH_hetero.json)"
     cargo bench --bench hetero_speedup -- --smoke
 

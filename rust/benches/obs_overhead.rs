@@ -1,0 +1,151 @@
+//! Obs — telemetry overhead and per-phase cost of a traced run: trains
+//! the same configuration with the recorder disabled and enabled
+//! (several repetitions each, keeping the minimum wall time as the
+//! noise-robust estimate) and reports
+//!
+//! - the traced run's phase breakdown (count, mean, p50/p90/p99) — where
+//!   an iteration's wall time actually goes;
+//! - the overhead delta `traced/untraced − 1` — the price of tracing,
+//!   which the ci gate bounds (the recorder is an `Option<Arc>` check
+//!   when disabled and ~two `Instant::now` calls per span when enabled,
+//!   so the delta should stay in the low single digits).
+//!
+//! Emits the machine-readable `BENCH_obs.json` (repo root) so the
+//! overhead trajectory is tracked PR-over-PR (`ci.sh` runs the
+//! `--smoke` configuration).
+//!
+//!     cargo bench --bench obs_overhead [-- --iters 80 --json out.json]
+
+use std::time::Instant;
+
+use gradcode::bench::{json_array, JsonObject, Table};
+use gradcode::cli::Command;
+use gradcode::coordinator::{OptChoice, SchemeSpec, TrainConfig, Trainer};
+use gradcode::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
+use gradcode::obs::{Recorder, TelemetrySummary};
+
+fn main() -> anyhow::Result<()> {
+    let args = Command::new(
+        "obs_overhead",
+        "traced vs untraced training: phase breakdown + recorder overhead",
+    )
+    .flag("n", "8", "workers")
+    .flag("s", "1", "straggler tolerance")
+    .flag("m", "2", "communication reduction factor")
+    .flag("iters", "60", "training iterations per run")
+    .flag("rows", "1600", "dataset rows")
+    .flag("reps", "3", "repetitions per variant (minimum wall time wins)")
+    .flag("seed", "23", "seed")
+    .flag("json", "BENCH_obs.json", "machine-readable output path (empty to skip)")
+    .switch("smoke", "tiny configuration for the CI gate")
+    .parse_env();
+
+    let smoke = args.get_bool("smoke");
+    if smoke {
+        println!(
+            "--smoke: overriding --n/--iters/--rows/--reps with the fixed CI \
+             configuration (n=6, iters=30, rows=600, reps=2)"
+        );
+    }
+    let n = if smoke { 6 } else { args.get_usize("n") };
+    let s = args.get_usize("s");
+    let m = args.get_usize("m");
+    let iters = if smoke { 30 } else { args.get_usize("iters") };
+    let rows = if smoke { 600 } else { args.get_usize("rows") };
+    let reps = if smoke { 2 } else { args.get_usize("reps").max(1) };
+    let seed = args.get_u64("seed");
+
+    let gen = SyntheticCategorical::new(CategoricalConfig::default(), seed);
+    let ds = gen.generate(rows, seed + 1);
+
+    let cfg = {
+        let mut c = TrainConfig::quick(n, SchemeSpec::Poly { s, m }, iters);
+        c.opt = OptChoice::Nag { lr: 1.2 / rows as f32, momentum: 0.9 };
+        c.eval_every = iters; // metrics off the hot path
+        c.seed = seed;
+        c
+    };
+
+    // One full training run; returns wall seconds and (when traced) the
+    // telemetry digest of the last repetition.
+    let run = |traced: bool,
+               ds: &DenseDataset|
+     -> anyhow::Result<(f64, Option<TelemetrySummary>)> {
+        let mut tr = Trainer::new(cfg.clone(), ds, None)?;
+        let rec = if traced { Recorder::enabled() } else { Recorder::disabled() };
+        tr.attach_recorder(&rec);
+        let t0 = Instant::now();
+        let log = tr.run()?;
+        Ok((t0.elapsed().as_secs_f64(), log.telemetry))
+    };
+
+    // Interleave the variants so drift (thermal, cache, scheduler) hits
+    // both equally; keep the minimum, the standard noise-robust pick.
+    let mut untraced = f64::INFINITY;
+    let mut traced = f64::INFINITY;
+    let mut digest: Option<TelemetrySummary> = None;
+    for rep in 0..reps {
+        let (u, _) = run(false, &ds)?;
+        let (t, d) = run(true, &ds)?;
+        untraced = untraced.min(u);
+        traced = traced.min(t);
+        digest = d.or(digest);
+        println!("rep {rep}: untraced {u:.3}s, traced {t:.3}s");
+    }
+    let digest = digest.expect("traced run produces a digest");
+    let overhead = traced / untraced - 1.0;
+
+    let mut table = Table::new(
+        &format!("traced phase breakdown, n = {n}, s = {s}, m = {m}, {iters} iters"),
+        &["phase", "count", "total s", "mean ms", "p50 ms", "p90 ms", "p99 ms"],
+    );
+    for p in &digest.phases {
+        table.row(&[
+            p.phase.clone(),
+            format!("{}", p.count),
+            format!("{:.3}", p.total),
+            format!("{:.3}", p.mean * 1e3),
+            format!("{:.3}", p.p50 * 1e3),
+            format!("{:.3}", p.p90 * 1e3),
+            format!("{:.3}", p.p99 * 1e3),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nwall time: untraced {untraced:.3}s, traced {traced:.3}s \
+         ({:+.2}% overhead)",
+        overhead * 100.0
+    );
+
+    let json_path = args.get_str("json");
+    if !json_path.is_empty() {
+        let phase_objs = digest.phases.iter().map(|p| {
+            JsonObject::new()
+                .field_str("phase", &p.phase)
+                .field_int("count", p.count as i64)
+                .field_num("total_s", p.total)
+                .field_num("mean_s", p.mean)
+                .field_num("p50_s", p.p50)
+                .field_num("p90_s", p.p90)
+                .field_num("p99_s", p.p99)
+                .field_num("max_s", p.max)
+                .build()
+        });
+        let root = JsonObject::new()
+            .field_str("bench", "obs_overhead")
+            .field_int("n", n as i64)
+            .field_int("s", s as i64)
+            .field_int("m", m as i64)
+            .field_int("iters", iters as i64)
+            .field_int("rows", rows as i64)
+            .field_int("reps", reps as i64)
+            .field_int("smoke", i64::from(smoke))
+            .field_num("untraced_secs", untraced)
+            .field_num("traced_secs", traced)
+            .field_num("overhead_frac", overhead)
+            .field_raw("phases", &json_array(phase_objs));
+        std::fs::write(json_path, root.build() + "\n")?;
+        println!("wrote {json_path}");
+    }
+    Ok(())
+}

@@ -21,6 +21,7 @@ use super::wire::crc32_f32s;
 use super::worker::{DelayInjector, WorkerLoop};
 use crate::chaos::{FaultPlan, GatherPolicy};
 use crate::coding::SchemeConfig;
+use crate::obs::{phase, Clock, Recorder};
 use crate::rngs::Pcg64;
 use crate::simulator::DelayParams;
 
@@ -212,6 +213,12 @@ pub struct Cluster {
     task_txs: Vec<Sender<Task>>,
     results: Receiver<WorkerResult>,
     handles: Vec<JoinHandle<()>>,
+    /// Telemetry sink. Disabled (zero-cost) unless the caller attaches
+    /// an enabled recorder via [`Cluster::set_recorder`].
+    obs: Recorder,
+    /// Cumulative virtual time across gathers; anchors per-worker
+    /// response spans on the virtual-clock timeline.
+    virtual_clock: f64,
 }
 
 impl Cluster {
@@ -329,11 +336,30 @@ impl Cluster {
                     .expect("spawn worker"),
             );
         }
-        Cluster { cfg, mode, rule, policy, chaos, task_txs, results: result_rx, handles }
+        Cluster {
+            cfg,
+            mode,
+            rule,
+            policy,
+            chaos,
+            task_txs,
+            results: result_rx,
+            handles,
+            obs: Recorder::disabled(),
+            virtual_clock: 0.0,
+        }
     }
 
     pub fn n(&self) -> usize {
         self.cfg.n
+    }
+
+    /// Attach a telemetry recorder: subsequent gathers emit
+    /// broadcast/gather-wait spans, per-worker response spans on the
+    /// virtual (or wall) timeline, wait-rule outcome counters, and the
+    /// per-worker aggregates behind the straggler report.
+    pub fn set_recorder(&mut self, rec: &Recorder) {
+        self.obs = rec.clone();
     }
 
     /// Fewest responses that satisfy the wait rule (the exact `n - s`
@@ -359,6 +385,18 @@ impl Cluster {
         }
     }
 
+    /// Wait-rule outcome counters for one gather (enabled recorders only).
+    fn record_gather_counters(&self, satisfied: bool, rejected: &[usize], duplicates: usize) {
+        self.obs
+            .add(if satisfied { "gather.satisfied" } else { "gather.unsatisfied" }, 1);
+        if !rejected.is_empty() {
+            self.obs.add("gather.crc_rejects", rejected.len() as i64);
+        }
+        if duplicates > 0 {
+            self.obs.add("gather.duplicates", duplicates as i64);
+        }
+    }
+
     /// Broadcast an iteration and gather responses.
     ///
     /// Virtual mode: waits for one report from every worker (silent
@@ -372,10 +410,14 @@ impl Cluster {
     /// yields `satisfied = false` rather than a panic.
     pub fn run_iteration(&mut self, iter: usize, beta: Arc<Vec<f32>>) -> GatherResult {
         let t0 = Instant::now();
-        for tx in &self.task_txs {
-            // A dead worker (backend error) is a permanent straggler; the
-            // send fails silently and the decode path handles the gap.
-            let _ = tx.send(Task { iter, beta: Arc::clone(&beta) });
+        let ts0 = self.obs.now();
+        {
+            let _b = self.obs.span(phase::BROADCAST).iter(iter as u64);
+            for tx in &self.task_txs {
+                // A dead worker (backend error) is a permanent straggler; the
+                // send fails silently and the decode path handles the gap.
+                let _ = tx.send(Task { iter, beta: Arc::clone(&beta) });
+            }
         }
         let n = self.cfg.n;
         let mut results: Vec<WorkerResult> = Vec::with_capacity(n);
@@ -389,26 +431,29 @@ impl Cluster {
                 // tombstones rather than going silent, and duplicate faults
                 // are deduped before counting.
                 let mut received = 0usize;
-                while received < n {
-                    match self.results.recv() {
-                        Ok(r) if r.iter == iter => {
-                            if seen[r.worker] {
-                                duplicates += 1;
-                                continue;
+                {
+                    let _g = self.obs.span(phase::GATHER_WAIT).iter(iter as u64);
+                    while received < n {
+                        match self.results.recv() {
+                            Ok(r) if r.iter == iter => {
+                                if seen[r.worker] {
+                                    duplicates += 1;
+                                    continue;
+                                }
+                                seen[r.worker] = true;
+                                received += 1;
+                                if r.failed {
+                                    continue;
+                                }
+                                if !Self::crc_ok(&r) {
+                                    rejected.push(r.worker);
+                                    continue;
+                                }
+                                results.push(r);
                             }
-                            seen[r.worker] = true;
-                            received += 1;
-                            if r.failed {
-                                continue;
-                            }
-                            if !Self::crc_ok(&r) {
-                                rejected.push(r.worker);
-                                continue;
-                            }
-                            results.push(r);
+                            Ok(_) => continue, // stale (shouldn't happen here)
+                            Err(_) => break,   // all workers died
                         }
-                        Ok(_) => continue, // stale (shouldn't happen here)
-                        Err(_) => break,   // all workers died
                     }
                 }
                 results.sort_by(|a, b| {
@@ -434,6 +479,33 @@ impl Cluster {
                     .iter()
                     .map(|r| r.compute_secs)
                     .fold(0.0, f64::max);
+                if self.obs.is_enabled() {
+                    // Anchor each response span at the cumulative virtual
+                    // clock so the Chrome trace lays iterations end to end.
+                    let base = self.virtual_clock;
+                    for (i, r) in results.iter().enumerate() {
+                        self.obs.record_worker_response(
+                            r.worker,
+                            iter as u64,
+                            base,
+                            r.virtual_finish,
+                            i < quorum_len,
+                            Clock::Virtual,
+                        );
+                        self.obs.observe(phase::WORKER_COMPUTE, r.compute_secs);
+                    }
+                    let mut healthy = vec![false; n];
+                    for r in &results {
+                        healthy[r.worker] = true;
+                    }
+                    for (w, ok) in healthy.iter().enumerate() {
+                        if !ok {
+                            self.obs.worker_missed(w, iter as u64);
+                        }
+                    }
+                    self.record_gather_counters(satisfied, &rejected, duplicates);
+                }
+                self.virtual_clock += iteration_time;
                 GatherResult {
                     results,
                     quorum_len,
@@ -454,47 +526,75 @@ impl Cluster {
                 let mut tracker = QuorumTracker::new(&self.rule, n);
                 let mut satisfied = false;
                 let mut received = 0usize;
-                while !satisfied && received < n {
-                    match self.results.recv_timeout(slice) {
-                        Ok(r) if r.iter == iter => {
-                            if seen[r.worker] {
-                                duplicates += 1;
-                                continue;
-                            }
-                            seen[r.worker] = true;
-                            received += 1;
-                            if r.failed || !Self::crc_ok(&r) {
-                                if !Self::crc_ok(&r) {
-                                    rejected.push(r.worker);
+                let mut arrivals: Vec<f64> = Vec::new();
+                {
+                    let _g = self.obs.span(phase::GATHER_WAIT).iter(iter as u64);
+                    while !satisfied && received < n {
+                        match self.results.recv_timeout(slice) {
+                            Ok(r) if r.iter == iter => {
+                                if seen[r.worker] {
+                                    duplicates += 1;
+                                    continue;
                                 }
-                                // An unsatisfiable rule is not fatal any
-                                // more: keep gathering — later arrivals
-                                // still feed the degraded decode.
-                                let _ = tracker.fail(r.worker);
-                            } else {
-                                satisfied = tracker.arrive(r.worker);
-                                results.push(r);
-                            }
-                        }
-                        Ok(_) => continue, // stale from a previous iteration
-                        Err(RecvTimeoutError::Timeout) => {
-                            if retries_left == 0 {
-                                break; // deadline spent: degrade with what we have
-                            }
-                            retries_left -= 1;
-                            std::thread::sleep(self.policy.backoff);
-                            // Re-prod only the workers we haven't heard from.
-                            for (w, tx) in self.task_txs.iter().enumerate() {
-                                if !seen[w] {
-                                    let _ =
-                                        tx.send(Task { iter, beta: Arc::clone(&beta) });
+                                seen[r.worker] = true;
+                                received += 1;
+                                if r.failed || !Self::crc_ok(&r) {
+                                    if !Self::crc_ok(&r) {
+                                        rejected.push(r.worker);
+                                    }
+                                    // An unsatisfiable rule is not fatal any
+                                    // more: keep gathering — later arrivals
+                                    // still feed the degraded decode.
+                                    let _ = tracker.fail(r.worker);
+                                } else {
+                                    satisfied = tracker.arrive(r.worker);
+                                    arrivals.push(t0.elapsed().as_secs_f64());
+                                    results.push(r);
                                 }
                             }
+                            Ok(_) => continue, // stale from a previous iteration
+                            Err(RecvTimeoutError::Timeout) => {
+                                if retries_left == 0 {
+                                    break; // deadline spent: degrade with what we have
+                                }
+                                retries_left -= 1;
+                                std::thread::sleep(self.policy.backoff);
+                                // Re-prod only the workers we haven't heard from.
+                                for (w, tx) in self.task_txs.iter().enumerate() {
+                                    if !seen[w] {
+                                        let _ =
+                                            tx.send(Task { iter, beta: Arc::clone(&beta) });
+                                    }
+                                }
+                            }
+                            Err(RecvTimeoutError::Disconnected) => break, // all workers gone
                         }
-                        Err(RecvTimeoutError::Disconnected) => break, // all workers gone
                     }
                 }
                 let iteration_time = t0.elapsed().as_secs_f64();
+                if self.obs.is_enabled() {
+                    for (r, lat) in results.iter().zip(&arrivals) {
+                        // Real-time responses all contributed to the rule
+                        // attempt; workers the rule never heard from show
+                        // up as misses below.
+                        self.obs.record_worker_response(
+                            r.worker,
+                            iter as u64,
+                            ts0,
+                            *lat,
+                            true,
+                            Clock::Wall,
+                        );
+                        self.obs.observe(phase::WORKER_COMPUTE, r.compute_secs);
+                    }
+                    for (w, &heard) in seen.iter().enumerate() {
+                        let healthy = results.iter().any(|r| r.worker == w);
+                        if !heard || !healthy {
+                            self.obs.worker_missed(w, iter as u64);
+                        }
+                    }
+                    self.record_gather_counters(satisfied, &rejected, duplicates);
+                }
                 let worker_compute =
                     results.iter().map(|r| r.compute_secs).fold(0.0, f64::max);
                 let quorum_len = results.len();
@@ -821,6 +921,43 @@ mod tests {
         assert!(!g.satisfied);
         assert_eq!(g.results.len(), 3);
         assert_eq!(g.quorum_len, 3, "unsatisfied gather exposes all survivors");
+    }
+
+    #[test]
+    fn recorder_captures_gather_telemetry() {
+        let (code, backend, l) = setup(5, 1, 2);
+        let mut cluster = Cluster::spawn(
+            *code.config(),
+            backend,
+            ExecutionMode::Virtual,
+            Some(DelayParams::table_vi1()),
+            1,
+        );
+        let rec = Recorder::enabled();
+        cluster.set_recorder(&rec);
+        let beta = Arc::new(vec![0.0f32; l]);
+        for iter in 0..3 {
+            cluster.run_iteration(iter, Arc::clone(&beta));
+        }
+        let s = rec.summary();
+        let count_of = |name: &str| {
+            s.phases.iter().find(|p| p.phase == name).map(|p| p.count).unwrap_or(0)
+        };
+        assert_eq!(count_of(phase::BROADCAST), 3);
+        assert_eq!(count_of(phase::GATHER_WAIT), 3);
+        assert_eq!(count_of(phase::WORKER_COMPUTE), 15, "5 workers × 3 iterations");
+        let workers = &s.stragglers.workers;
+        assert_eq!(workers.len(), 5);
+        assert_eq!(workers.iter().map(|w| w.responses).sum::<u64>(), 15);
+        // the quorum prefix is n - s = 4 each iteration
+        assert_eq!(workers.iter().map(|w| w.used).sum::<u64>(), 12);
+        assert_eq!(workers.iter().map(|w| w.straggled).sum::<u64>(), 3);
+        assert_eq!(workers.iter().map(|w| w.missed).sum::<u64>(), 0);
+        assert!(s.counters.contains(&("gather.satisfied".to_string(), 3)));
+        // the virtual timeline anchors response spans end to end across iterations
+        let evs = rec.events();
+        assert!(evs.iter().any(|e| matches!(e,
+            crate::obs::TraceEvent::Span { clock: Clock::Virtual, ts, .. } if *ts > 0.0)));
     }
 
     #[test]

@@ -51,6 +51,18 @@
 //! skewed fleet (the uniform-load baseline of
 //! `rust/benches/hetero_speedup.rs`).
 //!
+//! **Observability.** [`Trainer::attach_recorder`] threads a
+//! [`crate::obs::Recorder`] through the whole stack: master phase spans
+//! (broadcast → gather_wait → decode → step → eval), per-worker response
+//! latencies on the virtual or wall clock, gather outcome and wire
+//! frame/byte counters, and injected-fault instants. The run's
+//! [`crate::metrics::RunLog`] then carries a
+//! [`crate::obs::TelemetrySummary`] digest, and the raw stream exports to
+//! JSONL ([`crate::obs::Recorder::to_jsonl`]) or a Perfetto-loadable
+//! Chrome trace ([`crate::obs::Recorder::to_chrome`]). The TCP deployment
+//! mirrors this via [`RemoteMaster::set_recorder`] and
+//! [`run_worker_traced`].
+//!
 //! # Example: training on the in-process backend
 //!
 //! ```
@@ -98,8 +110,11 @@ mod worker;
 pub use backend::{ComputeBackend, RustBackend};
 pub use cluster::{Cluster, ExecutionMode, FleetProfile, WaitRule};
 pub use messages::{Task, WorkerResult};
-pub use remote::{run_worker, run_worker_chaos, RemoteGather, RemoteMaster};
+pub use remote::{
+    run_worker, run_worker_chaos, run_worker_traced, RemoteGather, RemoteMaster,
+};
 pub use trainer::{train, OptChoice, SchemeSpec, TrainConfig, Trainer};
+pub use wire::WireCounters;
 // The fleet-shape vocabulary lives in the simulator (it parameterizes the
 // §VI delay model) but is part of the coordinator's configuration surface.
 pub use crate::simulator::SpeedProfile;

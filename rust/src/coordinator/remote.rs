@@ -33,12 +33,13 @@ use anyhow::{bail, Context, Result};
 use super::backend::{ComputeBackend, RustBackend};
 use super::trainer::SchemeSpec;
 use super::wire::{
-    Message, Setup, WireError, MAGIC, SCHEME_APPROX, SCHEME_HETERO, SCHEME_POLY,
-    SCHEME_RANDOM, SCHEME_UNCODED,
+    Message, Setup, WireCounters, WireError, MAGIC, SCHEME_APPROX, SCHEME_HETERO,
+    SCHEME_POLY, SCHEME_RANDOM, SCHEME_UNCODED,
 };
 use crate::chaos::{Effect, FaultKind, FaultPlan, GatherPolicy};
 use crate::coding::{ApproxCode, GradientCode, HeteroCode};
 use crate::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
+use crate::obs::{phase, Clock, Recorder};
 
 /// Rebuild the scheme from a Setup frame (both sides do this, so encode
 /// coefficients and decode weights agree without shipping matrices).
@@ -144,6 +145,12 @@ pub struct RemoteMaster {
     results: Receiver<(usize, ReaderEvent)>,
     /// Connections observed closed (persists across iterations).
     dead: Vec<bool>,
+    /// Framed byte/frame accounting for everything this master sent and
+    /// received (handshake included).
+    counters: WireCounters,
+    /// Telemetry recorder; disabled unless [`RemoteMaster::set_recorder`]
+    /// was called.
+    obs: Recorder,
     _reader_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -155,12 +162,14 @@ impl RemoteMaster {
             (0..setup.n).map(|_| None).collect();
         let (tx, rx) = channel();
         let mut handles = Vec::new();
+        let mut counters = WireCounters::default();
         for _ in 0..setup.n {
             let (stream, peer) = listener.accept().context("accepting worker")?;
             stream.set_nodelay(true).ok();
             let mut reader = BufReader::new(stream.try_clone()?);
             // Handshake: Hello -> Setup.
             let hello = Message::read_from(&mut reader)?;
+            counters.received(&hello);
             let worker_id = match hello {
                 Message::Hello { magic, worker_id } if magic == MAGIC => worker_id as usize,
                 Message::Hello { magic, .. } => bail!("bad magic {magic:#x} from {peer}"),
@@ -173,7 +182,9 @@ impl RemoteMaster {
                 bail!("duplicate worker id {worker_id}");
             }
             let mut writer = BufWriter::new(stream);
-            Message::Setup(setup.clone()).write_to(&mut writer)?;
+            let setup_msg = Message::Setup(setup.clone());
+            setup_msg.write_to(&mut writer)?;
+            counters.sent(&setup_msg);
             writers[worker_id] = Some(writer);
             // Reader thread: pump events into the fan-in channel. Corrupt
             // frames are reported and skipped (the stream stays aligned);
@@ -202,6 +213,8 @@ impl RemoteMaster {
             writers,
             results: rx,
             dead: vec![false; n],
+            counters,
+            obs: Recorder::disabled(),
             _reader_handles: handles,
         })
     }
@@ -213,6 +226,19 @@ impl RemoteMaster {
     /// Override the gather deadline / retry policy.
     pub fn set_gather_policy(&mut self, policy: GatherPolicy) {
         self.policy = policy;
+    }
+
+    /// Framed frame/byte totals for everything sent and received so far
+    /// (handshake, tasks, results, re-sends, corrupt rejects).
+    pub fn wire_counters(&self) -> &WireCounters {
+        &self.counters
+    }
+
+    /// Attach a telemetry recorder: broadcast/gather spans, per-worker
+    /// arrival latencies, and (at shutdown) the wire counters as
+    /// `wire.*` gauges.
+    pub fn set_recorder(&mut self, rec: &Recorder) {
+        self.obs = rec.clone();
     }
 
     /// Broadcast an iteration and gather the first [`Setup::wait_for`]
@@ -227,10 +253,16 @@ impl RemoteMaster {
     /// re-prodded at most `retries` times, then counted as a straggler.
     pub fn run_iteration(&mut self, iter: u64, beta: &[f32]) -> Result<RemoteGather> {
         let t0 = Instant::now();
+        let ts0 = self.obs.now();
         let msg = Message::Task { iter, beta: beta.to_vec() };
-        for w in self.writers.iter_mut() {
-            // A dead connection = permanent straggler.
-            let _ = msg.write_to(w);
+        {
+            let _b = self.obs.span(phase::BROADCAST).iter(iter);
+            for w in self.writers.iter_mut() {
+                // A dead connection = permanent straggler.
+                if msg.write_to(w).is_ok() {
+                    self.counters.sent(&msg);
+                }
+            }
         }
         let n = self.setup.n as usize;
         let quorum = self.setup.wait_for();
@@ -240,29 +272,46 @@ impl RemoteMaster {
         let mut rejected: Vec<usize> = Vec::new();
         let mut seen = vec![false; n];
         let mut resends = vec![0u32; n];
+        let gather_span = self.obs.span(phase::GATHER_WAIT).iter(iter);
         while results.len() < quorum {
             match self.results.recv_timeout(slice) {
-                Ok((wid, ReaderEvent::Msg(m))) => match m {
-                    Message::Result { iter: rit, failed, f, .. } if rit == iter => {
-                        if seen[wid] {
-                            continue; // duplicate delivery
+                Ok((wid, ReaderEvent::Msg(m))) => {
+                    self.counters.received(&m);
+                    match m {
+                        Message::Result { iter: rit, failed, f, .. } if rit == iter => {
+                            if seen[wid] {
+                                continue; // duplicate delivery
+                            }
+                            seen[wid] = true;
+                            if !failed {
+                                self.obs.record_worker_response(
+                                    wid,
+                                    iter,
+                                    ts0,
+                                    t0.elapsed().as_secs_f64(),
+                                    true,
+                                    Clock::Wall,
+                                );
+                                results.push((wid, f));
+                            }
                         }
-                        seen[wid] = true;
-                        if !failed {
-                            results.push((wid, f));
+                        Message::Result { .. } => continue, // stale iteration
+                        other => {
+                            bail!("unexpected message from worker {wid}: {other:?}")
                         }
                     }
-                    Message::Result { .. } => continue, // stale iteration
-                    other => bail!("unexpected message from worker {wid}: {other:?}"),
-                },
+                }
                 Ok((wid, ReaderEvent::Corrupt)) => {
+                    self.counters.rejected();
                     rejected.push(wid);
                     // Bounded re-prod: a deterministic corrupter would
                     // otherwise ping-pong forever.
                     if !seen[wid] && !self.dead[wid] && resends[wid] < self.policy.retries
                     {
                         resends[wid] += 1;
-                        let _ = msg.write_to(&mut self.writers[wid]);
+                        if msg.write_to(&mut self.writers[wid]).is_ok() {
+                            self.counters.sent(&msg);
+                        }
                     }
                 }
                 Ok((wid, ReaderEvent::Closed)) => {
@@ -278,8 +327,10 @@ impl RemoteMaster {
                     retries_left -= 1;
                     std::thread::sleep(self.policy.backoff);
                     for w in 0..n {
-                        if !seen[w] && !self.dead[w] {
-                            let _ = msg.write_to(&mut self.writers[w]);
+                        if !seen[w] && !self.dead[w]
+                            && msg.write_to(&mut self.writers[w]).is_ok()
+                        {
+                            self.counters.sent(&msg);
                         }
                     }
                 }
@@ -295,6 +346,14 @@ impl RemoteMaster {
                 break;
             }
         }
+        drop(gather_span);
+        if self.obs.is_enabled() {
+            for (w, &heard) in seen.iter().enumerate() {
+                if !heard {
+                    self.obs.worker_missed(w, iter);
+                }
+            }
+        }
         let complete = results.len() >= quorum;
         Ok(RemoteGather {
             results,
@@ -306,19 +365,34 @@ impl RemoteMaster {
 
     /// Send Shutdown to everyone.
     pub fn shutdown(mut self) {
+        let msg = Message::Shutdown;
         for w in self.writers.iter_mut() {
-            let _ = Message::Shutdown.write_to(w);
+            if msg.write_to(w).is_ok() {
+                self.counters.sent(&msg);
+            }
         }
+        // Final counter snapshot into the telemetry stream (no-op when
+        // the recorder is disabled).
+        self.counters.export(&self.obs, "wire");
     }
 }
 
 /// Read the next valid frame, logging and skipping corrupt ones (the
-/// stream is still aligned after a checksum failure).
-fn read_skip_corrupt(r: &mut impl Read) -> Result<Message, WireError> {
+/// stream is still aligned after a checksum failure). Valid frames and
+/// corrupt skips both land in `counters`.
+fn read_skip_corrupt(
+    r: &mut impl Read,
+    counters: &mut WireCounters,
+) -> Result<Message, WireError> {
     loop {
         match Message::read_from(r) {
             Err(WireError::Corrupt(why)) => {
+                counters.rejected();
                 eprintln!("skipping corrupt frame: {why}");
+            }
+            Ok(msg) => {
+                counters.received(&msg);
+                return Ok(msg);
             }
             other => return other,
         }
@@ -328,7 +402,7 @@ fn read_skip_corrupt(r: &mut impl Read) -> Result<Message, WireError> {
 /// Worker process body: connect to the master and serve until Shutdown.
 /// Returns the number of tasks served.
 pub fn run_worker(addr: impl ToSocketAddrs, worker_id: usize) -> Result<usize> {
-    run_worker_chaos(addr, worker_id, None)
+    run_worker_traced(addr, worker_id, None, &Recorder::disabled())
 }
 
 /// [`run_worker`] with a fault plan: before answering each task the
@@ -340,13 +414,30 @@ pub fn run_worker_chaos(
     worker_id: usize,
     chaos: Option<FaultPlan>,
 ) -> Result<usize> {
+    run_worker_traced(addr, worker_id, chaos, &Recorder::disabled())
+}
+
+/// [`run_worker_chaos`] with a telemetry recorder: compute spans per
+/// task (tagged with this worker id), `wire.*` frame/byte gauges on
+/// exit, and fault instants for injected effects.
+pub fn run_worker_traced(
+    addr: impl ToSocketAddrs,
+    worker_id: usize,
+    chaos: Option<FaultPlan>,
+    rec: &Recorder,
+) -> Result<usize> {
+    let mut counters = WireCounters::default();
     let stream = TcpStream::connect(addr).context("connecting to master")?;
     stream.set_nodelay(true).ok();
     let raw = stream.try_clone()?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    Message::Hello { magic: MAGIC, worker_id: worker_id as u32 }.write_to(&mut writer)?;
-    let setup = match Message::read_from(&mut reader)? {
+    let hello = Message::Hello { magic: MAGIC, worker_id: worker_id as u32 };
+    hello.write_to(&mut writer)?;
+    counters.sent(&hello);
+    let setup_msg = Message::read_from(&mut reader)?;
+    counters.received(&setup_msg);
+    let setup = match setup_msg {
         Message::Setup(s) => s,
         other => bail!("expected Setup, got {other:?}"),
     };
@@ -357,14 +448,24 @@ pub fn run_worker_chaos(
     let mut served = 0usize;
     let mut out = Vec::new();
     loop {
-        match read_skip_corrupt(&mut reader)? {
+        match read_skip_corrupt(&mut reader, &mut counters)? {
             Message::Task { iter, beta } => {
                 let effect =
                     chaos.as_ref().map_or(Effect::None, |p| p.effect(worker_id, iter));
+                if rec.is_enabled() {
+                    if let Effect::Fault(k) = &effect {
+                        rec.instant(
+                            &format!("fault:{}", k.label()),
+                            Some(worker_id),
+                            Some(iter),
+                        );
+                    }
+                }
                 match effect {
                     Effect::Fault(FaultKind::Reset) => {
                         // Hard reset: slam the socket, no goodbye.
                         let _ = raw.shutdown(std::net::Shutdown::Both);
+                        counters.export(rec, "wire");
                         return Ok(served);
                     }
                     e if e.is_silent() => continue, // crash window / drop
@@ -373,8 +474,11 @@ pub fn run_worker_chaos(
                 if let Effect::Fault(FaultKind::Delay(secs)) = effect {
                     std::thread::sleep(std::time::Duration::from_secs_f64(secs));
                 }
+                let compute_span =
+                    rec.span(phase::WORKER_COMPUTE).worker(worker_id).iter(iter);
                 let failed =
                     backend.encoded_gradient(worker_id, iter as usize, &beta, &mut out).is_err();
+                drop(compute_span);
                 let msg = Message::Result {
                     worker: worker_id as u32,
                     iter,
@@ -392,16 +496,25 @@ pub fn run_worker_chaos(
                         frame[5 + plen / 2] ^= 0x04;
                         writer.write_all(&frame)?;
                         writer.flush()?;
+                        counters.sent(&msg); // same framed length, corrupted
                     }
                     Effect::Fault(FaultKind::Duplicate) => {
                         msg.write_to(&mut writer)?;
+                        counters.sent(&msg);
                         msg.write_to(&mut writer)?;
+                        counters.sent(&msg);
                     }
-                    _ => msg.write_to(&mut writer)?,
+                    _ => {
+                        msg.write_to(&mut writer)?;
+                        counters.sent(&msg);
+                    }
                 }
                 served += 1;
             }
-            Message::Shutdown => return Ok(served),
+            Message::Shutdown => {
+                counters.export(rec, "wire");
+                return Ok(served);
+            }
             other => bail!("unexpected message: {other:?}"),
         }
     }
@@ -454,6 +567,8 @@ mod tests {
             let setup = setup;
             std::thread::spawn(move || -> Result<Vec<f32>> {
                 let mut master = RemoteMaster::listen(listener_addr, setup.clone())?;
+                let rec = Recorder::enabled();
+                master.set_recorder(&rec);
                 let code = scheme_from_setup(&setup)?;
                 let train = dataset_from_setup(&setup);
                 let backend = RustBackend::new(code.as_ref(), &train)?;
@@ -480,7 +595,37 @@ mod tests {
                         *b -= lr * g;
                     }
                 }
+                // Wire accounting: 5 Setups out, 5 Tasks per iteration
+                // out; 5 Hellos in plus every Result the gather drained
+                // (the final iteration's straggler may stay queued).
+                let wc = *master.wire_counters();
+                assert_eq!(wc.corrupt_rejects, 0);
+                assert_eq!(wc.tx_frames, 5 + 5 * 5, "Setups + Tasks");
+                assert!(wc.rx_frames >= 5 + 5 * 4, "Hellos + quorum Results");
+                assert!(
+                    wc.rx_bytes > wc.rx_frames * 9,
+                    "framed bytes exceed bare frame overhead"
+                );
                 master.shutdown();
+                // Telemetry: one broadcast/gather span per iteration and
+                // 4 used + 1 missed response per iteration; shutdown
+                // exported the wire gauges (5 Shutdowns on top).
+                let summary = rec.summary();
+                for ph in [phase::BROADCAST, phase::GATHER_WAIT] {
+                    let st =
+                        summary.phases.iter().find(|p| p.phase == ph).unwrap();
+                    assert_eq!(st.count, 5, "{ph}");
+                }
+                let used: u64 =
+                    summary.stragglers.workers.iter().map(|w| w.used).sum();
+                let missed: u64 =
+                    summary.stragglers.workers.iter().map(|w| w.missed).sum();
+                assert_eq!(used, 20);
+                assert_eq!(missed, 5);
+                assert!(summary
+                    .counters
+                    .iter()
+                    .any(|(k, v)| k == "wire.tx_frames" && *v == 35));
                 Ok(beta)
             })
         };

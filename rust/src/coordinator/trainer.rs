@@ -6,6 +6,7 @@ use std::time::Instant;
 
 use super::backend::{ComputeBackend, RustBackend};
 use super::cluster::{Cluster, ExecutionMode, FleetProfile, GatherResult, WaitRule};
+use super::wire::framed_result_bytes;
 use crate::chaos::{ChaosConfig, FaultEvent, FaultLog, GatherPolicy, LadderRung};
 use crate::coding::{
     ls_partial_decode, quorum_count, ApproxCode, Decoder, GradientCode, HeteroCode,
@@ -14,8 +15,9 @@ use crate::coding::{
 use crate::data::{auc, DenseDataset, SyntheticCategorical};
 use crate::metrics::{IterationRecord, RunLog};
 use crate::model::LogisticModel;
+use crate::obs::{phase, Recorder};
 use crate::optim::{Momentum, Nag, Optimizer, Sgd};
-use crate::simulator::{DelayParams, SpeedProfile};
+use crate::simulator::{expected_wait_time, DelayParams, SpeedProfile};
 
 /// Which coding scheme to deploy.
 #[derive(Debug, Clone)]
@@ -169,6 +171,14 @@ pub struct Trainer {
     /// Eval data (train loss / test AUC); train eval is subsampled.
     train_eval: DenseDataset,
     test: Option<DenseDataset>,
+    /// Telemetry recorder; disabled (and free) unless
+    /// [`Trainer::attach_recorder`] was called.
+    obs: Recorder,
+    /// Fleet speeds the delay injection simulates (kept for the §VI
+    /// model-deviation line in the telemetry digest).
+    speeds: Vec<f64>,
+    /// Per-worker compute load in units of one partition's gradient.
+    work: Vec<f64>,
 }
 
 impl Trainer {
@@ -270,7 +280,7 @@ impl Trainer {
             cfg.delays,
             cfg.seed,
             rule,
-            Some(FleetProfile { speeds, work }),
+            Some(FleetProfile { speeds: speeds.clone(), work: work.clone() }),
             plan,
             policy,
         );
@@ -300,12 +310,25 @@ impl Trainer {
             decoder_cache_misses: 0,
             train_eval,
             test,
+            obs: Recorder::disabled(),
+            speeds,
+            work,
         })
     }
 
     /// Fewest responders the master proceeds at each iteration.
     pub fn wait_for(&self) -> usize {
         self.wait_for
+    }
+
+    /// Attach a telemetry recorder. The trainer tags the master phases
+    /// (iteration, decode, step, eval) and mirrors injected faults into
+    /// the event stream; the recorder is forwarded to the cluster, which
+    /// adds broadcast/gather spans and per-worker response latencies.
+    /// Call before [`Trainer::run`]; a disabled recorder stays a no-op.
+    pub fn attach_recorder(&mut self, rec: &Recorder) {
+        self.obs = rec.clone();
+        self.cluster.set_recorder(rec);
     }
 
     /// Bitmask cache key for a sorted responder set (n <= 64).
@@ -324,6 +347,7 @@ impl Trainer {
         let mut faults = FaultLog::new();
         let mut consecutive_stale = 0usize;
         for iter in 0..self.cfg.iters {
+            let _iteration_span = self.obs.span(phase::ITERATION).iter(iter as u64);
             let beta = Arc::new(self.opt.eval_point().to_vec());
             let gather = self.cluster.run_iteration(iter, beta);
             let t0 = Instant::now();
@@ -333,6 +357,13 @@ impl Trainer {
             if let Some(c) = &chaos {
                 for (w, kind) in c.plan.events_at(iter as u64) {
                     faults.record(iter as u64, Some(w), FaultEvent::Injected(kind));
+                    if self.obs.is_enabled() {
+                        self.obs.instant(
+                            &format!("fault:{}", kind.label()),
+                            Some(w),
+                            Some(iter as u64),
+                        );
+                    }
                 }
             }
             for &w in &gather.rejected {
@@ -355,6 +386,8 @@ impl Trainer {
                     },
                 );
             }
+
+            let decode_span = self.obs.span(phase::DECODE).iter(iter as u64);
 
             // Responders: the arrival prefix that satisfied the wait rule
             // (the exact n-s, a quorum override, or the heterogeneous
@@ -413,6 +446,7 @@ impl Trainer {
                     }
                 }
             };
+            drop(decode_span);
             if rung == LadderRung::Stale {
                 consecutive_stale += 1;
                 anyhow::ensure!(
@@ -431,12 +465,16 @@ impl Trainer {
                     FaultEvent::Rung { rung, residual: decode_residual },
                 );
             }
-            self.opt.step(&grad);
+            {
+                let _step_span = self.obs.span(phase::STEP).iter(iter as u64);
+                self.opt.step(&grad);
+            }
             let master_compute = t0.elapsed().as_secs_f64();
 
             sim_clock += gather.iteration_time;
             let evaluate = iter % self.cfg.eval_every == 0 || iter + 1 == self.cfg.iters;
             let (loss, auc_val) = if evaluate {
+                let _eval_span = self.obs.span(phase::EVAL).iter(iter as u64);
                 let beta_now = self.opt.iterate();
                 let loss = LogisticModel::loss(&self.train_eval, beta_now);
                 let auc_val = self.test.as_ref().map(|t| {
@@ -454,6 +492,7 @@ impl Trainer {
                 worker_compute: gather.worker_compute,
                 responders,
                 floats_transmitted: gather.results.len() * self.out_dim,
+                wire_bytes: gather.results.len() * framed_result_bytes(self.out_dim),
                 decode_residual,
                 loss,
                 auc: auc_val,
@@ -463,6 +502,29 @@ impl Trainer {
         log.decoder_cache_hits = self.decoder_cache_hits;
         log.decoder_cache_misses = self.decoder_cache_misses;
         log.faults = faults;
+        if self.obs.is_enabled() {
+            // Telemetry digest: phase breakdown, counters, and the
+            // straggler report with the realized mean iteration time set
+            // against the §VI model's expectation for this fleet + rule.
+            let mut summary = self.obs.summary();
+            let model = self.cfg.delays.as_ref().map(|p| {
+                let groups = match self.cluster.rule() {
+                    WaitRule::PerGroup(gs) => gs.clone(),
+                    WaitRule::Count(c) | WaitRule::Deadline { count: c, .. } => {
+                        vec![((0..self.cfg.n).collect(), *c)]
+                    }
+                };
+                expected_wait_time(
+                    p,
+                    self.code.config().m,
+                    &self.work,
+                    &self.speeds,
+                    &groups,
+                )
+            });
+            summary.stragglers.set_model(model, log.mean_iteration_sim_time());
+            log.telemetry = Some(summary);
+        }
         Ok(log)
     }
 
@@ -764,6 +826,50 @@ mod tests {
             max_diff / scale < 1e-2,
             "trajectory divergence {max_diff} (scale {scale})"
         );
+    }
+
+    #[test]
+    fn attached_recorder_produces_a_telemetry_digest() {
+        let (train_ds, _) = dataset(400, 141);
+        let cfg = TrainConfig::quick(5, SchemeSpec::Poly { s: 1, m: 2 }, 12);
+        let mut tr = Trainer::new(cfg, &train_ds, None).unwrap();
+        let rec = Recorder::enabled();
+        tr.attach_recorder(&rec);
+        let log = tr.run().unwrap();
+        let tel = log.telemetry.as_ref().expect("traced run carries a digest");
+        // Every master phase fired once per iteration (eval is sparser).
+        for ph in [
+            phase::ITERATION,
+            phase::BROADCAST,
+            phase::GATHER_WAIT,
+            phase::DECODE,
+            phase::STEP,
+        ] {
+            let st = tel
+                .phases
+                .iter()
+                .find(|p| p.phase == ph)
+                .unwrap_or_else(|| panic!("missing phase {ph}"));
+            assert_eq!(st.count, 12, "{ph}");
+        }
+        // quick() injects table_vi1 delays, so the §VI model line exists
+        // and the realized mean can be set against it.
+        assert!(tel.stragglers.model_expected.unwrap() > 0.0);
+        assert!(tel.stragglers.deviation.is_some());
+        assert_eq!(tel.stragglers.workers.len(), 5);
+        // Framed wire accounting strictly exceeds the raw payload bytes.
+        assert!(log
+            .records
+            .iter()
+            .all(|r| r.wire_bytes > r.floats_transmitted * 4));
+    }
+
+    #[test]
+    fn untraced_run_carries_no_telemetry() {
+        let (train_ds, _) = dataset(300, 143);
+        let cfg = TrainConfig::quick(4, SchemeSpec::Poly { s: 1, m: 1 }, 5);
+        let (log, _) = train(cfg, &train_ds, None).unwrap();
+        assert!(log.telemetry.is_none());
     }
 
     #[test]

@@ -46,6 +46,22 @@ pub const SCHEME_UNCODED: u8 = 2;
 pub const SCHEME_APPROX: u8 = 3;
 pub const SCHEME_HETERO: u8 = 4;
 
+/// Framing bytes wrapped around every payload: the `u32` length
+/// prefix, the `u8` tag, and the trailing `u32` CRC32.
+pub const FRAME_OVERHEAD: usize = 4 + 1 + 4;
+
+/// Fixed `Result` payload header ahead of the f32 gradient: `u32`
+/// worker + `u64` iter + `u8` failed flag.
+pub const RESULT_HEADER_BYTES: usize = 4 + 8 + 1;
+
+/// Bytes a `Result` frame carrying `floats` f32 values occupies on the
+/// wire, framing included. This is what byte-accurate communication
+/// accounting must charge per gathered gradient — `floats × 4` alone
+/// undercounts by the frame and header overhead.
+pub const fn framed_result_bytes(floats: usize) -> usize {
+    FRAME_OVERHEAD + RESULT_HEADER_BYTES + 4 * floats
+}
+
 /// Maximum accepted payload. Deliberately far below the old 1 GiB guard:
 /// a corrupted length prefix must not be able to request a giant
 /// allocation (the payload read is additionally bounded by
@@ -339,7 +355,7 @@ impl Message {
             Message::Shutdown => TAG_SHUTDOWN,
         };
         let crc = frame_crc(tag, &payload);
-        let mut frame = Vec::with_capacity(payload.len() + 9);
+        let mut frame = Vec::with_capacity(payload.len() + FRAME_OVERHEAD);
         frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         frame.push(tag);
         frame.extend_from_slice(&payload);
@@ -414,6 +430,29 @@ impl Message {
         Ok(msg)
     }
 
+    /// Payload bytes this message encodes to (everything between the
+    /// tag and the CRC), computed without serializing.
+    pub fn payload_len(&self) -> usize {
+        match self {
+            Message::Hello { .. } => 4 + 4,
+            Message::Setup(s) => {
+                // n d s m | kind | seeds | rows dim quorum | 2 × (len + entries)
+                4 * 4 + 1 + 8 + 8 + 4 + 4 + 4
+                    + (4 + 4 * s.loads.len())
+                    + (4 + 4 * s.speeds_milli.len())
+            }
+            Message::Task { beta, .. } => 8 + 4 * beta.len(),
+            Message::Result { f, .. } => RESULT_HEADER_BYTES + 4 * f.len(),
+            Message::Shutdown => 0,
+        }
+    }
+
+    /// Total bytes this message occupies on the wire, framing included:
+    /// `FRAME_OVERHEAD + payload_len()`. Always equals `encode().len()`.
+    pub fn wire_len(&self) -> usize {
+        FRAME_OVERHEAD + self.payload_len()
+    }
+
     /// Write a full frame to a stream.
     pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
         w.write_all(&self.encode())?;
@@ -454,6 +493,48 @@ impl Message {
             )));
         }
         Message::decode(tag, &payload)
+    }
+}
+
+/// Per-direction frame/byte accounting for one endpoint. Maintained by
+/// the remote master and TCP workers and exported into the telemetry
+/// counter stream (`wire.tx_*` / `wire.rx_*` / `wire.corrupt_rejects`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireCounters {
+    pub tx_frames: u64,
+    pub tx_bytes: u64,
+    pub rx_frames: u64,
+    pub rx_bytes: u64,
+    /// Frames that arrived whole but failed validation (CRC/tag/shape)
+    /// and were skipped.
+    pub corrupt_rejects: u64,
+}
+
+impl WireCounters {
+    /// Account one transmitted message (framed size).
+    pub fn sent(&mut self, msg: &Message) {
+        self.tx_frames += 1;
+        self.tx_bytes += msg.wire_len() as u64;
+    }
+
+    /// Account one received, validated message (framed size).
+    pub fn received(&mut self, msg: &Message) {
+        self.rx_frames += 1;
+        self.rx_bytes += msg.wire_len() as u64;
+    }
+
+    /// Account one corrupt frame that was skipped.
+    pub fn rejected(&mut self) {
+        self.corrupt_rejects += 1;
+    }
+
+    /// Export into a telemetry recorder as gauges under `prefix.`.
+    pub fn export(&self, rec: &crate::obs::Recorder, prefix: &str) {
+        rec.set(&format!("{prefix}.tx_frames"), self.tx_frames as i64);
+        rec.set(&format!("{prefix}.tx_bytes"), self.tx_bytes as i64);
+        rec.set(&format!("{prefix}.rx_frames"), self.rx_frames as i64);
+        rec.set(&format!("{prefix}.rx_bytes"), self.rx_bytes as i64);
+        rec.set(&format!("{prefix}.corrupt_rejects"), self.corrupt_rejects as i64);
     }
 }
 
@@ -513,6 +594,66 @@ mod tests {
         });
         roundtrip(Message::Result { worker: 1, iter: 0, failed: true, f: vec![] });
         roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn wire_len_matches_encoded_frame_for_every_variant() {
+        let variants = vec![
+            Message::Hello { magic: MAGIC, worker_id: 3 },
+            Message::Setup(Setup::homogeneous(10, 3, 1, 2, SCHEME_POLY, 7, 99, 640, 512)),
+            Message::Setup(Setup {
+                loads: vec![3, 3, 5],
+                speeds_milli: vec![1000, 1000, 4000],
+                ..Setup::homogeneous(3, 5, 1, 2, SCHEME_HETERO, 7, 99, 640, 512)
+            }),
+            Message::Task { iter: 42, beta: vec![1.5; 17] },
+            Message::Result { worker: 9, iter: 42, failed: false, f: vec![0.125; 7] },
+            Message::Result { worker: 1, iter: 0, failed: true, f: vec![] },
+            Message::Shutdown,
+        ];
+        for msg in variants {
+            let frame = msg.encode();
+            assert_eq!(frame.len(), msg.wire_len(), "wire_len must match encode: {msg:?}");
+            assert_eq!(frame.len(), FRAME_OVERHEAD + msg.payload_len());
+        }
+    }
+
+    #[test]
+    fn framed_result_bytes_matches_frame_layout() {
+        // Against the documented layout: u32 len | u8 tag | payload |
+        // u32 crc, with a 13-byte Result header before the floats.
+        assert_eq!(FRAME_OVERHEAD, 9);
+        assert_eq!(RESULT_HEADER_BYTES, 13);
+        for floats in [0usize, 1, 7, 512] {
+            let msg =
+                Message::Result { worker: 0, iter: 1, failed: false, f: vec![0.5; floats] };
+            assert_eq!(msg.encode().len(), framed_result_bytes(floats));
+        }
+        // the framing really is what v3 (MAGIC's protocol rev) promises:
+        // overhead beyond the raw floats is constant per frame
+        assert_eq!(MAGIC & 0xffff, 3, "protocol rev with per-frame CRC framing");
+        assert_eq!(framed_result_bytes(10) - framed_result_bytes(0), 40);
+    }
+
+    #[test]
+    fn wire_counters_account_framed_bytes() {
+        let mut wc = WireCounters::default();
+        let task = Message::Task { iter: 1, beta: vec![0.0; 4] };
+        let result = Message::Result { worker: 0, iter: 1, failed: false, f: vec![0.0; 4] };
+        wc.sent(&task);
+        wc.sent(&task);
+        wc.received(&result);
+        wc.rejected();
+        assert_eq!(wc.tx_frames, 2);
+        assert_eq!(wc.tx_bytes, 2 * task.encode().len() as u64);
+        assert_eq!(wc.rx_frames, 1);
+        assert_eq!(wc.rx_bytes, framed_result_bytes(4) as u64);
+        assert_eq!(wc.corrupt_rejects, 1);
+        let rec = crate::obs::Recorder::enabled();
+        wc.export(&rec, "wire");
+        let counters = rec.counters();
+        assert!(counters.contains(&("wire.rx_bytes".into(), framed_result_bytes(4) as i64)));
+        assert!(counters.contains(&("wire.corrupt_rejects".into(), 1)));
     }
 
     #[test]

@@ -36,6 +36,9 @@
 //!   duplicate/delay/reset plans), the gather deadline policy, the
 //!   degradation ladder the trainer walks when responders run short, and
 //!   the fault log surfaced through metrics and the CLI.
+//! - [`obs`] — zero-dependency telemetry: RAII phase spans, counters,
+//!   log-bucketed latency histograms, JSONL + Chrome-trace export, and
+//!   per-worker straggler attribution with §VI-model deviation.
 //! - `runtime` — PJRT execution of AOT artifacts (`xla` crate); compiled
 //!   only with the `pjrt` cargo feature, since the `xla` dependency is
 //!   not available in the offline build environment.
@@ -56,6 +59,7 @@ pub mod data;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod rngs;
 #[cfg(feature = "pjrt")]

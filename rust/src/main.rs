@@ -10,6 +10,10 @@
 //! - `chaos-report` train under an injected fault plan and dump the
 //!                  fault log, rung tally, and the simulator's binomial
 //!                  prediction of the degraded fraction
+//! - `trace-report` summarize a telemetry JSONL captured with
+//!                  `train --trace <path>` (or `worker --trace`): phase
+//!                  breakdown, straggler attribution, wire counters;
+//!                  `--chrome out.json` exports a Perfetto-loadable trace
 //! - `plan`         §VI model: optimal (d, s, m) for given delay parameters
 //! - `plan-hetero`  heterogeneous load planner: optimized per-worker load
 //!                  vector and predicted speedup over uniform placement
@@ -60,9 +64,22 @@ fn app() -> App {
                     "",
                     "fault-injection spec: crash=P,drop=P,corrupt=P,dup=P,delay=P,reset=P[,delay_secs=S][,restart=K][,seed=N]; empty = off",
                 )
+                .flag(
+                    "trace",
+                    "",
+                    "write telemetry JSONL to this path and print the phase breakdown; empty = off",
+                )
                 .switch("pjrt", "use the AOT PJRT backend (needs --features pjrt + artifacts)")
                 .switch("no-delays", "disable straggler injection")
                 .switch("csv", "dump per-iteration CSV to stdout"),
+        )
+        .command(
+            Command::new(
+                "trace-report",
+                "summarize a telemetry JSONL (from train/worker --trace): phase table, stragglers, counters",
+            )
+            .flag("chrome", "", "also write a Chrome trace-event JSON here (load in Perfetto / chrome://tracing)")
+            .switch("csv", "dump per-phase stats as CSV"),
         )
         .command(
             Command::new(
@@ -170,6 +187,11 @@ fn app() -> App {
                     "chaos",
                     "",
                     "fault-injection spec for this fleet (same grammar and seed on every worker); empty = off",
+                )
+                .flag(
+                    "trace",
+                    "",
+                    "write this worker's telemetry JSONL (compute spans, wire counters) to this path; empty = off",
                 ),
         )
 }
@@ -328,7 +350,18 @@ fn cmd_worker(a: gradcode::cli::Args) -> anyhow::Result<()> {
         }
     };
     println!("worker {id}: connecting to {}", a.get_str("connect"));
-    let served = gradcode::coordinator::run_worker_chaos(a.get_str("connect"), id, plan)?;
+    let trace_path = a.get_str("trace").to_string();
+    let rec = if trace_path.is_empty() {
+        gradcode::obs::Recorder::disabled()
+    } else {
+        gradcode::obs::Recorder::enabled()
+    };
+    let served =
+        gradcode::coordinator::run_worker_traced(a.get_str("connect"), id, plan, &rec)?;
+    if !trace_path.is_empty() {
+        std::fs::write(&trace_path, rec.to_jsonl())?;
+        println!("worker {id}: trace -> {trace_path}");
+    }
     println!("worker {id}: served {served} tasks, shutting down");
     Ok(())
 }
@@ -368,6 +401,7 @@ fn run_pjrt_train(
     scheme: SchemeSpec,
     train_ds: &DenseDataset,
     test_ds: &DenseDataset,
+    rec: &gradcode::obs::Recorder,
 ) -> anyhow::Result<RunLog> {
     use gradcode::coordinator::Trainer;
     use gradcode::runtime::{Manifest, PjrtBackend};
@@ -385,6 +419,7 @@ fn run_pjrt_train(
     let backend =
         Arc::new(PjrtBackend::new(&Manifest::default_dir(), code.as_ref(), &padded)?);
     let mut tr = Trainer::with_backend(cfg, code, backend, &padded, Some(test_ds))?;
+    tr.attach_recorder(rec);
     tr.run()
 }
 
@@ -394,6 +429,7 @@ fn run_pjrt_train(
     _scheme: SchemeSpec,
     _train_ds: &DenseDataset,
     _test_ds: &DenseDataset,
+    _rec: &gradcode::obs::Recorder,
 ) -> anyhow::Result<RunLog> {
     anyhow::bail!("--pjrt requires rebuilding with `--features pjrt` (xla dependency)")
 }
@@ -439,6 +475,14 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
         fleet: Some(profile),
         chaos: parse_chaos_flag(&a, n)?,
     };
+    // An empty --trace keeps the recorder disabled (zero-cost); a path
+    // arms it across the trainer/cluster stack.
+    let trace_path = a.get_str("trace").to_string();
+    let rec = if trace_path.is_empty() {
+        gradcode::obs::Recorder::disabled()
+    } else {
+        gradcode::obs::Recorder::enabled()
+    };
     let log = if a.get_bool("pjrt") {
         // The AOT artifacts are fixed-shape per (n, d, m) with uniform
         // equal shards; the hetero scheme's per-worker loads and
@@ -448,21 +492,28 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
             "--pjrt does not support --scheme hetero (per-worker loads \
              don't match the fixed-shape artifacts); use the rust backend"
         );
-        run_pjrt_train(cfg, scheme, &train_ds, &test_ds)?
+        run_pjrt_train(cfg, scheme, &train_ds, &test_ds, &rec)?
     } else {
-        let (log, _beta) = train(cfg, &train_ds, Some(&test_ds))?;
-        log
+        let mut tr = gradcode::coordinator::Trainer::new(cfg, &train_ds, Some(&test_ds))?;
+        tr.attach_recorder(&rec);
+        tr.run()?
     };
     println!(
-        "scheme={} iters={} sim_time={:.2}s mean_iter={:.3}s floats={} final_loss={:.4} final_auc={:.4}",
+        "scheme={} iters={} sim_time={:.2}s mean_iter={:.3}s floats={} wire_bytes={} final_loss={:.4} final_auc={:.4}",
         log.scheme,
         log.records.len(),
         log.total_sim_time(),
         log.mean_iteration_sim_time(),
         log.total_floats_transmitted(),
+        log.total_wire_bytes(),
         log.final_loss().unwrap_or(f64::NAN),
         log.final_auc().unwrap_or(f64::NAN),
     );
+    if let Some((p50, p95, p99)) = log.sim_time_quantiles() {
+        println!(
+            "iteration sim-time quantiles: p50 {p50:.4}s  p95 {p95:.4}s  p99 {p99:.4}s"
+        );
+    }
     if let Some(res) = log.mean_decode_residual() {
         println!("mean decode residual = {res:.5} (approximate recovery)");
     }
@@ -477,8 +528,59 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
     if !log.faults.is_empty() {
         println!("chaos: {}", log.faults.summary());
     }
+    if !trace_path.is_empty() {
+        if let Some(tel) = &log.telemetry {
+            print!("{}", tel.render());
+        }
+        std::fs::write(&trace_path, rec.to_jsonl())?;
+        println!(
+            "trace: {} events -> {trace_path} (inspect with `gradcode trace-report {trace_path}`)",
+            rec.events().len()
+        );
+    }
     if a.get_bool("csv") {
         print!("{}", log.to_csv());
+    }
+    Ok(())
+}
+
+fn cmd_trace_report(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    use gradcode::obs::Recorder;
+    let files = a.positional();
+    anyhow::ensure!(
+        !files.is_empty(),
+        "usage: gradcode trace-report <trace.jsonl>… [--chrome out.json] [--csv]"
+    );
+    // Multiple files (e.g. a master trace plus per-worker traces from
+    // `worker --trace`) merge into one stream: the JSONL format is
+    // line-oriented and replay is order-insensitive per aggregate.
+    let mut text = String::new();
+    for f in files {
+        let chunk = std::fs::read_to_string(f)
+            .map_err(|e| anyhow::anyhow!("reading {f}: {e}"))?;
+        text.push_str(&chunk);
+        if !text.ends_with('\n') {
+            text.push('\n');
+        }
+    }
+    let rec = Recorder::from_jsonl(&text).map_err(|e| anyhow::anyhow!(e))?;
+    let summary = rec.summary();
+    print!("{}", summary.render());
+    if a.get_bool("csv") {
+        println!("phase,count,total,mean,p50,p90,p99,max");
+        for p in &summary.phases {
+            println!(
+                "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}",
+                p.phase, p.count, p.total, p.mean, p.p50, p.p90, p.p99, p.max
+            );
+        }
+    }
+    let chrome = a.get_str("chrome");
+    if !chrome.is_empty() {
+        std::fs::write(chrome, rec.to_chrome())?;
+        println!(
+            "chrome trace -> {chrome} (load in Perfetto or chrome://tracing)"
+        );
     }
     Ok(())
 }
@@ -754,6 +856,7 @@ fn main() -> anyhow::Result<()> {
         Ok((name, args)) => match name.as_str() {
             "info" => cmd_info(),
             "train" => cmd_train(args),
+            "trace-report" => cmd_trace_report(args),
             "chaos-report" => cmd_chaos_report(args),
             "plan" => cmd_plan(args),
             "plan-hetero" => cmd_plan_hetero(args),

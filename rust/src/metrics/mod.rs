@@ -4,6 +4,7 @@
 use std::fmt::Write as _;
 
 use crate::chaos::{FaultLog, LadderRung};
+use crate::obs::{Histogram, TelemetrySummary};
 
 /// One training iteration as observed by the master.
 #[derive(Debug, Clone)]
@@ -23,6 +24,10 @@ pub struct IterationRecord {
     pub responders: Vec<usize>,
     /// f32 values transmitted by all workers this iteration (comm cost).
     pub floats_transmitted: usize,
+    /// Bytes those results occupy on the wire, framing included
+    /// (`wire::framed_result_bytes` per responder): payload floats plus
+    /// the per-frame length/tag/CRC and Result-header overhead.
+    pub wire_bytes: usize,
     /// Coefficient-space decoding residual reported by the scheme
     /// (`Some` only for approximate partial recovery; 0 = exact).
     pub decode_residual: Option<f64>,
@@ -48,6 +53,10 @@ pub struct RunLog {
     /// Injected faults and recovery actions observed during the run
     /// (empty unless chaos injection was enabled).
     pub faults: FaultLog,
+    /// Telemetry digest (phase breakdown, counters, straggler report);
+    /// `Some` only when the run was traced with an enabled
+    /// [`Recorder`](crate::obs::Recorder).
+    pub telemetry: Option<TelemetrySummary>,
 }
 
 impl RunLog {
@@ -58,6 +67,7 @@ impl RunLog {
             decoder_cache_hits: 0,
             decoder_cache_misses: 0,
             faults: FaultLog::new(),
+            telemetry: None,
         }
     }
 
@@ -75,8 +85,11 @@ impl RunLog {
         counts
     }
 
-    /// Fraction of iterations served from the decoder cache (`None`
-    /// before any decode happened).
+    /// Fraction of *decodes* served from the decoder cache (`None`
+    /// before any decode happened). Note this is per decode, not per
+    /// iteration: stale iterations decode nothing (contributing to
+    /// neither count), so on a run with stale fallbacks the denominator
+    /// is smaller than the iteration count.
     pub fn decoder_cache_hit_rate(&self) -> Option<f64> {
         let total = self.decoder_cache_hits + self.decoder_cache_misses;
         (total > 0).then(|| self.decoder_cache_hits as f64 / total as f64)
@@ -99,6 +112,23 @@ impl RunLog {
 
     pub fn total_floats_transmitted(&self) -> usize {
         self.records.iter().map(|r| r.floats_transmitted).sum()
+    }
+
+    /// Total framed bytes the gathered results occupied on the wire
+    /// (see [`IterationRecord::wire_bytes`]).
+    pub fn total_wire_bytes(&self) -> usize {
+        self.records.iter().map(|r| r.wire_bytes).sum()
+    }
+
+    /// `(p50, p95, p99)` of per-iteration `sim_time`, estimated via a
+    /// log-bucketed [`Histogram`] (≈ 9% relative bucketing error; p99
+    /// of a short run degenerates to the max). `None` on an empty log.
+    pub fn sim_time_quantiles(&self) -> Option<(f64, f64, f64)> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let h = Histogram::from_values(self.records.iter().map(|r| r.sim_time));
+        Some((h.p50(), h.p95(), h.p99()))
     }
 
     pub fn final_auc(&self) -> Option<f64> {
@@ -132,12 +162,12 @@ impl RunLog {
     /// CSV with one row per iteration.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,sim_time,sim_clock,master_compute,worker_compute,n_responders,floats,decode_residual,loss,auc,rung\n",
+            "iter,sim_time,sim_clock,master_compute,worker_compute,n_responders,floats,wire_bytes,decode_residual,loss,auc,rung\n",
         );
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{},{}",
+                "{},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{},{},{}",
                 r.iter,
                 r.sim_time,
                 r.sim_clock,
@@ -145,6 +175,7 @@ impl RunLog {
                 r.worker_compute,
                 r.responders.len(),
                 r.floats_transmitted,
+                r.wire_bytes,
                 r.decode_residual.map_or(String::new(), |v| format!("{v:.6}")),
                 r.loss.map_or(String::new(), |v| format!("{v:.6}")),
                 r.auc.map_or(String::new(), |v| format!("{v:.6}")),
@@ -168,6 +199,7 @@ mod tests {
             worker_compute: 0.0,
             responders: vec![0, 1],
             floats_transmitted: 10,
+            wire_bytes: 84, // 2 responders × framed_result_bytes(5 floats each)
             decode_residual: None,
             loss: None,
             auc,
@@ -199,6 +231,26 @@ mod tests {
     }
 
     #[test]
+    fn decoder_cache_hit_rate_is_per_decode_not_per_iteration() {
+        // 10 iterations, but 2 of them were served stale (no decode at
+        // all): the rate's denominator is the 8 decodes, not the 10
+        // iterations — 6 hits is 6/8, not 6/10.
+        let mut log = RunLog::new("t");
+        for i in 0..10 {
+            let mut r = rec(i, 1.0, i as f64 + 1.0, None);
+            if i >= 8 {
+                r.rung = LadderRung::Stale;
+            }
+            log.push(r);
+        }
+        log.decoder_cache_hits = 6;
+        log.decoder_cache_misses = 2;
+        assert_eq!(log.records.len(), 10);
+        assert_eq!(log.decoder_cache_hit_rate(), Some(0.75));
+        assert_ne!(log.decoder_cache_hit_rate(), Some(0.6));
+    }
+
+    #[test]
     fn aggregates() {
         let mut log = RunLog::new("test");
         log.push(rec(0, 2.0, 2.0, None));
@@ -206,8 +258,28 @@ mod tests {
         assert_eq!(log.total_sim_time(), 6.0);
         assert_eq!(log.mean_iteration_sim_time(), 3.0);
         assert_eq!(log.total_floats_transmitted(), 20);
+        assert_eq!(log.total_wire_bytes(), 168);
         assert_eq!(log.final_auc(), Some(0.9));
         assert_eq!(log.auc_curve(), vec![(6.0, 0.9)]);
+        assert!(log.telemetry.is_none(), "untraced runs carry no telemetry digest");
+    }
+
+    #[test]
+    fn sim_time_quantiles_come_from_the_histogram() {
+        let mut log = RunLog::new("t");
+        assert_eq!(log.sim_time_quantiles(), None);
+        let mut clock = 0.0;
+        for i in 0..100 {
+            let t = (i + 1) as f64 * 0.01; // 0.01 .. 1.0
+            clock += t;
+            log.push(rec(i, t, clock, None));
+        }
+        let (p50, p95, p99) = log.sim_time_quantiles().unwrap();
+        assert!(p50 <= p95 && p95 <= p99, "quantiles must be monotone");
+        // within the histogram's ≈9% bucketing error of the true values
+        assert!((p50 / 0.50 - 1.0).abs() < 0.10, "p50 = {p50}");
+        assert!((p95 / 0.95 - 1.0).abs() < 0.10, "p95 = {p95}");
+        assert!((p99 / 0.99 - 1.0).abs() < 0.10, "p99 = {p99}");
     }
 
     #[test]
@@ -217,8 +289,10 @@ mod tests {
         let csv = log.to_csv();
         assert!(csv.starts_with("iter,"));
         assert!(csv.lines().next().unwrap().ends_with(",rung"));
+        assert!(csv.lines().next().unwrap().contains(",floats,wire_bytes,"));
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.contains("0.800000"));
+        assert!(csv.contains(",10,84,"), "floats then framed wire bytes");
         assert!(csv.lines().nth(1).unwrap().ends_with(",exact"));
     }
 

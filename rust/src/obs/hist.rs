@@ -1,0 +1,251 @@
+//! Log-bucketed latency histogram.
+//!
+//! Values (seconds) land in geometrically spaced buckets — [`SUB`]
+//! sub-buckets per octave, so any quantile estimate carries at most a
+//! `2^(1/SUB) - 1 ≈ 9%` relative bucketing error — with exact `count`,
+//! `sum`, `min`, and `max` kept on the side. Histograms merge
+//! losslessly (bucket-wise addition), which is what lets per-worker
+//! response distributions aggregate into fleet-level tail statistics
+//! without storing every sample.
+
+/// Smallest representable value (1 ns); everything below clamps here.
+const MIN_VALUE: f64 = 1e-9;
+/// Sub-buckets per octave (power of two). 8 ⇒ ≤ ~9% relative error.
+const SUB: usize = 8;
+/// Bucket count: covers `MIN_VALUE · 2^(NUM_BUCKETS/SUB)` ≈ 1e9 s.
+const NUM_BUCKETS: usize = 480;
+
+/// A fixed-memory log-bucketed histogram of non-negative `f64` samples.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Build from an iterator of samples.
+    pub fn from_values<I: IntoIterator<Item = f64>>(values: I) -> Self {
+        let mut h = Histogram::new();
+        for v in values {
+            h.record(v);
+        }
+        h
+    }
+
+    /// Bucket index of a value (clamped at both ends).
+    pub fn bucket_index(v: f64) -> usize {
+        if !(v > MIN_VALUE) {
+            return 0;
+        }
+        (((v / MIN_VALUE).log2() * SUB as f64).floor() as usize).min(NUM_BUCKETS - 1)
+    }
+
+    /// `[lower, upper)` bounds of bucket `i`.
+    pub fn bucket_bounds(i: usize) -> (f64, f64) {
+        let lower = MIN_VALUE * 2f64.powf(i as f64 / SUB as f64);
+        let upper = MIN_VALUE * 2f64.powf((i + 1) as f64 / SUB as f64);
+        (lower, upper)
+    }
+
+    /// Record one sample. NaN is ignored; negatives clamp to zero.
+    pub fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        let v = v.max(0.0);
+        self.counts[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum recorded sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate: the geometric midpoint of the bucket holding
+    /// the `ceil(q·count)`-th sample, clamped to the exact `[min, max]`
+    /// range. `q >= 1` returns the exact max; an empty histogram returns
+    /// zero. Bucketing error is bounded by one sub-bucket (≈ 9%).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let target = ((q.max(0.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let (lo, hi) = Self::bucket_bounds(i);
+                return (lo * hi).sqrt().clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one (bucket-wise; exact for
+    /// count/sum/min/max, lossless for the bucket counts).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_contiguous_and_monotone() {
+        for i in 0..NUM_BUCKETS - 1 {
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            let (lo2, _) = Histogram::bucket_bounds(i + 1);
+            assert!(lo < hi, "bucket {i} degenerate");
+            assert!((hi - lo2).abs() / hi < 1e-12, "bucket {i} upper != next lower");
+        }
+        // the index function respects its own bounds
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(MIN_VALUE), 0);
+        assert_eq!(Histogram::bucket_index(f64::MAX), NUM_BUCKETS - 1);
+        let mut prev = 0usize;
+        for e in -25..10 {
+            let v = 10f64.powi(e);
+            let i = Histogram::bucket_index(v);
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            if i > 0 && i < NUM_BUCKETS - 1 {
+                assert!(lo <= v * (1.0 + 1e-12) && v < hi, "{v} not in [{lo}, {hi})");
+            }
+            assert!(i >= prev, "index must be monotone in the value");
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bounded() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1 ms .. 1 s
+        }
+        let mut prev = 0.0;
+        for q in [0.0, 0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= prev, "quantile({q}) = {v} < {prev}");
+            assert!(v >= h.min() && v <= h.max());
+            prev = v;
+        }
+        // ≤ one sub-bucket of relative error on a uniform stream
+        assert!((h.p50() / 0.5 - 1.0).abs() < 0.10, "p50 = {}", h.p50());
+        assert!((h.p99() / 0.99 - 1.0).abs() < 0.10, "p99 = {}", h.p99());
+        assert_eq!(h.quantile(1.0), 1.0, "q = 1 is the exact max");
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_matches_combined_stream() {
+        let mut a = Histogram::from_values((1..=500).map(|i| i as f64 * 1e-3));
+        let b = Histogram::from_values((501..=1000).map(|i| i as f64 * 1e-3));
+        let combined = Histogram::from_values((1..=1000).map(|i| i as f64 * 1e-3));
+        a.merge(&b);
+        assert_eq!(a.count(), combined.count());
+        assert_eq!(a.min(), combined.min());
+        assert_eq!(a.max(), combined.max());
+        assert!((a.sum() - combined.sum()).abs() < 1e-9);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), combined.quantile(q), "merge must be lossless");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        let mut h = Histogram::new();
+        h.record(f64::NAN); // ignored
+        assert!(h.is_empty());
+        h.record(-1.0); // clamps to zero
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), 0.0);
+    }
+}

@@ -1,0 +1,612 @@
+//! Zero-dependency telemetry: spans, counters, latency histograms, and
+//! straggler attribution for the trainer/cluster/wire stack.
+//!
+//! The paper's contribution is a running-time tradeoff, so the repro
+//! needs to see *where* an iteration's time goes — not just one
+//! `sim_time` scalar. This module provides the measurement substrate:
+//!
+//! - [`Recorder`] — a cheaply cloneable handle (shared interior behind
+//!   one mutex) collecting [`TraceEvent`]s, monotonic counters, and
+//!   per-phase [`Histogram`]s. A disabled recorder ([`Recorder::disabled`])
+//!   holds no interior at all: every call is a branch on `None` and
+//!   returns immediately, so untraced runs pay nothing.
+//! - [`SpanGuard`] — RAII phase spans: [`Recorder::span`] opens one,
+//!   dropping it (including during unwind) records the duration.
+//! - [`trace`] — the event model plus JSONL and Chrome trace-event
+//!   exporters (one timeline track per worker).
+//! - [`straggler`] — per-worker response distributions, straggle
+//!   counts, and realized-vs-§VI-model deviation.
+//!
+//! The coordinator threads a recorder through every layer:
+//! [`Trainer`](crate::coordinator::Trainer) emits per-iteration phase
+//! spans, [`Cluster`](crate::coordinator::Cluster) records per-worker
+//! gather latencies and wait-rule outcomes, `wire.rs` byte counters
+//! land via [`WireCounters`](crate::coordinator::wire::WireCounters),
+//! and chaos fault events are tagged into the same stream.
+//!
+//! ```
+//! use gradcode::obs::{phase, Recorder};
+//!
+//! let rec = Recorder::enabled();
+//! {
+//!     let _g = rec.span(phase::DECODE).iter(0);
+//!     // ... decode work ...
+//! } // guard drop records the span
+//! rec.add("decoder.cache_hits", 1);
+//! let summary = rec.summary();
+//! assert_eq!(summary.phases[0].phase, phase::DECODE);
+//! assert_eq!(summary.counters[0], ("decoder.cache_hits".into(), 1));
+//! ```
+
+pub mod hist;
+pub mod straggler;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use straggler::{StragglerReport, WorkerObs, WorkerStat};
+pub use trace::{chrome_trace, Clock, TraceEvent};
+
+use crate::bench::Table;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Canonical phase names. The five `MASTER_PHASES` partition the
+/// master's wall time inside one `ITERATION` span; `WORKER_COMPUTE` and
+/// `WORKER_RESPONSE` overlap `GATHER_WAIT` (they happen on the worker
+/// clock) and are reported separately, never summed with the rest.
+pub mod phase {
+    pub const ITERATION: &str = "iteration";
+    pub const BROADCAST: &str = "broadcast";
+    pub const GATHER_WAIT: &str = "gather_wait";
+    pub const DECODE: &str = "decode";
+    pub const STEP: &str = "step";
+    pub const EVAL: &str = "eval";
+    pub const WORKER_COMPUTE: &str = "worker_compute";
+    pub const WORKER_RESPONSE: &str = "worker_response";
+    /// Mutually exclusive master-side phases; their totals should sum
+    /// to (within bookkeeping slack of) the `ITERATION` total.
+    pub const MASTER_PHASES: [&str; 5] = [BROADCAST, GATHER_WAIT, DECODE, STEP, EVAL];
+    /// Display order for phase tables.
+    pub const DISPLAY_ORDER: [&str; 7] =
+        [ITERATION, BROADCAST, GATHER_WAIT, WORKER_COMPUTE, DECODE, STEP, EVAL];
+}
+
+/// Instant-event name recorded when a worker contributes nothing to an
+/// iteration (crashed, silent, or rejected).
+pub const MISSED_EVENT: &str = "worker_missed";
+
+#[derive(Debug, Default)]
+struct Inner {
+    events: Vec<TraceEvent>,
+    counters: BTreeMap<String, i64>,
+    phase_hists: BTreeMap<String, Histogram>,
+    workers: BTreeMap<usize, WorkerObs>,
+}
+
+/// Telemetry recorder handle. Clones share the same interior, so the
+/// trainer, cluster, and CLI can all hold one. All methods take `&self`
+/// and are thread-safe (a single interior mutex; events are recorded at
+/// iteration granularity, so contention is negligible).
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    inner: Option<Arc<Mutex<Inner>>>,
+    epoch: Instant,
+}
+
+impl Default for Recorder {
+    /// The default recorder is disabled (zero-cost).
+    fn default() -> Self {
+        Recorder::disabled()
+    }
+}
+
+impl Recorder {
+    /// A recording instance.
+    pub fn enabled() -> Recorder {
+        Recorder { inner: Some(Arc::new(Mutex::new(Inner::default()))), epoch: Instant::now() }
+    }
+
+    /// A no-op instance: holds no storage, every call returns
+    /// immediately after one `Option` branch.
+    pub fn disabled() -> Recorder {
+        Recorder { inner: None, epoch: Instant::now() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Seconds since this recorder's epoch (wall clock).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn lock(&self) -> Option<MutexGuard<'_, Inner>> {
+        // Tolerate poisoning: telemetry must keep working while a
+        // panic unwinds (the span-RAII-on-panic contract).
+        self.inner.as_ref().map(|m| m.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Open a wall-clock span; the returned guard records it on drop
+    /// (including during panic unwind). Label with
+    /// [`SpanGuard::worker`] / [`SpanGuard::iter`].
+    pub fn span(&self, phase: &'static str) -> SpanGuard {
+        SpanGuard {
+            inner: self.inner.clone(),
+            phase,
+            worker: None,
+            iter: None,
+            epoch: self.epoch,
+            start: Instant::now(),
+        }
+    }
+
+    /// Record an already-measured span (used for virtual-clock worker
+    /// timelines, where there is no live guard to drop).
+    pub fn record_span(
+        &self,
+        phase: &str,
+        worker: Option<usize>,
+        iter: Option<u64>,
+        ts: f64,
+        dur: f64,
+        clock: Clock,
+    ) {
+        if let Some(mut g) = self.lock() {
+            g.phase_hists.entry(phase.to_string()).or_default().record(dur);
+            g.events.push(TraceEvent::Span {
+                phase: phase.to_string(),
+                worker,
+                iter,
+                ts,
+                dur,
+                clock,
+                used: None,
+            });
+        }
+    }
+
+    /// Record one worker response for an iteration: a span on the
+    /// worker's own track plus the per-worker latency/straggle
+    /// aggregates behind the [`StragglerReport`]. `used` marks a
+    /// response inside the deciding quorum prefix.
+    pub fn record_worker_response(
+        &self,
+        worker: usize,
+        iter: u64,
+        ts: f64,
+        dur: f64,
+        used: bool,
+        clock: Clock,
+    ) {
+        if let Some(mut g) = self.lock() {
+            let obs = g.workers.entry(worker).or_default();
+            obs.latency.record(dur);
+            if used {
+                obs.used += 1;
+            } else {
+                obs.straggled += 1;
+            }
+            g.events.push(TraceEvent::Span {
+                phase: phase::WORKER_RESPONSE.to_string(),
+                worker: Some(worker),
+                iter: Some(iter),
+                ts,
+                dur,
+                clock,
+                used: Some(used),
+            });
+        }
+    }
+
+    /// Record that a worker contributed nothing this iteration
+    /// (crashed, silent, or checksum-rejected).
+    pub fn worker_missed(&self, worker: usize, iter: u64) {
+        if let Some(mut g) = self.lock() {
+            g.workers.entry(worker).or_default().missed += 1;
+            let ts = self.epoch.elapsed().as_secs_f64();
+            g.events.push(TraceEvent::Instant {
+                name: MISSED_EVENT.to_string(),
+                worker: Some(worker),
+                iter: Some(iter),
+                ts,
+                clock: Clock::Wall,
+            });
+        }
+    }
+
+    /// Record a wall-clock point event (fault injections, wait-rule
+    /// outcomes).
+    pub fn instant(&self, name: &str, worker: Option<usize>, iter: Option<u64>) {
+        if let Some(mut g) = self.lock() {
+            let ts = self.epoch.elapsed().as_secs_f64();
+            g.events.push(TraceEvent::Instant {
+                name: name.to_string(),
+                worker,
+                iter,
+                ts,
+                clock: Clock::Wall,
+            });
+        }
+    }
+
+    /// Add to a monotonic counter (creates it at zero).
+    pub fn add(&self, name: &str, delta: i64) {
+        if let Some(mut g) = self.lock() {
+            *g.counters.entry(name.to_string()).or_insert(0) += delta;
+        }
+    }
+
+    /// Set a gauge to an absolute value.
+    pub fn set(&self, name: &str, value: i64) {
+        if let Some(mut g) = self.lock() {
+            g.counters.insert(name.to_string(), value);
+        }
+    }
+
+    /// Record a sample into a named histogram without emitting an
+    /// event (e.g. per-worker compute seconds).
+    pub fn observe(&self, name: &str, value: f64) {
+        if let Some(mut g) = self.lock() {
+            g.phase_hists.entry(name.to_string()).or_default().record(value);
+        }
+    }
+
+    /// Snapshot of all recorded events, in record order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.lock().map(|g| g.events.clone()).unwrap_or_default()
+    }
+
+    /// Snapshot of all counters, sorted by name.
+    pub fn counters(&self) -> Vec<(String, i64)> {
+        self.lock()
+            .map(|g| g.counters.iter().map(|(k, v)| (k.clone(), *v)).collect())
+            .unwrap_or_default()
+    }
+
+    /// Per-phase latency statistics, canonical phases first.
+    pub fn phase_stats(&self) -> Vec<PhaseStat> {
+        let Some(g) = self.lock() else { return Vec::new() };
+        let mut out: Vec<PhaseStat> = Vec::new();
+        for name in phase::DISPLAY_ORDER {
+            if let Some(h) = g.phase_hists.get(name) {
+                out.push(PhaseStat::from_hist(name, h));
+            }
+        }
+        for (name, h) in &g.phase_hists {
+            if !phase::DISPLAY_ORDER.contains(&name.as_str()) {
+                out.push(PhaseStat::from_hist(name, h));
+            }
+        }
+        out
+    }
+
+    /// Build the per-worker straggler report (no model attached; use
+    /// [`StragglerReport::set_model`] for the deviation line).
+    pub fn straggler_report(&self) -> StragglerReport {
+        let Some(g) = self.lock() else { return StragglerReport::default() };
+        StragglerReport {
+            workers: g.workers.iter().map(|(w, o)| WorkerStat::from_obs(*w, o)).collect(),
+            ..StragglerReport::default()
+        }
+    }
+
+    /// Full summary: phase stats, counters, and the straggler report.
+    pub fn summary(&self) -> TelemetrySummary {
+        TelemetrySummary {
+            phases: self.phase_stats(),
+            counters: self.counters(),
+            stragglers: self.straggler_report(),
+        }
+    }
+
+    /// Serialize everything as JSONL (events in record order, then one
+    /// `counter` line per counter). This is the `--trace <path>` file
+    /// format and the input of `trace-report`.
+    pub fn to_jsonl(&self) -> String {
+        let Some(g) = self.lock() else { return String::new() };
+        let mut out = String::new();
+        for ev in &g.events {
+            out.push_str(&ev.to_jsonl());
+            out.push('\n');
+        }
+        for (name, value) in &g.counters {
+            out.push_str(
+                &TraceEvent::Counter { name: name.clone(), value: *value }.to_jsonl(),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Rebuild a recorder from [`Recorder::to_jsonl`] output, replaying
+    /// every event through the aggregation paths (phase histograms,
+    /// worker observations, counters).
+    pub fn from_jsonl(text: &str) -> Result<Recorder, String> {
+        let rec = Recorder::enabled();
+        for (no, line) in text.lines().enumerate() {
+            let Some(ev) = TraceEvent::from_jsonl(line).map_err(|e| format!("line {}: {e}", no + 1))?
+            else {
+                continue;
+            };
+            match ev {
+                TraceEvent::Span { phase, worker, iter, ts, dur, clock, used } => {
+                    match (used, worker, iter) {
+                        (Some(u), Some(w), Some(i)) => {
+                            rec.record_worker_response(w, i, ts, dur, u, clock)
+                        }
+                        _ => rec.record_span(&phase, worker, iter, ts, dur, clock),
+                    }
+                }
+                TraceEvent::Instant { name, worker, iter, ts, clock } => {
+                    if let Some(mut g) = rec.lock() {
+                        if name == MISSED_EVENT {
+                            if let Some(w) = worker {
+                                g.workers.entry(w).or_default().missed += 1;
+                            }
+                        }
+                        g.events.push(TraceEvent::Instant { name, worker, iter, ts, clock });
+                    }
+                }
+                TraceEvent::Counter { name, value } => rec.set(&name, value),
+            }
+        }
+        Ok(rec)
+    }
+
+    /// Render all events as a Chrome trace-event JSON array (see
+    /// [`trace::chrome_trace`]).
+    pub fn to_chrome(&self) -> String {
+        chrome_trace(&self.events())
+    }
+}
+
+/// RAII span: created by [`Recorder::span`], records its duration when
+/// dropped — including during panic unwind, so traces stay balanced
+/// even when an iteration dies.
+#[must_use = "a span records on drop; binding it to _ closes it immediately"]
+pub struct SpanGuard {
+    inner: Option<Arc<Mutex<Inner>>>,
+    phase: &'static str,
+    worker: Option<usize>,
+    iter: Option<u64>,
+    epoch: Instant,
+    start: Instant,
+}
+
+impl SpanGuard {
+    /// Label the span with a worker id.
+    pub fn worker(mut self, w: usize) -> Self {
+        self.worker = Some(w);
+        self
+    }
+
+    /// Label the span with an iteration number.
+    pub fn iter(mut self, i: u64) -> Self {
+        self.iter = Some(i);
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(inner) = self.inner.take() else { return };
+        let ts = self.start.duration_since(self.epoch).as_secs_f64();
+        let dur = self.start.elapsed().as_secs_f64();
+        let mut g = inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.phase_hists.entry(self.phase.to_string()).or_default().record(dur);
+        g.events.push(TraceEvent::Span {
+            phase: self.phase.to_string(),
+            worker: self.worker,
+            iter: self.iter,
+            ts,
+            dur,
+            clock: Clock::Wall,
+        });
+    }
+}
+
+/// Aggregate latency statistics for one phase.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub phase: String,
+    pub count: u64,
+    pub total: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl PhaseStat {
+    fn from_hist(name: &str, h: &Histogram) -> PhaseStat {
+        PhaseStat {
+            phase: name.to_string(),
+            count: h.count(),
+            total: h.sum(),
+            mean: h.mean(),
+            p50: h.p50(),
+            p90: h.p90(),
+            p99: h.p99(),
+            max: h.max(),
+        }
+    }
+}
+
+/// The run-level telemetry digest stored on
+/// [`RunLog::telemetry`](crate::metrics::RunLog) and rendered by
+/// `train` / `trace-report`.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySummary {
+    /// Per-phase stats, canonical phases first (see [`phase`]).
+    pub phases: Vec<PhaseStat>,
+    /// Counter name/value pairs, sorted by name.
+    pub counters: Vec<(String, i64)>,
+    /// Per-worker straggler attribution.
+    pub stragglers: StragglerReport,
+}
+
+impl TelemetrySummary {
+    /// Total seconds spent in a phase across the run.
+    pub fn phase_total(&self, name: &str) -> Option<f64> {
+        self.phases.iter().find(|p| p.phase == name).map(|p| p.total)
+    }
+
+    /// Sum of the mutually exclusive master phases
+    /// ([`phase::MASTER_PHASES`]).
+    pub fn master_phase_sum(&self) -> f64 {
+        phase::MASTER_PHASES.iter().filter_map(|p| self.phase_total(p)).sum()
+    }
+
+    /// Total seconds inside `iteration` spans.
+    pub fn iteration_total(&self) -> f64 {
+        self.phase_total(phase::ITERATION).unwrap_or(0.0)
+    }
+
+    /// Render the phase-breakdown table. The `share` column is each
+    /// phase's fraction of the `iteration` total (blank for overlapping
+    /// worker-clock phases, which are excluded from the sum contract).
+    pub fn render_phases(&self) -> String {
+        let mut t = Table::new(
+            "phase breakdown",
+            &["phase", "count", "total_s", "mean_s", "p50_s", "p99_s", "max_s", "share"],
+        );
+        let iter_total = self.iteration_total();
+        for p in &self.phases {
+            let share = if phase::MASTER_PHASES.contains(&p.phase.as_str()) && iter_total > 0.0
+            {
+                format!("{:.1}%", 100.0 * p.total / iter_total)
+            } else {
+                String::new()
+            };
+            t.row(&[
+                p.phase.clone(),
+                p.count.to_string(),
+                format!("{:.4}", p.total),
+                format!("{:.6}", p.mean),
+                format!("{:.6}", p.p50),
+                format!("{:.6}", p.p99),
+                format!("{:.6}", p.max),
+                share,
+            ]);
+        }
+        t.render()
+    }
+
+    /// Render the full digest: phases, stragglers, counters.
+    pub fn render(&self) -> String {
+        let mut out = self.render_phases();
+        out.push('\n');
+        out.push_str(&self.stragglers.render());
+        if !self.counters.is_empty() {
+            out.push('\n');
+            for (name, value) in &self.counters {
+                out.push_str(&format!("counter {name} = {value}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_a_noop() {
+        let rec = Recorder::disabled();
+        assert!(!rec.is_enabled());
+        {
+            let _g = rec.span(phase::DECODE).iter(7).worker(1);
+        }
+        rec.add("c", 3);
+        rec.observe("h", 1.0);
+        rec.record_worker_response(0, 0, 0.0, 1.0, true, Clock::Virtual);
+        rec.worker_missed(1, 0);
+        rec.instant("fault:crash", Some(1), Some(0));
+        assert!(rec.events().is_empty());
+        assert!(rec.counters().is_empty());
+        assert!(rec.phase_stats().is_empty());
+        assert!(rec.to_jsonl().is_empty());
+        let s = rec.summary();
+        assert!(s.phases.is_empty() && s.counters.is_empty() && s.stragglers.workers.is_empty());
+    }
+
+    #[test]
+    fn clones_share_storage_and_spans_nest() {
+        let rec = Recorder::enabled();
+        let clone = rec.clone();
+        {
+            let _outer = rec.span(phase::ITERATION).iter(0);
+            {
+                let _inner = clone.span(phase::DECODE).iter(0);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        let evs = rec.events();
+        assert_eq!(evs.len(), 2, "both guards recorded into the shared interior");
+        // inner guard drops first, so it is recorded first
+        let (inner_dur, outer_dur) = match (&evs[0], &evs[1]) {
+            (
+                TraceEvent::Span { phase: p0, dur: d0, .. },
+                TraceEvent::Span { phase: p1, dur: d1, .. },
+            ) => {
+                assert_eq!(p0, phase::DECODE);
+                assert_eq!(p1, phase::ITERATION);
+                (*d0, *d1)
+            }
+            other => panic!("expected two spans, got {other:?}"),
+        };
+        assert!(inner_dur <= outer_dur, "nested span cannot outlast its parent");
+        assert!(outer_dur >= 0.002, "slept 2ms inside the outer span");
+    }
+
+    #[test]
+    fn counters_and_gauges() {
+        let rec = Recorder::enabled();
+        rec.add("frames", 2);
+        rec.add("frames", 3);
+        rec.set("gauge", 9);
+        rec.set("gauge", 4);
+        assert_eq!(rec.counters(), vec![("frames".into(), 5), ("gauge".into(), 4)]);
+    }
+
+    #[test]
+    fn jsonl_round_trip_preserves_aggregates() {
+        let rec = Recorder::enabled();
+        rec.record_span(phase::DECODE, None, Some(0), 0.0, 0.5, Clock::Wall);
+        rec.record_span(phase::DECODE, None, Some(1), 1.0, 0.7, Clock::Wall);
+        rec.record_worker_response(3, 0, 0.0, 2.0, true, Clock::Virtual);
+        rec.record_worker_response(3, 1, 2.0, 4.0, false, Clock::Virtual);
+        rec.worker_missed(4, 1);
+        rec.instant("fault:crash", Some(4), Some(1));
+        rec.add("wire.tx_frames", 11);
+        let back = Recorder::from_jsonl(&rec.to_jsonl()).unwrap();
+        assert_eq!(back.events().len(), rec.events().len());
+        assert_eq!(back.counters(), rec.counters());
+        let (a, b) = (rec.summary(), back.summary());
+        assert_eq!(a.phases.len(), b.phases.len());
+        assert_eq!(a.phase_total(phase::DECODE), b.phase_total(phase::DECODE));
+        let (wa, wb) = (&a.stragglers.workers, &b.stragglers.workers);
+        assert_eq!(wa.len(), wb.len());
+        assert_eq!((wa[0].used, wa[0].straggled), (wb[0].used, wb[0].straggled));
+        assert_eq!(wa[1].missed, wb[1].missed);
+        assert_eq!(wa[0].p90, wb[0].p90);
+    }
+
+    #[test]
+    fn summary_orders_canonical_phases_first() {
+        let rec = Recorder::enabled();
+        rec.observe("zz_custom", 1.0);
+        rec.record_span(phase::STEP, None, None, 0.0, 0.1, Clock::Wall);
+        rec.record_span(phase::BROADCAST, None, None, 0.0, 0.2, Clock::Wall);
+        let names: Vec<String> = rec.summary().phases.iter().map(|p| p.phase.clone()).collect();
+        assert_eq!(names, vec!["broadcast", "step", "zz_custom"]);
+        let s = rec.summary();
+        assert!((s.master_phase_sum() - 0.3).abs() < 1e-12);
+        assert_eq!(s.iteration_total(), 0.0);
+        assert!(s.render().contains("phase breakdown"));
+    }
+}

@@ -1,0 +1,193 @@
+//! Per-worker straggler attribution.
+//!
+//! The gather loop feeds every worker response into a per-worker
+//! [`Histogram`] along with whether the response landed inside the
+//! deciding quorum prefix. Responses outside that prefix ("straggles")
+//! and missing responses are what the wait rule actually paid for, so
+//! the report ranks workers by `straggled + missed`, breaking ties on
+//! the p90 response latency. The report also carries the §VI-model
+//! prediction for the configured wait rule so realized-vs-model
+//! deviation is a first-class output.
+
+use super::hist::Histogram;
+use crate::bench::Table;
+
+/// Aggregated response-time distribution and outcome counts for one
+/// worker.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerObs {
+    /// Response latencies (virtual seconds in simulated mode, wall
+    /// seconds in real-time/TCP mode).
+    pub latency: Histogram,
+    /// Responses inside the deciding quorum prefix.
+    pub used: u64,
+    /// Responses that arrived but were not needed for the quorum.
+    pub straggled: u64,
+    /// Iterations with no usable response (crashed, silent, rejected).
+    pub missed: u64,
+}
+
+/// One worker's row in the [`StragglerReport`].
+#[derive(Debug, Clone)]
+pub struct WorkerStat {
+    pub worker: usize,
+    pub responses: u64,
+    pub used: u64,
+    pub straggled: u64,
+    pub missed: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl WorkerStat {
+    pub fn from_obs(worker: usize, obs: &WorkerObs) -> Self {
+        WorkerStat {
+            worker,
+            responses: obs.latency.count(),
+            used: obs.used,
+            straggled: obs.straggled,
+            missed: obs.missed,
+            mean: obs.latency.mean(),
+            p50: obs.latency.p50(),
+            p90: obs.latency.p90(),
+            p99: obs.latency.p99(),
+            max: obs.latency.max(),
+        }
+    }
+
+    /// Primary ranking key: iterations where this worker did not
+    /// contribute to the deciding quorum.
+    pub fn straggle_count(&self) -> u64 {
+        self.straggled + self.missed
+    }
+}
+
+/// Fleet-level straggler summary: per-worker tail latencies and
+/// straggle counts, plus the realized-vs-§VI-model deviation for the
+/// run's wait rule.
+#[derive(Debug, Clone, Default)]
+pub struct StragglerReport {
+    /// One row per observed worker, in worker order.
+    pub workers: Vec<WorkerStat>,
+    /// §VI-model expected per-iteration wait time for this fleet and
+    /// wait rule (None when the run had no delay model).
+    pub model_expected: Option<f64>,
+    /// Realized mean per-iteration sim time.
+    pub realized_mean: f64,
+    /// `(realized - model) / model`; None without a model.
+    pub deviation: Option<f64>,
+}
+
+impl StragglerReport {
+    /// Attach the model prediction and realized mean, deriving the
+    /// relative deviation.
+    pub fn set_model(&mut self, model_expected: Option<f64>, realized_mean: f64) {
+        self.realized_mean = realized_mean;
+        self.model_expected = model_expected;
+        self.deviation = model_expected
+            .filter(|m| *m > 0.0)
+            .map(|m| (realized_mean - m) / m);
+    }
+
+    /// Workers ranked worst-first: by straggle count, then p90 latency.
+    pub fn ranked(&self) -> Vec<&WorkerStat> {
+        let mut rows: Vec<&WorkerStat> = self.workers.iter().collect();
+        rows.sort_by(|a, b| {
+            b.straggle_count()
+                .cmp(&a.straggle_count())
+                .then(b.p90.partial_cmp(&a.p90).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        rows
+    }
+
+    /// Ids of the `k` worst stragglers.
+    pub fn top_stragglers(&self, k: usize) -> Vec<usize> {
+        self.ranked().into_iter().take(k).map(|w| w.worker).collect()
+    }
+
+    /// Render the per-worker table plus the model-deviation line.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "straggler report (ranked worst-first)",
+            &["worker", "responses", "used", "straggled", "missed", "p50", "p90", "p99", "max"],
+        );
+        for w in self.ranked() {
+            t.row(&[
+                w.worker.to_string(),
+                w.responses.to_string(),
+                w.used.to_string(),
+                w.straggled.to_string(),
+                w.missed.to_string(),
+                format!("{:.4}", w.p50),
+                format!("{:.4}", w.p90),
+                format!("{:.4}", w.p99),
+                format!("{:.4}", w.max),
+            ]);
+        }
+        let mut out = t.render();
+        match (self.model_expected, self.deviation) {
+            (Some(m), Some(d)) => out.push_str(&format!(
+                "realized mean iter time {:.4}s vs \u{a7}VI model {:.4}s ({:+.1}% deviation)\n",
+                self.realized_mean,
+                m,
+                d * 100.0
+            )),
+            _ => out.push_str(&format!(
+                "realized mean iter time {:.4}s (no delay model configured)\n",
+                self.realized_mean
+            )),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(worker: usize, used: u64, straggled: u64, missed: u64, p90: f64) -> WorkerStat {
+        WorkerStat {
+            worker,
+            responses: used + straggled,
+            used,
+            straggled,
+            missed,
+            mean: p90 * 0.8,
+            p50: p90 * 0.7,
+            p90,
+            p99: p90 * 1.1,
+            max: p90 * 1.2,
+        }
+    }
+
+    #[test]
+    fn ranking_prefers_straggle_count_then_tail_latency() {
+        let mut r = StragglerReport::default();
+        r.workers = vec![
+            stat(0, 10, 0, 0, 1.0),
+            stat(1, 2, 8, 0, 2.0),
+            stat(2, 2, 5, 3, 1.5), // same straggle count as 1, slower tail? no: 8 each
+            stat(3, 10, 0, 0, 9.0),
+        ];
+        let ranked = r.top_stragglers(4);
+        // 1 and 2 both have 8 straggles; 1 has the higher p90 tail
+        assert_eq!(&ranked[..2], &[1, 2]);
+        // among the clean workers, the slow tail ranks ahead
+        assert_eq!(&ranked[2..], &[3, 0]);
+    }
+
+    #[test]
+    fn deviation_requires_a_model() {
+        let mut r = StragglerReport::default();
+        r.set_model(None, 2.0);
+        assert!(r.deviation.is_none());
+        assert!(r.render().contains("no delay model"));
+        r.set_model(Some(1.6), 2.0);
+        let d = r.deviation.unwrap();
+        assert!((d - 0.25).abs() < 1e-12, "(2.0-1.6)/1.6 = 0.25, got {d}");
+        assert!(r.render().contains("+25.0%"));
+    }
+}

@@ -1,0 +1,390 @@
+//! Trace-event model and its two serializations.
+//!
+//! Events are serialized two ways:
+//!
+//! - **JSONL** (one [`bench::JsonObject`](crate::bench::JsonObject) per
+//!   line) — the interchange format written by `train --trace` and read
+//!   back by the `trace-report` subcommand. The parser here is
+//!   deliberately minimal: it only handles recorder-authored lines
+//!   (flat objects, no nested containers, no commas inside strings).
+//! - **Chrome trace-event JSON** — an array of `B`/`E` duration pairs
+//!   and `i` instants, loadable in `about://tracing` or Perfetto. Wall-
+//!   clock master events render under pid 0 and virtual-clock worker
+//!   events under pid 1, one named thread (track) per worker.
+
+use crate::bench::{json_string, JsonObject};
+
+/// Which timeline an event's timestamps live on. The master's own
+/// phases are measured in wall time; per-worker response spans in the
+/// simulator's virtual time. The Chrome exporter keeps the two on
+/// separate process tracks so the scales are never mixed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    Wall,
+    Virtual,
+}
+
+impl Clock {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Clock::Wall => "wall",
+            Clock::Virtual => "virtual",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Clock> {
+        match s {
+            "wall" => Some(Clock::Wall),
+            "virtual" => Some(Clock::Virtual),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded event. Timestamps and durations are in seconds from
+/// the recorder's epoch (its construction time for wall events, the
+/// start of the run for virtual ones).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A closed duration span (phase or per-worker response).
+    /// `used` is only set on worker-response spans: `Some(true)` when
+    /// the response landed inside the deciding quorum prefix.
+    Span {
+        phase: String,
+        worker: Option<usize>,
+        iter: Option<u64>,
+        ts: f64,
+        dur: f64,
+        clock: Clock,
+        used: Option<bool>,
+    },
+    /// A point event (fault injections, wait-rule outcomes).
+    Instant {
+        name: String,
+        worker: Option<usize>,
+        iter: Option<u64>,
+        ts: f64,
+        clock: Clock,
+    },
+    /// A counter's final value (emitted on export so counters survive
+    /// the JSONL round trip).
+    Counter { name: String, value: i64 },
+}
+
+fn opt_usize_raw(v: Option<usize>) -> String {
+    v.map(|w| w.to_string()).unwrap_or_else(|| "null".into())
+}
+
+fn opt_u64_raw(v: Option<u64>) -> String {
+    v.map(|i| i.to_string()).unwrap_or_else(|| "null".into())
+}
+
+fn opt_bool_raw(v: Option<bool>) -> String {
+    match v {
+        Some(true) => "true".into(),
+        Some(false) => "false".into(),
+        None => "null".into(),
+    }
+}
+
+impl TraceEvent {
+    /// One JSONL line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        match self {
+            TraceEvent::Span { phase, worker, iter, ts, dur, clock, used } => JsonObject::new()
+                .field_str("type", "span")
+                .field_str("phase", phase)
+                .field_num("ts", *ts)
+                .field_num("dur", *dur)
+                .field_str("clock", clock.label())
+                .field_raw("worker", &opt_usize_raw(*worker))
+                .field_raw("iter", &opt_u64_raw(*iter))
+                .field_raw("used", &opt_bool_raw(*used))
+                .build(),
+            TraceEvent::Instant { name, worker, iter, ts, clock } => JsonObject::new()
+                .field_str("type", "instant")
+                .field_str("name", name)
+                .field_num("ts", *ts)
+                .field_str("clock", clock.label())
+                .field_raw("worker", &opt_usize_raw(*worker))
+                .field_raw("iter", &opt_u64_raw(*iter))
+                .build(),
+            TraceEvent::Counter { name, value } => JsonObject::new()
+                .field_str("type", "counter")
+                .field_str("name", name)
+                .field_int("value", *value)
+                .build(),
+        }
+    }
+
+    /// Parse one recorder-authored JSONL line. Blank lines yield
+    /// `Ok(None)`; anything else unparseable is an error.
+    pub fn from_jsonl(line: &str) -> Result<Option<TraceEvent>, String> {
+        let line = line.trim();
+        if line.is_empty() {
+            return Ok(None);
+        }
+        let kind = field_str(line, "type").ok_or_else(|| format!("no \"type\" in: {line}"))?;
+        let ev = match kind.as_str() {
+            "span" => TraceEvent::Span {
+                phase: field_str(line, "phase").ok_or("span without phase")?,
+                worker: field_opt_usize(line, "worker"),
+                iter: field_opt_u64(line, "iter"),
+                ts: field_f64(line, "ts").ok_or("span without ts")?,
+                dur: field_f64(line, "dur").ok_or("span without dur")?,
+                clock: field_clock(line)?,
+                used: field_opt_bool(line, "used"),
+            },
+            "instant" => TraceEvent::Instant {
+                name: field_str(line, "name").ok_or("instant without name")?,
+                worker: field_opt_usize(line, "worker"),
+                iter: field_opt_u64(line, "iter"),
+                ts: field_f64(line, "ts").ok_or("instant without ts")?,
+                clock: field_clock(line)?,
+            },
+            "counter" => TraceEvent::Counter {
+                name: field_str(line, "name").ok_or("counter without name")?,
+                value: field_f64(line, "value").ok_or("counter without value")? as i64,
+            },
+            other => return Err(format!("unknown event type {other:?}")),
+        };
+        Ok(Some(ev))
+    }
+}
+
+/// Raw text of a top-level field's value (recorder-authored lines only:
+/// flat objects, strings free of commas/braces).
+fn field_raw<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = line[start..].trim_start();
+    let mut end = rest.len();
+    let mut in_str = false;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' | '}' if !in_str => {
+                end = i;
+                break;
+            }
+            _ => {}
+        }
+    }
+    Some(rest[..end].trim())
+}
+
+fn field_str(line: &str, key: &str) -> Option<String> {
+    let raw = field_raw(line, key)?;
+    let inner = raw.strip_prefix('"')?.strip_suffix('"')?;
+    Some(inner.to_string())
+}
+
+fn field_f64(line: &str, key: &str) -> Option<f64> {
+    field_raw(line, key)?.parse().ok()
+}
+
+fn field_opt_usize(line: &str, key: &str) -> Option<usize> {
+    field_raw(line, key).and_then(|r| r.parse().ok())
+}
+
+fn field_opt_u64(line: &str, key: &str) -> Option<u64> {
+    field_raw(line, key).and_then(|r| r.parse().ok())
+}
+
+fn field_opt_bool(line: &str, key: &str) -> Option<bool> {
+    match field_raw(line, key) {
+        Some("true") => Some(true),
+        Some("false") => Some(false),
+        _ => None,
+    }
+}
+
+fn field_clock(line: &str) -> Result<Clock, String> {
+    let s = field_str(line, "clock").ok_or("event without clock")?;
+    Clock::parse(&s).ok_or_else(|| format!("unknown clock {s:?}"))
+}
+
+/// Chrome trace pid for a clock: wall-clock master events on process 0,
+/// virtual-clock worker events on process 1.
+fn pid_of(clock: Clock) -> u32 {
+    match clock {
+        Clock::Wall => 0,
+        Clock::Virtual => 1,
+    }
+}
+
+/// Chrome trace tid: the master timeline is thread 0; worker `w` gets
+/// its own thread `w + 1` (one track per worker).
+fn tid_of(worker: Option<usize>) -> u32 {
+    worker.map(|w| w as u32 + 1).unwrap_or(0)
+}
+
+fn chrome_args(iter: Option<u64>, used: Option<bool>) -> String {
+    let mut obj = JsonObject::new();
+    if let Some(i) = iter {
+        obj = obj.field_int("iter", i as i64);
+    }
+    if let Some(u) = used {
+        obj = obj.field_raw("used", if u { "true" } else { "false" });
+    }
+    obj.build()
+}
+
+/// Render events as a Chrome trace-event JSON array (`about://tracing`
+/// / Perfetto "JSON Array Format"). Spans become matched `B`/`E`
+/// pairs; instants become scoped `i` events; every (pid, tid) in use
+/// gets `process_name`/`thread_name` metadata so the timeline shows one
+/// labeled track per worker.
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    let mut out: Vec<String> = Vec::new();
+    let mut tracks: Vec<(u32, u32)> = Vec::new();
+    for ev in events {
+        match ev {
+            TraceEvent::Span { phase, worker, iter, ts, dur, clock, used } => {
+                let (pid, tid) = (pid_of(*clock), tid_of(*worker));
+                if !tracks.contains(&(pid, tid)) {
+                    tracks.push((pid, tid));
+                }
+                let ts_us = ts * 1e6;
+                let end_us = (ts + dur.max(0.0)) * 1e6;
+                out.push(
+                    JsonObject::new()
+                        .field_str("name", phase)
+                        .field_str("cat", "obs")
+                        .field_str("ph", "B")
+                        .field_num("ts", ts_us)
+                        .field_int("pid", pid as i64)
+                        .field_int("tid", tid as i64)
+                        .field_raw("args", &chrome_args(*iter, *used))
+                        .build(),
+                );
+                out.push(
+                    JsonObject::new()
+                        .field_str("name", phase)
+                        .field_str("cat", "obs")
+                        .field_str("ph", "E")
+                        .field_num("ts", end_us)
+                        .field_int("pid", pid as i64)
+                        .field_int("tid", tid as i64)
+                        .build(),
+                );
+            }
+            TraceEvent::Instant { name, worker, iter, ts, clock } => {
+                let (pid, tid) = (pid_of(*clock), tid_of(*worker));
+                if !tracks.contains(&(pid, tid)) {
+                    tracks.push((pid, tid));
+                }
+                out.push(
+                    JsonObject::new()
+                        .field_str("name", name)
+                        .field_str("cat", "obs")
+                        .field_str("ph", "i")
+                        .field_str("s", "t")
+                        .field_num("ts", ts * 1e6)
+                        .field_int("pid", pid as i64)
+                        .field_int("tid", tid as i64)
+                        .field_raw("args", &chrome_args(*iter, None))
+                        .build(),
+                );
+            }
+            TraceEvent::Counter { .. } => {} // counters have no timeline position
+        }
+    }
+    let mut meta: Vec<String> = Vec::new();
+    for pid in [0u32, 1u32] {
+        if tracks.iter().any(|&(p, _)| p == pid) {
+            let pname = if pid == 0 { "master (wall clock)" } else { "workers (virtual clock)" };
+            meta.push(
+                JsonObject::new()
+                    .field_str("name", "process_name")
+                    .field_str("ph", "M")
+                    .field_int("pid", pid as i64)
+                    .field_int("tid", 0)
+                    .field_raw("args", &format!("{{\"name\": {}}}", json_string(pname)))
+                    .build(),
+            );
+        }
+    }
+    for &(pid, tid) in &tracks {
+        let tname =
+            if tid == 0 { "master".to_string() } else { format!("worker {}", tid - 1) };
+        meta.push(
+            JsonObject::new()
+                .field_str("name", "thread_name")
+                .field_str("ph", "M")
+                .field_int("pid", pid as i64)
+                .field_int("tid", tid as i64)
+                .field_raw("args", &format!("{{\"name\": {}}}", json_string(&tname)))
+                .build(),
+        );
+    }
+    meta.extend(out);
+    format!("[\n{}\n]\n", meta.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Span {
+                phase: "decode".into(),
+                worker: None,
+                iter: Some(3),
+                ts: 1.5,
+                dur: 0.25,
+                clock: Clock::Wall,
+                used: None,
+            },
+            TraceEvent::Span {
+                phase: "worker_response".into(),
+                worker: Some(2),
+                iter: Some(3),
+                ts: 10.0,
+                dur: 4.0,
+                clock: Clock::Virtual,
+                used: Some(false),
+            },
+            TraceEvent::Instant {
+                name: "fault:crash".into(),
+                worker: Some(1),
+                iter: Some(4),
+                ts: 2.0,
+                clock: Clock::Wall,
+            },
+            TraceEvent::Counter { name: "wire.tx_frames".into(), value: 42 },
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_variant() {
+        for ev in sample_events() {
+            let line = ev.to_jsonl();
+            let back = TraceEvent::from_jsonl(&line).unwrap().unwrap();
+            assert_eq!(back, ev, "line was: {line}");
+        }
+        assert_eq!(TraceEvent::from_jsonl("  ").unwrap(), None);
+        assert!(TraceEvent::from_jsonl("{\"type\": \"mystery\"}").is_err());
+    }
+
+    #[test]
+    fn chrome_trace_is_an_array_with_matched_pairs_and_tracks() {
+        let events = sample_events();
+        let json = chrome_trace(&events);
+        let trimmed = json.trim();
+        assert!(trimmed.starts_with('[') && trimmed.ends_with(']'));
+        let b = json.matches("\"ph\": \"B\"").count();
+        let e = json.matches("\"ph\": \"E\"").count();
+        assert_eq!(b, 2);
+        assert_eq!(b, e, "every B needs a matching E");
+        assert_eq!(json.matches("\"ph\": \"i\"").count(), 1);
+        // one named track per worker, plus the master track
+        assert!(json.contains("\"worker 2\""));
+        assert!(json.contains("\"worker 1\""));
+        assert!(json.contains("\"master\""));
+        assert!(json.contains("\"thread_name\""));
+        // counters carry no timeline position
+        assert!(!json.contains("wire.tx_frames"));
+    }
+}

@@ -340,6 +340,29 @@ pub fn expected_fleet_time(
     expected_rule_time(&runtimes, &[((0..n).collect(), n - s)])
 }
 
+/// §VI-model expected per-iteration wait time for an arbitrary fleet
+/// (per-worker `work` units at per-worker `speed`) under an arbitrary
+/// group-quorum stopping rule. This is the telemetry layer's
+/// model-deviation hook: the trainer evaluates it with the exact
+/// speeds, loads, and wait rule of the live run, and the
+/// [`StragglerReport`](crate::obs::StragglerReport) compares it against
+/// the realized mean iteration time.
+pub fn expected_wait_time(
+    params: &DelayParams,
+    m: usize,
+    work: &[f64],
+    speeds: &[f64],
+    groups: &[(Vec<usize>, usize)],
+) -> f64 {
+    assert_eq!(work.len(), speeds.len());
+    let runtimes: Vec<WorkerRuntime> = work
+        .iter()
+        .zip(speeds)
+        .map(|(&w, &sp)| worker_runtime(params, m, w, sp))
+        .collect();
+    expected_rule_time(&runtimes, groups)
+}
+
 /// Planner search bounds.
 #[derive(Debug, Clone, Copy)]
 pub struct PlanOpts {
@@ -588,6 +611,21 @@ pub fn plan_loads_opts(
 mod tests {
     use super::*;
     use crate::simulator::order_stats::expected_total_runtime;
+
+    #[test]
+    fn expected_wait_time_generalizes_the_fleet_model() {
+        let p = DelayParams::table_vi1();
+        let speeds = vec![1.0, 1.0, 2.0, 2.0, 4.0, 4.0];
+        let (d, s, m) = (3usize, 2usize, 1usize);
+        let work = vec![d as f64; speeds.len()];
+        let flat = vec![((0..speeds.len()).collect::<Vec<_>>(), speeds.len() - s)];
+        let got = expected_wait_time(&p, m, &work, &speeds, &flat);
+        let want = expected_fleet_time(&p, &speeds, d, s, m);
+        assert!((got - want).abs() < 1e-9, "flat rule must match expected_fleet_time");
+        // waiting for fewer responders can only shrink the expectation
+        let looser = vec![((0..speeds.len()).collect::<Vec<_>>(), speeds.len() - s - 1)];
+        assert!(expected_wait_time(&p, m, &work, &speeds, &looser) <= got);
+    }
 
     #[test]
     fn profiles_materialize_and_parse() {

@@ -62,8 +62,8 @@ pub mod virtual_cluster;
 pub use approx::{expected_coeff_residual, expected_runtime_at_quorum, QuorumPoint};
 pub use chaos::{degraded_fraction, forecast as forecast_chaos, ChaosForecast};
 pub use hetero::{
-    expected_fleet_time, expected_hetero_time, plan_loads, plan_loads_opts, LoadPlan,
-    PlanOpts, SpeedProfile,
+    expected_fleet_time, expected_hetero_time, expected_wait_time, plan_loads,
+    plan_loads_opts, LoadPlan, PlanOpts, SpeedProfile,
 };
 pub use model::{DelayParams, WorkerRuntime};
 pub use optimize::{optimal_alpha, optimal_triple, prop1_optimal_d, TripleChoice};

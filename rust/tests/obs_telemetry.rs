@@ -1,0 +1,236 @@
+//! Integration: the telemetry subsystem end to end — a traced training
+//! run through the full trainer/cluster stack, and the acceptance
+//! properties of the issue:
+//!
+//! - the master phase breakdown (broadcast, gather_wait, decode, step,
+//!   eval) accounts for the iteration total to within 10%;
+//! - the Chrome trace export is a valid JSON array with matched B/E
+//!   pairs and one named track per worker;
+//! - on a bimodal fleet the straggler report ranks the slow-group
+//!   workers as the top stragglers;
+//! - span guards record during panic unwind (RAII contract);
+//! - the JSONL round trip preserves every aggregate the report is
+//!   built from;
+//! - `IterationRecord::wire_bytes` matches the framed wire layout.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use gradcode::coordinator::wire::{
+    framed_result_bytes, FRAME_OVERHEAD, RESULT_HEADER_BYTES,
+};
+use gradcode::coordinator::{
+    ExecutionMode, OptChoice, SchemeSpec, SpeedProfile, TrainConfig, Trainer,
+};
+use gradcode::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
+use gradcode::metrics::RunLog;
+use gradcode::obs::{phase, Recorder};
+use gradcode::simulator::DelayParams;
+use gradcode::testkit::with_watchdog;
+
+fn dataset(rows: usize, seed: u64) -> DenseDataset {
+    let gen = SyntheticCategorical::new(CategoricalConfig::default(), seed);
+    gen.generate(rows, seed + 1)
+}
+
+fn traced_run(cfg: TrainConfig, rows: usize, seed: u64) -> (RunLog, Recorder) {
+    let ds = dataset(rows, seed);
+    let mut tr = Trainer::new(cfg, &ds, None).expect("trainer builds");
+    let rec = Recorder::enabled();
+    tr.attach_recorder(&rec);
+    let log = tr.run().expect("traced run completes");
+    (log, rec)
+}
+
+/// Acceptance (a): the phase table's master phases are mutually
+/// exclusive and pave each iteration — their total must land within 10%
+/// of the iteration-span total. Enough rows that real compute (inside
+/// gather_wait) dominates the untraced slack between spans.
+#[test]
+fn master_phase_sum_accounts_for_the_iteration_total() {
+    let mut cfg = TrainConfig::quick(5, SchemeSpec::Poly { s: 1, m: 2 }, 30);
+    cfg.eval_every = 5;
+    let (log, _rec) = traced_run(cfg, 2000, 0x0b51);
+    let tel = log.telemetry.expect("traced run carries a digest");
+    let total = tel.iteration_total();
+    let sum = tel.master_phase_sum();
+    assert!(total > 0.0);
+    assert!(
+        (sum / total - 1.0).abs() < 0.10,
+        "master phases sum to {sum:.4}s but iterations total {total:.4}s \
+         ({:+.1}% off)",
+        (sum / total - 1.0) * 100.0
+    );
+    // Every master phase actually appears in the breakdown.
+    for ph in phase::MASTER_PHASES {
+        assert!(
+            tel.phase_total(ph).unwrap_or(0.0) > 0.0,
+            "phase {ph} missing from the table"
+        );
+    }
+}
+
+/// Acceptance (b): the Chrome export of a real traced run is a JSON
+/// array with matched B/E pairs and one named track per worker.
+#[test]
+fn chrome_trace_of_a_real_run_has_one_track_per_worker() {
+    let cfg = TrainConfig::quick(5, SchemeSpec::Poly { s: 1, m: 2 }, 8);
+    let (_log, rec) = traced_run(cfg, 400, 0x0b52);
+    let json = rec.to_chrome();
+    let trimmed = json.trim();
+    assert!(trimmed.starts_with('[') && trimmed.ends_with(']'));
+    let b = json.matches("\"ph\": \"B\"").count();
+    let e = json.matches("\"ph\": \"E\"").count();
+    assert!(b > 0, "a real run emits duration events");
+    assert_eq!(b, e, "every B needs a matching E");
+    assert!(json.contains("\"master\""));
+    for w in 0..5 {
+        assert!(
+            json.contains(&format!("\"worker {w}\"")),
+            "missing track for worker {w}"
+        );
+    }
+    // Virtual-clock worker spans live on their own process track.
+    assert!(json.contains("\"workers (virtual clock)\""));
+}
+
+/// Acceptance (c): on a bimodal fleet (slow group at speed 1, fast
+/// group 4x) with compute-dominant delays, the straggler report must
+/// attribute the tail to the slow group.
+#[test]
+fn bimodal_fleet_ranks_slow_workers_as_top_stragglers() {
+    let n = 10;
+    let slow: Vec<usize> = (0..4).collect(); // round(0.4 · 10) workers at speed 1
+    let mut cfg = TrainConfig::quick(n, SchemeSpec::Poly { s: 2, m: 2 }, 40);
+    cfg.fleet = Some(SpeedProfile::Bimodal { slow_frac: 0.4, ratio: 4.0 });
+    // Compute-dominant: the t1/λ1 term dwarfs communication, so arrival
+    // order tracks worker speed almost surely.
+    cfg.delays =
+        Some(DelayParams { lambda1: 0.8, t1: 1.6, lambda2: 10.0, t2: 0.1 });
+    let (log, _rec) = traced_run(cfg, 600, 0x0b53);
+    let report = log.telemetry.expect("digest").stragglers;
+    assert_eq!(report.workers.len(), n);
+    // s = 2 straggled responses per iteration land on the slow group.
+    for w in report.top_stragglers(2) {
+        assert!(
+            slow.contains(&w),
+            "top straggler {w} is not in the slow group {slow:?}\n{}",
+            report.render()
+        );
+    }
+    let slow_straggles: u64 = report
+        .workers
+        .iter()
+        .filter(|w| slow.contains(&w.worker))
+        .map(|w| w.straggled + w.missed)
+        .sum();
+    let fast_straggles: u64 = report
+        .workers
+        .iter()
+        .filter(|w| !slow.contains(&w.worker))
+        .map(|w| w.straggled + w.missed)
+        .sum();
+    assert!(
+        slow_straggles > fast_straggles,
+        "slow group straggled {slow_straggles}x vs fast {fast_straggles}x"
+    );
+    // The §VI model line is attached and finite.
+    assert!(report.model_expected.unwrap() > 0.0);
+    assert!(report.deviation.unwrap().is_finite());
+}
+
+/// The span guard's RAII contract: a panic mid-span still records the
+/// span (drop runs during unwind, the poisoned lock is tolerated).
+#[test]
+fn span_guard_records_during_panic_unwind() {
+    with_watchdog(Duration::from_secs(30), "span_raii_panic", || {
+        let rec = Recorder::enabled();
+        let rec2 = rec.clone();
+        let result = catch_unwind(AssertUnwindSafe(move || {
+            let _outer = rec2.span("outer");
+            let _inner = rec2.span("doomed");
+            panic!("mid-span panic");
+        }));
+        assert!(result.is_err(), "the closure must actually panic");
+        let summary = rec.summary();
+        for ph in ["outer", "doomed"] {
+            let st = summary
+                .phases
+                .iter()
+                .find(|p| p.phase == ph)
+                .unwrap_or_else(|| panic!("span {ph} lost in the unwind"));
+            assert_eq!(st.count, 1);
+        }
+    });
+}
+
+/// The JSONL round trip rebuilds every aggregate the report is built
+/// from: phase histograms, straggler counts, and counters.
+#[test]
+fn jsonl_round_trip_preserves_the_report() {
+    let cfg = TrainConfig::quick(5, SchemeSpec::Poly { s: 1, m: 2 }, 10);
+    let (_log, rec) = traced_run(cfg, 400, 0x0b54);
+    let text = rec.to_jsonl();
+    let back = Recorder::from_jsonl(&text).expect("replay parses");
+    let (a, b) = (rec.summary(), back.summary());
+    assert_eq!(a.phases.len(), b.phases.len());
+    for (x, y) in a.phases.iter().zip(&b.phases) {
+        assert_eq!(x.phase, y.phase);
+        assert_eq!(x.count, y.count, "phase {} count drifted", x.phase);
+        assert!((x.total - y.total).abs() < 1e-9 * (1.0 + x.total.abs()));
+    }
+    assert_eq!(a.counters, b.counters);
+    assert_eq!(a.stragglers.workers.len(), b.stragglers.workers.len());
+    for (x, y) in a.stragglers.workers.iter().zip(&b.stragglers.workers) {
+        assert_eq!((x.worker, x.used, x.straggled, x.missed), (y.worker, y.used, y.straggled, y.missed));
+    }
+}
+
+/// `wire_bytes` is the framed size of every gathered Result frame:
+/// length prefix + tag + Result header + payload + CRC trailer. The
+/// record does not carry the frame count directly, but the layout
+/// determines it: `wire_bytes = k·(overhead) + 4·floats`, so `k` is
+/// recoverable and the full identity must close.
+#[test]
+fn wire_byte_accounting_matches_the_frame_layout() {
+    let per_frame_overhead = FRAME_OVERHEAD + RESULT_HEADER_BYTES;
+    let cfg = TrainConfig::quick(6, SchemeSpec::Poly { s: 2, m: 2 }, 6);
+    let (log, _rec) = traced_run(cfg, 480, 0x0b55);
+    assert!(log.total_wire_bytes() > 0);
+    for r in &log.records {
+        // framing always costs more than the raw payload
+        assert!(r.wire_bytes > 4 * r.floats_transmitted, "iter {}", r.iter);
+        let overhead = r.wire_bytes - 4 * r.floats_transmitted;
+        assert_eq!(overhead % per_frame_overhead, 0, "iter {}", r.iter);
+        let frames = overhead / per_frame_overhead;
+        // All gathered results are charged — at least the deciding
+        // quorum prefix the record names as responders.
+        assert!(frames >= r.responders.len(), "iter {}", r.iter);
+        assert_eq!(r.floats_transmitted % frames, 0, "iter {}", r.iter);
+        let out_dim = r.floats_transmitted / frames;
+        assert_eq!(
+            r.wire_bytes,
+            frames * framed_result_bytes(out_dim),
+            "iter {}: {frames} frames × framed({out_dim})",
+            r.iter
+        );
+    }
+}
+
+/// A disabled recorder must leave no trace: no digest on the log, no
+/// events, and the run still trains.
+#[test]
+fn disabled_recorder_is_invisible() {
+    let ds = dataset(300, 0x0b56);
+    let mut cfg = TrainConfig::quick(4, SchemeSpec::Poly { s: 1, m: 1 }, 5);
+    cfg.mode = ExecutionMode::Virtual;
+    cfg.opt = OptChoice::Sgd { lr: 0.01 };
+    let mut tr = Trainer::new(cfg, &ds, None).unwrap();
+    let rec = Recorder::disabled();
+    tr.attach_recorder(&rec);
+    let log = tr.run().unwrap();
+    assert!(log.telemetry.is_none(), "disabled recorder must not digest");
+    assert!(rec.events().is_empty());
+    assert!(rec.summary().phases.is_empty());
+    assert_eq!(log.records.len(), 5);
+}
