@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Local CI gate for gradcode (documented in README.md).
 #
-#   ./ci.sh            # full gate
-#   ./ci.sh --quick    # skip the bench smoke + doc build
+#   ./ci.sh                     # full gate
+#   ./ci.sh --quick             # skip bench smokes, ci-gate + doc build
+#   ./ci.sh --update-baselines  # full gate, then promote target/bench/
+#                               # BENCH_*.json to the repo-root baselines
 #
 # Steps:
 #   1. cargo build --release --benches  (benches are autobenches=false /
@@ -15,23 +17,38 @@
 #                              gate, not hang it — plus a 30-iteration
 #                              --chaos smoke train through the CLI)
 #   4. obs stage              (30-iteration traced train smoke writing a
-#                              telemetry JSONL, trace-report over it, and
-#                              obs_overhead --smoke refreshing the
-#                              machine-readable BENCH_obs.json — per-phase
-#                              means + the traced-vs-untraced overhead
-#                              delta)
-#   5. hetero_speedup --smoke (tiny profile sweep; refreshes the
-#                              machine-readable BENCH_hetero.json at the
-#                              repo root so perf is tracked PR-over-PR)
-#   6. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
-#   7. cargo fmt --check      (advisory: warns on drift, does not fail —
+#                              fresh telemetry JSONL, trace-report over it)
+#   5. threads determinism    (the same train at --threads 1 and
+#                              --threads 4 must print identical results —
+#                              the pool's bitwise-determinism contract)
+#   6. bench smokes           (obs_overhead / hetero_speedup / hotpath
+#                              --smoke, each writing its machine-readable
+#                              BENCH_*.json under target/bench/ — never
+#                              over the committed repo-root baselines)
+#   7. gradcode ci-gate       (compare target/bench/BENCH_*.json against
+#                              the committed baselines; >15% regression
+#                              of a headline metric fails the gate;
+#                              --update-baselines promotes instead)
+#   8. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
+#   9. cargo fmt --check      (advisory: warns on drift, does not fail —
 #                              rustfmt availability varies across the
 #                              offline build images)
 set -euo pipefail
 cd "$(dirname "$0")"
 
 quick=0
-[ "${1:-}" = "--quick" ] && quick=1
+update_baselines=0
+for arg in "$@"; do
+    case "$arg" in
+        --quick) quick=1 ;;
+        --update-baselines) update_baselines=1 ;;
+        *) echo "unknown flag: $arg (known: --quick, --update-baselines)"; exit 2 ;;
+    esac
+done
+
+# Advisory findings collected along the way; printed in the final
+# summary so they don't scroll away behind the bench output.
+warnings=()
 
 echo "==> cargo build --release (lib, bin, benches)"
 cargo build --release
@@ -65,18 +82,58 @@ run_limited ./target/release/gradcode chaos-report \
 
 echo "==> obs smoke: traced train + trace-report"
 obs_trace="target/ci_trace.jsonl"
+# A stale trace from an earlier run would mask a train that wrote
+# nothing; start clean.
+rm -f "$obs_trace" target/ci_trace.chrome.json
 run_limited ./target/release/gradcode train \
     --n 6 --s 1 --m 2 --iters 30 --rows 240 --trace "$obs_trace"
 [ -s "$obs_trace" ] || { echo "FAIL: traced train wrote no telemetry"; exit 1; }
 run_limited ./target/release/gradcode trace-report "$obs_trace" --csv \
     --chrome target/ci_trace.chrome.json
 
-if [ "$quick" -eq 0 ]; then
-    echo "==> bench smoke: obs_overhead (writes BENCH_obs.json)"
-    cargo bench --bench obs_overhead -- --smoke
+echo "==> threads determinism smoke (--threads 1 vs --threads 4)"
+# The summary line (losses, wire bytes, sim times) is a pure function of
+# the seed; the pool contract says the thread count must not change it.
+threads_args=(--n 6 --s 1 --m 2 --iters 25 --rows 240 --seed 11)
+out1="$(run_limited ./target/release/gradcode train "${threads_args[@]}" --threads 1 | grep '^scheme=')"
+out4="$(run_limited ./target/release/gradcode train "${threads_args[@]}" --threads 4 | grep '^scheme=')"
+if [ "$out1" != "$out4" ]; then
+    echo "FAIL: results differ between --threads 1 and --threads 4"
+    echo "  1: $out1"
+    echo "  4: $out4"
+    exit 1
+fi
+echo "bitwise identical: $out1"
 
-    echo "==> bench smoke: hetero_speedup (writes BENCH_hetero.json)"
-    cargo bench --bench hetero_speedup -- --smoke
+if [ "$quick" -eq 0 ]; then
+    # Fresh bench artifacts land in target/bench/, NOT the repo root:
+    # the repo-root BENCH_*.json are the committed baselines the gate
+    # compares against, and a smoke run must never overwrite its own
+    # yardstick. Promotion is explicit via --update-baselines.
+    mkdir -p target/bench
+
+    echo "==> bench smoke: obs_overhead (writes target/bench/BENCH_obs.json)"
+    cargo bench --bench obs_overhead -- --smoke --json target/bench/BENCH_obs.json
+
+    echo "==> bench smoke: hetero_speedup (writes target/bench/BENCH_hetero.json)"
+    cargo bench --bench hetero_speedup -- --smoke --json target/bench/BENCH_hetero.json
+
+    echo "==> bench smoke: hotpath thread sweep (writes target/bench/BENCH_hotpath.json)"
+    cargo bench --bench hotpath -- --smoke --json target/bench/BENCH_hotpath.json
+
+    if [ "$update_baselines" -eq 1 ]; then
+        echo "==> promoting target/bench/BENCH_*.json to repo-root baselines"
+        cp target/bench/BENCH_*.json .
+        git status --short -- 'BENCH_*.json' || true
+    else
+        echo "==> gradcode ci-gate (fresh vs committed baselines)"
+        if ls BENCH_*.json >/dev/null 2>&1; then
+            ./target/release/gradcode ci-gate --current target/bench --baseline .
+        else
+            warnings+=("no committed BENCH_*.json baselines; ci-gate skipped — run './ci.sh --update-baselines' once and commit the result")
+            echo "(no committed baselines yet; skipping the gate)"
+        fi
+    fi
 
     echo "==> cargo doc --no-deps"
     cargo doc --no-deps
@@ -84,9 +141,19 @@ fi
 
 echo "==> cargo fmt --check (advisory)"
 if command -v rustfmt >/dev/null 2>&1; then
-    cargo fmt --check || echo "WARNING: formatting drift (non-fatal; run 'cargo fmt')"
+    cargo fmt --check || warnings+=("formatting drift (run 'cargo fmt')")
 else
-    echo "rustfmt not installed; skipping"
+    warnings+=("rustfmt not installed; format check skipped")
 fi
 
+echo
+echo "=== summary ==="
+if [ "${#warnings[@]}" -gt 0 ]; then
+    echo "advisory warnings (gate still passed):"
+    for w in "${warnings[@]}"; do
+        echo "  - $w"
+    done
+else
+    echo "no advisory warnings."
+fi
 echo "CI gate passed."

@@ -1,5 +1,8 @@
-//! Hot-path microbenchmarks: the per-iteration compute the paper assumes
-//! is negligible next to Θ(N·l) gradient work — verified here.
+//! Hot-path benchmarks: per-operation microbenches plus the thread-pool
+//! scaling sweep the CI gate tracks.
+//!
+//! Microbenches (the per-iteration compute the paper assumes is
+//! negligible next to Θ(N·l) gradient work):
 //!
 //! - worker encode (f_w = Z·c): streams d gradients of length l once;
 //! - master decode (g = Σ W f): streams n-s vectors of length l/m once;
@@ -7,33 +10,121 @@
 //! - PJRT worker_step artifact (when artifacts exist);
 //! - decode-weight construction (Vandermonde solve; cached in practice).
 //!
-//!     cargo bench --bench hotpath
+//! Scaling sweep: the same full virtual-cluster training run at 1, 2, …,
+//! `--threads` pool threads (via [`gradcode::pool::set_global_threads`]),
+//! reporting wall seconds per point. The headline `train_speedup`
+//! (1-thread wall time over max-thread wall time) lands in
+//! `BENCH_hotpath.json` and is gated by `gradcode ci-gate`. The sweep
+//! also asserts the determinism contract: the final loss must be
+//! bitwise identical at every thread count.
+//!
+//!     cargo bench --bench hotpath [-- --smoke --json target/bench/BENCH_hotpath.json]
 
-use gradcode::bench::{black_box, Bencher, Stats, Table};
+use std::time::Instant;
+
+use gradcode::bench::{black_box, json_array, Bencher, JsonObject, Stats, Table};
 use gradcode::cli::Command;
 use gradcode::coding::{Decoder, Encoder, PolynomialCode, SchemeConfig};
-use gradcode::coordinator::{ComputeBackend, RustBackend};
+use gradcode::coordinator::{
+    ComputeBackend, OptChoice, RustBackend, SchemeSpec, TrainConfig, Trainer,
+};
 use gradcode::data::{CategoricalConfig, SyntheticCategorical};
 use gradcode::model::LogisticModel;
 use gradcode::rngs::{Pcg64, Rng};
 
 fn main() -> anyhow::Result<()> {
-    let args = Command::new("hotpath", "encode/decode/gradient microbenches")
+    let args = Command::new("hotpath", "encode/decode/gradient microbenches + thread scaling")
         .flag("l", "262144", "gradient dimension (paper: 343474)")
         .flag("n", "10", "workers")
         .flag("s", "1", "stragglers")
         .flag("m", "2", "communication reduction")
-        .flag("iters", "30", "timing iterations")
+        .flag("iters", "30", "timing iterations per microbench")
+        .flag("train-iters", "40", "training iterations per scaling-sweep point")
+        .flag("rows", "3200", "training rows for the scaling sweep")
+        .flag("reps", "2", "sweep repetitions per thread count (minimum wall time wins)")
+        .flag("threads", "4", "max pool threads for the scaling sweep")
+        .flag("json", "BENCH_hotpath.json", "machine-readable output path (empty to skip)")
+        .switch("smoke", "smaller configuration for the CI gate")
         .parse_env();
-    let l: usize = args.get_usize("l");
+    let smoke = args.get_bool("smoke");
+    if smoke {
+        println!(
+            "--smoke: overriding --l/--iters/--train-iters/--rows with the fixed CI \
+             configuration (l=131072, iters=10, train-iters=30, rows=2400)"
+        );
+    }
+    let l: usize = if smoke { 131072 } else { args.get_usize("l") };
     let (n, s, m) = (args.get_usize("n"), args.get_usize("s"), args.get_usize("m"));
+    let iters = if smoke { 10 } else { args.get_usize("iters") };
+    let train_iters = if smoke { 30 } else { args.get_usize("train-iters") };
+    let rows = if smoke { 2400 } else { args.get_usize("rows") };
+    let reps = args.get_usize("reps").max(1);
+    let max_threads = args.get_usize("threads").max(1);
     let cfg = SchemeConfig::tight(n, s, m)?;
     let code = PolynomialCode::new(cfg)?;
-    let b = Bencher::new(3, args.get_usize("iters"));
+
+    // --- thread-scaling sweep: full virtual-cluster training ---------
+    // Powers of two up to the max, then the max itself.
+    let mut sweep_threads: Vec<usize> = Vec::new();
+    let mut t = 1;
+    while t < max_threads {
+        sweep_threads.push(t);
+        t *= 2;
+    }
+    sweep_threads.push(max_threads);
+
+    let gen = SyntheticCategorical::new(
+        CategoricalConfig { columns: 10, cardinality: (16, 48), ..Default::default() },
+        5,
+    );
+    let train_ds = gen.generate(rows, 6);
+    let train_cfg = {
+        let mut c = TrainConfig::quick(n, SchemeSpec::Poly { s, m }, train_iters);
+        c.opt = OptChoice::Nag { lr: 1.2 / rows as f32, momentum: 0.9 };
+        c.eval_every = train_iters; // metrics off the hot path
+        c
+    };
+
+    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    let mut loss_bits: Option<u64> = None;
+    for &threads in &sweep_threads {
+        gradcode::pool::set_global_threads(threads);
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let mut tr = Trainer::new(train_cfg.clone(), &train_ds, None)?;
+            let t0 = Instant::now();
+            let log = tr.run()?;
+            best = best.min(t0.elapsed().as_secs_f64());
+            // Determinism contract: identical bits at every thread count.
+            let bits = log.final_loss().unwrap_or(f64::NAN).to_bits();
+            match loss_bits {
+                None => loss_bits = Some(bits),
+                Some(expect) => assert_eq!(
+                    bits, expect,
+                    "final loss changed with the thread count — determinism broken"
+                ),
+            }
+        }
+        println!("threads {threads}: train {best:.3}s");
+        sweep.push((threads, best));
+    }
+    let train_speedup = sweep[0].1 / sweep[sweep.len() - 1].1;
+    println!(
+        "train_speedup: {train_speedup:.2}x at {max_threads} threads \
+         (final loss bitwise identical across the sweep)"
+    );
+
+    // Microbenches run on the widest pool (the chunked paths engage
+    // above their cutovers at this l).
+    gradcode::pool::set_global_threads(max_threads);
+    let b = Bencher::new(3, iters);
     let mut rng = Pcg64::seed_from_u64(1);
 
     let mut table = Table::new(
-        &format!("hot path @ l={l}, n={n}, d={}, s={s}, m={m}", cfg.d),
+        &format!(
+            "hot path @ l={l}, n={n}, d={}, s={s}, m={m}, {max_threads} threads",
+            cfg.d
+        ),
         &["operation", "mean", "p99", "GB/s streamed"],
     );
 
@@ -44,15 +135,15 @@ fn main() -> anyhow::Result<()> {
     let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
     let enc = Encoder::new(&code, 0)?;
     let mut out = Vec::new();
-    let st = b.run(|| {
+    let st_encode = b.run(|| {
         enc.encode_into(black_box(&views), &mut out).unwrap();
     });
     let bytes = (cfg.d * l + l / m) * 4;
     table.row(&[
         "worker encode".into(),
-        Stats::human(st.mean_ns),
-        Stats::human(st.p99_ns),
-        format!("{:.2}", bytes as f64 / st.mean_ns),
+        Stats::human(st_encode.mean_ns),
+        Stats::human(st_encode.p99_ns),
+        format!("{:.2}", bytes as f64 / st_encode.mean_ns),
     ]);
 
     // --- decode ---
@@ -64,15 +155,15 @@ fn main() -> anyhow::Result<()> {
     let avail: Vec<usize> = (0..n - s).collect();
     let dec = Decoder::new(&code, &avail)?;
     let mut decoded = Vec::new();
-    let st = b.run(|| {
+    let st_decode = b.run(|| {
         dec.decode_into(black_box(&fs), &mut decoded).unwrap();
     });
     let bytes = ((n - s) * lv + l) * 4;
     table.row(&[
         "master decode".into(),
-        Stats::human(st.mean_ns),
-        Stats::human(st.p99_ns),
-        format!("{:.2}", bytes as f64 / st.mean_ns),
+        Stats::human(st_decode.mean_ns),
+        Stats::human(st_decode.p99_ns),
+        format!("{:.2}", bytes as f64 / st_decode.mean_ns),
     ]);
 
     // --- decode-weight construction (uncached cold path) ---
@@ -85,22 +176,18 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     // --- rust-backend partial gradient (smaller, realistic shard) ---
-    let gen = SyntheticCategorical::new(
-        CategoricalConfig { columns: 10, cardinality: (16, 48), ..Default::default() },
-        5,
-    );
     let shard = gen.generate(256, 6).pad_cols(512);
     let beta = vec![0.01f32; shard.cols];
     let mut g = Vec::new();
-    let st = b.run(|| {
+    let st_grad = b.run(|| {
         LogisticModel::gradient_into(black_box(&shard), black_box(&beta), &mut g);
     });
     let bytes = shard.rows * shard.cols * 4 * 2;
     table.row(&[
         format!("logistic grad ({}x{})", shard.rows, shard.cols),
-        Stats::human(st.mean_ns),
-        Stats::human(st.p99_ns),
-        format!("{:.2}", bytes as f64 / st.mean_ns),
+        Stats::human(st_grad.mean_ns),
+        Stats::human(st_grad.p99_ns),
+        format!("{:.2}", bytes as f64 / st_grad.mean_ns),
     ]);
 
     // --- full worker step via rust backend (n=10 artifact shapes) ---
@@ -109,13 +196,13 @@ fn main() -> anyhow::Result<()> {
     let rust_backend = RustBackend::new(&code10, &train)?;
     let beta512 = vec![0.01f32; 512];
     let mut f = Vec::new();
-    let st = b.run(|| {
+    let st_step = b.run(|| {
         rust_backend.encoded_gradient(0, 0, black_box(&beta512), &mut f).unwrap();
     });
     table.row(&[
         "worker step (rust backend)".into(),
-        Stats::human(st.mean_ns),
-        Stats::human(st.p99_ns),
+        Stats::human(st_step.mean_ns),
+        Stats::human(st_step.p99_ns),
         "—".into(),
     ]);
 
@@ -147,5 +234,34 @@ fn main() -> anyhow::Result<()> {
         "paper footnote 8: master reconstruction is O(n·l) vs worker computation Θ(N·l);\n\
          decode must stay ≪ gradient time — compare rows 2 and 4."
     );
+
+    let json_path = args.get_str("json");
+    if !json_path.is_empty() {
+        let sweep_objs = sweep.iter().map(|&(threads, secs)| {
+            JsonObject::new()
+                .field_int("threads", threads as i64)
+                .field_num("train_secs", secs)
+                .build()
+        });
+        let root = JsonObject::new()
+            .field_str("bench", "hotpath")
+            .field_int("l", l as i64)
+            .field_int("n", n as i64)
+            .field_int("s", s as i64)
+            .field_int("m", m as i64)
+            .field_int("train_iters", train_iters as i64)
+            .field_int("rows", rows as i64)
+            .field_int("max_threads", max_threads as i64)
+            .field_int("smoke", i64::from(smoke))
+            .field_int("deterministic", 1)
+            .field_num("train_speedup", train_speedup)
+            .field_raw("sweep", &json_array(sweep_objs))
+            .field_num("encode_mean_ns", st_encode.mean_ns)
+            .field_num("decode_mean_ns", st_decode.mean_ns)
+            .field_num("grad_mean_ns", st_grad.mean_ns)
+            .field_num("worker_step_mean_ns", st_step.mean_ns);
+        std::fs::write(json_path, root.build() + "\n")?;
+        println!("wrote {json_path}");
+    }
     Ok(())
 }

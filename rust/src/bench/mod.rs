@@ -237,6 +237,217 @@ pub fn json_array<I: IntoIterator<Item = String>>(items: I) -> String {
     format!("[{}]", items.into_iter().collect::<Vec<_>>().join(", "))
 }
 
+/// Parsed JSON value — the read side of the `BENCH_*.json` artifacts
+/// (the `ci-gate` subcommand compares fresh runs against committed
+/// baselines; no serde offline).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<JsonValue>),
+    Object(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Member lookup on objects (first match; `None` elsewhere).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Object(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Walk a dotted path of object members, e.g.
+    /// `"bimodal_margin.realized_speedup"`.
+    pub fn get_path(&self, path: &str) -> Option<&JsonValue> {
+        let mut cur = self;
+        for key in path.split('.') {
+            cur = cur.get(key)?;
+        }
+        Some(cur)
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document (trailing whitespace allowed, nothing else).
+/// Errors are positioned for "which baseline file is broken" debugging,
+/// not spec-grade diagnostics.
+pub fn parse_json(text: &str) -> Result<JsonValue, String> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let value = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing characters at byte {pos}"));
+    }
+    Ok(value)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(JsonValue::Object(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    JsonValue::Str(s) => s,
+                    _ => return Err(format!("object key at byte {pos} is not a string")),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at byte {pos}"));
+                }
+                *pos += 1;
+                fields.push((key, parse_value(b, pos)?));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(JsonValue::Object(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(JsonValue::Array(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(JsonValue::Array(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'"') => {
+            *pos += 1;
+            let mut out = String::new();
+            loop {
+                match b.get(*pos) {
+                    None => return Err("unterminated string".into()),
+                    Some(b'"') => {
+                        *pos += 1;
+                        return Ok(JsonValue::Str(out));
+                    }
+                    Some(b'\\') => {
+                        *pos += 1;
+                        match b.get(*pos) {
+                            Some(b'"') => out.push('"'),
+                            Some(b'\\') => out.push('\\'),
+                            Some(b'/') => out.push('/'),
+                            Some(b'n') => out.push('\n'),
+                            Some(b'r') => out.push('\r'),
+                            Some(b't') => out.push('\t'),
+                            Some(b'b') => out.push('\u{8}'),
+                            Some(b'f') => out.push('\u{c}'),
+                            Some(b'u') => {
+                                let hex = text_slice(b, *pos + 1, *pos + 5)?;
+                                let cp = u32::from_str_radix(hex, 16)
+                                    .map_err(|_| format!("bad \\u escape at byte {pos}"))?;
+                                // Surrogate pairs don't occur in our own
+                                // artifacts; map them to U+FFFD.
+                                out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                *pos += 4;
+                            }
+                            _ => return Err(format!("bad escape at byte {pos}")),
+                        }
+                        *pos += 1;
+                    }
+                    Some(_) => {
+                        // Multi-byte UTF-8 sequences pass through intact.
+                        let start = *pos;
+                        while *pos < b.len() && b[*pos] != b'"' && b[*pos] != b'\\' {
+                            *pos += 1;
+                        }
+                        out.push_str(text_slice(b, start, *pos)?);
+                    }
+                }
+            }
+        }
+        Some(b't') => expect_lit(b, pos, "true", JsonValue::Bool(true)),
+        Some(b'f') => expect_lit(b, pos, "false", JsonValue::Bool(false)),
+        Some(b'n') => expect_lit(b, pos, "null", JsonValue::Null),
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let s = text_slice(b, start, *pos)?;
+            s.parse::<f64>()
+                .map(JsonValue::Num)
+                .map_err(|_| format!("invalid number {s:?} at byte {start}"))
+        }
+    }
+}
+
+fn expect_lit(
+    b: &[u8],
+    pos: &mut usize,
+    lit: &str,
+    value: JsonValue,
+) -> Result<JsonValue, String> {
+    if b.len() >= *pos + lit.len() && &b[*pos..*pos + lit.len()] == lit.as_bytes() {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        Err(format!("invalid literal at byte {pos}"))
+    }
+}
+
+fn text_slice(b: &[u8], start: usize, end: usize) -> Result<&str, String> {
+    if end > b.len() {
+        return Err("unexpected end of input".into());
+    }
+    std::str::from_utf8(&b[start..end]).map_err(|_| format!("invalid UTF-8 at byte {start}"))
+}
+
 /// JSON string literal with the mandatory escapes.
 pub fn json_string(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -319,5 +530,71 @@ mod tests {
         assert!(Stats::human(5_000.0).ends_with("µs"));
         assert!(Stats::human(5_000_000.0).ends_with("ms"));
         assert!(Stats::human(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn parser_roundtrips_builder_output() {
+        // The gate reads exactly what the benches write: the parser must
+        // invert JsonObject/json_array output, nesting included.
+        let text = JsonObject::new()
+            .field_str("bench", "hotpath \"smoke\"")
+            .field_int("n", 10)
+            .field_num("train_speedup", 2.25)
+            .field_num("bad", f64::NAN)
+            .field_raw(
+                "bimodal_margin",
+                &JsonObject::new().field_num("realized_speedup", 1.75).build(),
+            )
+            .field_raw(
+                "sweep",
+                &json_array([1.0, 2.5].iter().map(|x| x.to_string())),
+            )
+            .build();
+        let doc = parse_json(&text).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("hotpath \"smoke\""));
+        assert_eq!(doc.get("n").unwrap().as_f64(), Some(10.0));
+        assert_eq!(doc.get_path("train_speedup").unwrap().as_f64(), Some(2.25));
+        assert_eq!(doc.get("bad"), Some(&JsonValue::Null));
+        assert_eq!(
+            doc.get_path("bimodal_margin.realized_speedup").unwrap().as_f64(),
+            Some(1.75)
+        );
+        match doc.get("sweep").unwrap() {
+            JsonValue::Array(items) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[1].as_f64(), Some(2.5));
+            }
+            other => panic!("sweep parsed as {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parser_handles_scalars_whitespace_and_escapes() {
+        assert_eq!(parse_json(" true ").unwrap(), JsonValue::Bool(true));
+        assert_eq!(parse_json("false").unwrap(), JsonValue::Bool(false));
+        assert_eq!(parse_json("null").unwrap(), JsonValue::Null);
+        assert_eq!(parse_json("-1.5e2").unwrap().as_f64(), Some(-150.0));
+        assert_eq!(parse_json("[]").unwrap(), JsonValue::Array(vec![]));
+        assert_eq!(parse_json("{}").unwrap(), JsonValue::Object(vec![]));
+        assert_eq!(
+            parse_json("\"a\\n\\t\\\\b\\u0041\"").unwrap().as_str(),
+            Some("a\n\t\\bA")
+        );
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        for bad in ["", "{", "[1,", "{\"a\" 1}", "{\"a\": 1} trailing", "{1: 2}", "nul"] {
+            assert!(parse_json(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn path_getter_misses_cleanly() {
+        let doc = parse_json("{\"a\": {\"b\": 3}}").unwrap();
+        assert_eq!(doc.get_path("a.b").unwrap().as_f64(), Some(3.0));
+        assert!(doc.get_path("a.c").is_none());
+        assert!(doc.get_path("a.b.c").is_none());
+        assert!(doc.get("missing").is_none());
     }
 }

@@ -61,7 +61,11 @@ impl Decoder {
     /// `n-s` returned vectors read concurrently — each `f_i[v]` is loaded
     /// once and contributes to all `m` interleaved output coordinates
     /// (§Perf: the per-responder formulation re-traversed `out` n-s times
-    /// and measured ~2.4 ms at n-s=9, l=262144).
+    /// and measured ~2.4 ms at n-s=9, l=262144). The output pass is
+    /// chunked across [`crate::pool`] on `m`-aligned boundaries — every
+    /// `m`-block is an independent combination of the `f_i[v]`, so the
+    /// parallel result is bitwise identical to the serial one for any
+    /// thread count.
     pub fn decode_into(&self, fs: &[&[f32]], out: &mut Vec<f32>) -> Result<(), CodingError> {
         let used = self.used.len();
         if fs.len() < used {
@@ -74,15 +78,40 @@ impl Decoder {
         let m = self.m;
         out.clear();
         out.resize(lv * m, 0.0);
+        if lv >= 2 * DECODE_CHUNK_V {
+            // Chunk in units of v (m output elements each) so every
+            // chunk boundary stays m-aligned.
+            let chunk_elems = DECODE_CHUNK_V * m;
+            crate::pool::global().for_each_chunk_mut(out, chunk_elems, |ci, oc| {
+                self.decode_range(fs, ci * DECODE_CHUNK_V, oc);
+            });
+        } else {
+            self.decode_range(fs, 0, out);
+        }
+        Ok(())
+    }
+
+    /// Decode output components for `v ∈ [v0, v0 + out.len()/m)` into
+    /// `out` (an `m`-aligned chunk of the full output). Dimension checks
+    /// happen in [`Decoder::decode_into`].
+    fn decode_range(&self, fs: &[&[f32]], v0: usize, out: &mut [f32]) {
+        let used = self.used.len();
+        let m = self.m;
+        debug_assert_eq!(out.len() % m, 0);
+        let lv = out.len() / m;
         let w = &self.weights;
         match m {
             1 => {
-                // g[v] = Σ_i w_i f_i[v] — the 4-stream fused weighted sum.
-                crate::linalg::weighted_sum_f32(&w[..used], &fs[..used], out);
+                // g[v] = Σ_i w_i f_i[v] — the 4-stream fused weighted
+                // sum over this chunk's subslice of every responder.
+                let views: Vec<&[f32]> =
+                    fs[..used].iter().map(|f| &f[v0..v0 + lv]).collect();
+                crate::linalg::weighted_sum_f32(&w[..used], &views, out);
             }
             2 => {
                 let (w0, w1) = self.weights_by_u.split_at(used);
-                for v in 0..lv {
+                for dv in 0..lv {
+                    let v = v0 + dv;
                     let mut a0 = 0.0f32;
                     let mut a1 = 0.0f32;
                     for (i, f) in fs[..used].iter().enumerate() {
@@ -90,12 +119,13 @@ impl Decoder {
                         a0 += w0[i] * fv;
                         a1 += w1[i] * fv;
                     }
-                    out[2 * v] = a0;
-                    out[2 * v + 1] = a1;
+                    out[2 * dv] = a0;
+                    out[2 * dv + 1] = a1;
                 }
             }
             4 => {
-                for v in 0..lv {
+                for dv in 0..lv {
+                    let v = v0 + dv;
                     let mut acc = [0.0f32; 4];
                     for (i, f) in fs[..used].iter().enumerate() {
                         let fv = f[v];
@@ -105,12 +135,13 @@ impl Decoder {
                         acc[2] += wi[2] * fv;
                         acc[3] += wi[3] * fv;
                     }
-                    out[4 * v..4 * v + 4].copy_from_slice(&acc);
+                    out[4 * dv..4 * dv + 4].copy_from_slice(&acc);
                 }
             }
             _ => {
-                for v in 0..lv {
-                    let chunk = &mut out[v * m..(v + 1) * m];
+                for dv in 0..lv {
+                    let v = v0 + dv;
+                    let chunk = &mut out[dv * m..(dv + 1) * m];
                     for (i, f) in fs[..used].iter().enumerate() {
                         let fv = f[v];
                         let wi = &w[i * m..(i + 1) * m];
@@ -121,9 +152,13 @@ impl Decoder {
                 }
             }
         }
-        Ok(())
     }
 }
+
+/// Output blocks (`v` units, i.e. `m` floats each) per parallel decode
+/// chunk. The grid is a function of `l/m` only, and each block is
+/// independent, so chunking never changes the bits.
+pub const DECODE_CHUNK_V: usize = 16 * 1024;
 
 /// Direct sum of gradients — the decode oracle for tests.
 pub fn sum_gradients(gradients: &[&[f32]]) -> Vec<f32> {
@@ -218,6 +253,24 @@ mod tests {
                 assert!(err < 1e-3, "stragglers ({a},{b}): rel err {err}");
             }
         }
+    }
+
+    #[test]
+    fn large_decode_parallel_is_bitwise_serial() {
+        // Above the cutover the chunked pool path must produce the
+        // exact bits of a single full-range pass.
+        let code = PolynomialCode::new(SchemeConfig::tight(5, 1, 2).unwrap()).unwrap();
+        let dec = Decoder::new(&code, &[0, 1, 3, 4]).unwrap();
+        let lv = 2 * DECODE_CHUNK_V + 7;
+        let fs_store: Vec<Vec<f32>> = (0..dec.used_workers().len())
+            .map(|i| (0..lv).map(|v| ((i + v) as f32 * 0.003).sin()).collect())
+            .collect();
+        let fs: Vec<&[f32]> = fs_store.iter().map(|v| v.as_slice()).collect();
+        let mut par = Vec::new();
+        dec.decode_into(&fs, &mut par).unwrap();
+        let mut ser = vec![0.0f32; lv * 2];
+        dec.decode_range(&fs, 0, &mut ser);
+        assert!(par.iter().zip(&ser).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

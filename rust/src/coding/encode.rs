@@ -64,7 +64,10 @@ impl Encoder {
     /// Fused across the `d` gradients: one pass over the output with all
     /// `d` input streams read concurrently (§Perf: the per-gradient
     /// formulation re-traversed `out` d times and measured ~963 µs at
-    /// d=3, l=262144; the fused loops are a single write pass).
+    /// d=3, l=262144; the fused loops are a single write pass). The
+    /// output pass is chunked across [`crate::pool`] — every `out[v]`
+    /// is an independent dot product, so the parallel result is bitwise
+    /// identical to the serial one for any thread count.
     pub fn encode_into(
         &self,
         gradients: &[&[f32]],
@@ -81,16 +84,33 @@ impl Encoder {
         let lv = l / self.m;
         out.clear();
         out.resize(lv, 0.0);
+        if lv >= 2 * ENCODE_CHUNK {
+            crate::pool::global().for_each_chunk_mut(out, ENCODE_CHUNK, |ci, oc| {
+                self.encode_range(gradients, ci * ENCODE_CHUNK, oc);
+            });
+        } else {
+            self.encode_range(gradients, 0, out);
+        }
+        Ok(())
+    }
+
+    /// Encode output components `v0 .. v0 + out.len()` (one chunk of the
+    /// transmitted vector). Dimension checks happen in
+    /// [`Encoder::encode_into`].
+    fn encode_range(&self, gradients: &[&[f32]], v0: usize, out: &mut [f32]) {
         let m = self.m;
         let c = &self.coeffs;
         match m {
             1 => {
-                // f[v] = Σ_j c_j g_j[v] — the 4-stream fused weighted sum.
-                crate::linalg::weighted_sum_f32(c, gradients, out);
+                // f[v] = Σ_j c_j g_j[v] — the 4-stream fused weighted
+                // sum over this chunk's subslice of every gradient.
+                let views: Vec<&[f32]> =
+                    gradients.iter().map(|g| &g[v0..v0 + out.len()]).collect();
+                crate::linalg::weighted_sum_f32(c, &views, out);
             }
             2 => {
-                for (v, o) in out.iter_mut().enumerate() {
-                    let base = 2 * v;
+                for (dv, o) in out.iter_mut().enumerate() {
+                    let base = 2 * (v0 + dv);
                     let mut acc = 0.0f32;
                     for (j, g) in gradients.iter().enumerate() {
                         acc += c[2 * j] * g[base] + c[2 * j + 1] * g[base + 1];
@@ -99,8 +119,8 @@ impl Encoder {
                 }
             }
             4 => {
-                for (v, o) in out.iter_mut().enumerate() {
-                    let base = 4 * v;
+                for (dv, o) in out.iter_mut().enumerate() {
+                    let base = 4 * (v0 + dv);
                     let mut acc = 0.0f32;
                     for (j, g) in gradients.iter().enumerate() {
                         let cj = &c[4 * j..4 * j + 4];
@@ -113,8 +133,8 @@ impl Encoder {
                 }
             }
             _ => {
-                for (v, o) in out.iter_mut().enumerate() {
-                    let base = v * m;
+                for (dv, o) in out.iter_mut().enumerate() {
+                    let base = (v0 + dv) * m;
                     let mut acc = 0.0f32;
                     for (j, g) in gradients.iter().enumerate() {
                         let cj = &c[j * m..(j + 1) * m];
@@ -127,9 +147,13 @@ impl Encoder {
                 }
             }
         }
-        Ok(())
     }
 }
+
+/// Output components per parallel encode chunk. The grid is a function
+/// of `l/m` only, and each component is independent, so chunking never
+/// changes the bits.
+pub const ENCODE_CHUNK: usize = 16 * 1024;
 
 #[cfg(test)]
 mod tests {
@@ -168,6 +192,26 @@ mod tests {
                 assert!((got[v] - want[v]).abs() < 1e-4, "d={d} m={m} v={v}");
             }
         }
+    }
+
+    #[test]
+    fn large_encode_parallel_is_bitwise_serial() {
+        // Above the cutover the chunked pool path must produce the
+        // exact bits of a single full-range pass.
+        let (d, m) = (3, 2);
+        let l = 2 * ENCODE_CHUNK * m + 10;
+        let coeffs: Vec<f64> = (0..d * m).map(|i| (i as f64 * 0.7).cos()).collect();
+        let grads_store: Vec<Vec<f32>> = (0..d)
+            .map(|j| (0..l).map(|k| ((j + k) as f32 * 0.001).sin()).collect())
+            .collect();
+        let grads: Vec<&[f32]> = grads_store.iter().map(|v| v.as_slice()).collect();
+        let enc = Encoder::from_coeffs(&coeffs, d, m);
+        let mut par = Vec::new();
+        enc.encode_into(&grads, &mut par).unwrap();
+        let mut ser = vec![0.0f32; l / m];
+        enc.encode_range(&grads, 0, &mut ser);
+        assert_eq!(par.len(), ser.len());
+        assert!(par.iter().zip(&ser).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -176,11 +176,13 @@ impl ComputeBackend for RustBackend {
         out: &mut Vec<f32>,
     ) -> anyhow::Result<()> {
         let assigned = &self.assigned[worker];
-        // d partial gradients, then the coded combine.
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(assigned.len());
-        for &t in assigned {
-            grads.push(self.subset_gradient(iter, t, beta));
-        }
+        // d partial gradients (computed concurrently across the pool —
+        // each is an independent dataset pass, so the fork is trivially
+        // deterministic), then the coded combine.
+        let grads: Vec<Vec<f32>> = crate::pool::global()
+            .map_indexed(assigned.len(), |j| {
+                self.subset_gradient(iter, assigned[j], beta)
+            });
         let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
         self.encoders[worker].encode_into(&views, out)?;
         Ok(())

@@ -1,5 +1,13 @@
-//! The in-process cluster: spawns worker threads, owns the channels, and
-//! gathers per-iteration responses for the master.
+//! The in-process cluster: runs the virtual workers on the shared
+//! compute pool (real-time mode keeps dedicated threads), owns the
+//! channels, and gathers per-iteration responses for the master.
+//!
+//! Virtual mode computes every worker's coded partial gradient for an
+//! iteration concurrently on [`crate::pool`] (the `--threads` /
+//! `GRADCODE_THREADS` knob bounds the parallelism; one thread is a
+//! plain serial loop). Each virtual worker keeps its own delay-RNG
+//! stream, so responder order and the virtual clock are bitwise
+//! identical for any thread count.
 //!
 //! Gathers are fault-aware: duplicated deliveries are deduped, payloads
 //! failing their CRC32 check are rejected (the sender is treated as a
@@ -11,7 +19,7 @@
 //! iteration.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -19,7 +27,7 @@ use super::backend::ComputeBackend;
 use super::messages::{Task, WorkerResult};
 use super::wire::crc32_f32s;
 use super::worker::{DelayInjector, WorkerLoop};
-use crate::chaos::{FaultPlan, GatherPolicy};
+use crate::chaos::{Effect, FaultKind, FaultPlan, GatherPolicy};
 use crate::coding::SchemeConfig;
 use crate::obs::{phase, Clock, Recorder};
 use crate::rngs::Pcg64;
@@ -200,7 +208,8 @@ pub struct GatherResult {
     pub duplicates: usize,
 }
 
-/// In-process master handle over `n` worker threads.
+/// In-process master handle over `n` workers (pool tasks in virtual
+/// mode, dedicated threads in real-time mode).
 pub struct Cluster {
     cfg: SchemeConfig,
     mode: ExecutionMode,
@@ -210,6 +219,12 @@ pub struct Cluster {
     rule: WaitRule,
     policy: GatherPolicy,
     chaos: Option<Arc<FaultPlan>>,
+    backend: Arc<dyn ComputeBackend>,
+    /// Virtual mode only: per-worker delay injectors, index = worker id.
+    /// Each pool task locks only its own worker's slot, so the mutexes
+    /// are uncontended — they exist to make the vector shareable across
+    /// the fork/join region.
+    injectors: Vec<Mutex<Option<DelayInjector>>>,
     task_txs: Vec<Sender<Task>>,
     results: Receiver<WorkerResult>,
     handles: Vec<JoinHandle<()>>,
@@ -302,39 +317,50 @@ impl Cluster {
             assert_eq!(plan.n(), cfg.n, "fault plan sized for a different fleet");
         }
         let (result_tx, result_rx) = channel::<WorkerResult>();
-        let mut task_txs = Vec::with_capacity(cfg.n);
-        let mut handles = Vec::with_capacity(cfg.n);
+        let mut task_txs = Vec::new();
+        let mut handles = Vec::new();
+        let mut injectors = Vec::new();
         let mut root = Pcg64::seed_from_u64(seed);
         for w in 0..cfg.n {
-            let (task_tx, task_rx) = channel::<Task>();
-            task_txs.push(task_tx);
             let (work, speed) = match &profile {
                 Some(p) => (p.work[w], p.speeds[w]),
                 None => (cfg.d as f64, 1.0),
             };
+            // The fork order (and thus every worker's delay stream) is
+            // identical in both modes and unchanged from the threaded
+            // implementation, so seeds reproduce across versions.
             let injector = delays
                 .as_ref()
                 .map(|p| DelayInjector::scaled(p, work, speed, cfg.m, root.fork(w as u64 + 1)));
-            let looper = WorkerLoop {
-                id: w,
-                backend: Arc::clone(&backend),
-                tasks: task_rx,
-                results: result_tx.clone(),
-                delays: injector,
-                sleep_scale: match mode {
-                    ExecutionMode::Virtual => 0.0,
-                    ExecutionMode::RealTime { scale } => scale,
-                },
-                skip_stale: matches!(mode, ExecutionMode::RealTime { .. }),
-                chaos: chaos.as_ref().map(Arc::clone),
-                tombstone_faults: matches!(mode, ExecutionMode::Virtual),
-            };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("gradcode-worker-{w}"))
-                    .spawn(move || looper.run())
-                    .expect("spawn worker"),
-            );
+            match mode {
+                ExecutionMode::Virtual => {
+                    // Virtual workers are pool tasks, not threads: the
+                    // injector stays with the master and is sampled
+                    // inside the per-iteration fork/join region.
+                    injectors.push(Mutex::new(injector));
+                }
+                ExecutionMode::RealTime { scale } => {
+                    let (task_tx, task_rx) = channel::<Task>();
+                    task_txs.push(task_tx);
+                    let looper = WorkerLoop {
+                        id: w,
+                        backend: Arc::clone(&backend),
+                        tasks: task_rx,
+                        results: result_tx.clone(),
+                        delays: injector,
+                        sleep_scale: scale,
+                        skip_stale: true,
+                        chaos: chaos.as_ref().map(Arc::clone),
+                        tombstone_faults: false,
+                    };
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("gradcode-worker-{w}"))
+                            .spawn(move || looper.run())
+                            .expect("spawn worker"),
+                    );
+                }
+            }
         }
         Cluster {
             cfg,
@@ -342,6 +368,8 @@ impl Cluster {
             rule,
             policy,
             chaos,
+            backend,
+            injectors,
             task_txs,
             results: result_rx,
             handles,
@@ -385,6 +413,79 @@ impl Cluster {
         }
     }
 
+    /// One virtual worker's report(s) for one iteration — exactly the
+    /// per-task behaviour the dedicated worker threads used to have
+    /// (see [`WorkerLoop`], which real-time mode still runs), inlined
+    /// as a pool task so all `n` workers compute concurrently. Returns
+    /// one message, or two under a duplicate fault.
+    fn virtual_worker_reports(
+        w: usize,
+        iter: usize,
+        beta: &[f32],
+        backend: &dyn ComputeBackend,
+        injector: &Mutex<Option<DelayInjector>>,
+        chaos: Option<&FaultPlan>,
+    ) -> Vec<WorkerResult> {
+        // Sample the delay before consulting the plan so the delay RNG
+        // stream stays aligned with a fault-free run of the same seed.
+        let mut virtual_finish = {
+            let mut inj = injector.lock().unwrap_or_else(|e| e.into_inner());
+            inj.as_mut().map_or(0.0, |d| d.sample())
+        };
+        let effect = chaos.map_or(Effect::None, |p| p.effect(w, iter as u64));
+        if effect.is_silent() {
+            // Virtual gathers count every worker exactly once, so a
+            // silent fault must still report: tombstone.
+            return vec![WorkerResult {
+                worker: w,
+                iter,
+                f: Vec::new(),
+                virtual_finish,
+                compute_secs: 0.0,
+                failed: true,
+                crc: None,
+            }];
+        }
+        if let Effect::Fault(FaultKind::Delay(secs)) = effect {
+            virtual_finish += secs;
+        }
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        let failed = match backend.encoded_gradient(w, iter, beta, &mut out) {
+            Ok(()) => false,
+            Err(e) => {
+                // A failed worker behaves like a straggler, but it must
+                // still report. The master tolerates up to s.
+                eprintln!("worker {w}: backend error: {e}");
+                out.clear();
+                true
+            }
+        };
+        let compute_secs = t0.elapsed().as_secs_f64();
+        // Checksum the TRUE payload, then corrupt: the master's CRC
+        // check must flag the flipped bit exactly like the TCP frame
+        // checksum would.
+        let crc = chaos.map(|_| crc32_f32s(&out));
+        if matches!(effect, Effect::Fault(FaultKind::Corrupt)) && !out.is_empty() {
+            let idx = (iter * 31 + w) % out.len();
+            out[idx] = f32::from_bits(out[idx].to_bits() ^ 1);
+        }
+        let msg = WorkerResult {
+            worker: w,
+            iter,
+            f: out,
+            virtual_finish,
+            compute_secs,
+            failed,
+            crc,
+        };
+        if matches!(effect, Effect::Fault(FaultKind::Duplicate)) {
+            vec![msg.clone(), msg]
+        } else {
+            vec![msg]
+        }
+    }
+
     /// Wait-rule outcome counters for one gather (enabled recorders only).
     fn record_gather_counters(&self, satisfied: bool, rejected: &[usize], duplicates: usize) {
         self.obs
@@ -399,9 +500,11 @@ impl Cluster {
 
     /// Broadcast an iteration and gather responses.
     ///
-    /// Virtual mode: waits for one report from every worker (silent
-    /// faults tombstone, so this cannot hang), sorts by virtual finish,
-    /// returns all healthy ones; `quorum_len` marks the shortest arrival
+    /// Virtual mode: computes all `n` coded partial gradients
+    /// concurrently on [`crate::pool`] and collects one report per
+    /// worker (silent faults tombstone, so this cannot hang; results
+    /// are bitwise identical for any thread count), sorts by virtual
+    /// finish, returns all healthy ones; `quorum_len` marks the shortest arrival
     /// prefix that satisfies the wait rule (the trainer decodes from that
     /// prefix). Real-time mode: returns once the rule is satisfied by the
     /// arrived results, or when the gather deadline expires after the
@@ -413,6 +516,9 @@ impl Cluster {
         let ts0 = self.obs.now();
         {
             let _b = self.obs.span(phase::BROADCAST).iter(iter as u64);
+            // Virtual mode has no task channels (workers are pool tasks);
+            // the span is still recorded so phase counters are mode-
+            // independent.
             for tx in &self.task_txs {
                 // A dead worker (backend error) is a permanent straggler; the
                 // send fails silently and the decode path handles the gap.
@@ -426,35 +532,45 @@ impl Cluster {
         let mut rejected: Vec<usize> = Vec::new();
         match self.mode {
             ExecutionMode::Virtual => {
-                // Every worker reports exactly once per iteration: backend
-                // failures and injected silent faults report `failed = true`
-                // tombstones rather than going silent, and duplicate faults
-                // are deduped before counting.
-                let mut received = 0usize;
-                {
+                // All n coded partial gradients for this iteration are
+                // computed concurrently on the shared pool instead of by
+                // dedicated worker threads. Every worker reports exactly
+                // once: backend failures and injected silent faults
+                // report `failed = true` tombstones rather than going
+                // silent, and duplicate faults are deduped before
+                // counting — so the gather is deterministic and cannot
+                // hang, for any thread count.
+                let reports: Vec<Vec<WorkerResult>> = {
                     let _g = self.obs.span(phase::GATHER_WAIT).iter(iter as u64);
-                    while received < n {
-                        match self.results.recv() {
-                            Ok(r) if r.iter == iter => {
-                                if seen[r.worker] {
-                                    duplicates += 1;
-                                    continue;
-                                }
-                                seen[r.worker] = true;
-                                received += 1;
-                                if r.failed {
-                                    continue;
-                                }
-                                if !Self::crc_ok(&r) {
-                                    rejected.push(r.worker);
-                                    continue;
-                                }
-                                results.push(r);
-                            }
-                            Ok(_) => continue, // stale (shouldn't happen here)
-                            Err(_) => break,   // all workers died
-                        }
+                    let backend = self.backend.as_ref();
+                    let injectors = &self.injectors;
+                    let chaos = self.chaos.as_deref();
+                    let beta_ref: &[f32] = &beta;
+                    crate::pool::global().map_indexed(n, |w| {
+                        Self::virtual_worker_reports(
+                            w,
+                            iter,
+                            beta_ref,
+                            backend,
+                            &injectors[w],
+                            chaos,
+                        )
+                    })
+                };
+                for r in reports.into_iter().flatten() {
+                    if seen[r.worker] {
+                        duplicates += 1;
+                        continue;
                     }
+                    seen[r.worker] = true;
+                    if r.failed {
+                        continue;
+                    }
+                    if !Self::crc_ok(&r) {
+                        rejected.push(r.worker);
+                        continue;
+                    }
+                    results.push(r);
                 }
                 results.sort_by(|a, b| {
                     a.virtual_finish.partial_cmp(&b.virtual_finish).unwrap()

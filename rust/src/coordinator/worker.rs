@@ -1,6 +1,11 @@
 //! Worker thread: receive a task, compute the coded gradient through the
 //! backend, optionally sleep an injected delay (real-time mode), apply
 //! any scheduled fault from the chaos plan, report.
+//!
+//! Only real-time mode runs this loop on dedicated threads (the racy
+//! wire path is the point there). Virtual mode inlines the identical
+//! per-task behaviour as pool tasks — see
+//! `Cluster::virtual_worker_reports` in `cluster.rs`.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;

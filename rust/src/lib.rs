@@ -39,6 +39,11 @@
 //! - [`obs`] — zero-dependency telemetry: RAII phase spans, counters,
 //!   log-bucketed latency histograms, JSONL + Chrome-trace export, and
 //!   per-worker straggler attribution with §VI-model deviation.
+//! - [`pool`] — std-only fork/join thread pool behind every hot path
+//!   (virtual-worker compute, encode/decode, row-chunked gradients,
+//!   Monte-Carlo sweeps); deterministic: fixed chunk grids + binary-tree
+//!   combine order make results bitwise identical for any thread count
+//!   (`GRADCODE_THREADS` / `--threads`).
 //! - `runtime` — PJRT execution of AOT artifacts (`xla` crate); compiled
 //!   only with the `pjrt` cargo feature, since the `xla` dependency is
 //!   not available in the offline build environment.
@@ -61,6 +66,7 @@ pub mod metrics;
 pub mod model;
 pub mod obs;
 pub mod optim;
+pub mod pool;
 pub mod rngs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

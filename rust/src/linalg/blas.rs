@@ -3,11 +3,40 @@
 //! and the rust reference backend's encode is a `(l/m, d·m) × (d·m)`
 //! matvec. Loops are written unrolled-by-4 over contiguous slices so LLVM
 //! auto-vectorizes them.
+//!
+//! Large AXPY/GEMV calls additionally fan out across [`crate::pool`].
+//! Both are per-output-element independent (no cross-thread reduction),
+//! so the parallel results are bitwise identical to the serial kernels
+//! for any thread count; the cutover thresholds only decide *when* the
+//! fork overhead is worth paying, never *what* is computed.
 
-/// `y += a * x` over f32 slices (hot decode kernel).
+/// Elements per parallel AXPY chunk; inputs shorter than two chunks run
+/// serially (fork overhead would dominate the memory-bound kernel).
+pub const AXPY_PAR_CHUNK: usize = 32 * 1024;
+
+/// Rows per parallel GEMV chunk; matrices with fewer than two chunks of
+/// rows run serially.
+pub const GEMV_PAR_ROWS: usize = 256;
+
+/// `y += a * x` over f32 slices (hot decode kernel). Chunks across the
+/// pool above [`AXPY_PAR_CHUNK`]; per-element independent, so bitwise
+/// identical at any thread count.
 #[inline]
 pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    if y.len() >= 2 * AXPY_PAR_CHUNK {
+        crate::pool::global().for_each_chunk_mut(y, AXPY_PAR_CHUNK, |c, yc| {
+            let start = c * AXPY_PAR_CHUNK;
+            axpy_serial(a, &x[start..start + yc.len()], yc);
+        });
+        return;
+    }
+    axpy_serial(a, x, y);
+}
+
+/// The serial AXPY kernel: `y += a * x`.
+#[inline]
+fn axpy_serial(a: f32, x: &[f32], y: &mut [f32]) {
     let n = x.len();
     let chunks = n / 8 * 8;
     // Manually chunked so the bound checks vanish and LLVM emits SIMD.
@@ -45,11 +74,28 @@ pub fn weighted_sum_f32(w: &[f32], xs: &[&[f32]], out: &mut [f32]) {
     }
 }
 
-/// Row-major f32 GEMV: `out[r] = Σ_c a[r*cols+c] v[c]`.
+/// Row-major f32 GEMV: `out[r] = Σ_c a[r*cols+c] v[c]`. Row-chunks
+/// across the pool above [`GEMV_PAR_ROWS`]; each output row is an
+/// independent dot product, so bitwise identical at any thread count.
 pub fn gemv_f32(rows: usize, cols: usize, a: &[f32], v: &[f32], out: &mut [f32]) {
     assert_eq!(a.len(), rows * cols);
     assert_eq!(v.len(), cols);
     assert_eq!(out.len(), rows);
+    if rows >= 2 * GEMV_PAR_ROWS {
+        crate::pool::global().for_each_chunk_mut(out, GEMV_PAR_ROWS, |c, oc| {
+            let r0 = c * GEMV_PAR_ROWS;
+            gemv_rows_serial(r0, cols, &a[r0 * cols..(r0 + oc.len()) * cols], v, oc);
+        });
+        return;
+    }
+    gemv_rows_serial(0, cols, a, v, out);
+}
+
+/// Serial GEMV over a row block: `out[i] = Σ_c a[i*cols+c] v[c]` where
+/// `a` holds `out.len()` consecutive rows (the caller offsets by `r0`,
+/// kept only for debug assertions).
+fn gemv_rows_serial(_r0: usize, cols: usize, a: &[f32], v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), out.len() * cols);
     for (r, o) in out.iter_mut().enumerate() {
         let row = &a[r * cols..(r + 1) * cols];
         let mut acc0 = 0.0f32;
@@ -190,6 +236,37 @@ mod tests {
         let x: Vec<f64> = (0..9).map(|i| i as f64).collect();
         let y = vec![2.0; 9];
         assert_eq!(dot_f64(&x, &y), 2.0 * 36.0);
+    }
+
+    #[test]
+    fn large_axpy_parallel_is_bitwise_serial() {
+        // Above the cutover the pool path must produce the exact bits
+        // of the serial kernel (per-element independence).
+        let n = 2 * AXPY_PAR_CHUNK + 17;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut y_par: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut y_ser = y_par.clone();
+        axpy_f32(1.7, &x, &mut y_par);
+        axpy_serial(1.7, &x, &mut y_ser);
+        assert!(y_par
+            .iter()
+            .zip(&y_ser)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn large_gemv_parallel_is_bitwise_serial() {
+        let (rows, cols) = (2 * GEMV_PAR_ROWS + 3, 33);
+        let a: Vec<f32> = (0..rows * cols).map(|i| (i as f32 * 0.13).sin()).collect();
+        let v: Vec<f32> = (0..cols).map(|i| (i as f32 * 0.7).cos()).collect();
+        let mut out_par = vec![0.0f32; rows];
+        let mut out_ser = vec![0.0f32; rows];
+        gemv_f32(rows, cols, &a, &v, &mut out_par);
+        gemv_rows_serial(0, cols, &a, &v, &mut out_ser);
+        assert!(out_par
+            .iter()
+            .zip(&out_ser)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -13,7 +13,10 @@ mod blas;
 mod lu;
 mod svd;
 
-pub use blas::{axpy_f32, dot_f64, gemv_colmajor_f32, gemv_f32, gemm_f64, weighted_sum_f32};
+pub use blas::{
+    axpy_f32, dot_f64, gemv_colmajor_f32, gemv_f32, gemm_f64, weighted_sum_f32,
+    AXPY_PAR_CHUNK, GEMV_PAR_ROWS,
+};
 pub use lu::Lu;
 pub use svd::{condition_number, singular_values};
 

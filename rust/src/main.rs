@@ -14,6 +14,10 @@
 //!                  `train --trace <path>` (or `worker --trace`): phase
 //!                  breakdown, straggler attribution, wire counters;
 //!                  `--chrome out.json` exports a Perfetto-loadable trace
+//! - `ci-gate`      bench-regression gate: compare fresh `BENCH_*.json`
+//!                  (from the `ci.sh` bench smokes, in `target/bench/`)
+//!                  against the committed repo-root baselines and fail on
+//!                  regressed headline metrics
 //! - `plan`         §VI model: optimal (d, s, m) for given delay parameters
 //! - `plan-hetero`  heterogeneous load planner: optimized per-worker load
 //!                  vector and predicted speedup over uniform placement
@@ -69,9 +73,23 @@ fn app() -> App {
                     "",
                     "write telemetry JSONL to this path and print the phase breakdown; empty = off",
                 )
+                .flag(
+                    "threads",
+                    "0",
+                    "pool threads for the parallel hot paths (0 = GRADCODE_THREADS or all cores); results are bitwise identical either way",
+                )
                 .switch("pjrt", "use the AOT PJRT backend (needs --features pjrt + artifacts)")
                 .switch("no-delays", "disable straggler injection")
                 .switch("csv", "dump per-iteration CSV to stdout"),
+        )
+        .command(
+            Command::new(
+                "ci-gate",
+                "compare fresh BENCH_*.json against committed baselines; fail on regression",
+            )
+            .flag("current", "target/bench", "directory holding the freshly produced BENCH_*.json")
+            .flag("baseline", ".", "directory holding the committed baseline BENCH_*.json")
+            .flag("tol", "0.15", "allowed relative regression of each headline metric"),
         )
         .command(
             Command::new(
@@ -435,6 +453,12 @@ fn run_pjrt_train(
 }
 
 fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    // Resize the global pool before any hot path touches it; 0 keeps the
+    // GRADCODE_THREADS / core-count default.
+    let threads = a.get_usize("threads");
+    if threads > 0 {
+        gradcode::pool::set_global_threads(threads);
+    }
     let n = a.get_usize("n");
     let s = a.get_usize("s");
     let m = a.get_usize("m");
@@ -541,6 +565,109 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
     if a.get_bool("csv") {
         print!("{}", log.to_csv());
     }
+    Ok(())
+}
+
+/// Headline metrics the bench-regression gate tracks, one per bench
+/// artifact: `(file, dotted path, higher_is_better, noise_floor)`.
+///
+/// Every headline is a ratio (speedup or overhead fraction), so the
+/// comparison is largely machine-independent even though the underlying
+/// benches measure wall clock. `noise_floor` guards lower-is-better
+/// metrics whose baseline can sit near zero: the regression threshold is
+/// computed from `max(baseline, floor)`.
+const GATE_HEADLINES: &[(&str, &str, bool, f64)] = &[
+    ("BENCH_hotpath.json", "train_speedup", true, 0.0),
+    ("BENCH_obs.json", "overhead_frac", false, 0.05),
+    ("BENCH_hetero.json", "bimodal_margin.realized_speedup", true, 0.0),
+];
+
+fn cmd_ci_gate(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    use gradcode::bench::{parse_json, Table};
+    let current_dir = std::path::PathBuf::from(a.get_str("current"));
+    let baseline_dir = std::path::PathBuf::from(a.get_str("baseline"));
+    let tol = a.get_f64("tol");
+    anyhow::ensure!(tol >= 0.0 && tol < 1.0, "--tol must be in [0, 1)");
+
+    // Read one headline metric out of a BENCH json, with a reason string
+    // on every failure path so SKIP rows are self-explanatory.
+    let read_metric = |dir: &std::path::Path, file: &str, path: &str| -> Result<f64, String> {
+        let full = dir.join(file);
+        let text = std::fs::read_to_string(&full)
+            .map_err(|_| format!("missing {}", full.display()))?;
+        let doc = parse_json(&text).map_err(|e| format!("{}: {e}", full.display()))?;
+        let v = doc
+            .get_path(path)
+            .ok_or_else(|| format!("{}: no field {path:?}", full.display()))?;
+        v.as_f64().ok_or_else(|| format!("{}: {path:?} is not a number", full.display()))
+    };
+
+    let mut table = Table::new(
+        &format!("bench regression gate, tol = {:.0}%", tol * 100.0),
+        &["artifact", "metric", "baseline", "current", "delta", "status"],
+    );
+    let mut failures = Vec::new();
+    let mut skips = Vec::new();
+    for &(file, path, higher_better, floor) in GATE_HEADLINES {
+        let base = read_metric(&baseline_dir, file, path);
+        let cur = read_metric(&current_dir, file, path);
+        let (row, status) = match (&base, &cur) {
+            (Ok(b), Ok(c)) => {
+                let delta = c / b - 1.0;
+                // Higher-is-better fails when current drops more than tol
+                // below baseline; lower-is-better when it rises more than
+                // tol above the noise-floored baseline.
+                let fail = if higher_better {
+                    *c < b * (1.0 - tol)
+                } else {
+                    *c > b.max(floor) * (1.0 + tol)
+                };
+                (
+                    [format!("{b:.4}"), format!("{c:.4}"), format!("{delta:+.1}%", delta = delta * 100.0)],
+                    if fail { "FAIL" } else { "PASS" },
+                )
+            }
+            (Err(e), _) | (_, Err(e)) => {
+                skips.push(format!("{file} {path}: {e}"));
+                (["—".into(), "—".into(), "—".into()], "SKIP")
+            }
+        };
+        if status == "FAIL" {
+            failures.push(format!(
+                "{file}: {path} regressed beyond {:.0}% (baseline {}, current {})",
+                tol * 100.0,
+                row[0],
+                row[1]
+            ));
+        }
+        table.row(&[
+            file.to_string(),
+            path.to_string(),
+            row[0].clone(),
+            row[1].clone(),
+            row[2].clone(),
+            status.to_string(),
+        ]);
+    }
+    table.print();
+    if !skips.is_empty() {
+        println!("skipped comparisons (not failures):");
+        for s in &skips {
+            println!("  - {s}");
+        }
+        println!(
+            "  run the bench smokes (./ci.sh without --quick) and promote fresh \
+             baselines with `./ci.sh --update-baselines`"
+        );
+    }
+    if !failures.is_empty() {
+        anyhow::bail!(
+            "ci-gate: {} headline metric(s) regressed:\n  {}",
+            failures.len(),
+            failures.join("\n  ")
+        );
+    }
+    println!("ci-gate: OK ({} compared, {} skipped)", GATE_HEADLINES.len() - skips.len(), skips.len());
     Ok(())
 }
 
@@ -857,6 +984,7 @@ fn main() -> anyhow::Result<()> {
             "info" => cmd_info(),
             "train" => cmd_train(args),
             "trace-report" => cmd_trace_report(args),
+            "ci-gate" => cmd_ci_gate(args),
             "chaos-report" => cmd_chaos_report(args),
             "plan" => cmd_plan(args),
             "plan-hetero" => cmd_plan_hetero(args),

@@ -1,0 +1,566 @@
+//! Pool — std-only fork/join thread pool for the compute hot paths.
+//!
+//! The paper's figure of merit is wall-clock time per iteration, yet a
+//! single-threaded reproduction is bounded by one core no matter how
+//! good the coding scheme is. This module supplies the parallel
+//! substrate used by the encode/compute/decode hot paths
+//! ([`crate::coding`], [`crate::coordinator`], [`crate::model`],
+//! [`crate::linalg`], [`crate::simulator`]) under the repo's offline
+//! constraint: no crates.io, `std` only (consistent with the vendored
+//! `anyhow`).
+//!
+//! # Design
+//!
+//! **Fixed workers, caller participates.** [`ThreadPool::new`]`(k)`
+//! spawns `k - 1` worker threads; the submitting thread is the k-th
+//! worker of every fork/join region, so `k = 1` degrades to a plain
+//! serial loop with no queue traffic at all (the deterministic
+//! single-thread fallback).
+//!
+//! **Work-stealing-lite.** There are no per-worker deques to steal
+//! from. A fork/join region shares one atomic claim counter: every
+//! participant (caller + helpers) grabs the next unclaimed index until
+//! none remain. For the coarse, similarly-sized tasks in this codebase
+//! (per-worker coded gradients, row chunks, Monte-Carlo blocks) this
+//! self-balances exactly like stealing would, with two orders of
+//! magnitude less machinery. See `rust/DESIGN.md` for the rationale.
+//!
+//! **Scoped borrows without `transmute`.** [`ThreadPool::map_indexed`]
+//! lends stack-borrowing closures to the workers through a raw pointer
+//! guarded by a *gate* (an `RwLock<bool>`): helpers take the read lock
+//! and check the gate before dereferencing; after the completion latch
+//! trips, the caller takes the write lock and disarms, which blocks
+//! until every in-gate helper has exited. A stale queued job that runs
+//! after the region ended sees the disarmed gate and returns without
+//! touching the dead stack frame.
+//!
+//! **Panic capture.** Each task body runs under
+//! [`std::panic::catch_unwind`]; a panicking task fails the
+//! *submitting* `map_indexed` call (the first payload is re-thrown on
+//! the caller's thread) and the pool remains usable for subsequent
+//! submissions — no poisoning.
+//!
+//! **Determinism.** Results come back ordered by index regardless of
+//! which thread computed them, and the chunked reductions built on top
+//! ([`tree_combine`]) combine partials in a fixed binary-tree order, so
+//! every consumer is bitwise identical for any thread count. Callers
+//! must derive their chunk grids from data sizes only — never from
+//! [`ThreadPool::threads`].
+//!
+//! **Nested regions flatten.** A task that itself calls `map_indexed`
+//! runs the nested region inline on its own thread (a thread-local
+//! flag marks pool workers), so total concurrency is exactly the pool
+//! width and re-entrant submission cannot deadlock on the shared queue.
+//!
+//! # Configuration
+//!
+//! The process-wide pool ([`global`]) sizes itself from the
+//! `GRADCODE_THREADS` environment variable (unset, empty, `0`, or
+//! unparsable mean "auto" = [`std::thread::available_parallelism`]);
+//! the CLI's `--threads` flag calls [`set_global_threads`] which takes
+//! precedence over the environment.
+//!
+//! ```
+//! use gradcode::pool::{tree_combine, ThreadPool};
+//!
+//! let pool = ThreadPool::new(4);
+//! let squares = pool.map_indexed(8, |i| (i * i) as u64);
+//! assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+//! let total = tree_combine(squares, |a, b| a + b).unwrap();
+//! assert_eq!(total, 140);
+//! ```
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+use std::thread;
+
+/// A queued unit of work handed to a helper thread.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True while this thread is executing a pool task; nested
+    /// fork/join regions run inline instead of re-entering the queue.
+    static IN_POOL_TASK: Cell<bool> = Cell::new(false);
+}
+
+fn in_pool_task() -> bool {
+    IN_POOL_TASK.with(|f| f.get())
+}
+
+/// RAII marker for "this thread is inside a pool task".
+struct TaskGuard {
+    prev: bool,
+}
+
+impl TaskGuard {
+    fn enter() -> Self {
+        let prev = IN_POOL_TASK.with(|f| f.replace(true));
+        TaskGuard { prev }
+    }
+}
+
+impl Drop for TaskGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL_TASK.with(|f| f.set(prev));
+    }
+}
+
+/// Lock helper: the pool must keep working even if a task panicked
+/// while a lock was held elsewhere (same idiom as the obs recorder).
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Shared state between the pool handle and its worker threads.
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    /// Signalled when a job is queued or shutdown begins.
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut q = lock_ignore_poison(&self.queue);
+                loop {
+                    if let Some(job) = q.pop_front() {
+                        break job;
+                    }
+                    if self.shutdown.load(Ordering::Acquire) {
+                        return;
+                    }
+                    q = self
+                        .available
+                        .wait(q)
+                        .unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            job();
+        }
+    }
+}
+
+/// Counts outstanding tasks of one fork/join region; the caller blocks
+/// on it until every claimed index has finished.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch { remaining: Mutex::new(count), done: Condvar::new() }
+    }
+
+    fn complete_one(&self) {
+        let mut left = lock_ignore_poison(&self.remaining);
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = lock_ignore_poison(&self.remaining);
+        while *left > 0 {
+            left = self.done.wait(left).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Arms the raw runner pointer a fork/join region lends to helpers.
+/// Helpers hold the read lock while executing; the caller disarms
+/// through the write lock, which cannot be acquired until every
+/// in-flight helper has left the region.
+struct Gate {
+    armed: RwLock<bool>,
+}
+
+/// Raw pointer to the region's stack-allocated runner closure. Sending
+/// it to helper threads is sound because the [`Gate`] protocol
+/// guarantees no dereference after the caller's frame dies.
+struct SendPtr(*const (dyn Fn() + Sync));
+unsafe impl Send for SendPtr {}
+
+/// Raw base pointer for [`ThreadPool::for_each_chunk_mut`]; chunks are
+/// disjoint by construction, so concurrent `&mut` reborrows are sound.
+struct SendMutPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendMutPtr<T> {}
+unsafe impl<T: Send> Sync for SendMutPtr<T> {}
+
+/// Fixed-width fork/join thread pool (see the module docs).
+pub struct ThreadPool {
+    /// `None` when `threads == 1`: every call degrades to an inline
+    /// serial loop and no worker threads exist.
+    shared: Option<Arc<Shared>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Build a pool of `threads` total workers (the caller counts as
+    /// one, so `threads - 1` OS threads are spawned). `threads` is
+    /// clamped to at least 1.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return ThreadPool { shared: None, workers: Vec::new(), threads };
+        }
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut workers = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let sh = Arc::clone(&shared);
+            let handle = thread::Builder::new()
+                .name(format!("gradcode-pool-{i}"))
+                .spawn(move || sh.worker_loop())
+                .expect("spawn pool worker");
+            workers.push(handle);
+        }
+        ThreadPool { shared: Some(shared), workers, threads }
+    }
+
+    /// Total workers participating in a fork/join region (including
+    /// the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), …, f(count - 1)` across the pool and return the
+    /// results ordered by index. The closure may borrow from the
+    /// caller's stack; it must be `Sync` because several threads call
+    /// it concurrently (on distinct indices).
+    ///
+    /// Runs inline — a plain ordered loop — when the pool is
+    /// single-threaded, `count <= 1`, or the calling thread is itself
+    /// executing a pool task (nested region).
+    ///
+    /// If any task panics, the first payload (in index order) is
+    /// re-thrown on the calling thread after the region has fully quiesced;
+    /// the pool stays usable.
+    pub fn map_indexed<R, F>(&self, count: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let shared = match &self.shared {
+            Some(sh) if count > 1 && !in_pool_task() => sh,
+            _ => return (0..count).map(f).collect(),
+        };
+
+        // One slot per index; tasks write their own slot, so slots are
+        // never contended (the Mutex is for Sync, not for blocking).
+        let slots: Vec<Mutex<Option<thread::Result<R>>>> =
+            (0..count).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let latch = Latch::new(count);
+
+        // The region's runner: claim indices until none remain. Every
+        // participant — caller and helpers alike — executes this same
+        // closure; results land in index-addressed slots, so assignment
+        // order does not affect the output.
+        let runner = |_thread_is_helper: ()| {
+            let _guard = TaskGuard::enter();
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= count {
+                    break;
+                }
+                let out = catch_unwind(AssertUnwindSafe(|| f(i)));
+                *lock_ignore_poison(&slots[i]) = Some(out);
+                latch.complete_one();
+            }
+        };
+        let runner_obj = || runner(());
+        let runner_ref: &(dyn Fn() + Sync) = &runner_obj;
+        let gate = Arc::new(Gate { armed: RwLock::new(true) });
+
+        // Lend the runner to at most (threads - 1) helpers; more would
+        // never find an unclaimed index.
+        let helpers = (self.threads - 1).min(count - 1);
+        {
+            // Erase the borrow's lifetime so the job closure is
+            // 'static-queueable; the Gate protocol re-establishes the
+            // "no use after the frame dies" guarantee dynamically.
+            let raw = runner_ref as *const (dyn Fn() + Sync)
+                as *const (dyn Fn() + Sync + 'static);
+            let mut q = lock_ignore_poison(&shared.queue);
+            for _ in 0..helpers {
+                let gate = Arc::clone(&gate);
+                let job_ptr = SendPtr(raw);
+                q.push_back(Box::new(move || {
+                    let armed = gate
+                        .armed
+                        .read()
+                        .unwrap_or_else(|e| e.into_inner());
+                    if *armed {
+                        // SAFETY: the gate is armed, so the caller's
+                        // frame (runner + slots + latch) is alive and
+                        // stays alive until the write-lock disarm,
+                        // which cannot proceed while we hold the read
+                        // lock.
+                        unsafe { (*job_ptr.0)() }
+                    }
+                }));
+            }
+            shared.available.notify_all();
+        }
+
+        // The caller is the region's first worker.
+        runner_obj();
+        latch.wait();
+
+        // Disarm: blocks until every helper inside the gate has left,
+        // making it safe for this frame (and `f`) to die. Helpers that
+        // never ran their job will see `false` and return immediately.
+        *gate.armed.write().unwrap_or_else(|e| e.into_inner()) = false;
+
+        let mut results = Vec::with_capacity(count);
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for slot in slots {
+            let taken = lock_ignore_poison(&slot).take();
+            match taken.expect("latch guarantees every slot is filled") {
+                Ok(r) => results.push(r),
+                Err(e) => {
+                    if panic.is_none() {
+                        panic = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+        results
+    }
+
+    /// Split `data` into consecutive chunks of at most `chunk` elements
+    /// and run `f(chunk_index, chunk_slice)` for each, in parallel.
+    /// The chunk grid depends only on `data.len()` and `chunk`, never
+    /// on the thread count — callers that write per-element outputs
+    /// get bitwise-identical results for any pool width.
+    pub fn for_each_chunk_mut<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let len = data.len();
+        if len == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let n_chunks = (len + chunk - 1) / chunk;
+        let base = SendMutPtr(data.as_mut_ptr());
+        self.map_indexed(n_chunks, |c| {
+            let start = c * chunk;
+            let end = (start + chunk).min(len);
+            // SAFETY: chunks [start, end) are pairwise disjoint and in
+            // bounds, so each task holds the only reference to its
+            // elements for the duration of the region.
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            f(c, slice);
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            shared.shutdown.store(true, Ordering::Release);
+            // Wake sleepers; the lock round-trip orders the store
+            // against a worker that checked `shutdown` just before
+            // blocking on the condvar.
+            drop(lock_ignore_poison(&shared.queue));
+            shared.available.notify_all();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Combine chunk partials in a fixed binary-tree order: pairs
+/// `(0,1), (2,3), …` reduce into a half-sized level, repeated until one
+/// value remains. The shape depends only on `parts.len()`, so
+/// floating-point reductions are bitwise identical for any thread
+/// count (unlike a "first finished folds first" scheme).
+pub fn tree_combine<R>(parts: Vec<R>, mut reduce: impl FnMut(R, R) -> R) -> Option<R> {
+    let mut level = parts;
+    while level.len() > 1 {
+        let mut up = Vec::with_capacity((level.len() + 1) / 2);
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => up.push(reduce(a, b)),
+                None => up.push(a),
+            }
+        }
+        level = up;
+    }
+    level.pop()
+}
+
+/// Parse a `GRADCODE_THREADS`-style value: unset, empty, `0`, or
+/// unparsable all mean "auto" (`None`).
+pub fn parse_threads(value: Option<&str>) -> Option<usize> {
+    match value?.trim().parse::<usize>() {
+        Ok(0) | Err(_) => None,
+        Ok(k) => Some(k),
+    }
+}
+
+/// Thread count the global pool would use if built right now:
+/// `GRADCODE_THREADS` if set and nonzero, else
+/// [`std::thread::available_parallelism`].
+pub fn configured_threads() -> usize {
+    parse_threads(std::env::var("GRADCODE_THREADS").ok().as_deref())
+        .unwrap_or_else(|| {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+static GLOBAL: Mutex<Option<Arc<ThreadPool>>> = Mutex::new(None);
+
+/// The process-wide pool used by the hot paths. Built lazily on first
+/// use from [`configured_threads`]; replaceable via
+/// [`set_global_threads`].
+pub fn global() -> Arc<ThreadPool> {
+    let mut g = lock_ignore_poison(&GLOBAL);
+    if g.is_none() {
+        *g = Some(Arc::new(ThreadPool::new(configured_threads())));
+    }
+    Arc::clone(g.as_ref().expect("just initialised"))
+}
+
+/// Replace the global pool with one of exactly `threads` workers
+/// (clamped to at least 1). The CLI's `--threads` flag lands here; it
+/// overrides `GRADCODE_THREADS`. Regions already running on the old
+/// pool finish normally — they hold their own `Arc`.
+pub fn set_global_threads(threads: usize) {
+    let pool = Arc::new(ThreadPool::new(threads.max(1)));
+    *lock_ignore_poison(&GLOBAL) = Some(pool);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn map_indexed_orders_results_by_index() {
+        for threads in [1, 2, 4, 7] {
+            let pool = ThreadPool::new(threads);
+            let out = pool.map_indexed(33, |i| i * 3);
+            assert_eq!(out, (0..33).map(|i| i * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_indexed_handles_trivial_counts() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.map_indexed(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map_indexed(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn many_regions_reuse_the_same_pool() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let out = pool.map_indexed(8, move |i| i + round);
+            assert_eq!(out, (0..8).map(|i| i + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn panic_fails_the_call_without_poisoning_the_pool() {
+        let pool = ThreadPool::new(3);
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            pool.map_indexed(16, |i| {
+                if i == 5 {
+                    panic!("task 5 exploded");
+                }
+                i
+            })
+        }));
+        assert!(attempt.is_err(), "panicking task must fail the join");
+        // The pool must keep accepting and completing work.
+        let out = pool.map_indexed(16, |i| i * 2);
+        assert_eq!(out, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_regions_run_inline_without_deadlock() {
+        let pool = ThreadPool::new(2);
+        let out = pool.map_indexed(4, |i| {
+            // Re-entrant submission from inside a task: must flatten,
+            // not block on the already-busy queue.
+            let inner = pool.map_indexed(3, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        let expect: Vec<usize> =
+            (0..4).map(|i| (0..3).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn for_each_chunk_mut_covers_every_element_once() {
+        for threads in [1, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut data = vec![0u32; 1003];
+            let hits = AtomicUsize::new(0);
+            pool.for_each_chunk_mut(&mut data, 64, |c, chunk| {
+                hits.fetch_add(chunk.len(), Ordering::Relaxed);
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = (c * 64 + k) as u32;
+                }
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 1003);
+            assert!(data.iter().enumerate().all(|(i, &v)| v == i as u32));
+        }
+    }
+
+    #[test]
+    fn tree_combine_is_a_fixed_shape() {
+        // Shape check via strings: ((0+1)+(2+3))+(4) for 5 leaves.
+        let parts: Vec<String> = (0..5).map(|i| i.to_string()).collect();
+        let combined =
+            tree_combine(parts, |a, b| format!("({a}+{b})")).unwrap();
+        assert_eq!(combined, "(((0+1)+(2+3))+4)");
+    }
+
+    #[test]
+    fn tree_combine_matches_serial_sum() {
+        let parts: Vec<u64> = (0..17).collect();
+        assert_eq!(tree_combine(parts, |a, b| a + b), Some(136));
+        assert_eq!(tree_combine(Vec::<u64>::new(), |a, b| a + b), None);
+    }
+
+    #[test]
+    fn parse_threads_semantics() {
+        assert_eq!(parse_threads(None), None);
+        assert_eq!(parse_threads(Some("")), None);
+        assert_eq!(parse_threads(Some("0")), None);
+        assert_eq!(parse_threads(Some("junk")), None);
+        assert_eq!(parse_threads(Some("1")), Some(1));
+        assert_eq!(parse_threads(Some(" 8 ")), Some(8));
+    }
+
+    #[test]
+    fn single_thread_pool_has_no_workers() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.map_indexed(5, |i| i), vec![0, 1, 2, 3, 4]);
+        let pool0 = ThreadPool::new(0);
+        assert_eq!(pool0.threads(), 1, "0 clamps to 1");
+    }
+}

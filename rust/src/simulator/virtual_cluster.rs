@@ -88,10 +88,39 @@ impl VirtualCluster {
     }
 
     /// Mean iteration time over `iters` simulated iterations.
+    ///
+    /// Trials run in fixed blocks of [`MC_CHUNK`] across [`crate::pool`]:
+    /// each block gets its own RNG stream forked from `self.rng` (fork
+    /// order = block order, a function of `iters` alone), block sums
+    /// combine through [`crate::pool::tree_combine`]'s fixed tree, so
+    /// the estimate is bitwise identical for any thread count. Note the
+    /// trial streams therefore differ from (but are statistically
+    /// equivalent to) drawing all `iters` samples from one stream.
     pub fn mean_iteration_time(&mut self, iters: usize) -> f64 {
-        (0..iters).map(|_| self.sample_iteration().iteration_time).sum::<f64>() / iters as f64
+        if iters == 0 {
+            return 0.0;
+        }
+        let n_chunks = (iters + MC_CHUNK - 1) / MC_CHUNK;
+        // Fork one child stream per block up front — sequentially, so
+        // the parent stream advances the same way regardless of how the
+        // blocks are later scheduled.
+        let children: Vec<Pcg64> =
+            (0..n_chunks).map(|c| self.rng.fork(c as u64)).collect();
+        let proto = self.clone();
+        let sums: Vec<f64> = crate::pool::global().map_indexed(n_chunks, |c| {
+            let mut vc = proto.clone();
+            vc.rng = children[c].clone();
+            let trials = MC_CHUNK.min(iters - c * MC_CHUNK);
+            (0..trials).map(|_| vc.sample_iteration().iteration_time).sum::<f64>()
+        });
+        crate::pool::tree_combine(sums, |a, b| a + b).unwrap_or(0.0) / iters as f64
     }
 }
+
+/// Monte-Carlo trials per parallel block. The block grid (and the fork
+/// schedule of per-block RNG streams) depends only on the trial count,
+/// never the thread count.
+pub const MC_CHUNK: usize = 2048;
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,138 @@
+//! Thread-pool determinism and robustness, end to end.
+//!
+//! The pool's contract is that the thread count is invisible in the
+//! results: fixed chunk grids plus the fixed binary-tree combine order
+//! make every hot path bitwise identical at any width. These tests pin
+//! that contract at the highest level (a full coded training run), at
+//! the Monte-Carlo layer, and at the pool API itself — including the
+//! panic-capture path, under a watchdog so a deadlock fails instead of
+//! hanging the suite.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use gradcode::coordinator::{train, SchemeSpec, TrainConfig};
+use gradcode::data::{CategoricalConfig, SyntheticCategorical};
+use gradcode::metrics::RunLog;
+use gradcode::pool::{self, ThreadPool};
+use gradcode::simulator::{DelayParams, VirtualCluster};
+use gradcode::testkit::with_watchdog;
+
+/// Tests in one binary run concurrently; everything that resizes the
+/// global pool (or touches `GRADCODE_THREADS`) serializes on this.
+static GLOBAL_POOL: Mutex<()> = Mutex::new(());
+
+fn lock_global() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_POOL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One full poly-scheme virtual-cluster train at the current global
+/// pool width.
+fn train_once() -> (RunLog, Vec<f32>) {
+    let gen = SyntheticCategorical::new(
+        CategoricalConfig { columns: 10, cardinality: (16, 48), ..Default::default() },
+        9,
+    );
+    let ds = gen.generate(360, 10);
+    let cfg = TrainConfig::quick(6, SchemeSpec::Poly { s: 1, m: 2 }, 15);
+    train(cfg, &ds, None).expect("train")
+}
+
+/// The deterministic projection of a run: everything except measured
+/// wall-clock (`master_compute` / `worker_compute` vary freely).
+fn deterministic_digest(log: &RunLog, beta: &[f32]) -> Vec<u64> {
+    let mut d: Vec<u64> = beta.iter().map(|x| u64::from(x.to_bits())).collect();
+    d.push(log.final_loss().unwrap_or(f64::NAN).to_bits());
+    for r in &log.records {
+        d.push(r.iter as u64);
+        d.push(r.sim_time.to_bits());
+        d.push(r.sim_clock.to_bits());
+        d.push(r.floats_transmitted as u64);
+        d.push(r.wire_bytes as u64);
+        d.extend(r.responders.iter().map(|&w| w as u64));
+    }
+    d
+}
+
+#[test]
+fn full_train_is_bitwise_identical_across_thread_counts() {
+    let _g = lock_global();
+    let digests: Vec<Vec<u64>> = [1usize, 4]
+        .iter()
+        .map(|&threads| {
+            pool::set_global_threads(threads);
+            let (log, beta) = train_once();
+            deterministic_digest(&log, &beta)
+        })
+        .collect();
+    assert_eq!(
+        digests[0], digests[1],
+        "gradients/losses/schedule changed between 1 and 4 threads"
+    );
+}
+
+#[test]
+fn monte_carlo_mean_is_bitwise_identical_across_thread_counts() {
+    let _g = lock_global();
+    let p = DelayParams::table_vi1();
+    let means: Vec<u64> = [1usize, 4]
+        .iter()
+        .map(|&threads| {
+            pool::set_global_threads(threads);
+            // > MC_CHUNK trials so several blocks actually fan out.
+            VirtualCluster::new(&p, 8, 4, 1, 3, 77).mean_iteration_time(5000).to_bits()
+        })
+        .collect();
+    assert_eq!(means[0], means[1]);
+}
+
+#[test]
+fn panicking_task_fails_its_join_without_poisoning_the_pool() {
+    // Local pool: no global state involved, no lock needed.
+    with_watchdog(Duration::from_secs(30), "pool-panic", || {
+        let pool = ThreadPool::new(3);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map_indexed(16, |i| {
+                if i == 7 {
+                    panic!("task 7 exploded");
+                }
+                i * i
+            })
+        }));
+        assert!(caught.is_err(), "the submitting call must observe the panic");
+        // The pool keeps working after the failed region.
+        let ok = pool.map_indexed(8, |i| i + 1);
+        assert_eq!(ok, (1..=8).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn nested_map_indexed_completes_under_watchdog() {
+    with_watchdog(Duration::from_secs(30), "pool-nested", || {
+        let pool = ThreadPool::new(4);
+        let nested = pool.map_indexed(6, |i| {
+            // Inner regions run inline inside pool tasks — this must not
+            // deadlock even though the closure re-enters the same pool.
+            pool.map_indexed(5, |j| i * 10 + j).iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..6).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(nested, want);
+    });
+}
+
+#[test]
+fn gradcode_threads_env_pins_the_pool_width() {
+    let _g = lock_global();
+    std::env::set_var("GRADCODE_THREADS", "1");
+    assert_eq!(pool::configured_threads(), 1);
+    std::env::set_var("GRADCODE_THREADS", "3");
+    assert_eq!(pool::configured_threads(), 3);
+    std::env::remove_var("GRADCODE_THREADS");
+    assert!(pool::configured_threads() >= 1);
+    // And the parse rules the env override uses:
+    assert_eq!(pool::parse_threads(Some("2")), Some(2));
+    assert_eq!(pool::parse_threads(Some("0")), None);
+    assert_eq!(pool::parse_threads(Some("")), None);
+    assert_eq!(pool::parse_threads(Some("lots")), None);
+    assert_eq!(pool::parse_threads(None), None);
+}
