@@ -11,26 +11,32 @@
 #                                        test=false, so nothing else
 #                                        compiles them)
 #   2. cargo test -q          (unit + integration + doc tests)
-#   3. chaos stage            (property/fuzz suites pinned to a fixed
+#   3. gradcode lint --deny   (in-repo static analysis: determinism,
+#                              panic-hygiene, lock-discipline and
+#                              wire-versioning rules; writes the machine
+#                              report to target/lint_report.json, then
+#                              fails on any finding not grandfathered in
+#                              lint.baseline — the baseline ships empty)
+#   4. chaos stage            (property/fuzz suites pinned to a fixed
 #                              TESTKIT_SEED, under a hard wall-clock
 #                              limit — a deadlocked gather must fail the
 #                              gate, not hang it — plus a 30-iteration
 #                              --chaos smoke train through the CLI)
-#   4. obs stage              (30-iteration traced train smoke writing a
+#   5. obs stage              (30-iteration traced train smoke writing a
 #                              fresh telemetry JSONL, trace-report over it)
-#   5. threads determinism    (the same train at --threads 1 and
+#   6. threads determinism    (the same train at --threads 1 and
 #                              --threads 4 must print identical results —
 #                              the pool's bitwise-determinism contract)
-#   6. bench smokes           (obs_overhead / hetero_speedup / hotpath
+#   7. bench smokes           (obs_overhead / hetero_speedup / hotpath
 #                              --smoke, each writing its machine-readable
 #                              BENCH_*.json under target/bench/ — never
 #                              over the committed repo-root baselines)
-#   7. gradcode ci-gate       (compare target/bench/BENCH_*.json against
+#   8. gradcode ci-gate       (compare target/bench/BENCH_*.json against
 #                              the committed baselines; >15% regression
 #                              of a headline metric fails the gate;
 #                              --update-baselines promotes instead)
-#   8. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
-#   9. cargo fmt --check      (advisory: warns on drift, does not fail —
+#   9. cargo doc --no-deps    (lib.rs denies broken intra-doc links)
+#  10. cargo fmt --check      (advisory: warns on drift, does not fail —
 #                              rustfmt availability varies across the
 #                              offline build images)
 set -euo pipefail
@@ -56,6 +62,13 @@ cargo build --release --benches
 
 echo "==> cargo test -q"
 cargo test -q
+
+echo "==> gradcode lint (static analysis, --deny)"
+# Write the machine-readable report first so the artifact survives a
+# failing gate, then enforce: any finding outside lint.baseline fails.
+mkdir -p target
+./target/release/gradcode lint --json > target/lint_report.json
+./target/release/gradcode lint --deny
 
 echo "==> chaos stage (fixed seed, hard wall-clock limit)"
 # The chaos/fuzz suites assert "never hangs"; enforce that from the

@@ -104,7 +104,7 @@ impl Bencher {
 
 fn stats_from(samples: &mut [f64]) -> Stats {
     assert!(!samples.is_empty());
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let n = samples.len();
     let mean = samples.iter().sum::<f64>() / n as f64;
     let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;

@@ -43,16 +43,20 @@ impl Checkpoint {
     pub fn read_from(r: &mut impl Read) -> Result<Self> {
         let mut head = [0u8; 24];
         r.read_exact(&mut head).context("checkpoint header")?;
-        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        let magic = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
         if magic != MAGIC {
             bail!("not a gradcode checkpoint (magic {magic:#x})");
         }
-        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        let version = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
         if version != VERSION {
             bail!("unsupported checkpoint version {version}");
         }
-        let dim = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
-        let iter = u64::from_le_bytes(head[16..24].try_into().unwrap());
+        let dim = u64::from_le_bytes([
+            head[8], head[9], head[10], head[11], head[12], head[13], head[14], head[15],
+        ]) as usize;
+        let iter = u64::from_le_bytes([
+            head[16], head[17], head[18], head[19], head[20], head[21], head[22], head[23],
+        ]);
         if dim > (1 << 31) {
             bail!("implausible checkpoint dim {dim}");
         }
@@ -60,7 +64,7 @@ impl Checkpoint {
         r.read_exact(&mut raw).context("checkpoint payload")?;
         let beta = raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         Ok(Checkpoint { iter, beta })
     }

@@ -190,6 +190,7 @@ impl Args {
     pub fn get_str(&self, name: &str) -> &str {
         self.values
             .get(name)
+            // lint: allow(panic-in-lib) programmer error: the accessor names a flag the command never declared
             .unwrap_or_else(|| panic!("flag --{name} not declared"))
     }
 
@@ -210,14 +211,17 @@ impl Args {
     }
 
     pub fn get_usize(&self, name: &str) -> usize {
+        // lint: allow(panic-in-lib) CLI user-input boundary: a malformed flag aborts before any distributed state exists
         self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
     }
 
     pub fn get_f64(&self, name: &str) -> f64 {
+        // lint: allow(panic-in-lib) CLI user-input boundary: a malformed flag aborts before any distributed state exists
         self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
     }
 
     pub fn get_u64(&self, name: &str) -> u64 {
+        // lint: allow(panic-in-lib) CLI user-input boundary: a malformed flag aborts before any distributed state exists
         self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
     }
 
@@ -230,6 +234,7 @@ impl Args {
         self.get_str(name)
             .split(',')
             .filter(|s| !s.is_empty())
+            // lint: allow(panic-in-lib) CLI user-input boundary: a malformed flag aborts before any distributed state exists
             .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{name}: {e}")))
             .collect()
     }
@@ -239,6 +244,7 @@ impl Args {
         self.get_str(name)
             .split(',')
             .filter(|s| !s.is_empty())
+            // lint: allow(panic-in-lib) CLI user-input boundary: a malformed flag aborts before any distributed state exists
             .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{name}: {e}")))
             .collect()
     }

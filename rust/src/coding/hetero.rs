@@ -386,7 +386,7 @@ impl HeteroCode {
         // Speed-sorted worker order (stable on ties via the id).
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by(|&a, &b| {
-            speeds[a].partial_cmp(&speeds[b]).unwrap().then(a.cmp(&b))
+            speeds[a].total_cmp(&speeds[b]).then(a.cmp(&b))
         });
 
         // Tier by relative speed jumps.
@@ -427,7 +427,7 @@ impl HeteroCode {
                 let into = if into > i { into - 1 } else { into };
                 tiers[into].extend(small);
                 tiers[into].sort_by(|&a, &b| {
-                    speeds[a].partial_cmp(&speeds[b]).unwrap().then(a.cmp(&b))
+                    speeds[a].total_cmp(&speeds[b]).then(a.cmp(&b))
                 });
                 i = 0; // re-scan from the start after a merge
             } else {

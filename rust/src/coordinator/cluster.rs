@@ -357,6 +357,7 @@ impl Cluster {
                         std::thread::Builder::new()
                             .name(format!("gradcode-worker-{w}"))
                             .spawn(move || looper.run())
+                            // lint: allow(panic-in-lib) startup-time spawn failure is unrecoverable; no distributed state exists yet
                             .expect("spawn worker"),
                     );
                 }
@@ -449,6 +450,7 @@ impl Cluster {
         if let Effect::Fault(FaultKind::Delay(secs)) = effect {
             virtual_finish += secs;
         }
+        // lint: allow(wallclock-entropy) realized latency metric only; never feeds seeds or decisions
         let t0 = Instant::now();
         let mut out = Vec::new();
         let failed = match backend.encoded_gradient(w, iter, beta, &mut out) {
@@ -512,6 +514,7 @@ impl Cluster {
     /// iterations are discarded. Either way, too few healthy responders
     /// yields `satisfied = false` rather than a panic.
     pub fn run_iteration(&mut self, iter: usize, beta: Arc<Vec<f32>>) -> GatherResult {
+        // lint: allow(wallclock-entropy) realized latency metric only; never feeds seeds or decisions
         let t0 = Instant::now();
         let ts0 = self.obs.now();
         {
@@ -573,7 +576,7 @@ impl Cluster {
                     results.push(r);
                 }
                 results.sort_by(|a, b| {
-                    a.virtual_finish.partial_cmp(&b.virtual_finish).unwrap()
+                    a.virtual_finish.total_cmp(&b.virtual_finish)
                 });
                 // Shortest arrival prefix satisfying the rule.
                 let mut tracker = QuorumTracker::new(&self.rule, n);

@@ -205,8 +205,13 @@ impl RemoteMaster {
             }));
         }
         let n = setup.n as usize;
-        let writers: Vec<BufWriter<TcpStream>> =
-            writers.into_iter().map(|w| w.expect("all ids seen")).collect();
+        let writers: Vec<BufWriter<TcpStream>> = writers
+            .into_iter()
+            .enumerate()
+            .map(|(id, w)| {
+                w.ok_or_else(|| anyhow::anyhow!("no connection recorded for worker {id}"))
+            })
+            .collect::<Result<_>>()?;
         Ok(RemoteMaster {
             setup,
             policy: GatherPolicy::default(),
@@ -252,6 +257,7 @@ impl RemoteMaster {
     /// Corrupt result frames are rejected by checksum and the sender is
     /// re-prodded at most `retries` times, then counted as a straggler.
     pub fn run_iteration(&mut self, iter: u64, beta: &[f32]) -> Result<RemoteGather> {
+        // lint: allow(wallclock-entropy) realized gather latency metric only; never feeds seeds or decisions
         let t0 = Instant::now();
         let ts0 = self.obs.now();
         let msg = Message::Task { iter, beta: beta.to_vec() };
@@ -491,8 +497,9 @@ pub fn run_worker_traced(
                         // the trailer still covers the original bytes, so
                         // the master must reject this frame.
                         let mut frame = msg.encode();
-                        let plen =
-                            u32::from_le_bytes(frame[..4].try_into().unwrap()) as usize;
+                        let plen = u32::from_le_bytes([
+                            frame[0], frame[1], frame[2], frame[3],
+                        ]) as usize;
                         frame[5 + plen / 2] ^= 0x04;
                         writer.write_all(&frame)?;
                         writer.flush()?;
@@ -659,7 +666,8 @@ mod tests {
                     backoff: Duration::from_millis(1),
                 });
                 let beta = vec![0.0f32; setup.dim as usize];
-                let t0 = Instant::now();
+                // lint: allow(wallclock-entropy) realized gather latency metric only; never feeds seeds or decisions
+        let t0 = Instant::now();
                 let g = master.run_iteration(0, &beta)?;
                 assert!(!g.complete, "quorum 2 is unreachable with a ghost worker");
                 assert_eq!(g.results.len(), 1);

@@ -350,6 +350,7 @@ impl Trainer {
             let _iteration_span = self.obs.span(phase::ITERATION).iter(iter as u64);
             let beta = Arc::new(self.opt.eval_point().to_vec());
             let gather = self.cluster.run_iteration(iter, beta);
+            // lint: allow(wallclock-entropy) realized latency metric only; never feeds seeds or decisions
             let t0 = Instant::now();
 
             // Master-side replay of the deterministic plan, so the log
@@ -553,8 +554,10 @@ fn apply_decoder(
     let fs: Vec<&[f32]> = dec
         .used_workers()
         .iter()
-        .map(|&w| by_worker[w].expect("responder result present"))
-        .collect();
+        .map(|&w| {
+            by_worker[w].ok_or_else(|| anyhow::anyhow!("decoder used worker {w} but no result arrived"))
+        })
+        .collect::<anyhow::Result<_>>()?;
     dec.decode_into(&fs, grad)?;
     Ok(())
 }

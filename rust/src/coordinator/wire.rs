@@ -69,6 +69,48 @@ pub const fn framed_result_bytes(floats: usize) -> usize {
 /// pre-allocation).
 const MAX_PAYLOAD: usize = 1 << 26;
 
+/// Pinned fingerprint of the v3 frame layout: FNV-1a-64 over
+/// `"NAME=<decimal>;"` for every layout constant above, in the fixed
+/// registry order of [`layout_fingerprint`]. The `wire-layout-drift`
+/// lint re-derives the hash by parsing this file; a layout change that
+/// does not bump [`MAGIC`] *and* re-pin this value fails `gradcode
+/// lint --deny` (and the unit test below).
+pub const WIRE_LAYOUT_FINGERPRINT: u64 = 0x4a0f_843b_d6c8_c27d;
+
+/// Re-derive the layout fingerprint from the live constant values.
+///
+/// Serialization: for each constant, the ASCII bytes of
+/// `"NAME=<decimal>;"`, concatenated in registry order, hashed with
+/// FNV-1a-64 (offset `0xcbf29ce484222325`, prime `0x100000001b3`).
+/// The linter computes the identical hash from source tokens, so the
+/// two detect the same drift.
+pub fn layout_fingerprint() -> u64 {
+    let entries: [(&str, u64); 14] = [
+        ("MAGIC", MAGIC as u64),
+        ("TAG_HELLO", TAG_HELLO as u64),
+        ("TAG_SETUP", TAG_SETUP as u64),
+        ("TAG_TASK", TAG_TASK as u64),
+        ("TAG_RESULT", TAG_RESULT as u64),
+        ("TAG_SHUTDOWN", TAG_SHUTDOWN as u64),
+        ("SCHEME_POLY", SCHEME_POLY as u64),
+        ("SCHEME_RANDOM", SCHEME_RANDOM as u64),
+        ("SCHEME_UNCODED", SCHEME_UNCODED as u64),
+        ("SCHEME_APPROX", SCHEME_APPROX as u64),
+        ("SCHEME_HETERO", SCHEME_HETERO as u64),
+        ("FRAME_OVERHEAD", FRAME_OVERHEAD as u64),
+        ("RESULT_HEADER_BYTES", RESULT_HEADER_BYTES as u64),
+        ("MAX_PAYLOAD", MAX_PAYLOAD as u64),
+    ];
+    let mut data = String::new();
+    for (name, v) in entries {
+        data.push_str(name);
+        data.push('=');
+        data.push_str(&v.to_string());
+        data.push(';');
+    }
+    crate::lint::fnv1a64(data.as_bytes())
+}
+
 /// Transport-layer error, split so callers can tell a corrupt frame
 /// (stream still aligned — skip and continue) from a dead connection.
 #[derive(Debug)]
@@ -278,19 +320,28 @@ impl<'a> Cursor<'a> {
         Ok(self.take(1)?[0])
     }
 
+    /// Take exactly `N` bytes as a fixed-size array without a fallible
+    /// conversion: the length is checked once by `take`.
+    fn array<const N: usize>(&mut self) -> Result<[u8; N], WireError> {
+        let s = self.take(N)?;
+        let mut out = [0u8; N];
+        out.copy_from_slice(s);
+        Ok(out)
+    }
+
     fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.array::<4>()?))
     }
 
     fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.array::<8>()?))
     }
 
     fn f32s(&mut self, count: usize) -> Result<Vec<f32>, WireError> {
         let raw = self.take(count * 4)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
 
@@ -467,7 +518,8 @@ impl Message {
     pub fn read_from(r: &mut impl Read) -> Result<Message, WireError> {
         let mut header = [0u8; 5];
         r.read_exact(&mut header)?;
-        let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+        let len =
+            u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
         let tag = header[4];
         if len > MAX_PAYLOAD {
             return Err(WireError::corrupt(format!("frame too large: {len}")));
@@ -541,6 +593,23 @@ impl WireCounters {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Re-pinning procedure: this test (and the `wire-layout-drift`
+    /// lint) failing means a frame-layout constant changed. That is
+    /// only legal together with a version bump — bump `MAGIC` to the
+    /// next protocol version, then set `WIRE_LAYOUT_FINGERPRINT` to
+    /// the "computed" value this assertion prints. Never re-pin
+    /// without the MAGIC bump: peers on the old layout must fail the
+    /// Hello handshake, not mis-parse frames.
+    #[test]
+    fn layout_fingerprint_matches_recorded_pin() {
+        assert_eq!(
+            layout_fingerprint(),
+            WIRE_LAYOUT_FINGERPRINT,
+            "wire layout drifted: computed {:#018x} — bump MAGIC and re-pin",
+            layout_fingerprint(),
+        );
+    }
 
     fn roundtrip(msg: Message) {
         let frame = msg.encode();

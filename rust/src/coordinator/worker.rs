@@ -118,6 +118,7 @@ impl WorkerLoop {
                     virtual_finish * self.sleep_scale,
                 ));
             }
+            // lint: allow(wallclock-entropy) realized latency metric only; never feeds seeds or decisions
             let t0 = Instant::now();
             let failed = match self
                 .backend

@@ -8,7 +8,7 @@ pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
     assert_eq!(scores.len(), labels.len());
     let n = scores.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
     // Midranks (1-based), averaging within tied score groups.
     let mut ranks = vec![0.0f64; n];
     let mut i = 0;

@@ -58,7 +58,7 @@ pub fn partition_rows_weighted(rows: usize, weights: &[f64]) -> Vec<Vec<usize>> 
     // The remainders sum to exactly `spare - assigned < k`; hand the
     // leftover rows to the largest remainders (ties by subset id).
     let left = spare - assigned;
-    rems.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    rems.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
     for &(_, t) in rems.iter().take(left) {
         sizes[t] += 1;
     }
@@ -98,7 +98,7 @@ mod tests {
             .chain(test.x.chunks(2))
             .map(|r| r[0])
             .collect();
-        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        seen.sort_by(|a, b| a.total_cmp(b));
         let want: Vec<f32> = (0..100).map(|i| (i * 2) as f32).collect();
         assert_eq!(seen, want);
     }

@@ -39,6 +39,11 @@
 //! - [`obs`] — zero-dependency telemetry: RAII phase spans, counters,
 //!   log-bucketed latency histograms, JSONL + Chrome-trace export, and
 //!   per-worker straggler attribution with §VI-model deviation.
+//! - [`lint`] — the in-repo static-analysis pass (`gradcode lint`):
+//!   a std-only lexer + rule registry machine-enforcing the crate's
+//!   determinism, panic-hygiene, lock-discipline, and wire-versioning
+//!   invariants, with a committed (empty) `lint.baseline` and inline
+//!   reasoned suppressions.
 //! - [`pool`] — std-only fork/join thread pool behind every hot path
 //!   (virtual-worker compute, encode/decode, row-chunked gradients,
 //!   Monte-Carlo sweeps); deterministic: fixed chunk grids + binary-tree
@@ -62,6 +67,7 @@ pub mod coding;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod obs;

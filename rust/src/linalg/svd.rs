@@ -60,7 +60,7 @@ pub fn singular_values(a: &Matrix) -> Vec<f64> {
         .iter()
         .map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt())
         .collect();
-    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv.sort_by(|a, b| b.total_cmp(a));
     sv
 }
 
@@ -68,8 +68,9 @@ pub fn singular_values(a: &Matrix) -> Vec<f64> {
 /// deficient to machine precision.
 pub fn condition_number(a: &Matrix) -> f64 {
     let sv = singular_values(a);
-    let smax = sv[0];
-    let smin = *sv.last().unwrap();
+    let (Some(&smax), Some(&smin)) = (sv.first(), sv.last()) else {
+        return f64::INFINITY;
+    };
     if smin <= smax * 1e-300 || smin == 0.0 {
         f64::INFINITY
     } else {

@@ -1,0 +1,327 @@
+//! A minimal Rust lexer for the in-repo linter.
+//!
+//! Purpose-built for `gradcode lint`: it produces a flat token stream
+//! with 1-based line/column positions plus the list of comments (the
+//! carrier for `// lint: allow(...)` directives), and it understands
+//! exactly the lexical obstacles that would otherwise break
+//! token-level rules — nested block comments, raw and byte strings,
+//! char literals vs. lifetimes, and numeric literals with radix
+//! prefixes, underscores, and type suffixes. It is deliberately *not*
+//! a parser: where block structure matters, the rules recover it by
+//! delimiter matching over this token stream.
+//!
+//! The lexer is lossy in ways that do not matter to the rules: token
+//! text is kept verbatim (except raw identifiers, which drop their
+//! `r#` prefix so `r#fn` and `fn` compare equal), whitespace is
+//! discarded, and an unterminated string or comment simply runs to end
+//! of file instead of erroring — a linter must keep going on code that
+//! does not compile yet.
+
+/// Token classification, as coarse as the rules need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (keywords are not distinguished).
+    Ident,
+    /// Numeric literal, suffix included (`16_384usize`, `0x6743_0003`).
+    Num,
+    /// String, byte string, raw string, or raw byte string literal.
+    Str,
+    /// Char literal (`'x'`, `'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'_`, `'static`).
+    Lifetime,
+    /// Punctuation; multi-character operators arrive as one token.
+    Punct,
+}
+
+/// One lexed token with its source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// 1-based source column (in bytes; the sources are ASCII).
+    pub col: u32,
+}
+
+/// The result of [`lex`]: tokens plus comments (with their start line).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// `(start_line, full_text)` per comment, in source order.
+    pub comments: Vec<(u32, String)>,
+}
+
+/// Multi-character operators, longest first so `<<=` wins over `<<`.
+const PUNCTS: [&str; 24] = [
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=",
+    "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>", "..",
+];
+
+/// Byte-offset end (exclusive) of a raw/byte-raw string starting at
+/// `i`, or `None` if `i` does not start one. Unterminated raw strings
+/// run to end of input.
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut p = i;
+    if p < b.len() && b[p] == b'b' {
+        p += 1;
+    }
+    if p >= b.len() || b[p] != b'r' {
+        return None;
+    }
+    p += 1;
+    let hash_start = p;
+    while p < b.len() && b[p] == b'#' {
+        p += 1;
+    }
+    let hashes = p - hash_start;
+    if p >= b.len() || b[p] != b'"' {
+        return None;
+    }
+    let mut j = p + 1;
+    while j < b.len() {
+        if b[j] == b'"' {
+            let mut h = 0;
+            while h < hashes && j + 1 + h < b.len() && b[j + 1 + h] == b'#' {
+                h += 1;
+            }
+            if h == hashes {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(b.len())
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Slice `src[a..z]` as an owned String; bad UTF-8 boundaries (only
+/// possible in pathological non-ASCII input) degrade lossily instead
+/// of panicking.
+fn span(src: &str, a: usize, z: usize) -> String {
+    match src.get(a..z) {
+        Some(s) => s.to_string(),
+        None => String::from_utf8_lossy(&src.as_bytes()[a..z]).into_owned(),
+    }
+}
+
+/// Advance the cursor by `k` bytes, tracking line/column.
+fn advance(b: &[u8], i: &mut usize, line: &mut u32, col: &mut u32, k: usize) {
+    for _ in 0..k {
+        if *i < b.len() && b[*i] == b'\n' {
+            *line += 1;
+            *col = 1;
+        } else {
+            *col += 1;
+        }
+        *i += 1;
+    }
+}
+
+/// Tokenize `src`. Never fails: malformed input yields a best-effort
+/// token stream (see module docs).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut col = 1u32;
+
+    while i < n {
+        let c = b[i];
+
+        if c == b' ' || c == b'\t' || c == b'\r' || c == b'\n' {
+            advance(b, &mut i, &mut line, &mut col, 1);
+            continue;
+        }
+
+        // Line comment.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            out.comments.push((line, span(src, i, j)));
+            advance(b, &mut i, &mut line, &mut col, j - i);
+            continue;
+        }
+
+        // Block comment, nesting honored (Rust block comments nest).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start_line = line;
+            let mut depth = 0i32;
+            let mut j = i;
+            while j < n {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    j += 1;
+                }
+            }
+            out.comments.push((start_line, span(src, i, j)));
+            advance(b, &mut i, &mut line, &mut col, j - i);
+            continue;
+        }
+
+        // Raw string / raw byte string — checked before plain strings
+        // and identifiers so `r#"…"#` does not lex as ident + string.
+        if let Some(end) = raw_string_end(b, i) {
+            out.toks.push(Tok { kind: TokKind::Str, text: span(src, i, end), line, col });
+            advance(b, &mut i, &mut line, &mut col, end - i);
+            continue;
+        }
+
+        // String / byte string.
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            out.toks.push(Tok { kind: TokKind::Str, text: span(src, i, j), line, col });
+            advance(b, &mut i, &mut line, &mut col, j - i);
+            continue;
+        }
+
+        // Lifetime or char literal. `'a` (not followed by a closing
+        // quote) is a lifetime; `'a'`, `'\n'` are char literals.
+        if c == b'\'' {
+            let is_lifetime = i + 1 < n
+                && is_ident_start(b[i + 1])
+                && (i + 2 >= n || b[i + 2] != b'\'');
+            if is_lifetime {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: TokKind::Lifetime, text: span(src, i, j), line, col });
+                advance(b, &mut i, &mut line, &mut col, j - i);
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'\'' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            out.toks.push(Tok { kind: TokKind::Char, text: span(src, i, j), line, col });
+            advance(b, &mut i, &mut line, &mut col, j - i);
+            continue;
+        }
+
+        // Raw identifier: lex as the bare name so rules see `r#fn` as `fn`.
+        if c == b'r' && i + 2 < n && b[i + 1] == b'#' && is_ident_start(b[i + 2]) {
+            let mut j = i + 2;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Ident, text: span(src, i + 2, j), line, col });
+            advance(b, &mut i, &mut line, &mut col, j - i);
+            continue;
+        }
+
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Ident, text: span(src, i, j), line, col });
+            advance(b, &mut i, &mut line, &mut col, j - i);
+            continue;
+        }
+
+        // Numeric literal.
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let two = if i + 2 <= n { &b[i..i + 2] } else { &b[i..n] };
+            if two == b"0x" || two == b"0X" || two == b"0o" || two == b"0O" || two == b"0b"
+                || two == b"0B"
+            {
+                j = i + 2;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+            } else {
+                while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                    j += 1;
+                }
+                // Fraction: a dot only counts if a digit follows, so
+                // `0..n` and `x.method()` stay untouched.
+                if j < n && b[j] == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                    while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                        j += 1;
+                    }
+                }
+                // Exponent.
+                let has_exp = j < n
+                    && (b[j] == b'e' || b[j] == b'E')
+                    && ((j + 1 < n && b[j + 1].is_ascii_digit())
+                        || (j + 1 < n
+                            && (b[j + 1] == b'+' || b[j + 1] == b'-')
+                            && j + 2 < n
+                            && b[j + 2].is_ascii_digit()));
+                if has_exp {
+                    j += 2;
+                    while j < n && b[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+                // Type suffix (`f32`, `usize`, …).
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Num, text: span(src, i, j), line, col });
+            advance(b, &mut i, &mut line, &mut col, j - i);
+            continue;
+        }
+
+        // Punctuation: longest multi-char operator first.
+        let mut matched = 0usize;
+        for p in PUNCTS {
+            if b[i..].starts_with(p.as_bytes()) {
+                out.toks.push(Tok { kind: TokKind::Punct, text: p.to_string(), line, col });
+                matched = p.len();
+                break;
+            }
+        }
+        if matched == 0 {
+            out.toks.push(Tok { kind: TokKind::Punct, text: span(src, i, i + 1), line, col });
+            matched = 1;
+        }
+        advance(b, &mut i, &mut line, &mut col, matched);
+    }
+
+    out
+}

@@ -1,0 +1,357 @@
+//! # `gradcode lint` — in-repo static analysis
+//!
+//! A zero-dependency analysis pass that machine-enforces the crate's
+//! hand-written invariants: bitwise-deterministic float reduction
+//! (everything cross-chunk goes through `pool::tree_combine` on the
+//! fixed chunk grid), panic hygiene on the distributed path, lock
+//! discipline around socket I/O, seeded-RNG purity, and wire-layout
+//! versioning. The contracts themselves are documented in
+//! `rust/DESIGN.md`; this module is what turns violating them from a
+//! review comment into a CI failure — there is no clippy-plugin
+//! mechanism available offline, so the crate carries its own.
+//!
+//! Architecture, bottom up:
+//! - [`lexer`] — a small comment/string-aware Rust lexer (tokens with
+//!   positions; no external parser).
+//! - `rules` — six token-level rules, each tied to one invariant:
+//!   `float-reduce-outside-tree`, `adhoc-chunk-literal`,
+//!   `panic-in-lib`, `lock-across-io`, `wallclock-entropy`,
+//!   `wire-layout-drift`.
+//! - This module — the per-file driver ([`lint_source`]), the tree
+//!   walker ([`lint_tree`] over `rust/src`, `rust/tests`,
+//!   `rust/benches`), the grandfathering [`Baseline`], and the JSON
+//!   report used as a CI artifact.
+//!
+//! Suppression: a finding is silenced by `// lint: allow(<rule-id>)
+//! <reason>` on the same or the preceding line. The reason is
+//! mandatory — an allow without one is ignored — and suppressed
+//! findings stay visible in the `--json` summary. Grandfathering: the
+//! committed `lint.baseline` (`rule<TAB>file<TAB>count` lines) caps
+//! how many findings per rule/file are tolerated without failing
+//! `--deny`; the repo ships with it empty and the goal is to keep it
+//! that way.
+//!
+//! The linter lints itself (this directory is under `rust/src`), so
+//! everything here propagates errors instead of panicking.
+
+pub mod lexer;
+mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub const RULE_FLOAT_REDUCE: &str = "float-reduce-outside-tree";
+pub const RULE_ADHOC_CHUNK: &str = "adhoc-chunk-literal";
+pub const RULE_PANIC: &str = "panic-in-lib";
+pub const RULE_LOCK_IO: &str = "lock-across-io";
+pub const RULE_WALLCLOCK: &str = "wallclock-entropy";
+pub const RULE_WIRE_DRIFT: &str = "wire-layout-drift";
+
+/// Every rule id, in reporting order.
+pub const RULE_IDS: [&str; 6] = [
+    RULE_FLOAT_REDUCE,
+    RULE_ADHOC_CHUNK,
+    RULE_PANIC,
+    RULE_LOCK_IO,
+    RULE_WALLCLOCK,
+    RULE_WIRE_DRIFT,
+];
+
+/// One diagnostic: `file:line:col rule-id message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}:{} {} {}", self.file, self.line, self.col, self.rule, self.msg)
+    }
+}
+
+/// Per-file lint result: findings that stand, and findings silenced by
+/// a reasoned `// lint: allow(...)`.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub live: Vec<Finding>,
+    pub suppressed: Vec<Finding>,
+}
+
+/// Whole-tree lint result.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub live: Vec<Finding>,
+    pub suppressed: Vec<Finding>,
+}
+
+/// FNV-1a 64-bit hash — the fingerprint primitive shared with
+/// `coordinator::wire::layout_fingerprint`, kept here so the linter
+/// and the runtime constant can never disagree on the algorithm.
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Lint one source text. `path_label` is the repo-relative path with
+/// forward slashes (e.g. `rust/src/coordinator/wire.rs`); rules use it
+/// for scoping (`/src/`-only rules, the `obs/`/`bench/` wall-clock
+/// allowlist, the `testkit/` panic exemption, the wire.rs fingerprint).
+pub fn lint_source(path_label: &str, src: &str) -> FileReport {
+    let lexed = lexer::lex(src);
+    let test_ranges = rules::cfg_test_ranges(&lexed.toks);
+    let allows = rules::parse_allows(&lexed.comments);
+    let mut findings = Vec::new();
+    rules::run_all(path_label, &lexed.toks, &test_ranges, &mut findings);
+
+    let mut report = FileReport::default();
+    for f in findings {
+        let suppressed = allows.iter().any(|(al, rule, reason)| {
+            rule == f.rule && (*al == f.line || *al + 1 == f.line) && !reason.is_empty()
+        });
+        if suppressed {
+            report.suppressed.push(f);
+        } else {
+            report.live.push(f);
+        }
+    }
+    report
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        entries.push(e?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map_or(false, |x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `<root>/rust/{src,tests,benches}`,
+/// deterministically ordered. Findings carry root-relative paths.
+pub fn lint_tree(root: &Path) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "rust/tests", "rust/benches"] {
+        collect_rs(&root.join(sub), &mut files)?;
+    }
+    let mut report = Report::default();
+    for path in files {
+        let src = std::fs::read_to_string(&path)?;
+        let rel = path.strip_prefix(root).unwrap_or(&path);
+        let label = rel.to_string_lossy().replace('\\', "/");
+        let fr = lint_source(&label, &src);
+        report.files_scanned += 1;
+        report.live.extend(fr.live);
+        report.suppressed.extend(fr.suppressed);
+    }
+    let key = |f: &Finding| (f.file.clone(), f.line, f.col, f.rule);
+    report.live.sort_by_key(key);
+    report.suppressed.sort_by_key(key);
+    Ok(report)
+}
+
+/// Grandfathered findings: `(rule, file) -> tolerated count`. Parsed
+/// from `lint.baseline` (`rule<TAB>file<TAB>count` lines, `#`
+/// comments). Findings beyond the tolerated count are "new" and fail
+/// `--deny`.
+#[derive(Debug, Default)]
+pub struct Baseline {
+    entries: BTreeMap<(String, String), usize>,
+}
+
+impl Baseline {
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut entries = BTreeMap::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split('\t');
+            match (it.next(), it.next(), it.next()) {
+                (Some(rule), Some(file), Some(count)) => {
+                    let c: usize = count
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("baseline line {}: bad count {count:?}", idx + 1))?;
+                    *entries.entry((rule.to_string(), file.to_string())).or_insert(0) += c;
+                }
+                _ => {
+                    return Err(format!(
+                        "baseline line {}: expected rule<TAB>file<TAB>count",
+                        idx + 1
+                    ))
+                }
+            }
+        }
+        Ok(Baseline { entries })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Split live findings into `(new, grandfathered)`: per
+    /// `(rule, file)`, the first `count` findings (in report order) are
+    /// covered by the baseline, the rest are new.
+    pub fn split(&self, live: Vec<Finding>) -> (Vec<Finding>, Vec<Finding>) {
+        let mut used: BTreeMap<(String, String), usize> = BTreeMap::new();
+        let mut fresh = Vec::new();
+        let mut grandfathered = Vec::new();
+        for f in live {
+            let key = (f.rule.to_string(), f.file.clone());
+            let allowed = self.entries.get(&key).copied().unwrap_or(0);
+            let u = used.entry(key).or_insert(0);
+            if *u < allowed {
+                *u += 1;
+                grandfathered.push(f);
+            } else {
+                fresh.push(f);
+            }
+        }
+        (fresh, grandfathered)
+    }
+}
+
+/// Serialize the current live findings as baseline content (used by
+/// `--update-baseline`). An empty report yields a header-only file.
+pub fn render_baseline(report: &Report) -> String {
+    let mut counts: BTreeMap<(&'static str, String), usize> = BTreeMap::new();
+    for f in &report.live {
+        *counts.entry((f.rule, f.file.clone())).or_insert(0) += 1;
+    }
+    let mut out = String::from(
+        "# gradlint baseline — grandfathered findings, one `rule<TAB>file<TAB>count` per line.\n\
+         # Regenerate with `gradcode lint --update-baseline`. The goal is an empty file:\n\
+         # fix findings or justify them inline with `// lint: allow(<rule>) <reason>`.\n",
+    );
+    for ((rule, file), c) in &counts {
+        out.push_str(&format!("{rule}\t{file}\t{c}\n"));
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_finding(f: &Finding, extra: &str) -> String {
+    format!(
+        "{{\"file\":\"{}\",\"line\":{},\"col\":{},\"rule\":\"{}\",\"message\":\"{}\"{extra}}}",
+        json_escape(&f.file),
+        f.line,
+        f.col,
+        f.rule,
+        json_escape(&f.msg)
+    )
+}
+
+/// Machine-readable report for `gradcode lint --json` (the CI
+/// artifact). `fresh` and `grandfathered` partition the live findings
+/// per the baseline; suppressed findings are listed with their counts
+/// so reasoned `allow`s stay auditable.
+pub fn report_json(
+    files_scanned: usize,
+    fresh: &[Finding],
+    grandfathered: &[Finding],
+    suppressed: &[Finding],
+) -> String {
+    let list = |fs: &[Finding], extra: &str| -> String {
+        let items: Vec<String> = fs.iter().map(|f| json_finding(f, extra)).collect();
+        items.join(",")
+    };
+    format!(
+        "{{\"files_scanned\":{files_scanned},\
+         \"new\":{},\"baselined\":{},\"suppressed\":{},\
+         \"findings\":[{}],\
+         \"baselined_findings\":[{}],\
+         \"suppressed_findings\":[{}]}}",
+        fresh.len(),
+        grandfathered.len(),
+        suppressed.len(),
+        list(fresh, ",\"baselined\":false"),
+        list(grandfathered, ",\"baselined\":true"),
+        list(suppressed, "")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_split() {
+        let b = Baseline::parse("# comment\npanic-in-lib\trust/src/x.rs\t2\n").unwrap();
+        let mk = |line| Finding {
+            file: "rust/src/x.rs".into(),
+            line,
+            col: 1,
+            rule: RULE_PANIC,
+            msg: "m".into(),
+        };
+        let (fresh, old) = b.split(vec![mk(1), mk(2), mk(3)]);
+        assert_eq!(old.len(), 2);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].line, 3);
+    }
+
+    #[test]
+    fn baseline_rejects_malformed_lines() {
+        assert!(Baseline::parse("panic-in-lib rust/src/x.rs 2\n").is_err());
+        assert!(Baseline::parse("panic-in-lib\trust/src/x.rs\tmany\n").is_err());
+    }
+
+    #[test]
+    fn json_report_escapes_and_counts() {
+        let f = Finding {
+            file: "rust/src/a\"b.rs".into(),
+            line: 3,
+            col: 7,
+            rule: RULE_WALLCLOCK,
+            msg: "quote \" and\nnewline".into(),
+        };
+        let s = report_json(5, &[f.clone()], &[], &[f]);
+        assert!(s.contains("\"files_scanned\":5"));
+        assert!(s.contains("\"new\":1"));
+        assert!(s.contains("\"suppressed\":1"));
+        assert!(s.contains("a\\\"b.rs"));
+        assert!(s.contains("\\nnewline"));
+    }
+}

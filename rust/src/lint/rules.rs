@@ -1,0 +1,773 @@
+//! The rule registry: each rule walks the token stream of one file and
+//! appends [`Finding`]s. Rules are deliberately syntactic — they match
+//! token shapes, not types — so they stay cheap, std-only, and easy to
+//! reason about; the corresponding invariants are documented per rule
+//! and in `rust/DESIGN.md`.
+
+use super::lexer::{Tok, TokKind};
+use super::{Finding, RULE_ADHOC_CHUNK, RULE_FLOAT_REDUCE, RULE_LOCK_IO, RULE_PANIC,
+    RULE_WALLCLOCK, RULE_WIRE_DRIFT};
+
+/// Method/path call names that perform socket or stream I/O; used by
+/// the `lock-across-io` rule.
+const IO_CALLS: [&str; 6] =
+    ["write_all", "read_exact", "read_to_end", "flush", "connect", "accept"];
+
+/// The fixed registry of `coordinator/wire.rs` layout constants, in
+/// fingerprint serialization order. Must match
+/// `wire::layout_fingerprint` exactly.
+const WIRE_REGISTRY: [&str; 14] = [
+    "MAGIC",
+    "TAG_HELLO",
+    "TAG_SETUP",
+    "TAG_TASK",
+    "TAG_RESULT",
+    "TAG_SHUTDOWN",
+    "SCHEME_POLY",
+    "SCHEME_RANDOM",
+    "SCHEME_UNCODED",
+    "SCHEME_APPROX",
+    "SCHEME_HETERO",
+    "FRAME_OVERHEAD",
+    "RESULT_HEADER_BYTES",
+    "MAX_PAYLOAD",
+];
+
+fn push(
+    findings: &mut Vec<Finding>,
+    file: &str,
+    t_line: u32,
+    t_col: u32,
+    rule: &'static str,
+    msg: String,
+) {
+    findings.push(Finding { file: file.to_string(), line: t_line, col: t_col, rule, msg });
+}
+
+/// Index of the close delimiter matching the open one at `open_idx`
+/// (one of `(`/`[`/`{`). Unbalanced input returns the last index.
+pub(crate) fn match_delim(toks: &[Tok], open_idx: usize) -> usize {
+    let cl = match toks[open_idx].text.as_str() {
+        "(" => ")",
+        "[" => "]",
+        "{" => "}",
+        _ => return open_idx,
+    };
+    let mut depth = 0i32;
+    for (k, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => {
+                    depth -= 1;
+                    if depth == 0 && t.text == cl {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Token-index ranges (inclusive) covered by `#[cfg(test)]` or
+/// `#[test]` items: the attribute itself through the close brace of
+/// the item body. Rules skip findings inside these ranges — test code
+/// may panic and measure wall-clock freely.
+pub(crate) fn cfg_test_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut k = 0usize;
+    while k + 2 < toks.len() {
+        if toks[k].text == "#" && toks[k + 1].text == "[" {
+            let close = match_delim(toks, k + 1);
+            let mut has_test = false;
+            let mut has_cfg = false;
+            let mut only_test = true;
+            for t in &toks[k + 2..close] {
+                if t.kind == TokKind::Ident {
+                    match t.text.as_str() {
+                        "test" => has_test = true,
+                        "cfg" => has_cfg = true,
+                        _ => only_test = false,
+                    }
+                    if t.text != "test" {
+                        only_test = false;
+                    }
+                }
+            }
+            if has_test && (has_cfg || only_test) {
+                // Find the item body: the first `{` at nesting depth 0
+                // before a `;` (a `;` means an item with no body).
+                let mut j = close + 1;
+                let mut depth = 0i32;
+                while j < toks.len() {
+                    let tx = toks[j].text.as_str();
+                    if tx == "{" && depth == 0 {
+                        let end = match_delim(toks, j);
+                        ranges.push((k, end));
+                        j = end;
+                        break;
+                    }
+                    if tx == ";" && depth == 0 {
+                        break;
+                    }
+                    if tx == "(" || tx == "[" {
+                        depth += 1;
+                    }
+                    if tx == ")" || tx == "]" {
+                        depth -= 1;
+                    }
+                    j += 1;
+                }
+                k = j;
+            }
+        }
+        k += 1;
+    }
+    ranges
+}
+
+pub(crate) fn in_ranges(idx: usize, ranges: &[(usize, usize)]) -> bool {
+    ranges.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// Parse `// lint: allow(<rule>) <reason>` directives out of the
+/// comment list. The reason may be empty here; suppression (in
+/// `lint_source`) requires it non-empty, so a bare `allow(...)` is
+/// visible but toothless — every exemption must say why.
+pub(crate) fn parse_allows(comments: &[(u32, String)]) -> Vec<(u32, String, String)> {
+    let mut allows = Vec::new();
+    for (line, text) in comments {
+        let Some(p) = text.find("lint:") else { continue };
+        let rest = text[p + 5..].trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else { continue };
+        let Some(q) = rest.find(')') else { continue };
+        let rule = &rest[..q];
+        if rule.is_empty()
+            || !rule.bytes().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'-')
+        {
+            continue;
+        }
+        let reason = rest[q + 1..].trim();
+        allows.push((*line, rule.to_string(), reason.to_string()));
+    }
+    allows
+}
+
+fn first_upper(s: &str) -> bool {
+    s.chars().next().map_or(false, |c| c.is_uppercase())
+}
+
+/// `panic-in-lib`: `.unwrap()` / `.expect()` / `panic!` / `todo!` in
+/// library code. A panic on the master unwinds the training loop and
+/// every worker connection; the distributed path must degrade through
+/// typed errors (`WireError`, `anyhow::Result`) instead. Scope:
+/// `rust/src` only, excluding `main.rs` (user-facing binary),
+/// `testkit/` (test support — panicking asserts are its API), and
+/// `#[cfg(test)]` blocks.
+fn rule_panic_in_lib(
+    path: &str,
+    toks: &[Tok],
+    test_ranges: &[(usize, usize)],
+    findings: &mut Vec<Finding>,
+) {
+    if !path.contains("/src/") || path.ends_with("main.rs") || path.contains("/testkit/") {
+        return;
+    }
+    for (k, t) in toks.iter().enumerate() {
+        if in_ranges(k, test_ranges) || t.kind != TokKind::Ident {
+            continue;
+        }
+        match t.text.as_str() {
+            "unwrap" | "expect" => {
+                if k > 0
+                    && toks[k - 1].text == "."
+                    && k + 1 < toks.len()
+                    && toks[k + 1].text == "("
+                {
+                    push(findings, path, t.line, t.col, RULE_PANIC,
+                        format!("`.{}()` in library code", t.text));
+                }
+            }
+            "panic" | "todo" => {
+                if k + 1 < toks.len() && toks[k + 1].text == "!" {
+                    if k > 0 && toks[k - 1].text == "::" {
+                        continue;
+                    }
+                    push(findings, path, t.line, t.col, RULE_PANIC,
+                        format!("`{}!` in library code", t.text));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `wallclock-entropy`: `Instant::now` / `SystemTime::now` outside the
+/// `obs/` and `bench/` allowlists. Wall-clock readings in the decode
+/// or seeding path silently break the determinism contract (bitwise
+/// reproducibility across thread counts and reruns); real-time
+/// measurement belongs in the telemetry layer.
+fn rule_wallclock(
+    path: &str,
+    toks: &[Tok],
+    test_ranges: &[(usize, usize)],
+    findings: &mut Vec<Finding>,
+) {
+    if !path.contains("/src/") || path.contains("/obs/") || path.contains("/bench/") {
+        return;
+    }
+    for (k, t) in toks.iter().enumerate() {
+        if in_ranges(k, test_ranges) || t.kind != TokKind::Ident {
+            continue;
+        }
+        if (t.text == "Instant" || t.text == "SystemTime")
+            && k + 2 < toks.len()
+            && toks[k + 1].text == "::"
+            && toks[k + 2].text == "now"
+        {
+            push(findings, path, t.line, t.col, RULE_WALLCLOCK,
+                format!("`{}::now` outside the obs/bench allowlist", t.text));
+        }
+    }
+}
+
+/// Identifiers bound locally inside token range `[a, b)`: closure
+/// parameters (including nested closures), `let` pattern names, and
+/// `for` loop bindings. Used to tell captured state from scratch
+/// variables in `float-reduce-outside-tree`.
+fn closure_locals(toks: &[Tok], a: usize, b: usize) -> Vec<String> {
+    let mut locals = Vec::new();
+    let mut k = a;
+    while k < b {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct && t.text == "|" {
+            let mut j = k + 1;
+            while j < b && toks[j].text != "|" {
+                if toks[j].kind == TokKind::Ident && !first_upper(&toks[j].text) {
+                    locals.push(toks[j].text.clone());
+                }
+                j += 1;
+            }
+            k = j + 1;
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "let" {
+            let mut j = k + 1;
+            while j < b && toks[j].text != "=" && toks[j].text != ";" {
+                if toks[j].kind == TokKind::Ident && !first_upper(&toks[j].text) {
+                    locals.push(toks[j].text.clone());
+                }
+                j += 1;
+            }
+            k = j;
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "for" {
+            let mut j = k + 1;
+            while j < b && toks[j].text != "in" {
+                if toks[j].kind == TokKind::Ident && !first_upper(&toks[j].text) {
+                    locals.push(toks[j].text.clone());
+                }
+                j += 1;
+            }
+            k = j;
+            continue;
+        }
+        k += 1;
+    }
+    locals
+}
+
+/// Walk left from `idx` (exclusive) over an lvalue chain — index
+/// groups, call groups, `.`/`::` segments, derefs — to its base
+/// identifier (`parts[i].0 +=` → `parts`).
+fn base_ident_before(toks: &[Tok], idx: usize) -> Option<String> {
+    let mut k = idx as isize - 1;
+    while k >= 0 {
+        let t = &toks[k as usize];
+        if t.text == "]" || t.text == ")" {
+            let (open, close) = if t.text == "]" { ("[", "]") } else { ("(", ")") };
+            let mut depth = 0i32;
+            while k >= 0 {
+                let x = toks[k as usize].text.as_str();
+                if x == close {
+                    depth += 1;
+                }
+                if x == open {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k -= 1;
+            }
+            k -= 1;
+            continue;
+        }
+        if t.kind == TokKind::Ident {
+            if k >= 1 {
+                let prev = toks[k as usize - 1].text.as_str();
+                if prev == "." || prev == "::" {
+                    k -= 2;
+                    continue;
+                }
+            }
+            return Some(t.text.clone());
+        }
+        if t.text == "." || t.text == "*" {
+            k -= 1;
+            continue;
+        }
+        return None;
+    }
+    None
+}
+
+/// `float-reduce-outside-tree`: cross-chunk floating-point reduction
+/// that bypasses `pool::tree_combine`. Two shapes are flagged:
+/// (a) `+=`/`-=` into *captured* (non-locally-bound) state inside a
+/// `map_indexed`/`for_each_chunk_mut` closure — a data race at worst,
+/// and even when synchronized the combine order depends on thread
+/// scheduling, so sums stop being bitwise reproducible; and
+/// (b) an iterator fold (`.sum`/`.fold`/`.product`/`.reduce`) chained
+/// directly onto a `map_indexed(...)` result — a sequential
+/// left-to-right reduction whose rounding differs from the fixed
+/// binary-tree order every other consumer uses.
+fn rule_float_reduce(
+    path: &str,
+    toks: &[Tok],
+    test_ranges: &[(usize, usize)],
+    findings: &mut Vec<Finding>,
+) {
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident
+            || (t.text != "map_indexed" && t.text != "for_each_chunk_mut")
+        {
+            continue;
+        }
+        if in_ranges(k, test_ranges) {
+            continue;
+        }
+        if k + 1 >= toks.len() || toks[k + 1].text != "(" {
+            continue;
+        }
+        let close = match_delim(toks, k + 1);
+
+        // Shape (b): fold chained on the map_indexed result.
+        if t.text == "map_indexed" {
+            let mut j = close + 1;
+            while j + 1 < toks.len() && toks[j].text == "." {
+                let name = toks[j + 1].text.clone();
+                if matches!(name.as_str(), "sum" | "fold" | "product" | "reduce") {
+                    push(findings, path, toks[j + 1].line, toks[j + 1].col, RULE_FLOAT_REDUCE,
+                        format!("chunk partials combined with `.{name}` — use pool::tree_combine"));
+                    break;
+                }
+                j += 2;
+                if j < toks.len() && toks[j].text == "::" {
+                    // Turbofish: skip `::<…>`.
+                    j += 1;
+                    if j < toks.len() && toks[j].text == "<" {
+                        let mut depth = 0i32;
+                        while j < toks.len() {
+                            if toks[j].text == "<" {
+                                depth += 1;
+                            }
+                            if toks[j].text == ">" {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            j += 1;
+                        }
+                        j += 1;
+                    }
+                }
+                if j < toks.len() && toks[j].text == "(" {
+                    j = match_delim(toks, j) + 1;
+                }
+            }
+        }
+
+        // Shape (a): captured accumulation inside the closure.
+        let locals = closure_locals(toks, k + 2, close);
+        for j in k + 2..close {
+            if toks[j].kind == TokKind::Punct && (toks[j].text == "+=" || toks[j].text == "-=")
+            {
+                if let Some(base) = base_ident_before(toks, j) {
+                    if !locals.contains(&base) && !first_upper(&base) {
+                        push(findings, path, toks[j].line, toks[j].col, RULE_FLOAT_REDUCE,
+                            format!(
+                                "`{base} {}` accumulates into captured state inside a pool closure",
+                                toks[j].text
+                            ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `adhoc-chunk-literal`: a numeric chunk size at a
+/// `for_each_chunk_mut` call site with no named `*_CHUNK`/`*_ROWS`
+/// constant in the expression. The fixed chunk grid *is* the
+/// determinism contract — a drive-by literal changes partial
+/// boundaries and silently changes every downstream sum. Expressions
+/// like `2 * DECODE_CHUNK_V` pass; a bare `4096` does not.
+fn rule_chunk_literal(
+    path: &str,
+    toks: &[Tok],
+    test_ranges: &[(usize, usize)],
+    findings: &mut Vec<Finding>,
+) {
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.text != "for_each_chunk_mut" {
+            continue;
+        }
+        if in_ranges(k, test_ranges) {
+            continue;
+        }
+        if k + 1 >= toks.len() || toks[k + 1].text != "(" {
+            continue;
+        }
+        // Skip the definition itself (`fn for_each_chunk_mut(...)`).
+        if k > 0 && toks[k - 1].text == "fn" {
+            continue;
+        }
+        let close = match_delim(toks, k + 1);
+        // Split the argument list at top-level commas.
+        let mut args: Vec<(usize, usize)> = Vec::new();
+        let mut depth = 0i32;
+        let mut start = k + 2;
+        for j in k + 2..=close.min(toks.len().saturating_sub(1)) {
+            let tx = toks[j].text.as_str();
+            if matches!(tx, "(" | "[" | "{") {
+                depth += 1;
+            } else if matches!(tx, ")" | "]" | "}") {
+                if depth == 0 && j == close {
+                    args.push((start, j));
+                    break;
+                }
+                depth -= 1;
+            } else if tx == "," && depth == 0 {
+                args.push((start, j));
+                start = j + 1;
+            }
+        }
+        if args.len() < 2 {
+            continue;
+        }
+        let (a, b) = args[1];
+        let seg = &toks[a..b];
+        let lit = seg.iter().find(|x| x.kind == TokKind::Num);
+        let has_const = seg.iter().any(|x| {
+            x.kind == TokKind::Ident
+                && first_upper(&x.text)
+                && x.text.bytes().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == b'_')
+                && (x.text.contains("CHUNK") || x.text.contains("ROWS"))
+        });
+        if let Some(x) = lit {
+            if !has_const {
+                push(findings, path, x.line, x.col, RULE_ADHOC_CHUNK,
+                    format!(
+                        "literal chunk size `{}` at a pool call site — use a named *_CHUNK constant",
+                        x.text
+                    ));
+            }
+        }
+    }
+}
+
+/// `lock-across-io`: a `MutexGuard` (from `.lock()` or
+/// `lock_ignore_poison(..)`) still live when a blocking socket/stream
+/// call runs in the same block. Holding a guard across `write_all` on
+/// a slow peer turns one straggler into a whole-master stall — the
+/// exact failure mode gradient coding exists to avoid. Release the
+/// guard (scope it or `drop(guard)`) before the I/O.
+fn rule_lock_across_io(
+    path: &str,
+    toks: &[Tok],
+    test_ranges: &[(usize, usize)],
+    findings: &mut Vec<Finding>,
+) {
+    let mut depth = 0i32;
+    let mut guards: Vec<(String, i32)> = Vec::new();
+    let mut k = 0usize;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.text == "{" {
+            depth += 1;
+        } else if t.text == "}" {
+            depth -= 1;
+            guards.retain(|&(_, d)| d <= depth);
+        } else if t.kind == TokKind::Ident && t.text == "let" && !in_ranges(k, test_ranges) {
+            // Collect the pattern idents, then scan the RHS for a lock
+            // acquisition.
+            let mut j = k + 1;
+            let mut pat: Vec<String> = Vec::new();
+            while j < toks.len() && toks[j].text != "=" && toks[j].text != ";" {
+                let x = &toks[j];
+                if x.kind == TokKind::Ident
+                    && !first_upper(&x.text)
+                    && x.text != "mut"
+                    && x.text != "ref"
+                    && x.text != "let"
+                {
+                    pat.push(x.text.clone());
+                }
+                j += 1;
+            }
+            if j < toks.len() && toks[j].text == "=" {
+                let mut d2 = 0i32;
+                let mut j2 = j + 1;
+                let mut has_lock = false;
+                while j2 < toks.len() {
+                    let tx = toks[j2].text.as_str();
+                    if matches!(tx, "(" | "[" | "{") {
+                        d2 += 1;
+                    } else if matches!(tx, ")" | "]" | "}") {
+                        if d2 == 0 {
+                            break;
+                        }
+                        d2 -= 1;
+                    } else if tx == ";" && d2 == 0 {
+                        break;
+                    }
+                    if toks[j2].kind == TokKind::Ident
+                        && (tx == "lock" || tx == "lock_ignore_poison")
+                    {
+                        has_lock = true;
+                    }
+                    j2 += 1;
+                }
+                if has_lock {
+                    if let Some(name) = pat.last() {
+                        guards.push((name.clone(), depth));
+                    }
+                }
+                k = j2;
+                continue;
+            }
+        } else if t.kind == TokKind::Ident
+            && t.text == "drop"
+            && k + 1 < toks.len()
+            && toks[k + 1].text == "("
+        {
+            let close = match_delim(toks, k + 1);
+            guards.retain(|(n, _)| {
+                !toks[k + 2..close].iter().any(|x| x.kind == TokKind::Ident && x.text == *n)
+            });
+            k = close;
+            continue;
+        } else if t.kind == TokKind::Ident
+            && IO_CALLS.contains(&t.text.as_str())
+            && !guards.is_empty()
+            && !in_ranges(k, test_ranges)
+            && k > 0
+            && (toks[k - 1].text == "." || toks[k - 1].text == "::")
+            && k + 1 < toks.len()
+            && toks[k + 1].text == "("
+        {
+            if let Some((g, _)) = guards.last() {
+                push(findings, path, t.line, t.col, RULE_LOCK_IO,
+                    format!("`{}` I/O while guard `{g}` is live — release the lock first", t.text));
+            }
+        }
+        k += 1;
+    }
+}
+
+/// Strip a Rust integer type suffix (`u8`…`usize`, `i8`…`isize`).
+fn strip_int_suffix(s: &str) -> &str {
+    for suf in ["usize", "isize", "u128", "i128", "u64", "i64", "u32", "i32", "u16", "i16",
+        "u8", "i8"]
+    {
+        if let Some(stripped) = s.strip_suffix(suf) {
+            return stripped;
+        }
+    }
+    s
+}
+
+fn parse_int(text: &str) -> Result<u64, ()> {
+    let cleaned: String = text.chars().filter(|&c| c != '_').collect();
+    let t = strip_int_suffix(&cleaned);
+    let (digits, radix) = if let Some(r) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        (r, 16)
+    } else if let Some(r) = t.strip_prefix("0o") {
+        (r, 8)
+    } else if let Some(r) = t.strip_prefix("0b").or_else(|| t.strip_prefix("0B")) {
+        (r, 2)
+    } else {
+        (t, 10)
+    };
+    u64::from_str_radix(digits, radix).map_err(|_| ())
+}
+
+/// Tiny const-expression evaluator over tokens `[a, b)`: integer
+/// literals, `+ - * <<`, parentheses. Precedence (tightest first):
+/// `*`, then `+ -`, then `<<` — enough for every layout constant in
+/// `wire.rs` (`4 + 1 + 4`, `1 << 26`).
+struct ConstParser<'a> {
+    toks: &'a [Tok],
+    pos: usize,
+    end: usize,
+}
+
+impl ConstParser<'_> {
+    fn peek(&self) -> Option<&str> {
+        if self.pos < self.end {
+            Some(self.toks[self.pos].text.as_str())
+        } else {
+            None
+        }
+    }
+
+    fn expr(&mut self) -> Result<u64, ()> {
+        let mut v = self.add()?;
+        while self.peek() == Some("<<") {
+            self.pos += 1;
+            let w = self.add()?;
+            v = if w >= 64 { 0 } else { v << w };
+        }
+        Ok(v)
+    }
+
+    fn add(&mut self) -> Result<u64, ()> {
+        let mut v = self.mul()?;
+        while matches!(self.peek(), Some("+") | Some("-")) {
+            let minus = self.peek() == Some("-");
+            self.pos += 1;
+            let w = self.mul()?;
+            v = if minus { v.wrapping_sub(w) } else { v.wrapping_add(w) };
+        }
+        Ok(v)
+    }
+
+    fn mul(&mut self) -> Result<u64, ()> {
+        let mut v = self.atom()?;
+        while self.peek() == Some("*") {
+            self.pos += 1;
+            v = v.wrapping_mul(self.atom()?);
+        }
+        Ok(v)
+    }
+
+    fn atom(&mut self) -> Result<u64, ()> {
+        if self.pos >= self.end {
+            return Err(());
+        }
+        let t = &self.toks[self.pos];
+        if t.text == "(" {
+            self.pos += 1;
+            let v = self.expr()?;
+            if self.peek() == Some(")") {
+                self.pos += 1;
+            }
+            return Ok(v);
+        }
+        if t.kind == TokKind::Num {
+            self.pos += 1;
+            return parse_int(&t.text);
+        }
+        Err(())
+    }
+}
+
+fn eval_const_expr(toks: &[Tok], a: usize, b: usize) -> Result<u64, ()> {
+    ConstParser { toks, pos: a, end: b }.expr()
+}
+
+/// `wire-layout-drift`: re-derives the FNV-1a-64 fingerprint of the
+/// frame-layout constants in `coordinator/wire.rs` (serialized as
+/// `"NAME=<decimal>;"` in registry order) and compares it to the
+/// recorded `WIRE_LAYOUT_FINGERPRINT`. A layout change without a
+/// `MAGIC` bump means an old peer mis-parses frames instead of failing
+/// the Hello handshake — and the chaos/fuzz layer's corruption oracles
+/// assume layout and MAGIC move together.
+fn rule_wire_layout(path: &str, toks: &[Tok], findings: &mut Vec<Finding>) {
+    if !path.ends_with("coordinator/wire.rs") {
+        return;
+    }
+    let mut values: Vec<(String, u64)> = Vec::new();
+    let mut recorded: Option<u64> = None;
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident
+            || t.text != "const"
+            || k + 1 >= toks.len()
+            || toks[k + 1].kind != TokKind::Ident
+        {
+            continue;
+        }
+        let name = toks[k + 1].text.clone();
+        let mut j = k + 2;
+        while j < toks.len() && toks[j].text != "=" {
+            if toks[j].text == ";" {
+                break;
+            }
+            j += 1;
+        }
+        if j >= toks.len() || toks[j].text != "=" {
+            continue;
+        }
+        let mut e = j + 1;
+        while e < toks.len() && toks[e].text != ";" {
+            e += 1;
+        }
+        let Ok(v) = eval_const_expr(toks, j + 1, e) else { continue };
+        if name == "WIRE_LAYOUT_FINGERPRINT" {
+            recorded = Some(v);
+        } else if WIRE_REGISTRY.contains(&name.as_str())
+            && !values.iter().any(|(n, _)| *n == name)
+        {
+            values.push((name, v));
+        }
+    }
+    let missing: Vec<&str> = WIRE_REGISTRY
+        .iter()
+        .copied()
+        .filter(|nm| !values.iter().any(|(n, _)| n == nm))
+        .collect();
+    if !missing.is_empty() {
+        push(findings, path, 1, 1, RULE_WIRE_DRIFT,
+            format!("layout constants missing: {missing:?}"));
+        return;
+    }
+    let mut data = String::new();
+    for nm in WIRE_REGISTRY {
+        if let Some((_, v)) = values.iter().find(|(n, _)| n == nm) {
+            data.push_str(nm);
+            data.push('=');
+            data.push_str(&v.to_string());
+            data.push(';');
+        }
+    }
+    let h = super::fnv1a64(data.as_bytes());
+    match recorded {
+        None => push(findings, path, 1, 1, RULE_WIRE_DRIFT,
+            format!("no WIRE_LAYOUT_FINGERPRINT recorded; expected {h:#018x}")),
+        Some(r) if r != h => push(findings, path, 1, 1, RULE_WIRE_DRIFT,
+            format!(
+                "frame layout drifted: fingerprint {h:#018x} != recorded {r:#018x} — bump MAGIC and re-pin"
+            )),
+        Some(_) => {}
+    }
+}
+
+/// Run every rule over one file's token stream.
+pub(crate) fn run_all(
+    path: &str,
+    toks: &[Tok],
+    test_ranges: &[(usize, usize)],
+    findings: &mut Vec<Finding>,
+) {
+    rule_panic_in_lib(path, toks, test_ranges, findings);
+    rule_wallclock(path, toks, test_ranges, findings);
+    rule_float_reduce(path, toks, test_ranges, findings);
+    rule_chunk_literal(path, toks, test_ranges, findings);
+    rule_lock_across_io(path, toks, test_ranges, findings);
+    rule_wire_layout(path, toks, findings);
+}

@@ -18,6 +18,11 @@
 //!                  (from the `ci.sh` bench smokes, in `target/bench/`)
 //!                  against the committed repo-root baselines and fail on
 //!                  regressed headline metrics
+//! - `lint`         in-repo static analysis: walks rust/{src,tests,benches}
+//!                  with the crate's own lexer + rule registry and reports
+//!                  determinism / panic-hygiene / lock-discipline /
+//!                  wire-versioning violations (`--deny` gates CI; `--json`
+//!                  is the machine artifact; `lint.baseline` grandfathers)
 //! - `plan`         §VI model: optimal (d, s, m) for given delay parameters
 //! - `plan-hetero`  heterogeneous load planner: optimized per-worker load
 //!                  vector and predicted speedup over uniform placement
@@ -90,6 +95,17 @@ fn app() -> App {
             .flag("current", "target/bench", "directory holding the freshly produced BENCH_*.json")
             .flag("baseline", ".", "directory holding the committed baseline BENCH_*.json")
             .flag("tol", "0.15", "allowed relative regression of each headline metric"),
+        )
+        .command(
+            Command::new(
+                "lint",
+                "static analysis over rust/{src,tests,benches}: determinism, panic-hygiene, lock-discipline, wire-versioning",
+            )
+            .flag("root", ".", "repository root holding rust/src, rust/tests, rust/benches")
+            .flag("baseline", "lint.baseline", "grandfathered-findings file, relative to --root")
+            .switch("json", "machine-readable JSON report on stdout (the CI artifact)")
+            .switch("deny", "exit non-zero on any finding not covered by the baseline")
+            .switch("update-baseline", "rewrite the baseline from the current findings and exit"),
         )
         .command(
             Command::new(
@@ -582,6 +598,62 @@ const GATE_HEADLINES: &[(&str, &str, bool, f64)] = &[
     ("BENCH_hetero.json", "bimodal_margin.realized_speedup", true, 0.0),
 ];
 
+fn cmd_lint(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    use gradcode::lint;
+    let root = std::path::PathBuf::from(a.get_str("root"));
+    let baseline_path = root.join(a.get_str("baseline"));
+    let report = lint::lint_tree(&root)
+        .with_context(|| format!("linting {}", root.display()))?;
+
+    if a.get_bool("update-baseline") {
+        std::fs::write(&baseline_path, lint::render_baseline(&report))
+            .with_context(|| format!("writing {}", baseline_path.display()))?;
+        println!(
+            "lint: wrote {} ({} grandfathered finding(s))",
+            baseline_path.display(),
+            report.live.len()
+        );
+        return Ok(());
+    }
+
+    let baseline = if baseline_path.is_file() {
+        let text = std::fs::read_to_string(&baseline_path)
+            .with_context(|| format!("reading {}", baseline_path.display()))?;
+        lint::Baseline::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", baseline_path.display()))?
+    } else {
+        lint::Baseline::default()
+    };
+    let (fresh, grandfathered) = baseline.split(report.live);
+
+    if a.get_bool("json") {
+        println!(
+            "{}",
+            lint::report_json(report.files_scanned, &fresh, &grandfathered, &report.suppressed)
+        );
+    } else {
+        for f in &fresh {
+            println!("{f}");
+        }
+        println!(
+            "lint: {} file(s), {} finding(s) ({} baselined), {} suppressed",
+            report.files_scanned,
+            fresh.len() + grandfathered.len(),
+            grandfathered.len(),
+            report.suppressed.len()
+        );
+    }
+    if a.get_bool("deny") && !fresh.is_empty() {
+        anyhow::bail!(
+            "lint: {} finding(s) not covered by {} — fix them, or justify with `// lint: allow(<rule>) <reason>`",
+            fresh.len(),
+            baseline_path.display()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_ci_gate(a: gradcode::cli::Args) -> anyhow::Result<()> {
     use gradcode::bench::{parse_json, Table};
     let current_dir = std::path::PathBuf::from(a.get_str("current"));
@@ -985,6 +1057,7 @@ fn main() -> anyhow::Result<()> {
             "train" => cmd_train(args),
             "trace-report" => cmd_trace_report(args),
             "ci-gate" => cmd_ci_gate(args),
+            "lint" => cmd_lint(args),
             "chaos-report" => cmd_chaos_report(args),
             "plan" => cmd_plan(args),
             "plan-hetero" => cmd_plan_hetero(args),

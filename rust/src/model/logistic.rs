@@ -94,12 +94,15 @@ impl LogisticModel {
             Self::gradient_range(ds, beta, start, end, &mut part);
             part
         });
-        let total = crate::pool::tree_combine(parts, |mut a, b| {
+        match crate::pool::tree_combine(parts, |mut a, b| {
             crate::linalg::axpy_f32(1.0, &b, &mut a);
             a
-        })
-        .expect("at least one chunk");
-        g.copy_from_slice(&total);
+        }) {
+            Some(total) => g.copy_from_slice(&total),
+            // Unreachable for rows > ROW_CHUNK, but fall back to the
+            // serial kernel rather than panic.
+            None => Self::gradient_range(ds, beta, 0, ds.rows, g),
+        }
     }
 
     /// The fused gradient kernel over rows `[start, end)`, accumulated

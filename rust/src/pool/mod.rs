@@ -220,12 +220,22 @@ impl ThreadPool {
         let mut workers = Vec::with_capacity(threads - 1);
         for i in 0..threads - 1 {
             let sh = Arc::clone(&shared);
-            let handle = thread::Builder::new()
+            match thread::Builder::new()
                 .name(format!("gradcode-pool-{i}"))
                 .spawn(move || sh.worker_loop())
-                .expect("spawn pool worker");
-            workers.push(handle);
+            {
+                Ok(handle) => workers.push(handle),
+                // Degrade to however many helpers the OS gave us; the
+                // submitting thread always participates, so a smaller
+                // (even empty) pool stays correct, just slower.
+                Err(_) => break,
+            }
         }
+        if workers.is_empty() {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            return ThreadPool { shared: None, workers: Vec::new(), threads: 1 };
+        }
+        let threads = workers.len() + 1;
         ThreadPool { shared: Some(shared), workers, threads }
     }
 
@@ -328,6 +338,7 @@ impl ThreadPool {
         let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
         for slot in slots {
             let taken = lock_ignore_poison(&slot).take();
+            // lint: allow(panic-in-lib) the latch is released only after every slot is written; an empty slot is a pool bug worth crashing on
             match taken.expect("latch guarantees every slot is filled") {
                 Ok(r) => results.push(r),
                 Err(e) => {
@@ -436,10 +447,7 @@ static GLOBAL: Mutex<Option<Arc<ThreadPool>>> = Mutex::new(None);
 /// [`set_global_threads`].
 pub fn global() -> Arc<ThreadPool> {
     let mut g = lock_ignore_poison(&GLOBAL);
-    if g.is_none() {
-        *g = Some(Arc::new(ThreadPool::new(configured_threads())));
-    }
-    Arc::clone(g.as_ref().expect("just initialised"))
+    Arc::clone(g.get_or_insert_with(|| Arc::new(ThreadPool::new(configured_threads()))))
 }
 
 /// Replace the global pool with one of exactly `threads` workers

@@ -131,7 +131,7 @@ impl Zipf {
     pub fn sample<R: Rng>(&self, rng: &mut R) -> usize {
         let u = rng.next_f64();
         // Binary search for the first cum[i] >= u.
-        match self.cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        match self.cum.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i + 1,
             Err(i) => (i + 1).min(self.cum.len()),
         }

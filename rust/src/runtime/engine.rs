@@ -30,7 +30,7 @@ impl PjrtEngine {
 
     /// Load an HLO-text artifact and compile it to an executable.
     pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let _guard = self.compile_lock.lock().unwrap();
+        let _guard = self.compile_lock.lock().unwrap_or_else(|e| e.into_inner());
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("artifact path not UTF-8")?,
         )

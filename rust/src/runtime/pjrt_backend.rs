@@ -164,7 +164,7 @@ impl ComputeBackend for PjrtBackend {
     ) -> Result<()> {
         let (reply_tx, reply_rx) = channel();
         {
-            let guard = self.tx.lock().unwrap();
+            let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
             let tx = guard.as_ref().context("PJRT executor stopped")?;
             tx.send(EncodeRequest {
                 worker,
@@ -184,8 +184,8 @@ impl ComputeBackend for PjrtBackend {
 impl Drop for PjrtBackend {
     fn drop(&mut self) {
         // Close the request channel, then join the executor.
-        self.tx.lock().unwrap().take();
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        self.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(h) = self.handle.lock().unwrap_or_else(|e| e.into_inner()).take() {
             let _ = h.join();
         }
     }

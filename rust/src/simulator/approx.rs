@@ -57,6 +57,7 @@ pub fn expected_coeff_residual(
         let set = rng.sample_indices(n, r);
         acc += code
             .partial_decode(&set)
+            // lint: allow(panic-in-lib) sample_indices(n, r>=1) is non-empty, for which partial_decode is total
             .expect("partial decode is defined for every non-empty responder set")
             .coeff_residual;
     }

@@ -78,7 +78,7 @@ pub fn forecast(
                 finishes.push(t);
             }
         }
-        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        finishes.sort_by(|a, b| a.total_cmp(b));
         if finishes.len() >= n - s {
             exact += 1;
             total += finishes[n - s - 1];

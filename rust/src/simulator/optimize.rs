@@ -29,7 +29,7 @@ pub fn optimal_triple(params: &DelayParams, n: usize) -> TripleChoice {
             }
         }
     }
-    best.expect("n >= 1")
+    best.unwrap_or(TripleChoice { d: 1, s: 0, m: 1, expected_runtime: f64::INFINITY })
 }
 
 /// Search restricted to `m = 1` — the best the straggler-only schemes of
@@ -43,7 +43,7 @@ pub fn optimal_triple_m1(params: &DelayParams, n: usize) -> TripleChoice {
             best = Some(TripleChoice { d, s, m: 1, expected_runtime: e });
         }
     }
-    best.expect("n >= 1")
+    best.unwrap_or(TripleChoice { d: 1, s: 0, m: 1, expected_runtime: f64::INFINITY })
 }
 
 /// The naive uncoded scheme: `d = 1, s = 0, m = 1` (wait for everyone).

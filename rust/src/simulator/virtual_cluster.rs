@@ -82,7 +82,7 @@ impl VirtualCluster {
             .map(|_| self.comp.sample(&mut self.rng) + self.comm.sample(&mut self.rng))
             .collect();
         let mut order: Vec<usize> = (0..self.n).collect();
-        order.sort_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap());
+        order.sort_by(|&a, &b| finish[a].total_cmp(&finish[b]));
         let iteration_time = finish[order[self.wait_for - 1]];
         ClusterSample { finish, order, iteration_time }
     }

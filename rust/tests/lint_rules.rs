@@ -1,0 +1,508 @@
+//! Fixture-based coverage for the `gradcode lint` engine: per rule,
+//! one violating snippet (must be flagged with the right rule-id and
+//! line), one clean snippet, and one `// lint: allow(...)` snippet
+//! (must be suppressed, and remain visible in the suppressed list the
+//! `--json` summary counts). Plus lexer edge cases and a self-lint
+//! gate: the repo itself must be clean against the committed baseline.
+//!
+//! Every fixture lives inside a string literal, so the snippets are
+//! invisible to the linter when it scans this file.
+
+use gradcode::lint::lexer::{lex, TokKind};
+use gradcode::lint::{
+    fnv1a64, lint_source, lint_tree, Baseline, FileReport, RULE_ADHOC_CHUNK, RULE_FLOAT_REDUCE,
+    RULE_LOCK_IO, RULE_PANIC, RULE_WALLCLOCK, RULE_WIRE_DRIFT,
+};
+
+/// Lint a fixture under a `rust/src` path label (all rules in scope).
+fn lint_src(src: &str) -> FileReport {
+    lint_source("rust/src/fixture.rs", src)
+}
+
+fn rules_of(report: &FileReport) -> Vec<(&'static str, u32)> {
+    report.live.iter().map(|f| (f.rule, f.line)).collect()
+}
+
+// ---------------------------------------------------------------- float-reduce
+
+#[test]
+fn float_reduce_flags_captured_accumulation() {
+    let report = lint_src(
+        "
+fn f(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    crate::pool::global().map_indexed(4, |c| {
+        acc += xs[c];
+        0.0f32
+    });
+    acc
+}
+",
+    );
+    assert_eq!(rules_of(&report), vec![(RULE_FLOAT_REDUCE, 5)]);
+    assert!(report.live[0].msg.contains("acc"), "msg names the captured base: {}", report.live[0].msg);
+}
+
+#[test]
+fn float_reduce_flags_chained_fold_on_map_indexed() {
+    let report = lint_src(
+        "
+fn g(pool: &Pool, xs: &[f32]) -> f32 {
+    pool.map_indexed(8, |c| xs[c] * 2.0).iter().sum::<f32>()
+}
+",
+    );
+    assert_eq!(rules_of(&report), vec![(RULE_FLOAT_REDUCE, 3)]);
+    assert!(report.live[0].msg.contains("tree_combine"));
+}
+
+#[test]
+fn float_reduce_clean_via_tree_combine() {
+    let report = lint_src(
+        "
+fn h(pool: &Pool, xs: &[f32]) -> f32 {
+    let parts = pool.map_indexed(4, |c| chunk_sum(xs, c));
+    crate::pool::tree_combine(parts, |a, b| a + b).unwrap_or(0.0)
+}
+",
+    );
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+}
+
+#[test]
+fn float_reduce_local_scratch_is_not_flagged() {
+    // `local` is bound by a `let` inside the closure — accumulating
+    // into it is per-chunk scratch, not a cross-chunk reduction.
+    let report = lint_src(
+        "
+fn f(xs: &[f32]) -> Vec<f32> {
+    pool.map_indexed(4, |c| {
+        let mut local = 0.0f32;
+        for x in &xs[c..c + 2] {
+            local += *x;
+        }
+        local
+    })
+}
+",
+    );
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+}
+
+#[test]
+fn float_reduce_allow_suppresses_and_is_counted() {
+    let report = lint_src(
+        "
+fn f(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    pool.map_indexed(4, |c| {
+        // lint: allow(float-reduce-outside-tree) measured prototype; tree_combine lands next pass
+        acc += xs[c];
+        0.0f32
+    });
+    acc
+}
+",
+    );
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, RULE_FLOAT_REDUCE);
+}
+
+// ------------------------------------------------------------- adhoc-chunk
+
+#[test]
+fn chunk_literal_flags_bare_number() {
+    let report = lint_src(
+        "
+fn f(pool: &Pool, buf: &mut [f32]) {
+    pool.for_each_chunk_mut(buf, 4096, |c, s| fill(c, s));
+}
+",
+    );
+    assert_eq!(rules_of(&report), vec![(RULE_ADHOC_CHUNK, 3)]);
+    assert!(report.live[0].msg.contains("4096"));
+}
+
+#[test]
+fn chunk_literal_clean_with_named_constant() {
+    // A literal is fine as long as a *_CHUNK/*_ROWS constant anchors
+    // the expression (`2 * ENCODE_CHUNK`), and the definition site of
+    // for_each_chunk_mut itself is exempt.
+    let report = lint_src(
+        "
+fn f(pool: &Pool, buf: &mut [f32]) {
+    pool.for_each_chunk_mut(buf, 2 * ENCODE_CHUNK, |c, s| fill(c, s));
+}
+pub fn for_each_chunk_mut(data: &mut [f32], chunk: usize, f: impl Fn(usize, &mut [f32])) {}
+",
+    );
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+}
+
+#[test]
+fn chunk_literal_allow_suppresses_and_is_counted() {
+    let report = lint_src(
+        "
+fn f(pool: &Pool, buf: &mut [f32]) {
+    // lint: allow(adhoc-chunk-literal) one-off probe buffer; boundaries feed no reduction
+    pool.for_each_chunk_mut(buf, 512, |c, s| fill(c, s));
+}
+",
+    );
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, RULE_ADHOC_CHUNK);
+}
+
+// ------------------------------------------------------------- panic-in-lib
+
+#[test]
+fn panic_in_lib_flags_unwrap_expect_panic() {
+    let report = lint_src(
+        "
+pub fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+pub fn g(x: Option<u32>) -> u32 {
+    x.expect(\"present\")
+}
+pub fn h() {
+    panic!(\"boom\");
+}
+",
+    );
+    assert_eq!(
+        rules_of(&report),
+        vec![(RULE_PANIC, 3), (RULE_PANIC, 6), (RULE_PANIC, 9)]
+    );
+}
+
+#[test]
+fn panic_in_lib_skips_tests_and_test_dirs() {
+    let src = "
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1).unwrap();
+        panic!(\"fine in tests\");
+    }
+}
+";
+    assert!(lint_src(src).live.is_empty());
+    // The same panicking code in an integration-test file is out of
+    // scope entirely (the rule only covers rust/src).
+    let in_tests = lint_source("rust/tests/fixture.rs", "fn f() { None::<u32>.unwrap(); }");
+    assert!(in_tests.live.is_empty());
+}
+
+#[test]
+fn panic_in_lib_allow_suppresses_and_is_counted() {
+    let report = lint_src(
+        "
+pub fn f(x: Option<u32>) -> u32 {
+    // lint: allow(panic-in-lib) documented panicking variant; fallible twin is try_f
+    x.unwrap()
+}
+",
+    );
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, RULE_PANIC);
+}
+
+#[test]
+fn allow_without_reason_does_not_suppress() {
+    let report = lint_src(
+        "
+pub fn f(x: Option<u32>) -> u32 {
+    // lint: allow(panic-in-lib)
+    x.unwrap()
+}
+",
+    );
+    assert_eq!(rules_of(&report), vec![(RULE_PANIC, 4)]);
+    assert!(report.suppressed.is_empty());
+}
+
+// ------------------------------------------------------------ lock-across-io
+
+#[test]
+fn lock_across_io_flags_guard_live_at_write() {
+    let report = lint_src(
+        "
+fn send(m: &std::sync::Mutex<u32>, s: &mut std::net::TcpStream) {
+    let guard = m.lock();
+    s.write_all(b\"x\");
+}
+",
+    );
+    assert_eq!(rules_of(&report), vec![(RULE_LOCK_IO, 4)]);
+    assert!(report.live[0].msg.contains("guard"));
+}
+
+#[test]
+fn lock_across_io_clean_after_drop_or_scope() {
+    let report = lint_src(
+        "
+fn send(m: &std::sync::Mutex<u32>, s: &mut std::net::TcpStream) {
+    let guard = m.lock();
+    drop(guard);
+    s.write_all(b\"x\");
+}
+fn send2(m: &std::sync::Mutex<u32>, s: &mut std::net::TcpStream) {
+    let mut len = 0u8;
+    {
+        let guard = m.lock();
+        len = *guard as u8;
+    }
+    s.write_all(&[len]);
+}
+",
+    );
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+}
+
+#[test]
+fn lock_across_io_allow_suppresses_and_is_counted() {
+    let report = lint_src(
+        "
+fn send(m: &std::sync::Mutex<u32>, s: &mut std::net::TcpStream) {
+    let guard = m.lock();
+    // lint: allow(lock-across-io) single-threaded startup path; nothing else can contend
+    s.write_all(b\"x\");
+}
+",
+    );
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, RULE_LOCK_IO);
+}
+
+// ---------------------------------------------------------- wallclock-entropy
+
+#[test]
+fn wallclock_flags_instant_now_in_src() {
+    let report = lint_src(
+        "
+fn seed() -> u64 {
+    std::time::Instant::now().elapsed().as_nanos() as u64
+}
+",
+    );
+    assert_eq!(rules_of(&report), vec![(RULE_WALLCLOCK, 3)]);
+}
+
+#[test]
+fn wallclock_clean_in_obs_and_tests() {
+    let src = "
+fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+";
+    assert!(lint_source("rust/src/obs/mod.rs", src).live.is_empty());
+    assert!(lint_source("rust/src/bench/mod.rs", src).live.is_empty());
+    let in_test = "
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _ = std::time::Instant::now();
+    }
+}
+";
+    assert!(lint_src(in_test).live.is_empty());
+}
+
+#[test]
+fn wallclock_allow_suppresses_and_is_counted() {
+    let report = lint_src(
+        "
+fn f() {
+    // lint: allow(wallclock-entropy) realized latency metric only; never feeds seeds
+    let _t0 = std::time::Instant::now();
+}
+",
+    );
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, RULE_WALLCLOCK);
+}
+
+// ---------------------------------------------------------- wire-layout-drift
+
+const WIRE_LABEL: &str = "rust/src/coordinator/wire.rs";
+
+/// The real v3 layout values, mirrored from `coordinator/wire.rs`.
+const WIRE_VALUES: [(&str, u64); 14] = [
+    ("MAGIC", 0x6743_0003),
+    ("TAG_HELLO", 1),
+    ("TAG_SETUP", 2),
+    ("TAG_TASK", 3),
+    ("TAG_RESULT", 4),
+    ("TAG_SHUTDOWN", 5),
+    ("SCHEME_POLY", 0),
+    ("SCHEME_RANDOM", 1),
+    ("SCHEME_UNCODED", 2),
+    ("SCHEME_APPROX", 3),
+    ("SCHEME_HETERO", 4),
+    ("FRAME_OVERHEAD", 9),
+    ("RESULT_HEADER_BYTES", 13),
+    ("MAX_PAYLOAD", 1 << 26),
+];
+
+fn wire_fixture_consts() -> String {
+    // Express a few constants as the same expressions wire.rs uses, to
+    // exercise the const-expression evaluator.
+    String::from(
+        "
+pub const MAGIC: u32 = 0x6743_0003;
+const TAG_HELLO: u8 = 1;
+const TAG_SETUP: u8 = 2;
+const TAG_TASK: u8 = 3;
+const TAG_RESULT: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+pub const SCHEME_POLY: u8 = 0;
+pub const SCHEME_RANDOM: u8 = 1;
+pub const SCHEME_UNCODED: u8 = 2;
+pub const SCHEME_APPROX: u8 = 3;
+pub const SCHEME_HETERO: u8 = 4;
+pub const FRAME_OVERHEAD: usize = 4 + 1 + 4;
+pub const RESULT_HEADER_BYTES: usize = 4 + 8 + 1;
+const MAX_PAYLOAD: usize = 1 << 26;
+",
+    )
+}
+
+fn expected_pin() -> u64 {
+    let mut data = String::new();
+    for (name, v) in WIRE_VALUES {
+        data.push_str(name);
+        data.push('=');
+        data.push_str(&v.to_string());
+        data.push(';');
+    }
+    fnv1a64(data.as_bytes())
+}
+
+#[test]
+fn wire_drift_missing_fingerprint_is_flagged() {
+    let report = lint_source(WIRE_LABEL, &wire_fixture_consts());
+    assert_eq!(rules_of(&report), vec![(RULE_WIRE_DRIFT, 1)]);
+    assert!(report.live[0].msg.contains("no WIRE_LAYOUT_FINGERPRINT"));
+}
+
+#[test]
+fn wire_drift_clean_when_pin_matches() {
+    let src = format!(
+        "{}pub const WIRE_LAYOUT_FINGERPRINT: u64 = {:#x};\n",
+        wire_fixture_consts(),
+        expected_pin()
+    );
+    let report = lint_source(WIRE_LABEL, &src);
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+}
+
+#[test]
+fn wire_drift_layout_change_without_repin_is_flagged() {
+    let src = format!(
+        "{}pub const WIRE_LAYOUT_FINGERPRINT: u64 = {:#x};\n",
+        wire_fixture_consts().replace("4 + 8 + 1", "4 + 8 + 2"),
+        expected_pin()
+    );
+    let report = lint_source(WIRE_LABEL, &src);
+    assert_eq!(rules_of(&report), vec![(RULE_WIRE_DRIFT, 1)]);
+    assert!(report.live[0].msg.contains("bump MAGIC"), "msg: {}", report.live[0].msg);
+}
+
+#[test]
+fn wire_drift_allow_suppresses_and_is_counted() {
+    let src = format!(
+        "// lint: allow(wire-layout-drift) mid-migration; the MAGIC bump lands with wire v4\n{}pub const WIRE_LAYOUT_FINGERPRINT: u64 = {:#x};\n",
+        wire_fixture_consts().replace("4 + 8 + 1", "4 + 8 + 2"),
+        expected_pin()
+    );
+    let report = lint_source(WIRE_LABEL, &src);
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, RULE_WIRE_DRIFT);
+}
+
+#[test]
+fn wire_rule_only_runs_on_wire_rs() {
+    // The same const block anywhere else is nobody's business.
+    let report = lint_source("rust/src/coordinator/remote.rs", &wire_fixture_consts());
+    assert!(report.live.is_empty(), "unexpected: {:?}", report.live);
+}
+
+// ----------------------------------------------------------------- lexer edges
+
+#[test]
+fn lexer_raw_strings_hide_their_contents() {
+    let lexed = lex(r##"let s = r#"quote " and // not a comment and .unwrap( inside"#;"##);
+    assert!(lexed.comments.is_empty());
+    let strs: Vec<_> = lexed.toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+    assert_eq!(strs.len(), 1);
+    assert!(!lexed.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "unwrap"));
+    // And the linter therefore sees nothing panicky.
+    assert!(lint_src(r##"fn f() { let s = r#"call .unwrap( and panic!("no")"#; }"##)
+        .live
+        .is_empty());
+}
+
+#[test]
+fn lexer_nested_block_comments() {
+    let lexed = lex("/* outer /* inner */ still comment */ fn f() {}");
+    assert_eq!(lexed.comments.len(), 1);
+    assert_eq!(lexed.toks[0].text, "fn");
+    assert!(lexed.comments[0].1.contains("inner"));
+}
+
+#[test]
+fn lexer_lifetimes_vs_char_literals() {
+    let lexed = lex("fn f<'a>(x: &'a u8) { let c = 'b'; let d = '\\n'; let s: &'static str = \"\"; }");
+    let lifetimes: Vec<_> =
+        lexed.toks.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| t.text.clone()).collect();
+    let chars: Vec<_> =
+        lexed.toks.iter().filter(|t| t.kind == TokKind::Char).map(|t| t.text.clone()).collect();
+    assert_eq!(lifetimes, vec!["'a", "'a", "'static"]);
+    assert_eq!(chars, vec!["'b'", "'\\n'"]);
+}
+
+#[test]
+fn lexer_numeric_literals_stay_whole() {
+    let lexed = lex("let x = 16_384usize; let y = 0x6743_0003u32; let z = 1.5e-3f64;");
+    let nums: Vec<_> =
+        lexed.toks.iter().filter(|t| t.kind == TokKind::Num).map(|t| t.text.clone()).collect();
+    assert_eq!(nums, vec!["16_384usize", "0x6743_0003u32", "1.5e-3f64"]);
+}
+
+#[test]
+fn lexer_positions_are_one_based_and_accurate() {
+    let lexed = lex("fn f() {\n    x.unwrap()\n}\n");
+    let unwrap = lexed
+        .toks
+        .iter()
+        .find(|t| t.text == "unwrap")
+        .map(|t| (t.line, t.col));
+    assert_eq!(unwrap, Some((2, 7)));
+}
+
+// ------------------------------------------------------------------ self-lint
+
+#[test]
+fn repo_is_clean_against_committed_baseline() {
+    // The acceptance invariant of the lint PR: `gradcode lint --deny`
+    // passes on the repo itself, with the committed baseline (which
+    // ships empty). cargo runs integration tests from the package
+    // root, which is the repo root.
+    let report = lint_tree(std::path::Path::new(".")).expect("lint_tree walks the repo");
+    let baseline = match std::fs::read_to_string("lint.baseline") {
+        Ok(text) => Baseline::parse(&text).expect("committed baseline parses"),
+        Err(_) => Baseline::default(),
+    };
+    let (fresh, _grandfathered) = baseline.split(report.live);
+    let rendered: Vec<String> = fresh.iter().map(|f| f.to_string()).collect();
+    assert!(fresh.is_empty(), "new lint findings:\n{}", rendered.join("\n"));
+}
