@@ -23,7 +23,10 @@
 #                              gate, not hang it — plus a 30-iteration
 #                              --chaos smoke train through the CLI)
 #   5. obs stage              (30-iteration traced train smoke writing a
-#                              fresh telemetry JSONL, trace-report over it)
+#                              fresh telemetry JSONL, trace-report over it
+#                              in CSV/Chrome/Prometheus forms, then a
+#                              second train serving --metrics-addr that a
+#                              /dev/tcp scrape must see metric families on)
 #   6. threads determinism    (the same train at --threads 1 and
 #                              --threads 4 must print identical results —
 #                              the pool's bitwise-determinism contract)
@@ -103,6 +106,40 @@ run_limited ./target/release/gradcode train \
 [ -s "$obs_trace" ] || { echo "FAIL: traced train wrote no telemetry"; exit 1; }
 run_limited ./target/release/gradcode trace-report "$obs_trace" --csv \
     --chrome target/ci_trace.chrome.json
+# The same replay must render as Prometheus text through the shared
+# exposition renderer.
+run_limited ./target/release/gradcode trace-report "$obs_trace" --prom \
+    | grep -q '^# TYPE gradcode_' \
+    || { echo "FAIL: trace-report --prom produced no metric families"; exit 1; }
+
+echo "==> obs smoke: live Prometheus scrape during train (--metrics-addr)"
+obs_metrics_log="target/ci_metrics_train.log"
+rm -f "$obs_metrics_log"
+# Port 0 picks a free port; the trainer announces the bound address on
+# stdout and --metrics-linger keeps the endpoint up until one scrape
+# lands, so a short run cannot finish before the scraper gets there.
+run_limited ./target/release/gradcode train \
+    --n 6 --s 1 --m 2 --iters 30 --rows 240 \
+    --metrics-addr 127.0.0.1:0 --metrics-linger 60 >"$obs_metrics_log" 2>&1 &
+train_pid=$!
+metrics_addr=""
+for _ in $(seq 1 200); do
+    metrics_addr="$(sed -n 's|^metrics: serving Prometheus text on http://\([0-9.:]*\)/metrics$|\1|p' "$obs_metrics_log" | head -n1)"
+    [ -n "$metrics_addr" ] && break
+    sleep 0.1
+done
+if [ -z "$metrics_addr" ]; then
+    cat "$obs_metrics_log"
+    echo "FAIL: train never announced a metrics address"
+    kill "$train_pid" 2>/dev/null || true
+    exit 1
+fi
+scrape="$( (exec 3<>"/dev/tcp/${metrics_addr%:*}/${metrics_addr##*:}"; \
+    printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3; cat <&3) 2>/dev/null || true)"
+wait "$train_pid" || { cat "$obs_metrics_log"; echo "FAIL: train with --metrics-addr failed"; exit 1; }
+printf '%s' "$scrape" | grep -q '^# TYPE gradcode_' \
+    || { echo "FAIL: live scrape returned no gradcode metric families"; printf '%s\n' "$scrape" | head -20; exit 1; }
+echo "live scrape: $(printf '%s' "$scrape" | grep -c '^# TYPE') metric families"
 
 echo "==> threads determinism smoke (--threads 1 vs --threads 4)"
 # The summary line (losses, wire bytes, sim times) is a pure function of

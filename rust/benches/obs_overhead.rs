@@ -8,7 +8,12 @@
 //! - the overhead delta `traced/untraced − 1` — the price of tracing,
 //!   which the ci gate bounds (the recorder is an `Option<Arc>` check
 //!   when disabled and ~two `Instant::now` calls per span when enabled,
-//!   so the delta should stay in the low single digits).
+//!   so the delta should stay in the low single digits);
+//! - the live-metrics delta `metrics/untraced − 1` — tracing plus a
+//!   [`MetricsRegistry`] scrape endpoint being polled throughout the
+//!   run, i.e. the full price of running with `--metrics-addr`. Scrapes
+//!   snapshot under short scoped locks off the training thread, so this
+//!   should track the plain tracing overhead closely.
 //!
 //! Emits the machine-readable `BENCH_obs.json` (repo root) so the
 //! overhead trajectory is tracked PR-over-PR (`ci.sh` runs the
@@ -16,13 +21,17 @@
 //!
 //!     cargo bench --bench obs_overhead [-- --iters 80 --json out.json]
 
-use std::time::Instant;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use gradcode::bench::{json_array, JsonObject, Table};
 use gradcode::cli::Command;
 use gradcode::coordinator::{OptChoice, SchemeSpec, TrainConfig, Trainer};
 use gradcode::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
-use gradcode::obs::{Recorder, TelemetrySummary};
+use gradcode::obs::{MetricsRegistry, Recorder, TelemetrySummary};
 
 fn main() -> anyhow::Result<()> {
     let args = Command::new(
@@ -79,21 +88,64 @@ fn main() -> anyhow::Result<()> {
         Ok((t0.elapsed().as_secs_f64(), log.telemetry))
     };
 
+    // The full live-metrics stack: traced run + registry + scrape
+    // endpoint polled for the whole run, like a fast Prometheus server.
+    let run_scraped = |ds: &DenseDataset| -> anyhow::Result<(f64, u64)> {
+        let rec = Recorder::enabled();
+        let registry = MetricsRegistry::new(&rec);
+        let srv = registry.serve("127.0.0.1:0")?;
+        let addr = srv.addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let scraper = std::thread::spawn(move || {
+            let mut scrapes = 0u64;
+            while !stop2.load(Ordering::Relaxed) {
+                if let Ok(mut s) = TcpStream::connect(addr) {
+                    let _ = s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n");
+                    let mut body = String::new();
+                    let _ = s.read_to_string(&mut body);
+                    scrapes += 1;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            scrapes
+        });
+        let mut tr = Trainer::new(cfg.clone(), ds, None)?;
+        tr.attach_recorder(&rec);
+        let t0 = Instant::now();
+        tr.run()?;
+        let secs = t0.elapsed().as_secs_f64();
+        stop.store(true, Ordering::Relaxed);
+        let scrapes = scraper.join().unwrap_or(0);
+        srv.shutdown();
+        Ok((secs, scrapes))
+    };
+
     // Interleave the variants so drift (thermal, cache, scheduler) hits
-    // both equally; keep the minimum, the standard noise-robust pick.
+    // all of them equally; keep the minimum, the standard noise-robust
+    // pick.
     let mut untraced = f64::INFINITY;
     let mut traced = f64::INFINITY;
+    let mut with_metrics = f64::INFINITY;
+    let mut total_scrapes = 0u64;
     let mut digest: Option<TelemetrySummary> = None;
     for rep in 0..reps {
         let (u, _) = run(false, &ds)?;
         let (t, d) = run(true, &ds)?;
+        let (w, scrapes) = run_scraped(&ds)?;
         untraced = untraced.min(u);
         traced = traced.min(t);
+        with_metrics = with_metrics.min(w);
+        total_scrapes += scrapes;
         digest = d.or(digest);
-        println!("rep {rep}: untraced {u:.3}s, traced {t:.3}s");
+        println!(
+            "rep {rep}: untraced {u:.3}s, traced {t:.3}s, live-metrics {w:.3}s \
+             ({scrapes} scrapes served)"
+        );
     }
     let digest = digest.expect("traced run produces a digest");
     let overhead = traced / untraced - 1.0;
+    let metrics_overhead = with_metrics / untraced - 1.0;
 
     let mut table = Table::new(
         &format!("traced phase breakdown, n = {n}, s = {s}, m = {m}, {iters} iters"),
@@ -113,8 +165,10 @@ fn main() -> anyhow::Result<()> {
     table.print();
     println!(
         "\nwall time: untraced {untraced:.3}s, traced {traced:.3}s \
-         ({:+.2}% overhead)",
-        overhead * 100.0
+         ({:+.2}% overhead), live-metrics {with_metrics:.3}s \
+         ({:+.2}% overhead, {total_scrapes} scrapes served)",
+        overhead * 100.0,
+        metrics_overhead * 100.0
     );
 
     let json_path = args.get_str("json");
@@ -143,6 +197,9 @@ fn main() -> anyhow::Result<()> {
             .field_num("untraced_secs", untraced)
             .field_num("traced_secs", traced)
             .field_num("overhead_frac", overhead)
+            .field_num("metrics_secs", with_metrics)
+            .field_num("metrics_overhead_frac", metrics_overhead)
+            .field_int("metrics_scrapes", total_scrapes as i64)
             .field_raw("phases", &json_array(phase_objs));
         std::fs::write(json_path, root.build() + "\n")?;
         println!("wrote {json_path}");

@@ -39,8 +39,8 @@ impl FaultEvent {
         }
     }
 
-    /// Free-form detail column for the CSV export.
-    fn detail(&self) -> String {
+    /// Free-form detail column for the CSV export (and the flight ring).
+    pub fn detail(&self) -> String {
         match self {
             FaultEvent::Injected(FaultKind::Crash { restart_after }) => match restart_after {
                 Some(k) => format!("restart_after={k}"),
@@ -83,6 +83,16 @@ impl FaultLog {
     }
 
     pub fn record(&mut self, iter: u64, worker: Option<usize>, event: FaultEvent) {
+        // Every fault also lands in the always-on flight ring, so a
+        // post-mortem dump shows the recent fault history even on runs
+        // that never enabled tracing. This is the single chokepoint all
+        // fault paths flow through.
+        crate::obs::flight::global().record(
+            event.label(),
+            worker,
+            Some(iter),
+            &event.detail(),
+        );
         self.entries.push(FaultLogEntry { iter, worker, event });
     }
 

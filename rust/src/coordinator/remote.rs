@@ -33,8 +33,8 @@ use anyhow::{bail, Context, Result};
 use super::backend::{ComputeBackend, RustBackend};
 use super::trainer::SchemeSpec;
 use super::wire::{
-    Message, Setup, WireCounters, WireError, MAGIC, SCHEME_APPROX, SCHEME_HETERO,
-    SCHEME_POLY, SCHEME_RANDOM, SCHEME_UNCODED,
+    Message, Setup, WireCounters, WireError, WorkerMetrics, MAGIC, SCHEME_APPROX,
+    SCHEME_HETERO, SCHEME_POLY, SCHEME_RANDOM, SCHEME_UNCODED,
 };
 use crate::chaos::{Effect, FaultKind, FaultPlan, GatherPolicy};
 use crate::coding::{ApproxCode, GradientCode, HeteroCode};
@@ -284,11 +284,14 @@ impl RemoteMaster {
                 Ok((wid, ReaderEvent::Msg(m))) => {
                     self.counters.received(&m);
                     match m {
-                        Message::Result { iter: rit, failed, f, .. } if rit == iter => {
+                        Message::Result { iter: rit, failed, metrics, f, .. }
+                            if rit == iter =>
+                        {
                             if seen[wid] {
                                 continue; // duplicate delivery
                             }
                             seen[wid] = true;
+                            self.export_fleet_metrics(wid, &metrics);
                             if !failed {
                                 self.obs.record_worker_response(
                                     wid,
@@ -361,12 +364,37 @@ impl RemoteMaster {
             }
         }
         let complete = results.len() >= quorum;
+        // Refresh the live wire.* gauges every iteration so a mid-run
+        // scrape of the metrics endpoint agrees with the end-of-run
+        // totals (no-op when the recorder is disabled; cumulative
+        // counters are overwritten, never accumulated twice).
+        self.counters.export(&self.obs, "wire");
         Ok(RemoteGather {
             results,
             elapsed: t0.elapsed().as_secs_f64(),
             complete,
             rejected,
         })
+    }
+
+    /// Mirror a worker's piggybacked v4 metrics block into per-worker
+    /// `fleet.worker.<id>.<field>` gauges (the metrics registry folds
+    /// these into one labeled Prometheus family per field). The block
+    /// carries cumulative totals, so overwriting is correct.
+    fn export_fleet_metrics(&self, wid: usize, m: &WorkerMetrics) {
+        if !self.obs.is_enabled() {
+            return;
+        }
+        let fields: [(&str, i64); 5] = [
+            ("compute_us", m.compute_us as i64),
+            ("tx_bytes", m.tx_bytes as i64),
+            ("rx_bytes", m.rx_bytes as i64),
+            ("faults", m.faults as i64),
+            ("iters_served", m.iters_served as i64),
+        ];
+        for (field, value) in fields {
+            self.obs.set(&format!("fleet.worker.{wid}.{field}"), value);
+        }
     }
 
     /// Send Shutdown to everyone.
@@ -452,14 +480,18 @@ pub fn run_worker_traced(
     let backend = RustBackend::new(code.as_ref(), &train)?;
 
     let mut served = 0usize;
+    // Cumulative totals piggybacked on every v4 Result frame.
+    let mut compute_us = 0u64;
+    let mut faults_seen = 0u32;
     let mut out = Vec::new();
     loop {
         match read_skip_corrupt(&mut reader, &mut counters)? {
             Message::Task { iter, beta } => {
                 let effect =
                     chaos.as_ref().map_or(Effect::None, |p| p.effect(worker_id, iter));
-                if rec.is_enabled() {
-                    if let Effect::Fault(k) = &effect {
+                if let Effect::Fault(k) = &effect {
+                    faults_seen = faults_seen.saturating_add(1);
+                    if rec.is_enabled() {
                         rec.instant(
                             &format!("fault:{}", k.label()),
                             Some(worker_id),
@@ -482,13 +514,28 @@ pub fn run_worker_traced(
                 }
                 let compute_span =
                     rec.span(phase::WORKER_COMPUTE).worker(worker_id).iter(iter);
+                // lint: allow(wallclock-entropy) cumulative compute-time metric only; never feeds seeds or decisions
+                let tc = Instant::now();
                 let failed =
                     backend.encoded_gradient(worker_id, iter as usize, &beta, &mut out).is_err();
+                compute_us =
+                    compute_us.saturating_add(tc.elapsed().as_micros() as u64);
                 drop(compute_span);
+                served += 1;
                 let msg = Message::Result {
                     worker: worker_id as u32,
                     iter,
                     failed,
+                    // Totals at send time (this Result's own framed bytes
+                    // land in the *next* block — the snapshot stays
+                    // consistent with what the wire actually carried).
+                    metrics: WorkerMetrics {
+                        compute_us,
+                        tx_bytes: counters.tx_bytes,
+                        rx_bytes: counters.rx_bytes,
+                        faults: faults_seen,
+                        iters_served: served as u32,
+                    },
                     f: if failed { Vec::new() } else { out.clone() },
                 };
                 match effect {
@@ -516,7 +563,6 @@ pub fn run_worker_traced(
                         counters.sent(&msg);
                     }
                 }
-                served += 1;
             }
             Message::Shutdown => {
                 counters.export(rec, "wire");

@@ -15,7 +15,7 @@ use crate::coding::{
 use crate::data::{auc, DenseDataset, SyntheticCategorical};
 use crate::metrics::{IterationRecord, RunLog};
 use crate::model::LogisticModel;
-use crate::obs::{phase, Recorder};
+use crate::obs::{phase, HealthConfig, HealthWatchdog, Recorder};
 use crate::optim::{Momentum, Nag, Optimizer, Sgd};
 use crate::simulator::{expected_wait_time, DelayParams, SpeedProfile};
 
@@ -336,6 +336,22 @@ impl Trainer {
         responders.iter().fold(0u64, |acc, &w| acc | (1 << w))
     }
 
+    /// §VI-model per-iteration wait time for the *declared* fleet
+    /// profile and this run's wait rule. `None` without a delay model.
+    /// Feeds both the end-of-run straggler report and the live
+    /// [`HealthWatchdog`], so both compare against the same number.
+    fn model_expected_wait(&self) -> Option<f64> {
+        self.cfg.delays.as_ref().map(|p| {
+            let groups = match self.cluster.rule() {
+                WaitRule::PerGroup(gs) => gs.clone(),
+                WaitRule::Count(c) | WaitRule::Deadline { count: c, .. } => {
+                    vec![((0..self.cfg.n).collect(), *c)]
+                }
+            };
+            expected_wait_time(p, self.code.config().m, &self.work, &self.speeds, &groups)
+        })
+    }
+
     /// Run the configured number of iterations.
     pub fn run(&mut self) -> anyhow::Result<RunLog> {
         let mut log = RunLog::new(self.cfg.scheme.label());
@@ -346,6 +362,19 @@ impl Trainer {
         let ladder = chaos.as_ref().map(|c| c.ladder).unwrap_or_default();
         let mut faults = FaultLog::new();
         let mut consecutive_stale = 0usize;
+        // Post-mortem flight dump: if this run aborts (ladder exhaustion,
+        // decode failure, panic unwinding through run()), the guard dumps
+        // the global flight ring; a clean finish disarms it below.
+        let mut flight_guard = crate::obs::FlightDumpGuard::arm_default();
+        // Straggler-regime watchdog: realized iteration times vs the
+        // declared-profile model (active whenever a delay model exists;
+        // the comparison uses the same units — simulated seconds).
+        let mut watchdog = self
+            .model_expected_wait()
+            .map(|e| HealthWatchdog::new(e, HealthConfig::default()));
+        if let Some(w) = &watchdog {
+            w.export(&self.obs);
+        }
         for iter in 0..self.cfg.iters {
             let _iteration_span = self.obs.span(phase::ITERATION).iter(iter as u64);
             let beta = Arc::new(self.opt.eval_point().to_vec());
@@ -473,6 +502,26 @@ impl Trainer {
             let master_compute = t0.elapsed().as_secs_f64();
 
             sim_clock += gather.iteration_time;
+            // Always-on breadcrumb in the bounded flight ring (dumped on
+            // abort; negligible cost — one slot overwrite per iteration).
+            crate::obs::flight::global().record(
+                "iteration",
+                None,
+                Some(iter as u64),
+                &format!(
+                    "rung={} responders={} sim_time={:.6}",
+                    rung.as_str(),
+                    responders.len(),
+                    gather.iteration_time
+                ),
+            );
+            if let Some(w) = &mut watchdog {
+                if let Some(warning) = w.observe(iter as u64, gather.iteration_time) {
+                    eprintln!("{warning}");
+                    log.health_warnings.push(warning);
+                }
+                w.export(&self.obs);
+            }
             let evaluate = iter % self.cfg.eval_every == 0 || iter + 1 == self.cfg.iters;
             let (loss, auc_val) = if evaluate {
                 let _eval_span = self.obs.span(phase::EVAL).iter(iter as u64);
@@ -506,26 +555,16 @@ impl Trainer {
         if self.obs.is_enabled() {
             // Telemetry digest: phase breakdown, counters, and the
             // straggler report with the realized mean iteration time set
-            // against the §VI model's expectation for this fleet + rule.
+            // against the §VI model's expectation for this fleet + rule
+            // (the same number the live watchdog compared windows to).
             let mut summary = self.obs.summary();
-            let model = self.cfg.delays.as_ref().map(|p| {
-                let groups = match self.cluster.rule() {
-                    WaitRule::PerGroup(gs) => gs.clone(),
-                    WaitRule::Count(c) | WaitRule::Deadline { count: c, .. } => {
-                        vec![((0..self.cfg.n).collect(), *c)]
-                    }
-                };
-                expected_wait_time(
-                    p,
-                    self.code.config().m,
-                    &self.work,
-                    &self.speeds,
-                    &groups,
-                )
-            });
-            summary.stragglers.set_model(model, log.mean_iteration_sim_time());
+            summary
+                .stragglers
+                .set_model(self.model_expected_wait(), log.mean_iteration_sim_time());
             log.telemetry = Some(summary);
         }
+        // Clean finish: no post-mortem dump wanted.
+        flight_guard.disarm();
         Ok(log)
     }
 

@@ -11,7 +11,7 @@
 //! - `Setup { n, d, s, m, scheme, seeds, rows, dim, quorum, loads[],
 //!            speeds_milli[] }`                   master → worker
 //! - `Task { iter, beta[f32; dim] }`              master → worker
-//! - `Result { worker, iter, failed, f[f32] }`    worker → master
+//! - `Result { worker, iter, failed, metrics, f[f32] }` worker → master
 //! - `Shutdown`                                   master → worker
 //!
 //! Protocol v2 extended Setup with the partial-recovery quorum (scheme
@@ -19,7 +19,11 @@
 //! scheme (kind 4). Protocol v3 appends an IEEE CRC32 over `tag ++
 //! payload` to every frame so in-flight corruption is detected instead
 //! of decoded into garbage; the magic was bumped again so v2 peers fail
-//! the handshake loudly instead of misparsing frames.
+//! the handshake loudly instead of misparsing frames. Protocol v4
+//! inserts a fixed-layout [`WorkerMetrics`] block (compute µs, bytes
+//! tx/rx, faults seen, iterations served) between the Result header and
+//! the gradient floats, so fleet metrics piggyback on frames the worker
+//! sends anyway — no extra round trips for live observability.
 //!
 //! Errors are the typed [`WireError`]: [`WireError::Corrupt`] means the
 //! frame arrived whole but failed validation (bad checksum, bad tag,
@@ -31,7 +35,7 @@
 use std::io::{Read, Write};
 
 /// Protocol magic, checked in the Hello frame.
-pub const MAGIC: u32 = 0x6743_0003; // "gC" v3 (v2 + frame CRC32)
+pub const MAGIC: u32 = 0x6743_0004; // "gC" v4 (v3 + Result metrics block)
 
 const TAG_HELLO: u8 = 1;
 const TAG_SETUP: u8 = 2;
@@ -54,12 +58,17 @@ pub const FRAME_OVERHEAD: usize = 4 + 1 + 4;
 /// worker + `u64` iter + `u8` failed flag.
 pub const RESULT_HEADER_BYTES: usize = 4 + 8 + 1;
 
+/// Fixed v4 [`WorkerMetrics`] block between the `Result` header and the
+/// f32 gradient: `u64` compute µs + `u64` tx bytes + `u64` rx bytes +
+/// `u32` faults seen + `u32` iterations served.
+pub const RESULT_METRICS_BYTES: usize = 8 + 8 + 8 + 4 + 4;
+
 /// Bytes a `Result` frame carrying `floats` f32 values occupies on the
 /// wire, framing included. This is what byte-accurate communication
 /// accounting must charge per gathered gradient — `floats × 4` alone
-/// undercounts by the frame and header overhead.
+/// undercounts by the frame, header, and metrics-block overhead.
 pub const fn framed_result_bytes(floats: usize) -> usize {
-    FRAME_OVERHEAD + RESULT_HEADER_BYTES + 4 * floats
+    FRAME_OVERHEAD + RESULT_HEADER_BYTES + RESULT_METRICS_BYTES + 4 * floats
 }
 
 /// Maximum accepted payload. Deliberately far below the old 1 GiB guard:
@@ -69,13 +78,13 @@ pub const fn framed_result_bytes(floats: usize) -> usize {
 /// pre-allocation).
 const MAX_PAYLOAD: usize = 1 << 26;
 
-/// Pinned fingerprint of the v3 frame layout: FNV-1a-64 over
+/// Pinned fingerprint of the v4 frame layout: FNV-1a-64 over
 /// `"NAME=<decimal>;"` for every layout constant above, in the fixed
 /// registry order of [`layout_fingerprint`]. The `wire-layout-drift`
 /// lint re-derives the hash by parsing this file; a layout change that
 /// does not bump [`MAGIC`] *and* re-pin this value fails `gradcode
 /// lint --deny` (and the unit test below).
-pub const WIRE_LAYOUT_FINGERPRINT: u64 = 0x4a0f_843b_d6c8_c27d;
+pub const WIRE_LAYOUT_FINGERPRINT: u64 = 0x0d00_2c1b_b45e_6b44;
 
 /// Re-derive the layout fingerprint from the live constant values.
 ///
@@ -85,7 +94,7 @@ pub const WIRE_LAYOUT_FINGERPRINT: u64 = 0x4a0f_843b_d6c8_c27d;
 /// The linter computes the identical hash from source tokens, so the
 /// two detect the same drift.
 pub fn layout_fingerprint() -> u64 {
-    let entries: [(&str, u64); 14] = [
+    let entries: [(&str, u64); 15] = [
         ("MAGIC", MAGIC as u64),
         ("TAG_HELLO", TAG_HELLO as u64),
         ("TAG_SETUP", TAG_SETUP as u64),
@@ -99,6 +108,7 @@ pub fn layout_fingerprint() -> u64 {
         ("SCHEME_HETERO", SCHEME_HETERO as u64),
         ("FRAME_OVERHEAD", FRAME_OVERHEAD as u64),
         ("RESULT_HEADER_BYTES", RESULT_HEADER_BYTES as u64),
+        ("RESULT_METRICS_BYTES", RESULT_METRICS_BYTES as u64),
         ("MAX_PAYLOAD", MAX_PAYLOAD as u64),
     ];
     let mut data = String::new();
@@ -212,8 +222,31 @@ pub enum Message {
     Hello { magic: u32, worker_id: u32 },
     Setup(Setup),
     Task { iter: u64, beta: Vec<f32> },
-    Result { worker: u32, iter: u64, failed: bool, f: Vec<f32> },
+    Result { worker: u32, iter: u64, failed: bool, metrics: WorkerMetrics, f: Vec<f32> },
     Shutdown,
+}
+
+/// Fixed-layout worker health block piggybacked on every v4 Result frame
+/// (between the Result header and the f32 payload — see
+/// [`RESULT_METRICS_BYTES`]). Lets the master expose per-worker fleet
+/// gauges live without any extra round trips: the numbers ride on
+/// frames the protocol already sends every iteration.
+///
+/// All fields are cumulative since worker start, so the master can
+/// overwrite (not accumulate) its per-worker gauges and a mid-run
+/// scrape agrees with end-of-run totals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WorkerMetrics {
+    /// Total wall-clock microseconds spent in gradient compute.
+    pub compute_us: u64,
+    /// Bytes the worker has written to the wire (its own WireCounters).
+    pub tx_bytes: u64,
+    /// Bytes the worker has read from the wire.
+    pub rx_bytes: u64,
+    /// Faults the worker observed (injected failures it simulated).
+    pub faults: u32,
+    /// Task iterations this worker has served.
+    pub iters_served: u32,
 }
 
 /// Scheme + data configuration sent to each worker at handshake. Workers
@@ -396,10 +429,15 @@ impl Message {
                 put_f32s(&mut payload, beta);
                 TAG_TASK
             }
-            Message::Result { worker, iter, failed, f } => {
+            Message::Result { worker, iter, failed, metrics, f } => {
                 payload.extend_from_slice(&worker.to_le_bytes());
                 payload.extend_from_slice(&iter.to_le_bytes());
                 payload.push(u8::from(*failed));
+                payload.extend_from_slice(&metrics.compute_us.to_le_bytes());
+                payload.extend_from_slice(&metrics.tx_bytes.to_le_bytes());
+                payload.extend_from_slice(&metrics.rx_bytes.to_le_bytes());
+                payload.extend_from_slice(&metrics.faults.to_le_bytes());
+                payload.extend_from_slice(&metrics.iters_served.to_le_bytes());
                 put_f32s(&mut payload, f);
                 TAG_RESULT
             }
@@ -468,11 +506,20 @@ impl Message {
                 let worker = c.u32()?;
                 let iter = c.u64()?;
                 let failed = c.u8()? != 0;
-                let remaining = payload.len().saturating_sub(13);
+                let metrics = WorkerMetrics {
+                    compute_us: c.u64()?,
+                    tx_bytes: c.u64()?,
+                    rx_bytes: c.u64()?,
+                    faults: c.u32()?,
+                    iters_served: c.u32()?,
+                };
+                let remaining = payload
+                    .len()
+                    .saturating_sub(RESULT_HEADER_BYTES + RESULT_METRICS_BYTES);
                 if remaining % 4 != 0 {
                     return Err(WireError::corrupt("result payload not f32-aligned"));
                 }
-                Message::Result { worker, iter, failed, f: c.f32s(remaining / 4)? }
+                Message::Result { worker, iter, failed, metrics, f: c.f32s(remaining / 4)? }
             }
             TAG_SHUTDOWN => Message::Shutdown,
             other => return Err(WireError::corrupt(format!("unknown message tag {other}"))),
@@ -493,7 +540,9 @@ impl Message {
                     + (4 + 4 * s.speeds_milli.len())
             }
             Message::Task { beta, .. } => 8 + 4 * beta.len(),
-            Message::Result { f, .. } => RESULT_HEADER_BYTES + 4 * f.len(),
+            Message::Result { f, .. } => {
+                RESULT_HEADER_BYTES + RESULT_METRICS_BYTES + 4 * f.len()
+            }
             Message::Shutdown => 0,
         }
     }
@@ -659,9 +708,22 @@ mod tests {
             worker: 9,
             iter: 42,
             failed: false,
+            metrics: WorkerMetrics {
+                compute_us: 123_456_789_000,
+                tx_bytes: 1 << 40,
+                rx_bytes: 7,
+                faults: 3,
+                iters_served: 42,
+            },
             f: vec![0.125; 7],
         });
-        roundtrip(Message::Result { worker: 1, iter: 0, failed: true, f: vec![] });
+        roundtrip(Message::Result {
+            worker: 1,
+            iter: 0,
+            failed: true,
+            metrics: WorkerMetrics::default(),
+            f: vec![],
+        });
         roundtrip(Message::Shutdown);
     }
 
@@ -676,8 +738,20 @@ mod tests {
                 ..Setup::homogeneous(3, 5, 1, 2, SCHEME_HETERO, 7, 99, 640, 512)
             }),
             Message::Task { iter: 42, beta: vec![1.5; 17] },
-            Message::Result { worker: 9, iter: 42, failed: false, f: vec![0.125; 7] },
-            Message::Result { worker: 1, iter: 0, failed: true, f: vec![] },
+            Message::Result {
+                worker: 9,
+                iter: 42,
+                failed: false,
+                metrics: WorkerMetrics { compute_us: 5, ..WorkerMetrics::default() },
+                f: vec![0.125; 7],
+            },
+            Message::Result {
+                worker: 1,
+                iter: 0,
+                failed: true,
+                metrics: WorkerMetrics::default(),
+                f: vec![],
+            },
             Message::Shutdown,
         ];
         for msg in variants {
@@ -690,17 +764,24 @@ mod tests {
     #[test]
     fn framed_result_bytes_matches_frame_layout() {
         // Against the documented layout: u32 len | u8 tag | payload |
-        // u32 crc, with a 13-byte Result header before the floats.
+        // u32 crc, with a 13-byte Result header and a 32-byte metrics
+        // block before the floats.
         assert_eq!(FRAME_OVERHEAD, 9);
         assert_eq!(RESULT_HEADER_BYTES, 13);
+        assert_eq!(RESULT_METRICS_BYTES, 32);
         for floats in [0usize, 1, 7, 512] {
-            let msg =
-                Message::Result { worker: 0, iter: 1, failed: false, f: vec![0.5; floats] };
+            let msg = Message::Result {
+                worker: 0,
+                iter: 1,
+                failed: false,
+                metrics: WorkerMetrics::default(),
+                f: vec![0.5; floats],
+            };
             assert_eq!(msg.encode().len(), framed_result_bytes(floats));
         }
-        // the framing really is what v3 (MAGIC's protocol rev) promises:
+        // the framing really is what v4 (MAGIC's protocol rev) promises:
         // overhead beyond the raw floats is constant per frame
-        assert_eq!(MAGIC & 0xffff, 3, "protocol rev with per-frame CRC framing");
+        assert_eq!(MAGIC & 0xffff, 4, "protocol rev with metrics-bearing Results");
         assert_eq!(framed_result_bytes(10) - framed_result_bytes(0), 40);
     }
 
@@ -708,7 +789,13 @@ mod tests {
     fn wire_counters_account_framed_bytes() {
         let mut wc = WireCounters::default();
         let task = Message::Task { iter: 1, beta: vec![0.0; 4] };
-        let result = Message::Result { worker: 0, iter: 1, failed: false, f: vec![0.0; 4] };
+        let result = Message::Result {
+            worker: 0,
+            iter: 1,
+            failed: false,
+            metrics: WorkerMetrics::default(),
+            f: vec![0.0; 4],
+        };
         wc.sent(&task);
         wc.sent(&task);
         wc.received(&result);
@@ -817,10 +904,16 @@ mod tests {
 
     #[test]
     fn bit_flip_is_caught_and_stream_stays_aligned() {
-        let bad = Message::Result { worker: 2, iter: 5, failed: false, f: vec![0.5; 8] };
+        let bad = Message::Result {
+            worker: 2,
+            iter: 5,
+            failed: false,
+            metrics: WorkerMetrics::default(),
+            f: vec![0.5; 8],
+        };
         let good = Message::Task { iter: 6, beta: vec![1.0; 4] };
         let mut stream = bad.encode();
-        stream[5 + 13 + 3] ^= 0x10; // flip one payload bit, leave the CRC
+        stream[5 + 13 + 32 + 3] ^= 0x10; // flip one payload (f32) bit, leave the CRC
         stream.extend_from_slice(&good.encode());
         let mut cursor = std::io::Cursor::new(stream);
         match Message::read_from(&mut cursor) {

@@ -37,8 +37,12 @@
 //!   degradation ladder the trainer walks when responders run short, and
 //!   the fault log surfaced through metrics and the CLI.
 //! - [`obs`] — zero-dependency telemetry: RAII phase spans, counters,
-//!   log-bucketed latency histograms, JSONL + Chrome-trace export, and
-//!   per-worker straggler attribution with §VI-model deviation.
+//!   log-bucketed latency histograms, JSONL + Chrome-trace export,
+//!   per-worker straggler attribution with §VI-model deviation, a
+//!   Prometheus-text metrics registry with a std-`TcpListener` scrape
+//!   endpoint (`--metrics-addr`), an always-on flight-recorder ring
+//!   dumped on abort, and a declared-vs-realized straggler health
+//!   watchdog (`health_status` gauge).
 //! - [`lint`] — the in-repo static-analysis pass (`gradcode lint`):
 //!   a std-only lexer + rule registry machine-enforcing the crate's
 //!   determinism, panic-hygiene, lock-discipline, and wire-versioning

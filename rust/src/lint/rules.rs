@@ -16,7 +16,7 @@ const IO_CALLS: [&str; 6] =
 /// The fixed registry of `coordinator/wire.rs` layout constants, in
 /// fingerprint serialization order. Must match
 /// `wire::layout_fingerprint` exactly.
-const WIRE_REGISTRY: [&str; 14] = [
+const WIRE_REGISTRY: [&str; 15] = [
     "MAGIC",
     "TAG_HELLO",
     "TAG_SETUP",
@@ -30,6 +30,7 @@ const WIRE_REGISTRY: [&str; 14] = [
     "SCHEME_HETERO",
     "FRAME_OVERHEAD",
     "RESULT_HEADER_BYTES",
+    "RESULT_METRICS_BYTES",
     "MAX_PAYLOAD",
 ];
 

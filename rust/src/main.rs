@@ -13,7 +13,11 @@
 //! - `trace-report` summarize a telemetry JSONL captured with
 //!                  `train --trace <path>` (or `worker --trace`): phase
 //!                  breakdown, straggler attribution, wire counters;
-//!                  `--chrome out.json` exports a Perfetto-loadable trace
+//!                  `--chrome out.json` exports a Perfetto-loadable trace;
+//!                  `--prom` renders the merged trace as Prometheus text
+//! - `flight-dump`  pretty-print a flight-recorder dump (the bounded ring
+//!                  of recent iteration/fault events written on abort, or
+//!                  wherever `GRADCODE_FLIGHT_DUMP` points)
 //! - `ci-gate`      bench-regression gate: compare fresh `BENCH_*.json`
 //!                  (from the `ci.sh` bench smokes, in `target/bench/`)
 //!                  against the committed repo-root baselines and fail on
@@ -83,6 +87,16 @@ fn app() -> App {
                     "0",
                     "pool threads for the parallel hot paths (0 = GRADCODE_THREADS or all cores); results are bitwise identical either way",
                 )
+                .flag(
+                    "metrics-addr",
+                    "",
+                    "serve a live Prometheus text snapshot on this address (e.g. 127.0.0.1:9184) for the duration of the run; empty = off",
+                )
+                .flag(
+                    "metrics-linger",
+                    "0",
+                    "with --metrics-addr: after training, keep serving up to this many seconds until at least one scrape landed (lets CI scrape a short run)",
+                )
                 .switch("pjrt", "use the AOT PJRT backend (needs --features pjrt + artifacts)")
                 .switch("no-delays", "disable straggler injection")
                 .switch("csv", "dump per-iteration CSV to stdout"),
@@ -113,7 +127,14 @@ fn app() -> App {
                 "summarize a telemetry JSONL (from train/worker --trace): phase table, stragglers, counters",
             )
             .flag("chrome", "", "also write a Chrome trace-event JSON here (load in Perfetto / chrome://tracing)")
-            .switch("csv", "dump per-phase stats as CSV"),
+            .switch("csv", "dump per-phase stats as CSV")
+            .switch("prom", "render the merged trace as a Prometheus text snapshot (same renderer as --metrics-addr)"),
+        )
+        .command(
+            Command::new(
+                "flight-dump",
+                "pretty-print a flight-recorder dump (target/flight_dump.jsonl unless a path or GRADCODE_FLIGHT_DUMP says otherwise)",
+            ),
         )
         .command(
             Command::new(
@@ -516,12 +537,27 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
         chaos: parse_chaos_flag(&a, n)?,
     };
     // An empty --trace keeps the recorder disabled (zero-cost); a path
-    // arms it across the trainer/cluster stack.
+    // arms it across the trainer/cluster stack. A live metrics endpoint
+    // needs the recorder too (it renders the recorder's counters and
+    // phase stats), so --metrics-addr arms it even without --trace.
     let trace_path = a.get_str("trace").to_string();
-    let rec = if trace_path.is_empty() {
+    let metrics_addr = a.get_str("metrics-addr").to_string();
+    let rec = if trace_path.is_empty() && metrics_addr.is_empty() {
         gradcode::obs::Recorder::disabled()
     } else {
         gradcode::obs::Recorder::enabled()
+    };
+    let registry = gradcode::obs::MetricsRegistry::new(&rec);
+    let server = if metrics_addr.is_empty() {
+        None
+    } else {
+        // The conventional build-info constant, set before the endpoint
+        // opens: a scrape is never empty, even one that lands before the
+        // first iteration records anything.
+        registry.set_gauge("build_info", &[("version", env!("CARGO_PKG_VERSION"))], 1.0);
+        let srv = registry.serve(&metrics_addr)?;
+        println!("metrics: serving Prometheus text on http://{}/metrics", srv.addr());
+        Some(srv)
     };
     let log = if a.get_bool("pjrt") {
         // The AOT artifacts are fixed-shape per (n, d, m) with uniform
@@ -578,8 +614,23 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
             rec.events().len()
         );
     }
+    for w in &log.health_warnings {
+        println!("{w}");
+    }
     if a.get_bool("csv") {
         print!("{}", log.to_csv());
+    }
+    if let Some(srv) = server {
+        // Let a scraper (e.g. the CI smoke) catch a short run: serve
+        // until the first scrape lands or the linger budget runs out.
+        let linger_ms = a.get_usize("metrics-linger") as u64 * 1000;
+        let mut waited = 0u64;
+        while srv.hits() == 0 && waited < linger_ms {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            waited += 50;
+        }
+        println!("metrics: served {} scrape(s) on {}", srv.hits(), srv.addr());
+        srv.shutdown();
     }
     Ok(())
 }
@@ -595,6 +646,7 @@ fn cmd_train(a: gradcode::cli::Args) -> anyhow::Result<()> {
 const GATE_HEADLINES: &[(&str, &str, bool, f64)] = &[
     ("BENCH_hotpath.json", "train_speedup", true, 0.0),
     ("BENCH_obs.json", "overhead_frac", false, 0.05),
+    ("BENCH_obs.json", "metrics_overhead_frac", false, 0.05),
     ("BENCH_hetero.json", "bimodal_margin.realized_speedup", true, 0.0),
 ];
 
@@ -781,6 +833,33 @@ fn cmd_trace_report(a: gradcode::cli::Args) -> anyhow::Result<()> {
             "chrome trace -> {chrome} (load in Perfetto or chrome://tracing)"
         );
     }
+    if a.get_bool("prom") {
+        // Same renderer the live --metrics-addr endpoint uses, fed by
+        // the replayed recorder — so offline traces and live scrapes
+        // produce the same exposition format.
+        print!("{}", gradcode::obs::MetricsRegistry::new(&rec).render());
+    }
+    Ok(())
+}
+
+fn cmd_flight_dump(a: gradcode::cli::Args) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    let files = a.positional();
+    let path = match files.first() {
+        Some(f) => std::path::PathBuf::from(f),
+        None => gradcode::obs::flight::dump_path(),
+    };
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!(
+            "reading {} (no dump? aborted runs write one; override with \
+             GRADCODE_FLIGHT_DUMP or pass a path)",
+            path.display()
+        )
+    })?;
+    let events =
+        gradcode::obs::flight::parse_dump(&text).map_err(|e| anyhow::anyhow!(e))?;
+    print!("{}", gradcode::obs::flight::render_events(&events));
+    println!("{} event(s) from {}", events.len(), path.display());
     Ok(())
 }
 
@@ -1056,6 +1135,7 @@ fn main() -> anyhow::Result<()> {
             "info" => cmd_info(),
             "train" => cmd_train(args),
             "trace-report" => cmd_trace_report(args),
+            "flight-dump" => cmd_flight_dump(args),
             "ci-gate" => cmd_ci_gate(args),
             "lint" => cmd_lint(args),
             "chaos-report" => cmd_chaos_report(args),

@@ -57,6 +57,11 @@ pub struct RunLog {
     /// `Some` only when the run was traced with an enabled
     /// [`Recorder`](crate::obs::Recorder).
     pub telemetry: Option<TelemetrySummary>,
+    /// Warnings raised by the straggler health watchdog (realized
+    /// iteration times drifting beyond threshold from the
+    /// declared-profile §VI model). Empty on a healthy run or when no
+    /// delay model was configured.
+    pub health_warnings: Vec<String>,
 }
 
 impl RunLog {
@@ -68,6 +73,7 @@ impl RunLog {
             decoder_cache_misses: 0,
             faults: FaultLog::new(),
             telemetry: None,
+            health_warnings: Vec::new(),
         }
     }
 
@@ -199,7 +205,7 @@ mod tests {
             worker_compute: 0.0,
             responders: vec![0, 1],
             floats_transmitted: 10,
-            wire_bytes: 84, // 2 responders × framed_result_bytes(5 floats each)
+            wire_bytes: 148, // 2 responders × framed_result_bytes(5 floats each)
             decode_residual: None,
             loss: None,
             auc,
@@ -258,7 +264,7 @@ mod tests {
         assert_eq!(log.total_sim_time(), 6.0);
         assert_eq!(log.mean_iteration_sim_time(), 3.0);
         assert_eq!(log.total_floats_transmitted(), 20);
-        assert_eq!(log.total_wire_bytes(), 168);
+        assert_eq!(log.total_wire_bytes(), 296);
         assert_eq!(log.final_auc(), Some(0.9));
         assert_eq!(log.auc_curve(), vec![(6.0, 0.9)]);
         assert!(log.telemetry.is_none(), "untraced runs carry no telemetry digest");
@@ -292,7 +298,7 @@ mod tests {
         assert!(csv.lines().next().unwrap().contains(",floats,wire_bytes,"));
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.contains("0.800000"));
-        assert!(csv.contains(",10,84,"), "floats then framed wire bytes");
+        assert!(csv.contains(",10,148,"), "floats then framed wire bytes");
         assert!(csv.lines().nth(1).unwrap().ends_with(",exact"));
     }
 

@@ -1,0 +1,410 @@
+//! Always-on flight recorder: a fixed-capacity ring of recent
+//! span/fault events, dumped automatically when a run aborts.
+//!
+//! The `--trace` recorder is opt-in and unbounded; postmortems need the
+//! opposite — bounded memory, always armed. [`FlightRecorder`] keeps
+//! the last [`DEFAULT_CAPACITY`] events in a ring behind one short-held
+//! mutex (push is O(1): a slot overwrite, no allocation beyond the
+//! event itself), so it stays on even in untraced production runs.
+//!
+//! Producers: the trainer records one event per iteration (rung,
+//! responders, sim time) and every [`FaultLog`](crate::chaos::FaultLog)
+//! entry is mirrored here at its single chokepoint, so chaos faults land
+//! in the ring whether or not telemetry is armed.
+//!
+//! Consumers: [`FlightDumpGuard`] dumps the ring to a JSONL file when
+//! dropped while still armed — the trainer arms one around the training
+//! loop and disarms it on clean completion, so a ladder-abort error
+//! return or a panic unwind writes the black box automatically. The
+//! `gradcode flight-dump` subcommand renders a dump file as a table.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::bench::Table;
+
+/// Ring capacity of the process-global recorder: enough for the last
+/// few hundred iterations of events without unbounded growth.
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+/// Environment override for the automatic dump path.
+pub const DUMP_ENV: &str = "GRADCODE_FLIGHT_DUMP";
+
+/// Default automatic dump path (relative to the working directory).
+pub const DEFAULT_DUMP_PATH: &str = "target/flight_dump.jsonl";
+
+/// One ring entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightEvent {
+    /// Monotonic sequence number since process start (never wraps).
+    pub seq: u64,
+    /// Seconds since the recorder's epoch (process start for the
+    /// global instance).
+    pub ts: f64,
+    /// Stable event kind: `"iteration"`, a fault label
+    /// (`"crash"`, `"checksum_reject"`, …), `"health"`, ….
+    pub kind: String,
+    /// Worker involved, if any.
+    pub worker: Option<usize>,
+    /// Iteration, if any.
+    pub iter: Option<u64>,
+    /// Free-form detail.
+    pub detail: String,
+}
+
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<FlightEvent>,
+    next_seq: u64,
+    capacity: usize,
+}
+
+/// Fixed-capacity event ring. Clones share the interior. The process
+/// holds one global instance ([`global`]); tests build local ones.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    inner: Arc<Mutex<Ring>>,
+    epoch: Instant,
+}
+
+impl FlightRecorder {
+    pub fn with_capacity(capacity: usize) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            inner: Arc::new(Mutex::new(Ring {
+                buf: Vec::with_capacity(capacity),
+                next_seq: 0,
+                capacity,
+            })),
+            epoch: Instant::now(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Ring> {
+        // Poison-tolerant: the flight recorder is most valuable while a
+        // panic unwinds.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record one event (always on; O(1), one short lock).
+    pub fn record(&self, kind: &str, worker: Option<usize>, iter: Option<u64>, detail: &str) {
+        let ts = self.epoch.elapsed().as_secs_f64();
+        let mut g = self.lock();
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        let ev = FlightEvent {
+            seq,
+            ts,
+            kind: kind.to_string(),
+            worker,
+            iter,
+            detail: detail.to_string(),
+        };
+        if g.buf.len() < g.capacity {
+            g.buf.push(ev);
+        } else {
+            let cap = g.capacity;
+            g.buf[(seq % cap as u64) as usize] = ev;
+        }
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.lock().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.lock().capacity
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn total_recorded(&self) -> u64 {
+        self.lock().next_seq
+    }
+
+    /// Drop all held events (sequence numbers keep counting).
+    pub fn clear(&self) {
+        self.lock().buf.clear();
+    }
+
+    /// The held events in sequence order (oldest first).
+    pub fn snapshot(&self) -> Vec<FlightEvent> {
+        let mut evs = self.lock().buf.clone();
+        evs.sort_by_key(|e| e.seq);
+        evs
+    }
+
+    /// Write the ring to `path` as JSONL (snapshot under lock, write
+    /// outside). Returns the number of events dumped.
+    pub fn dump_to(&self, path: &Path) -> std::io::Result<usize> {
+        let events = self.snapshot();
+        let text = render_jsonl(&events);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, text)?;
+        Ok(events.len())
+    }
+}
+
+/// The process-global flight recorder.
+pub fn global() -> &'static FlightRecorder {
+    static GLOBAL: OnceLock<FlightRecorder> = OnceLock::new();
+    GLOBAL.get_or_init(|| FlightRecorder::with_capacity(DEFAULT_CAPACITY))
+}
+
+/// The automatic dump path: [`DUMP_ENV`] override or
+/// [`DEFAULT_DUMP_PATH`].
+pub fn dump_path() -> PathBuf {
+    std::env::var(DUMP_ENV).map(PathBuf::from).unwrap_or_else(|_| PathBuf::from(DEFAULT_DUMP_PATH))
+}
+
+/// Dump-on-drop guard: while armed, dropping it (error return, panic
+/// unwind, or plain scope exit) dumps the global ring to its path.
+/// Call [`FlightDumpGuard::disarm`] on the clean-completion path.
+#[must_use = "the guard dumps on drop; bind it for the scope of the run"]
+#[derive(Debug)]
+pub struct FlightDumpGuard {
+    path: PathBuf,
+    armed: bool,
+}
+
+impl FlightDumpGuard {
+    /// Arm a guard that dumps to `path` on drop.
+    pub fn arm(path: PathBuf) -> FlightDumpGuard {
+        FlightDumpGuard { path, armed: true }
+    }
+
+    /// Arm a guard on the default/env-configured path.
+    pub fn arm_default() -> FlightDumpGuard {
+        FlightDumpGuard::arm(dump_path())
+    }
+
+    /// The run completed cleanly: no dump on drop.
+    pub fn disarm(&mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for FlightDumpGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        match global().dump_to(&self.path) {
+            Ok(n) => eprintln!(
+                "flight recorder: dumped {n} event(s) to {} (render with `gradcode flight-dump`)",
+                self.path.display()
+            ),
+            Err(e) => eprintln!(
+                "flight recorder: dump to {} failed: {e}",
+                self.path.display()
+            ),
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render events as the dump-file JSONL format.
+pub fn render_jsonl(events: &[FlightEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let worker = e.worker.map_or("null".to_string(), |w| w.to_string());
+        let iter = e.iter.map_or("null".to_string(), |i| i.to_string());
+        let _ = writeln!(
+            out,
+            "{{\"seq\":{},\"ts\":{:.9},\"kind\":\"{}\",\"worker\":{},\"iter\":{},\"detail\":\"{}\"}}",
+            e.seq,
+            e.ts,
+            json_escape(&e.kind),
+            worker,
+            iter,
+            json_escape(&e.detail),
+        );
+    }
+    out
+}
+
+fn json_unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                if let Some(c) = u32::from_str_radix(&hex, 16).ok().and_then(char::from_u32) {
+                    out.push(c);
+                }
+            }
+            Some(c) => out.push(c),
+            None => {}
+        }
+    }
+    out
+}
+
+/// The raw text of field `key` in a one-line JSON object: for string
+/// values the unquoted-but-still-escaped content, otherwise the bare
+/// token.
+fn field_raw<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    if let Some(inner) = rest.strip_prefix('"') {
+        let mut esc = false;
+        for (i, c) in inner.char_indices() {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                return Some(&inner[..i]);
+            }
+        }
+        None
+    } else {
+        let end = rest.find([',', '}'])?;
+        Some(rest[..end].trim())
+    }
+}
+
+/// Parse a dump file produced by [`render_jsonl`].
+pub fn parse_dump(text: &str) -> Result<Vec<FlightEvent>, String> {
+    let mut out = Vec::new();
+    for (no, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |what: &str| format!("line {}: {what}", no + 1);
+        let seq = field_raw(line, "seq")
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| err("missing/invalid seq"))?;
+        let ts = field_raw(line, "ts")
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or_else(|| err("missing/invalid ts"))?;
+        let kind = json_unescape(field_raw(line, "kind").ok_or_else(|| err("missing kind"))?);
+        let detail =
+            json_unescape(field_raw(line, "detail").ok_or_else(|| err("missing detail"))?);
+        let worker = match field_raw(line, "worker") {
+            None | Some("null") => None,
+            Some(s) => Some(s.parse::<usize>().map_err(|_| err("invalid worker"))?),
+        };
+        let iter = match field_raw(line, "iter") {
+            None | Some("null") => None,
+            Some(s) => Some(s.parse::<u64>().map_err(|_| err("invalid iter"))?),
+        };
+        out.push(FlightEvent { seq, ts, kind, worker, iter, detail });
+    }
+    Ok(out)
+}
+
+/// Render events as the `flight-dump` table.
+pub fn render_events(events: &[FlightEvent]) -> String {
+    let mut t = Table::new(
+        "flight recorder (oldest first)",
+        &["seq", "ts_s", "kind", "worker", "iter", "detail"],
+    );
+    for e in events {
+        t.row(&[
+            e.seq.to_string(),
+            format!("{:.6}", e.ts),
+            e.kind.clone(),
+            e.worker.map_or(String::new(), |w| w.to_string()),
+            e.iter.map_or(String::new(), |i| i.to_string()),
+            e.detail.clone(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_keeping_the_most_recent_events() {
+        let fr = FlightRecorder::with_capacity(4);
+        for i in 0..10u64 {
+            fr.record("iteration", None, Some(i), &format!("event {i}"));
+        }
+        assert_eq!(fr.len(), 4);
+        assert_eq!(fr.total_recorded(), 10);
+        let evs = fr.snapshot();
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "only the newest capacity-many survive");
+        assert_eq!(evs[3].detail, "event 9");
+        // timestamps are monotone in sequence order
+        for w in evs.windows(2) {
+            assert!(w[0].ts <= w[1].ts);
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips_including_escapes() {
+        let fr = FlightRecorder::with_capacity(8);
+        fr.record("fault:\"quoted\"", Some(3), Some(7), "back\\slash\nnewline");
+        fr.record("iteration", None, None, "");
+        let text = render_jsonl(&fr.snapshot());
+        let back = parse_dump(&text).expect("parses");
+        assert_eq!(back, fr.snapshot());
+        assert!(parse_dump("{\"seq\":bogus}").is_err());
+    }
+
+    #[test]
+    fn dump_guard_writes_only_while_armed() {
+        let dir = std::env::temp_dir().join(format!(
+            "gradcode_flight_{}_{}",
+            std::process::id(),
+            // distinguish parallel test binaries without wall-clock
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        global().record("test_guard", None, None, "armed path");
+        let armed_path = dir.join("armed.jsonl");
+        {
+            let _g = FlightDumpGuard::arm(armed_path.clone());
+        }
+        let dumped = std::fs::read_to_string(&armed_path).expect("armed guard dumped");
+        assert!(dumped.contains("test_guard"));
+        let disarmed_path = dir.join("disarmed.jsonl");
+        {
+            let mut g = FlightDumpGuard::arm(disarmed_path.clone());
+            g.disarm();
+        }
+        assert!(!disarmed_path.exists(), "disarmed guard must not dump");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

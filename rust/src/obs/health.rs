@@ -1,0 +1,191 @@
+//! Straggler-regime health watchdog: realized iteration time vs the
+//! declared-profile §VI model, per window.
+//!
+//! The (d, s, m) code the run was planned with is only optimal for the
+//! fleet profile it was planned *against*
+//! ([`simulator::expected_wait_time`](crate::simulator::expected_wait_time)
+//! under the declared [`SpeedProfile`](crate::coordinator::SpeedProfile)
+//! and wait rule). If the realized straggler regime drifts — a uniform
+//! fleet turned bimodal, a slow group slowed further — the declared
+//! model's prediction stops matching the realized per-iteration wait
+//! times, and the operator should re-plan.
+//!
+//! [`HealthWatchdog`] consumes one realized iteration time per step and
+//! every `window` iterations compares the window mean against the model
+//! expectation. Deviation beyond `threshold` flips the
+//! [`HEALTH_GAUGE`] gauge to degraded and emits a warning (surfaced via
+//! `RunLog::health_warnings` and the live metrics endpoint).
+
+use crate::obs::Recorder;
+
+/// Gauge name exported through the recorder/metrics registry:
+/// `1` healthy, `0` degraded, `-1` before the first full window.
+pub const HEALTH_GAUGE: &str = "health_status";
+
+/// Watchdog knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthConfig {
+    /// Iterations per comparison window.
+    pub window: usize,
+    /// Relative deviation `|realized/expected - 1|` tolerated before a
+    /// window is flagged. The §VI model is a mean-field prediction, so
+    /// the default leaves generous room for sampling noise.
+    pub threshold: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig { window: 10, threshold: 0.5 }
+    }
+}
+
+/// Watchdog verdict after the most recent complete window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthStatus {
+    /// No complete window yet.
+    Unknown,
+    /// Last window within threshold of the declared-profile model.
+    Healthy,
+    /// Last window deviated beyond threshold: the declared profile no
+    /// longer fits the realized straggler regime.
+    Degraded,
+}
+
+impl HealthStatus {
+    /// Gauge encoding (see [`HEALTH_GAUGE`]).
+    pub fn gauge(self) -> i64 {
+        match self {
+            HealthStatus::Unknown => -1,
+            HealthStatus::Healthy => 1,
+            HealthStatus::Degraded => 0,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthStatus::Unknown => "unknown",
+            HealthStatus::Healthy => "healthy",
+            HealthStatus::Degraded => "degraded",
+        }
+    }
+}
+
+/// Per-window straggler-regime estimator (see the module doc).
+#[derive(Debug, Clone)]
+pub struct HealthWatchdog {
+    /// Expected per-iteration wait time under the declared profile.
+    expected: f64,
+    cfg: HealthConfig,
+    window: Vec<f64>,
+    status: HealthStatus,
+    warnings: Vec<String>,
+}
+
+impl HealthWatchdog {
+    /// `expected` is the §VI-model per-iteration wait time computed for
+    /// the *declared* fleet profile and the run's wait rule.
+    pub fn new(expected: f64, cfg: HealthConfig) -> HealthWatchdog {
+        HealthWatchdog {
+            expected,
+            cfg,
+            window: Vec::with_capacity(cfg.window.max(1)),
+            status: HealthStatus::Unknown,
+            warnings: Vec::new(),
+        }
+    }
+
+    /// Feed one realized iteration time (same clock/units as the model:
+    /// simulated seconds under a delay model). Returns a warning string
+    /// when the window that just completed deviates beyond threshold.
+    pub fn observe(&mut self, iter: u64, realized: f64) -> Option<String> {
+        self.window.push(realized);
+        if self.window.len() < self.cfg.window.max(1) {
+            return None;
+        }
+        let mean = self.window.iter().sum::<f64>() / self.window.len() as f64;
+        self.window.clear();
+        let deviation =
+            if self.expected > 0.0 { (mean - self.expected) / self.expected } else { 0.0 };
+        if deviation.abs() > self.cfg.threshold {
+            self.status = HealthStatus::Degraded;
+            let warning = format!(
+                "health: window ending at iter {iter}: realized mean iteration time \
+                 {mean:.4}s deviates {:+.1}% from the declared-profile model \
+                 ({:.4}s) — the fleet's straggler regime drifted; re-plan (d, s, m)",
+                deviation * 100.0,
+                self.expected
+            );
+            self.warnings.push(warning.clone());
+            Some(warning)
+        } else {
+            self.status = HealthStatus::Healthy;
+            None
+        }
+    }
+
+    /// Verdict after the most recent complete window.
+    pub fn status(&self) -> HealthStatus {
+        self.status
+    }
+
+    /// Model expectation this watchdog compares against.
+    pub fn expected(&self) -> f64 {
+        self.expected
+    }
+
+    /// All warnings raised so far, in order.
+    pub fn warnings(&self) -> &[String] {
+        &self.warnings
+    }
+
+    /// Export the current verdict as the [`HEALTH_GAUGE`] gauge.
+    pub fn export(&self, rec: &Recorder) {
+        rec.set(HEALTH_GAUGE, self.status.gauge());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_only_beyond_threshold_and_only_on_full_windows() {
+        let mut w = HealthWatchdog::new(1.0, HealthConfig { window: 4, threshold: 0.5 });
+        assert_eq!(w.status(), HealthStatus::Unknown);
+        for i in 0..3 {
+            assert!(w.observe(i, 10.0).is_none(), "window not complete yet");
+            assert_eq!(w.status(), HealthStatus::Unknown);
+        }
+        let warning = w.observe(3, 10.0).expect("10x the model must fire");
+        assert!(warning.contains("+900.0%"), "{warning}");
+        assert_eq!(w.status(), HealthStatus::Degraded);
+        assert_eq!(w.warnings().len(), 1);
+        // a healthy window flips the status back
+        for i in 4..7 {
+            assert!(w.observe(i, 1.1).is_none());
+        }
+        assert!(w.observe(7, 1.1).is_none(), "10% off is within threshold");
+        assert_eq!(w.status(), HealthStatus::Healthy);
+        assert_eq!(w.warnings().len(), 1, "healthy windows add no warnings");
+    }
+
+    #[test]
+    fn too_fast_also_fires_and_gauge_encodes_status() {
+        let mut w = HealthWatchdog::new(10.0, HealthConfig { window: 2, threshold: 0.5 });
+        assert_eq!(HealthStatus::Unknown.gauge(), -1);
+        w.observe(0, 1.0);
+        let warning = w.observe(1, 1.0).expect("10x faster than the model also fires");
+        assert!(warning.contains("-90.0%"), "{warning}");
+        assert_eq!(w.status().gauge(), 0);
+        let rec = Recorder::enabled();
+        w.export(&rec);
+        assert_eq!(rec.counters(), vec![(HEALTH_GAUGE.to_string(), 0)]);
+    }
+
+    #[test]
+    fn zero_expected_never_divides_by_zero() {
+        let mut w = HealthWatchdog::new(0.0, HealthConfig { window: 1, threshold: 0.5 });
+        assert!(w.observe(0, 5.0).is_none());
+        assert_eq!(w.status(), HealthStatus::Healthy);
+    }
+}

@@ -1,0 +1,516 @@
+//! Live metrics: a std-only registry with a Prometheus text renderer
+//! and a `TcpListener` scrape endpoint.
+//!
+//! The telemetry [`Recorder`](super::Recorder) is strictly post-hoc —
+//! its JSONL/Chrome exports are read after the run. This module makes
+//! the same measurements observable *while training runs*, the way the
+//! paper's EC2 experiments were operated:
+//!
+//! - [`MetricsRegistry`] — counters, gauges, and latency histograms
+//!   (reusing [`Histogram`]) keyed by name + label set, plus a clone of
+//!   the run's `Recorder` so every existing instrumentation site feeds
+//!   the scrape output without double bookkeeping.
+//! - [`MetricsRegistry::render`] — the Prometheus text exposition
+//!   format (`# HELP`/`# TYPE`, label escaping, summaries with
+//!   `quantile` labels). The registry and recorder are snapshotted
+//!   under their locks and the text is rendered outside, so a scrape
+//!   never blocks the train loop.
+//! - [`ScrapeServer`] — a one-thread accept loop behind `--metrics-addr`
+//!   serving `GET /metrics` over plain HTTP/1.0.
+//!
+//! Naming: every series is prefixed `gradcode_` and recorder counter
+//! names are sanitized (`wire.tx_frames` → `gradcode_wire_tx_frames`).
+//! Per-worker fleet counters (`fleet.worker.<id>.<field>`) are folded
+//! into labeled series: `gradcode_fleet_<field>{worker="<id>"}`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::{Histogram, PhaseStat, Recorder};
+
+/// A series key: metric name plus sorted label pairs.
+type Series = (String, Vec<(String, String)>);
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    counters: BTreeMap<Series, i64>,
+    gauges: BTreeMap<Series, f64>,
+    hists: BTreeMap<Series, Histogram>,
+}
+
+/// Live metrics registry. Clones share the same interior; the train
+/// loop writes through the existing [`Recorder`] sites, the registry
+/// adds its own counters/gauges/histograms for metrics with labels.
+#[derive(Debug, Clone)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<RegistryInner>>,
+    rec: Recorder,
+}
+
+impl MetricsRegistry {
+    /// A registry fed by `rec`: everything the recorder collects
+    /// (counters, phase histograms) appears in the scrape output.
+    pub fn new(rec: &Recorder) -> MetricsRegistry {
+        MetricsRegistry {
+            inner: Arc::new(Mutex::new(RegistryInner::default())),
+            rec: rec.clone(),
+        }
+    }
+
+    /// The recorder feeding this registry.
+    pub fn recorder(&self) -> &Recorder {
+        &self.rec
+    }
+
+    fn lock(&self) -> MutexGuard<'_, RegistryInner> {
+        // Tolerate poisoning: metrics must survive a panicking scrape
+        // thread the same way the recorder survives unwinding spans.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn series(name: &str, labels: &[(&str, &str)]) -> Series {
+        let mut ls: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        ls.sort();
+        (name.to_string(), ls)
+    }
+
+    /// Add to a monotonic counter (created at zero).
+    pub fn inc(&self, name: &str, labels: &[(&str, &str)], delta: i64) {
+        let key = Self::series(name, labels);
+        *self.lock().counters.entry(key).or_insert(0) += delta;
+    }
+
+    /// Set a gauge to an absolute value.
+    pub fn set_gauge(&self, name: &str, labels: &[(&str, &str)], value: f64) {
+        let key = Self::series(name, labels);
+        self.lock().gauges.insert(key, value);
+    }
+
+    /// Record a sample into a labeled histogram (rendered as a
+    /// Prometheus summary).
+    pub fn observe(&self, name: &str, labels: &[(&str, &str)], value: f64) {
+        let key = Self::series(name, labels);
+        self.lock().hists.entry(key).or_default().record(value);
+    }
+
+    /// Snapshot of the registry's own series (the recorder snapshots
+    /// itself inside its accessors).
+    fn snapshot(&self) -> RegistryInner {
+        let g = self.lock();
+        RegistryInner {
+            counters: g.counters.clone(),
+            gauges: g.gauges.clone(),
+            hists: g.hists.clone(),
+        }
+    }
+
+    /// Render the full Prometheus text exposition: registry series plus
+    /// everything the recorder has collected. Locks are held only while
+    /// cloning the snapshots; the text assembles outside.
+    pub fn render(&self) -> String {
+        let own = self.snapshot();
+        let rec_counters = self.rec.counters();
+        let rec_phases = self.rec.phase_stats();
+        render_text(&own, &rec_counters, &rec_phases)
+    }
+
+    /// Start the scrape endpoint on `addr` (e.g. `127.0.0.1:9100`;
+    /// port 0 picks a free port — read it back from
+    /// [`ScrapeServer::addr`]).
+    pub fn serve(&self, addr: &str) -> anyhow::Result<ScrapeServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let hits = Arc::new(AtomicU64::new(0));
+        let reg = self.clone();
+        let stop2 = Arc::clone(&stop);
+        let hits2 = Arc::clone(&hits);
+        let handle = std::thread::Builder::new()
+            .name("metrics-scrape".into())
+            .spawn(move || accept_loop(listener, reg, stop2, hits2))?;
+        Ok(ScrapeServer { addr: local, stop, hits, handle: Some(handle) })
+    }
+}
+
+/// Scrape-endpoint handle: one accept-loop thread serving
+/// [`MetricsRegistry::render`] snapshots. Dropping (or
+/// [`ScrapeServer::shutdown`]) stops the thread.
+#[derive(Debug)]
+pub struct ScrapeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    hits: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ScrapeServer {
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Number of scrapes served so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::SeqCst)
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept call; the loop re-checks the flag first.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ScrapeServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// The accept loop: no locks are ever held here — `reg.render()`
+/// snapshots under its own scoped locks and returns an owned string
+/// before any socket write happens.
+fn accept_loop(
+    listener: TcpListener,
+    reg: MetricsRegistry,
+    stop: Arc<AtomicBool>,
+    hits: Arc<AtomicU64>,
+) {
+    loop {
+        let conn = listener.accept();
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok((stream, _)) = conn else { continue };
+        serve_one(stream, &reg, &hits);
+    }
+}
+
+/// Serve one scrape: drain the request head (best effort, bounded),
+/// render, respond, close.
+fn serve_one(mut stream: TcpStream, reg: &MetricsRegistry, hits: &AtomicU64) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut head = [0u8; 1024];
+    let mut seen = 0usize;
+    while seen < head.len() {
+        match stream.read(&mut head[seen..]) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                seen += n;
+                if head[..seen].windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+            }
+        }
+    }
+    let body = reg.render();
+    let header = format!(
+        "HTTP/1.0 200 OK\r\ncontent-type: text/plain; version=0.0.4\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    if stream.write_all(header.as_bytes()).is_ok() {
+        let _ = stream.write_all(body.as_bytes());
+        let _ = stream.flush();
+    }
+    hits.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and newline.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a `# HELP` text: backslash and newline only.
+pub fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Sanitize an internal dotted name into a metric name:
+/// `wire.tx_frames` → `gradcode_wire_tx_frames`.
+pub fn metric_name(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 9);
+    s.push_str("gradcode_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            s.push(c);
+        } else {
+            s.push('_');
+        }
+    }
+    s
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn fmt_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut s = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{k}=\"{}\"", escape_label(v));
+    }
+    s.push('}');
+    s
+}
+
+fn fmt_labels_with(labels: &[(String, String)], extra: (&str, &str)) -> String {
+    let mut all = labels.to_vec();
+    all.push((extra.0.to_string(), extra.1.to_string()));
+    fmt_labels(&all)
+}
+
+/// One family of samples sharing a metric name and a `# TYPE`.
+struct Family {
+    help: String,
+    typ: &'static str,
+    /// `(suffix-plus-labels, value)` pairs appended verbatim to the
+    /// family name (`_sum{...}`, `{quantile="0.5"}`, or empty).
+    samples: Vec<(String, String)>,
+}
+
+/// Get-or-create the family for `name` (one `# TYPE` per name).
+fn fam<'a>(
+    families: &'a mut BTreeMap<String, Family>,
+    name: &str,
+    typ: &'static str,
+    help: String,
+) -> &'a mut Family {
+    families
+        .entry(name.to_string())
+        .or_insert_with(|| Family { help, typ, samples: Vec::new() })
+}
+
+/// Assemble the exposition text from owned snapshots (no locks here).
+fn render_text(
+    own: &RegistryInner,
+    rec_counters: &[(String, i64)],
+    rec_phases: &[PhaseStat],
+) -> String {
+    // name -> family, BTreeMap for stable output order.
+    let mut families: BTreeMap<String, Family> = BTreeMap::new();
+
+    // Recorder counters: gauges (the recorder mixes monotonic adds and
+    // absolute sets, so `gauge` is the honest type). Per-worker fleet
+    // counters fold into labeled series.
+    for (name, value) in rec_counters {
+        if let Some((id, field)) = parse_fleet_counter(name) {
+            let mname = metric_name(&format!("fleet.{field}"));
+            let f = fam(
+                &mut families,
+                &mname,
+                "gauge",
+                format!("per-worker fleet metric `{field}` from the wire metrics block"),
+            );
+            f.samples.push((
+                fmt_labels(&[("worker".to_string(), id.to_string())]),
+                value.to_string(),
+            ));
+        } else {
+            let mname = metric_name(name);
+            // raw name here — escape_help runs once, at output time
+            let f = fam(
+                &mut families,
+                &mname,
+                "gauge",
+                format!("recorder counter `{name}`"),
+            );
+            f.samples.push((String::new(), value.to_string()));
+        }
+    }
+
+    // Recorder phase histograms: one summary family, labeled by phase.
+    if !rec_phases.is_empty() {
+        let f = fam(
+            &mut families,
+            "gradcode_phase_seconds",
+            "summary",
+            "per-phase latency (seconds) from the telemetry recorder".to_string(),
+        );
+        for p in rec_phases {
+            let labels = vec![("phase".to_string(), p.phase.clone())];
+            for (q, v) in [("0.5", p.p50), ("0.9", p.p90), ("0.99", p.p99)] {
+                f.samples.push((fmt_labels_with(&labels, ("quantile", q)), fmt_f64(v)));
+            }
+            f.samples.push((format!("_sum{}", fmt_labels(&labels)), fmt_f64(p.total)));
+            f.samples.push((format!("_count{}", fmt_labels(&labels)), p.count.to_string()));
+        }
+    }
+
+    // Registry's own series.
+    for ((name, labels), value) in &own.counters {
+        let mname = metric_name(name);
+        let f = fam(
+            &mut families,
+            &mname,
+            "counter",
+            format!("registry counter `{name}`"),
+        );
+        f.samples.push((fmt_labels(labels), value.to_string()));
+    }
+    for ((name, labels), value) in &own.gauges {
+        let mname = metric_name(name);
+        let f = fam(
+            &mut families,
+            &mname,
+            "gauge",
+            format!("registry gauge `{name}`"),
+        );
+        f.samples.push((fmt_labels(labels), fmt_f64(*value)));
+    }
+    for ((name, labels), h) in &own.hists {
+        let mname = metric_name(name);
+        let f = fam(
+            &mut families,
+            &mname,
+            "summary",
+            format!("registry histogram `{name}`"),
+        );
+        for (q, v) in [("0.5", h.p50()), ("0.9", h.p90()), ("0.99", h.p99())] {
+            f.samples.push((fmt_labels_with(labels, ("quantile", q)), fmt_f64(v)));
+        }
+        f.samples.push((format!("_sum{}", fmt_labels(labels)), fmt_f64(h.sum())));
+        f.samples.push((format!("_count{}", fmt_labels(labels)), h.count().to_string()));
+    }
+
+    let mut out = String::new();
+    for (name, f) in &families {
+        let _ = writeln!(out, "# HELP {name} {}", escape_help(&f.help));
+        let _ = writeln!(out, "# TYPE {name} {}", f.typ);
+        for (labels_or_suffix, value) in &f.samples {
+            let _ = writeln!(out, "{name}{labels_or_suffix} {value}");
+        }
+    }
+    out
+}
+
+/// `fleet.worker.<id>.<field>` → `(id, field)`.
+fn parse_fleet_counter(name: &str) -> Option<(&str, &str)> {
+    let rest = name.strip_prefix("fleet.worker.")?;
+    let dot = rest.find('.')?;
+    let (id, field) = (&rest[..dot], &rest[dot + 1..]);
+    if id.is_empty() || field.is_empty() || !id.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    Some((id, field))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escaping_covers_backslash_quote_newline() {
+        assert_eq!(escape_label(r#"a\b"c"#), r#"a\\b\"c"#);
+        assert_eq!(escape_label("x\ny"), "x\\ny");
+        assert_eq!(escape_help("h\\elp\nline"), "h\\\\elp\\nline");
+        assert_eq!(metric_name("wire.tx_frames"), "gradcode_wire_tx_frames");
+        assert_eq!(metric_name("weird-name:1"), "gradcode_weird_name_1");
+    }
+
+    #[test]
+    fn render_groups_type_lines_once_per_family() {
+        let rec = Recorder::enabled();
+        rec.set("wire.tx_frames", 7);
+        rec.set("fleet.worker.0.compute_us", 1200);
+        rec.set("fleet.worker.1.compute_us", 3400);
+        rec.observe("decode", 0.25);
+        let m = MetricsRegistry::new(&rec);
+        m.inc("scrapes", &[], 1);
+        m.set_gauge("health_status", &[], 1.0);
+        m.observe("iteration_seconds", &[("mode", "virtual")], 0.5);
+        let text = m.render();
+        assert_eq!(text.matches("# TYPE gradcode_fleet_compute_us gauge").count(), 1);
+        assert!(text.contains("gradcode_fleet_compute_us{worker=\"0\"} 1200"));
+        assert!(text.contains("gradcode_fleet_compute_us{worker=\"1\"} 3400"));
+        assert!(text.contains("gradcode_wire_tx_frames 7"));
+        assert!(text.contains("# TYPE gradcode_scrapes counter"));
+        assert!(text.contains("gradcode_scrapes 1"));
+        assert!(text.contains("gradcode_health_status 1"));
+        assert!(text.contains("# TYPE gradcode_phase_seconds summary"));
+        assert!(text.contains("gradcode_phase_seconds{phase=\"decode\",quantile=\"0.5\"}"));
+        assert!(text.contains("gradcode_phase_seconds_count{phase=\"decode\"} 1"));
+        assert!(text
+            .contains("gradcode_iteration_seconds{mode=\"virtual\",quantile=\"0.9\"}"));
+        // every # TYPE appears exactly once per family
+        for fam in ["gradcode_phase_seconds", "gradcode_health_status"] {
+            assert_eq!(text.matches(&format!("# TYPE {fam} ")).count(), 1, "{fam}");
+        }
+    }
+
+    #[test]
+    fn scrape_server_serves_and_shuts_down() {
+        let rec = Recorder::enabled();
+        rec.set("wire.tx_frames", 42);
+        let m = MetricsRegistry::new(&rec);
+        let srv = m.serve("127.0.0.1:0").expect("bind");
+        let addr = srv.addr();
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK"), "{resp}");
+        assert!(resp.contains("# TYPE"), "{resp}");
+        assert!(resp.contains("gradcode_wire_tx_frames 42"), "{resp}");
+        assert_eq!(srv.hits(), 1);
+        srv.shutdown();
+        // the port is released: a fresh connect is refused or accepted
+        // by nobody — either way a second scrape can no longer succeed
+        let dead = TcpStream::connect(addr)
+            .and_then(|mut s| {
+                s.set_read_timeout(Some(Duration::from_millis(200)))?;
+                s.write_all(b"GET / HTTP/1.0\r\n\r\n")?;
+                let mut buf = String::new();
+                s.read_to_string(&mut buf)?;
+                Ok(buf)
+            })
+            .unwrap_or_default();
+        assert!(!dead.contains("200 OK"), "server still answering after shutdown");
+    }
+}

@@ -16,6 +16,15 @@
 //!   exporters (one timeline track per worker).
 //! - [`straggler`] — per-worker response distributions, straggle
 //!   counts, and realized-vs-§VI-model deviation.
+//! - [`metrics`] — the *live* layer: a [`MetricsRegistry`] fed by the
+//!   recorder, a Prometheus text renderer, and the `--metrics-addr`
+//!   scrape endpoint ([`ScrapeServer`]).
+//! - [`flight`] — the always-on flight recorder: a bounded ring of
+//!   recent events, dumped automatically on abort
+//!   ([`FlightDumpGuard`]).
+//! - [`health`] — the straggler-regime watchdog comparing realized
+//!   iteration times against the declared-profile §VI model
+//!   ([`HealthWatchdog`]).
 //!
 //! The coordinator threads a recorder through every layer:
 //! [`Trainer`](crate::coordinator::Trainer) emits per-iteration phase
@@ -38,11 +47,17 @@
 //! assert_eq!(summary.counters[0], ("decoder.cache_hits".into(), 1));
 //! ```
 
+pub mod flight;
+pub mod health;
 pub mod hist;
+pub mod metrics;
 pub mod straggler;
 pub mod trace;
 
+pub use flight::{FlightDumpGuard, FlightEvent, FlightRecorder};
+pub use health::{HealthConfig, HealthStatus, HealthWatchdog};
 pub use hist::Histogram;
+pub use metrics::{MetricsRegistry, ScrapeServer};
 pub use straggler::{StragglerReport, WorkerObs, WorkerStat};
 pub use trace::{chrome_trace, Clock, TraceEvent};
 

@@ -92,13 +92,18 @@ impl StragglerReport {
             .map(|m| (realized_mean - m) / m);
     }
 
-    /// Workers ranked worst-first: by straggle count, then p90 latency.
+    /// Workers ranked worst-first: by straggle count, then p90 latency,
+    /// then worker id. The id tiebreak makes the order total — without
+    /// it, workers tied on both keys (common in symmetric fleets) kept
+    /// whatever order the sort left them in, and reports were not
+    /// reproducible across runs.
     pub fn ranked(&self) -> Vec<&WorkerStat> {
         let mut rows: Vec<&WorkerStat> = self.workers.iter().collect();
         rows.sort_by(|a, b| {
             b.straggle_count()
                 .cmp(&a.straggle_count())
                 .then(b.p90.partial_cmp(&a.p90).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.worker.cmp(&b.worker))
         });
         rows
     }

@@ -1,0 +1,334 @@
+//! Integration: the live metrics layer end to end — the acceptance
+//! properties of the issue:
+//!
+//! - the Prometheus exposition escapes label values, HELP text, and
+//!   metric names exactly per the text format (including non-finite
+//!   sample values);
+//! - a loopback TCP training run scraped *mid-run* through a real
+//!   [`ScrapeServer`] reports wire counters identical to the master's
+//!   [`WireCounters`], and the per-worker fleet gauges carried in the
+//!   v4 Result metrics block match what each worker actually served;
+//! - the flight ring wraps at capacity keeping the newest events, and a
+//!   run that aborts through the degradation ladder dumps the ring to
+//!   the `GRADCODE_FLIGHT_DUMP` path as parseable JSONL;
+//! - the health watchdog flags a fleet whose realized straggler regime
+//!   is bimodal while the declared profile is uniform, and stays silent
+//!   when the declaration is correct (both sides driven by the §VI
+//!   model, so the test is fully deterministic).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use gradcode::chaos::{ChaosConfig, FaultKind, FaultPlan};
+use gradcode::coordinator::remote::{decode_gather, scheme_from_setup};
+use gradcode::coordinator::wire::{Message, Setup, SCHEME_POLY};
+use gradcode::coordinator::{run_worker, RemoteMaster, SchemeSpec, TrainConfig, Trainer};
+use gradcode::data::{CategoricalConfig, DenseDataset, SyntheticCategorical};
+use gradcode::obs::flight::{self, FlightRecorder};
+use gradcode::obs::metrics::{escape_help, escape_label, metric_name};
+use gradcode::obs::{HealthConfig, HealthStatus, HealthWatchdog, MetricsRegistry, Recorder};
+use gradcode::simulator::{expected_wait_time, DelayParams};
+use gradcode::testkit::with_watchdog;
+
+fn dataset(rows: usize, seed: u64) -> DenseDataset {
+    let gen = SyntheticCategorical::new(CategoricalConfig::default(), seed);
+    gen.generate(rows, seed + 1)
+}
+
+fn free_addr() -> std::net::SocketAddr {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap();
+    drop(l);
+    addr
+}
+
+/// GET /metrics from a live [`ScrapeServer`], returning the body.
+fn scrape(addr: std::net::SocketAddr) -> String {
+    let mut s = TcpStream::connect(addr).expect("scrape endpoint accepts");
+    s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let (head, body) = resp.split_once("\r\n\r\n").expect("HTTP response has a header block");
+    assert!(head.starts_with("HTTP/1.0 200 OK"), "{head}");
+    assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+    body.to_string()
+}
+
+/// The value of one exposition line: `series` is the full sample name
+/// including any `{label="..."}` block.
+fn sample(body: &str, series: &str) -> Option<f64> {
+    body.lines().find_map(|l| l.strip_prefix(series)?.strip_prefix(' ')?.trim().parse().ok())
+}
+
+/// Escaping acceptance: names, label values, HELP text, and non-finite
+/// values all render per the exposition format.
+#[test]
+fn exposition_escapes_names_labels_and_values() {
+    assert_eq!(metric_name("wire.tx_frames"), "gradcode_wire_tx_frames");
+    assert_eq!(metric_name("phase latency (µs)"), "gradcode_phase_latency___s_");
+    assert_eq!(escape_label("C:\\tmp\n\"x\""), "C:\\\\tmp\\n\\\"x\\\"");
+    // HELP escapes backslash and newline but leaves quotes alone
+    assert_eq!(escape_help("a\\b\n\"q\""), "a\\\\b\\n\"q\"");
+
+    let rec = Recorder::enabled();
+    rec.set("bad name\nwith\\newline", 7);
+    let registry = MetricsRegistry::new(&rec);
+    registry.set_gauge("queue depth", &[("path", "a\\b\n\"c\"")], f64::INFINITY);
+    registry.set_gauge("nan gauge", &[], f64::NAN);
+    registry.inc("scrapes", &[], 3);
+    registry.observe("gather.lag", &[], 0.5);
+    let text = registry.render();
+
+    // the hostile recorder counter name is sanitized in the series line
+    // and escaped in its HELP line
+    assert!(text.contains("gradcode_bad_name_with_newline 7"), "{text}");
+    assert!(text.contains("recorder counter `bad name\\nwith\\\\newline`"), "{text}");
+    assert!(text.contains("# TYPE gradcode_queue_depth gauge"), "{text}");
+    assert!(
+        text.contains("gradcode_queue_depth{path=\"a\\\\b\\n\\\"c\\\"\"} +Inf"),
+        "{text}"
+    );
+    assert!(text.contains("gradcode_nan_gauge NaN"), "{text}");
+    assert!(text.contains("# TYPE gradcode_scrapes counter"), "{text}");
+    assert!(text.contains("gradcode_scrapes 3"), "{text}");
+    assert!(text.contains("# TYPE gradcode_gather_lag summary"), "{text}");
+    assert!(text.contains("gradcode_gather_lag_count 1"), "{text}");
+    assert!(text.contains("gradcode_gather_lag{quantile=\"0.5\"}"), "{text}");
+}
+
+/// Acceptance: a loopback TCP run scraped mid-run serves wire counters
+/// *identical* to the master's [`WireCounters`], the fleet gauges from
+/// the Result metrics block match what each worker served, and the
+/// shutdown frames show up in a post-shutdown scrape with exactly
+/// `n × |Shutdown frame|` more tx bytes.
+#[test]
+fn live_scrape_during_tcp_train_matches_wire_counters() {
+    with_watchdog(Duration::from_secs(60), "live_scrape_during_tcp_train", || {
+        let n = 3u32;
+        let iters = 5u64;
+        // s = 0 so the quorum is the whole fleet: every Result is
+        // drained every iteration and the fleet gauges are exact.
+        let setup = Setup::homogeneous(n, 1, 0, 1, SCHEME_POLY, 1, 777, n * 16, 64);
+        let addr = free_addr();
+        // Workers first (they retry while the master's listener binds).
+        let workers: Vec<_> = (0..n as usize)
+            .map(|w| {
+                std::thread::spawn(move || -> anyhow::Result<usize> {
+                    for _ in 0..400 {
+                        match run_worker(addr, w) {
+                            Ok(served) => return Ok(served),
+                            Err(e) if e.to_string().contains("connecting to master") => {
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    anyhow::bail!("master listener never came up")
+                })
+            })
+            .collect();
+
+        let mut master = RemoteMaster::listen(addr, setup.clone()).unwrap();
+        let rec = Recorder::enabled();
+        master.set_recorder(&rec);
+        let registry = MetricsRegistry::new(&rec);
+        let srv = registry.serve("127.0.0.1:0").unwrap();
+
+        let code = scheme_from_setup(&setup).unwrap();
+        let mut cache = HashMap::new();
+        let beta = vec![0.0f32; setup.dim as usize];
+        for iter in 0..iters {
+            let gather = master.run_iteration(iter, &beta).unwrap();
+            assert!(gather.complete);
+            assert_eq!(gather.results.len(), n as usize);
+            let grad = decode_gather(code.as_ref(), &gather, &mut cache).unwrap();
+            assert_eq!(grad.len(), setup.dim as usize);
+
+            // Mid-run scrape: the gauges exported inside run_iteration
+            // must equal the live counters exactly — not eventually.
+            if iter == 1 {
+                let wc = *master.wire_counters();
+                let body = scrape(srv.addr());
+                for (series, want) in [
+                    ("gradcode_wire_tx_frames", wc.tx_frames),
+                    ("gradcode_wire_tx_bytes", wc.tx_bytes),
+                    ("gradcode_wire_rx_frames", wc.rx_frames),
+                    ("gradcode_wire_rx_bytes", wc.rx_bytes),
+                    ("gradcode_wire_corrupt_rejects", wc.corrupt_rejects),
+                ] {
+                    assert_eq!(
+                        sample(&body, series).unwrap_or(-1.0) as u64,
+                        want,
+                        "mid-run {series}"
+                    );
+                }
+                // the fleet gauges ride the v4 Result metrics block:
+                // after the iter-1 Results, every worker has served 2
+                for w in 0..n {
+                    let series = format!("gradcode_fleet_iters_served{{worker=\"{w}\"}}");
+                    assert_eq!(sample(&body, &series), Some(2.0), "{series}");
+                }
+            }
+        }
+
+        // End-of-run scrape: same identity against the final totals.
+        let wc = *master.wire_counters();
+        assert_eq!(wc.corrupt_rejects, 0);
+        let body = scrape(srv.addr());
+        assert_eq!(sample(&body, "gradcode_wire_tx_frames"), Some(wc.tx_frames as f64));
+        assert_eq!(sample(&body, "gradcode_wire_tx_bytes"), Some(wc.tx_bytes as f64));
+        assert_eq!(sample(&body, "gradcode_wire_rx_frames"), Some(wc.rx_frames as f64));
+        assert_eq!(sample(&body, "gradcode_wire_rx_bytes"), Some(wc.rx_bytes as f64));
+        for w in 0..n {
+            for (field, want) in [("iters_served", iters as f64), ("faults", 0.0)] {
+                let series = format!("gradcode_fleet_{field}{{worker=\"{w}\"}}");
+                assert_eq!(sample(&body, &series), Some(want), "{series}");
+            }
+            // byte counters are platform-independent but nonzero
+            let tx = sample(&body, &format!("gradcode_fleet_tx_bytes{{worker=\"{w}\"}}"));
+            assert!(tx.unwrap() > 0.0, "worker {w} reported no tx bytes");
+        }
+        // one # TYPE per family even with n labeled fleet samples
+        let type_lines = body
+            .lines()
+            .filter(|l| *l == "# TYPE gradcode_fleet_iters_served gauge")
+            .count();
+        assert_eq!(type_lines, 1);
+
+        // Shutdown sends exactly one more frame per worker; the
+        // re-exported gauges account for every byte of it.
+        let shutdown_len = Message::Shutdown.encode().len() as u64;
+        master.shutdown();
+        let body = scrape(srv.addr());
+        assert_eq!(
+            sample(&body, "gradcode_wire_tx_frames"),
+            Some((wc.tx_frames + n as u64) as f64)
+        );
+        assert_eq!(
+            sample(&body, "gradcode_wire_tx_bytes"),
+            Some((wc.tx_bytes + n as u64 * shutdown_len) as f64)
+        );
+        assert_eq!(sample(&body, "gradcode_wire_rx_frames"), Some(wc.rx_frames as f64));
+
+        assert!(srv.hits() >= 3, "served {} scrapes", srv.hits());
+        srv.shutdown();
+        for (w, h) in workers.into_iter().enumerate() {
+            let served = h.join().unwrap().unwrap();
+            assert_eq!(served as u64, iters, "worker {w} served every iteration");
+        }
+    });
+}
+
+/// The ring keeps the newest `capacity` events and never loses count.
+#[test]
+fn flight_ring_wraps_keeping_newest_events() {
+    let ring = FlightRecorder::with_capacity(8);
+    for i in 0..50u64 {
+        ring.record("iteration", Some(i as usize % 4), Some(i), &format!("step {i}"));
+    }
+    assert_eq!(ring.len(), 8);
+    assert_eq!(ring.capacity(), 8);
+    assert_eq!(ring.total_recorded(), 50);
+    let seqs: Vec<u64> = ring.snapshot().iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, (42u64..50).collect::<Vec<_>>());
+    // round-trip through the dump format preserves the snapshot
+    let text = flight::render_jsonl(&ring.snapshot());
+    assert_eq!(flight::parse_dump(&text).unwrap(), ring.snapshot());
+}
+
+/// Acceptance: a run that aborts through the degradation ladder (every
+/// worker drops every result, so every iteration lands on the stale
+/// rung) writes the flight ring to the `GRADCODE_FLIGHT_DUMP` path,
+/// and the dump holds the iteration breadcrumbs and fault events that
+/// led up to the abort.
+#[test]
+fn ladder_abort_dumps_flight_ring_to_env_path() {
+    let dir = std::env::temp_dir().join(format!("gradcode_obs_metrics_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("abort_dump.jsonl");
+    std::env::set_var(flight::DUMP_ENV, &path);
+
+    let n = 4;
+    let iters = 20;
+    let mut plan = FaultPlan::new(n);
+    for w in 0..n {
+        for it in 0..iters as u64 {
+            plan.schedule(w, it, FaultKind::Drop);
+        }
+    }
+    let mut cfg = TrainConfig::quick(n, SchemeSpec::Poly { s: 1, m: 1 }, iters);
+    cfg.chaos = Some(ChaosConfig::new(plan));
+    let ds = dataset(200, 0x0b60);
+    let mut tr = Trainer::new(cfg, &ds, None).unwrap();
+    let err = tr.run();
+    std::env::remove_var(flight::DUMP_ENV);
+    let err = err.expect_err("an all-drop fleet must abort via the stale ladder");
+    assert!(err.to_string().contains("consecutive stale"), "{err}");
+
+    let text = std::fs::read_to_string(&path).expect("the abort dumped the flight ring");
+    let events = flight::parse_dump(&text).expect("dump is valid JSONL");
+    assert!(!events.is_empty());
+    assert!(events.len() <= flight::DEFAULT_CAPACITY);
+    for w in events.windows(2) {
+        assert!(w[0].seq < w[1].seq, "dump is in sequence order");
+    }
+    assert!(events.iter().any(|e| e.kind == "iteration"), "trainer breadcrumbs present");
+    assert!(
+        events.iter().any(|e| e.kind == "deadline" || e.kind == "rung"),
+        "fault-log events mirrored into the ring"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: the watchdog flags a mis-declared fleet and stays silent
+/// on a correct declaration. Both the declared expectation and the
+/// realized times come from [`expected_wait_time`], so the test pins the
+/// detection logic without sampling noise: the "realized" fleet is
+/// bimodal (half the workers 4× slower) while the declaration is
+/// uniform.
+#[test]
+fn watchdog_flags_bimodal_fleet_declared_uniform_and_accepts_correct_declaration() {
+    let n = 8;
+    let (s, m) = (2, 2);
+    let params = DelayParams { lambda1: 0.8, t1: 1.6, lambda2: 0.1, t2: 0.5 };
+    let work = vec![(s + m) as f64; n];
+    let uniform = vec![1.0; n];
+    let bimodal: Vec<f64> = (0..n).map(|w| if w < n / 2 { 1.0 } else { 0.25 }).collect();
+    let groups = vec![((0..n).collect::<Vec<_>>(), n - s)];
+    let declared = expected_wait_time(&params, m, &work, &uniform, &groups);
+    let realized = expected_wait_time(&params, m, &work, &bimodal, &groups);
+    let cfg = HealthConfig { window: 5, threshold: 0.5 };
+    // premise: waiting for n-s of a half-4×-slow fleet really does blow
+    // the 50% budget — otherwise the scenario would not discriminate
+    assert!(
+        (realized - declared) / declared > cfg.threshold,
+        "bimodal wait {realized:.4}s vs uniform {declared:.4}s is not a regime shift"
+    );
+
+    let mut dog = HealthWatchdog::new(declared, cfg);
+    assert_eq!(dog.status(), HealthStatus::Unknown);
+    let mut warning = None;
+    for i in 0..cfg.window as u64 {
+        warning = dog.observe(i, realized);
+    }
+    let warning = warning.expect("a full mis-declared window fires");
+    assert!(warning.contains("re-plan"), "{warning}");
+    assert_eq!(dog.status(), HealthStatus::Degraded);
+    assert_eq!(dog.status().gauge(), 0);
+    assert_eq!(dog.warnings().len(), 1);
+    // the gauge lands in the recorder under the stable name
+    let rec = Recorder::enabled();
+    dog.export(&rec);
+    assert!(rec.counters().contains(&("health_status".to_string(), 0)));
+
+    // correctly-declared fleet: same realized times, matching model
+    let mut honest = HealthWatchdog::new(realized, cfg);
+    for i in 0..(3 * cfg.window) as u64 {
+        assert!(honest.observe(i, realized).is_none(), "honest declaration stays silent");
+    }
+    assert_eq!(honest.status(), HealthStatus::Healthy);
+    assert_eq!(honest.status().gauge(), 1);
+    assert!(honest.warnings().is_empty());
+}

@@ -17,7 +17,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Duration;
 
 use gradcode::coordinator::wire::{
-    framed_result_bytes, FRAME_OVERHEAD, RESULT_HEADER_BYTES,
+    framed_result_bytes, FRAME_OVERHEAD, RESULT_HEADER_BYTES, RESULT_METRICS_BYTES,
 };
 use gradcode::coordinator::{
     ExecutionMode, OptChoice, SchemeSpec, SpeedProfile, TrainConfig, Trainer,
@@ -193,7 +193,7 @@ fn jsonl_round_trip_preserves_the_report() {
 /// recoverable and the full identity must close.
 #[test]
 fn wire_byte_accounting_matches_the_frame_layout() {
-    let per_frame_overhead = FRAME_OVERHEAD + RESULT_HEADER_BYTES;
+    let per_frame_overhead = FRAME_OVERHEAD + RESULT_HEADER_BYTES + RESULT_METRICS_BYTES;
     let cfg = TrainConfig::quick(6, SchemeSpec::Poly { s: 2, m: 2 }, 6);
     let (log, _rec) = traced_run(cfg, 480, 0x0b55);
     assert!(log.total_wire_bytes() > 0);
@@ -215,6 +215,44 @@ fn wire_byte_accounting_matches_the_frame_layout() {
             r.iter
         );
     }
+}
+
+/// Regression: `StragglerReport::ranked()` used to order tied workers
+/// by whatever order the input vector happened to have — workers tied
+/// on straggle count AND p90 (the norm in a symmetric fleet) came back
+/// in input order, so two runs of the same fleet could print differently
+/// ranked reports. The worker-id tiebreak makes the order total.
+#[test]
+fn straggler_ranking_is_deterministic_under_ties() {
+    use gradcode::obs::{StragglerReport, WorkerObs, WorkerStat};
+    let tied = |worker: usize| {
+        let mut obs = WorkerObs::default();
+        // identical latency stream and outcome counts for every worker:
+        // straggle_count and p90 both tie exactly
+        for _ in 0..4 {
+            obs.latency.record(0.25);
+            obs.used += 1;
+        }
+        obs.straggled = 1;
+        obs.missed = 1;
+        WorkerStat::from_obs(worker, &obs)
+    };
+    // Feed the rows in an order that is NOT worker order; only the id
+    // tiebreak can restore determinism.
+    let mut report = StragglerReport::default();
+    for w in [3usize, 0, 4, 1, 5, 2] {
+        report.workers.push(tied(w));
+    }
+    let order: Vec<usize> = report.ranked().iter().map(|s| s.worker).collect();
+    assert_eq!(order, vec![0, 1, 2, 3, 4, 5], "tied workers must rank by id");
+    assert_eq!(report.top_stragglers(3), vec![0, 1, 2]);
+    // A genuinely worse worker still outranks the id order.
+    let mut worst = tied(5);
+    worst.missed += 7;
+    report.workers.push(worst);
+    let order: Vec<usize> =
+        report.ranked().iter().map(|s| s.worker).collect();
+    assert_eq!(order[0], 5, "higher straggle count beats the id tiebreak");
 }
 
 /// A disabled recorder must leave no trace: no digest on the log, no

@@ -1,4 +1,4 @@
-//! Seeded round-trip and mutation fuzzing of the v3 wire protocol.
+//! Seeded round-trip and mutation fuzzing of the v4 wire protocol.
 //!
 //! Three layers of guarantee, each over randomized frames of every
 //! [`Message`] variant:
@@ -16,7 +16,9 @@
 //! All cases derive from the testkit root seed — a failure prints a
 //! `TESTKIT_SEED=…` reproducer line.
 
-use gradcode::coordinator::wire::{crc32, Message, Setup, WireError, MAGIC, SCHEME_POLY};
+use gradcode::coordinator::wire::{
+    crc32, Message, Setup, WireError, WorkerMetrics, MAGIC, SCHEME_POLY,
+};
 use gradcode::coordinator::RemoteMaster;
 use gradcode::rngs::{Pcg64, Rng};
 use gradcode::testkit::{check, CaseResult, Config};
@@ -66,6 +68,13 @@ fn random_message(rng: &mut Pcg64) -> Message {
                 worker: rng.next_bounded(64) as u32,
                 iter: rng.next_u64(),
                 failed,
+                metrics: WorkerMetrics {
+                    compute_us: rng.next_u64(),
+                    tx_bytes: rng.next_u64(),
+                    rx_bytes: rng.next_u64(),
+                    faults: rng.next_u64() as u32,
+                    iters_served: rng.next_u64() as u32,
+                },
                 f: f32s(rng, len),
             }
         }
@@ -220,12 +229,13 @@ fn oversized_length_prefixes_error_without_allocation() {
     );
 }
 
-/// MAGIC/version mismatch at the handshake: a v2 peer (old magic) and a
-/// garbage peer must both fail `RemoteMaster::listen` loudly instead of
-/// being accepted or misparsed.
+/// MAGIC/version mismatch at the handshake: v2 and v3 peers (old
+/// magics) and a garbage peer must all fail `RemoteMaster::listen`
+/// loudly instead of being accepted or misparsed — a v3 peer's Results
+/// would lack the metrics block and misalign the floats.
 #[test]
 fn stale_magic_fails_the_handshake() {
-    for bad_magic in [0x6743_0002u32, 0xdead_beef] {
+    for bad_magic in [0x6743_0002u32, 0x6743_0003, 0xdead_beef] {
         let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = l.local_addr().unwrap();
         drop(l);
